@@ -1,0 +1,219 @@
+"""AOT exporter: lower every L2/L1 graph to HLO text + write artifact index.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the Rust `xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--fast]
+
+Outputs (all under --out-dir):
+  {model}_step_m{M}.hlo.txt   multi-worker gradient step (vmapped over M)
+  {model}_eval.hlo.txt        eval step (loss, correct)
+  {model}_params.bin          initial flat f32 parameters (little-endian)
+  qsgd_quantize_s{S}.hlo.txt  Pallas quantizer parity graphs (n=PARITY_N)
+  qsgd_roundtrip.hlo.txt      quantize+dequantize composed
+  multiscale_quantize.hlo.txt scale-index + quantize (two outputs)
+  l2_norm.hlo.txt             Pallas block-reduction norm
+  meta.json                   the artifact index consumed by rust/src/runtime
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .models import REGISTRY, transformer
+
+PARITY_N = 16384
+PARITY_SCALES = (7, 127)
+
+# bits-per-coordinate -> number of non-zero levels s (paper: r = ceil(log s)+1,
+# i.e. b bits leave b-1 bits for the magnitude level).
+BITS_TO_S = {2: 1, 4: 7, 6: 31, 8: 127, 10: 511, 12: 2047}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flops_estimate(lowered) -> float:
+    try:
+        ca = lowered.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return float(ca.get("flops", 0.0))
+    except Exception:
+        return 0.0
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) / 1e6:.2f} MB)")
+    return name
+
+
+def export_model(out_dir: str, name: str, cfg: dict, batch: int, workers: list[int], eval_batch: int):
+    print(f"[aot] model {name} cfg={cfg}")
+    flat, _, segments = model_lib.init_flat(name, cfg)
+    p = int(flat.size)
+    params_file = f"{name}_params.bin"
+    np.asarray(flat, dtype="<f4").tofile(os.path.join(out_dir, params_file))
+
+    entry = {
+        "cfg": cfg,
+        "param_count": p,
+        "params_file": params_file,
+        "segments": segments,
+        "steps": {},
+        "input": "tokens" if name == "transformer" else "image",
+        "batch": batch,
+    }
+
+    pspec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    for m in workers:
+        step = model_lib.make_train_step(name, cfg, m)
+        if name == "transformer":
+            toks = jax.ShapeDtypeStruct((m, batch, cfg["seq"] + 1), jnp.int32)
+            lowered = jax.jit(step).lower(pspec, toks)
+            inputs = [
+                {"kind": "params", "shape": [p], "dtype": "f32"},
+                {"kind": "tokens", "shape": [m, batch, cfg["seq"] + 1], "dtype": "i32"},
+            ]
+        else:
+            xs = jax.ShapeDtypeStruct((m, batch, *cfg["input"]), jnp.float32)
+            ys = jax.ShapeDtypeStruct((m, batch), jnp.int32)
+            lowered = jax.jit(step).lower(pspec, xs, ys)
+            inputs = [
+                {"kind": "params", "shape": [p], "dtype": "f32"},
+                {"kind": "images", "shape": [m, batch, *cfg["input"]], "dtype": "f32"},
+                {"kind": "labels", "shape": [m, batch], "dtype": "i32"},
+            ]
+        fname = _write(out_dir, f"{name}_step_m{m}.hlo.txt", to_hlo_text(lowered))
+        entry["steps"][str(m)] = {
+            "file": fname,
+            "workers": m,
+            "batch": batch,
+            "inputs": inputs,
+            "outputs": [
+                {"kind": "loss", "shape": [m], "dtype": "f32"},
+                {"kind": "grads", "shape": [m, p], "dtype": "f32"},
+            ],
+            "flops": flops_estimate(lowered),
+        }
+
+    ev = model_lib.make_eval_step(name, cfg)
+    if name == "transformer":
+        toks = jax.ShapeDtypeStruct((eval_batch, cfg["seq"] + 1), jnp.int32)
+        lowered = jax.jit(ev).lower(pspec, toks)
+        ev_inputs = [
+            {"kind": "params", "shape": [p], "dtype": "f32"},
+            {"kind": "tokens", "shape": [eval_batch, cfg["seq"] + 1], "dtype": "i32"},
+        ]
+    else:
+        xs = jax.ShapeDtypeStruct((eval_batch, *cfg["input"]), jnp.float32)
+        ys = jax.ShapeDtypeStruct((eval_batch,), jnp.int32)
+        lowered = jax.jit(ev).lower(pspec, xs, ys)
+        ev_inputs = [
+            {"kind": "params", "shape": [p], "dtype": "f32"},
+            {"kind": "images", "shape": [eval_batch, *cfg["input"]], "dtype": "f32"},
+            {"kind": "labels", "shape": [eval_batch], "dtype": "i32"},
+        ]
+    fname = _write(out_dir, f"{name}_eval.hlo.txt", to_hlo_text(lowered))
+    entry["eval"] = {"file": fname, "batch": eval_batch, "inputs": ev_inputs}
+    return entry
+
+
+def export_kernels(out_dir: str) -> dict:
+    print("[aot] parity kernels")
+    kernels = {}
+    v = jax.ShapeDtypeStruct((PARITY_N,), jnp.float32)
+    w = jax.ShapeDtypeStruct((), jnp.float32)
+    u = jax.ShapeDtypeStruct((PARITY_N,), jnp.float32)
+
+    for s in sorted(set(BITS_TO_S.values())):
+        fn = model_lib.make_qsgd_quantize(PARITY_N, s)
+        fname = _write(out_dir, f"qsgd_quantize_s{s}.hlo.txt", to_hlo_text(jax.jit(fn).lower(v, w, u)))
+        kernels[f"qsgd_quantize_s{s}"] = {"file": fname, "n": PARITY_N, "s": s}
+
+    fn = model_lib.make_qsgd_roundtrip(PARITY_N, 127, 4)
+    fname = _write(out_dir, "qsgd_roundtrip.hlo.txt", to_hlo_text(jax.jit(fn).lower(v, w, u)))
+    kernels["qsgd_roundtrip"] = {"file": fname, "n": PARITY_N, "s": 127, "m": 4}
+
+    fn = model_lib.make_multiscale_quantize(PARITY_N, PARITY_SCALES)
+    fname = _write(out_dir, "multiscale_quantize.hlo.txt", to_hlo_text(jax.jit(fn).lower(v, w, u)))
+    kernels["multiscale_quantize"] = {
+        "file": fname,
+        "n": PARITY_N,
+        "scales": list(PARITY_SCALES),
+    }
+
+    fn = model_lib.make_l2_norm(PARITY_N)
+    fname = _write(out_dir, "l2_norm.hlo.txt", to_hlo_text(jax.jit(fn).lower(v)))
+    kernels["l2_norm"] = {"file": fname, "n": PARITY_N}
+    return kernels
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true", help="mlp + kernels only (CI smoke)")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lm-batch", type=int, default=8)
+    ap.add_argument("--eval-batch", type=int, default=200)
+    ap.add_argument("--workers", type=int, nargs="+", default=[1, 2, 4])
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    meta = {"version": 1, "models": {}, "kernels": {}, "bits_to_s": BITS_TO_S}
+
+    meta["kernels"] = export_kernels(args.out_dir)
+    meta["models"]["mlp"] = export_model(
+        args.out_dir, "mlp", REGISTRY["mlp"].default_cfg(), args.batch, args.workers, args.eval_batch
+    )
+    if not args.fast:
+        meta["models"]["resnet_lite"] = export_model(
+            args.out_dir,
+            "resnet_lite",
+            REGISTRY["resnet_lite"].default_cfg(),
+            args.batch,
+            args.workers,
+            args.eval_batch,
+        )
+        meta["models"]["vgg_lite"] = export_model(
+            args.out_dir,
+            "vgg_lite",
+            REGISTRY["vgg_lite"].default_cfg(),
+            args.batch,
+            args.workers,
+            args.eval_batch,
+        )
+        meta["models"]["transformer"] = export_model(
+            args.out_dir,
+            "transformer",
+            transformer.default_cfg(),
+            args.lm_batch,
+            [1, 2, 4],
+            16,
+        )
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] wrote meta.json with {len(meta['models'])} models, {len(meta['kernels'])} kernels")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""L1 Pallas kernels for QSGDMaxNormMultiScale quantization (paper §4.2).
+
+Three kernels, matching the three phases of Algorithm 2:
+
+* ``scale_index``       — per-coordinate scale selection (eq. 10): the largest
+  scale s in the set with ``s * |v_i| <= ||w|| * min(S)``. The scale set is a
+  static tuple (N = 2..4 in the paper), so selection is N fused compares in
+  registers — no gather, see DESIGN.md §7.
+* ``multiscale_quantize`` — stochastic rounding at the *shared* per-coordinate
+  scale (after the min-all-reduce scale sharing happens at L3).
+* ``multiscale_dequantize`` — eq. (12): elementwise division by s*.
+
+All stream 1-D VMEM tiles like the single-scale kernel; the scale-index
+vector rides along as a second input tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .qsgd import BLOCK, _pad_to_block
+
+
+def _scale_index_kernel(v_ref, w_ref, o_ref, *, scales: tuple[int, ...]):
+    v = v_ref[...]
+    w = w_ref[0]
+    safe_w = jnp.where(w > 0.0, w, jnp.float32(1.0))
+    smin = jnp.float32(min(scales))
+    idx = jnp.zeros(v.shape, jnp.float32)
+    for j, s in enumerate(sorted(scales)):
+        ok = jnp.float32(s) * jnp.abs(v) <= safe_w * smin
+        idx = jnp.where(ok, jnp.float32(j), idx)
+    o_ref[...] = idx
+
+
+def scale_index(
+    v: jnp.ndarray, wnorm: jnp.ndarray, scales: tuple[int, ...], block: int = BLOCK
+) -> jnp.ndarray:
+    """Per-coordinate scale index (f32 integer values), eq. (10)."""
+    n = v.shape[0]
+    vp = _pad_to_block(v.astype(jnp.float32), block)
+    w1 = jnp.reshape(jnp.asarray(wnorm, jnp.float32), (1,))
+    grid = vp.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_scale_index_kernel, scales=tuple(scales)),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(vp.shape, jnp.float32),
+        interpret=True,
+    )(vp, w1)
+    return out[:n]
+
+
+def _ms_quantize_kernel(v_ref, w_ref, u_ref, idx_ref, o_ref, *, scales: tuple[int, ...]):
+    v = v_ref[...]
+    u = u_ref[...]
+    idx = idx_ref[...]
+    w = w_ref[0]
+    safe_w = jnp.where(w > 0.0, w, jnp.float32(1.0))
+    a = jnp.abs(v) / safe_w
+    srt = sorted(scales)
+    s_eff = jnp.zeros(v.shape, jnp.float32)
+    for j, s in enumerate(srt):
+        s_eff = jnp.where(idx == jnp.float32(j), jnp.float32(s), s_eff)
+    scaled = a * s_eff
+    l = jnp.floor(scaled)
+    p = scaled - l
+    level = l + jnp.where(u < p, jnp.float32(1.0), jnp.float32(0.0))
+    zeta = jnp.sign(v) * level
+    o_ref[...] = jnp.where(w > 0.0, zeta, jnp.zeros_like(zeta))
+
+
+def multiscale_quantize(
+    v: jnp.ndarray,
+    wnorm: jnp.ndarray,
+    u: jnp.ndarray,
+    scale_idx: jnp.ndarray,
+    scales: tuple[int, ...],
+    block: int = BLOCK,
+) -> jnp.ndarray:
+    """Pallas multi-scale encode at the shared per-coordinate scale (eq. 9/11)."""
+    n = v.shape[0]
+    vp = _pad_to_block(v.astype(jnp.float32), block)
+    up = _pad_to_block(u.astype(jnp.float32), block)
+    ip = _pad_to_block(scale_idx.astype(jnp.float32), block)
+    w1 = jnp.reshape(jnp.asarray(wnorm, jnp.float32), (1,))
+    grid = vp.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_ms_quantize_kernel, scales=tuple(scales)),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(vp.shape, jnp.float32),
+        interpret=True,
+    )(vp, w1, up, ip)
+    return out[:n]
+
+
+def _ms_dequantize_kernel(z_ref, w_ref, idx_ref, o_ref, *, scales: tuple[int, ...], m: int):
+    z = z_ref[...]
+    idx = idx_ref[...]
+    w = w_ref[0]
+    srt = sorted(scales)
+    s_eff = jnp.full(z.shape, jnp.float32(srt[0]))
+    for j, s in enumerate(srt):
+        s_eff = jnp.where(idx == jnp.float32(j), jnp.float32(s), s_eff)
+    o_ref[...] = z * w / (s_eff * jnp.float32(m))
+
+
+def multiscale_dequantize(
+    zeta_sum: jnp.ndarray,
+    wnorm: jnp.ndarray,
+    scale_idx: jnp.ndarray,
+    scales: tuple[int, ...],
+    m: int,
+    block: int = BLOCK,
+) -> jnp.ndarray:
+    """Pallas multi-scale decode of an all-reduced level sum (eq. 12, /M)."""
+    n = zeta_sum.shape[0]
+    zp = _pad_to_block(zeta_sum.astype(jnp.float32), block)
+    ip = _pad_to_block(scale_idx.astype(jnp.float32), block)
+    w1 = jnp.reshape(jnp.asarray(wnorm, jnp.float32), (1,))
+    grid = zp.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_ms_dequantize_kernel, scales=tuple(scales), m=m),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(zp.shape, jnp.float32),
+        interpret=True,
+    )(zp, w1, ip)
+    return out[:n]

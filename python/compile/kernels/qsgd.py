@@ -1,0 +1,152 @@
+"""L1 Pallas kernels for QSGDMaxNorm (single-scale) quantization.
+
+The paper's compute hot-spot is elementwise stochastic rounding against a
+globally shared max-norm scale, plus the L2-norm reduction that produces the
+scale. Both are written as Pallas kernels with an explicit HBM->VMEM block
+schedule (DESIGN.md §7):
+
+* ``qsgd_quantize``   — grid over 1-D blocks of ``BLOCK`` lanes; each block
+  streams v/u tiles into VMEM, does the rounding on the VPU, writes the
+  signed-level tile. No cross-block dependence: the scale ``wnorm`` is a
+  prefetched scalar.
+* ``l2_norm_partials`` — block-partial sum-of-squares reduction (the Pallas
+  analogue of a CUDA warp-reduce + grid-level second pass); the final sqrt
+  of the partial sum happens in plain jnp (a trivial [grid]-length vector).
+* ``qsgd_dequantize`` — streaming reconstruct of the all-reduced level sum.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU the same BlockSpecs pipeline HBM<->VMEM.
+VMEM footprint at BLOCK=8192: 3 live f32 tiles = 96 KiB, far under budget,
+leaving headroom for double-buffering (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8192 f32 lanes = 32 KiB per tile: large enough to amortize the grid loop,
+# small enough that in+rand+out triple stays < 100 KiB of VMEM.
+BLOCK = 8192
+
+
+def _pad_to_block(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    n = x.shape[0]
+    rem = (-n) % block
+    if rem == 0:
+        return x
+    return jnp.pad(x, (0, rem))
+
+
+# ---------------------------------------------------------------------------
+# quantize
+
+
+def _quantize_kernel(v_ref, w_ref, u_ref, o_ref, *, s: int):
+    """One VMEM tile of eq. (6)/(7): signed integer levels."""
+    v = v_ref[...]
+    u = u_ref[...]
+    w = w_ref[0]
+    safe_w = jnp.where(w > 0.0, w, jnp.float32(1.0))
+    a = jnp.abs(v) / safe_w
+    scaled = a * jnp.float32(s)
+    l = jnp.floor(scaled)
+    p = scaled - l
+    level = l + jnp.where(u < p, jnp.float32(1.0), jnp.float32(0.0))
+    zeta = jnp.sign(v) * level
+    o_ref[...] = jnp.where(w > 0.0, zeta, jnp.zeros_like(zeta))
+
+
+def qsgd_quantize(
+    v: jnp.ndarray, wnorm: jnp.ndarray, u: jnp.ndarray, s: int, block: int = BLOCK
+) -> jnp.ndarray:
+    """Pallas QSGDMaxNorm encode: f32[n] -> signed levels f32[n].
+
+    ``wnorm`` is the shared max L2 norm (scalar); ``u`` the explicit uniform
+    randomness (DESIGN.md §5 determinism contract).
+    """
+    n = v.shape[0]
+    vp = _pad_to_block(v.astype(jnp.float32), block)
+    up = _pad_to_block(u.astype(jnp.float32), block)
+    w1 = jnp.reshape(jnp.asarray(wnorm, jnp.float32), (1,))
+    grid = vp.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, s=s),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),  # broadcast scalar tile
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(vp.shape, jnp.float32),
+        interpret=True,
+    )(vp, w1, up)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# dequantize
+
+
+def _dequantize_kernel(z_ref, w_ref, o_ref, *, s: int, m: int):
+    z = z_ref[...]
+    w = w_ref[0]
+    o_ref[...] = z * w / jnp.float32(s * m)
+
+
+def qsgd_dequantize(
+    zeta_sum: jnp.ndarray,
+    wnorm: jnp.ndarray,
+    s: int,
+    m: int,
+    block: int = BLOCK,
+) -> jnp.ndarray:
+    """Pallas QSGDMaxNorm decode of an all-reduced level sum (eq. 8, /M)."""
+    n = zeta_sum.shape[0]
+    zp = _pad_to_block(zeta_sum.astype(jnp.float32), block)
+    w1 = jnp.reshape(jnp.asarray(wnorm, jnp.float32), (1,))
+    grid = zp.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_dequantize_kernel, s=s, m=m),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(zp.shape, jnp.float32),
+        interpret=True,
+    )(zp, w1)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# L2 norm (two-pass block reduction)
+
+
+def _sumsq_kernel(v_ref, o_ref):
+    v = v_ref[...]
+    o_ref[0] = jnp.sum(v * v)
+
+
+def l2_norm_partials(v: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """Block-partial sum-of-squares, f32[n] -> f32[grid]."""
+    vp = _pad_to_block(v.astype(jnp.float32), block)
+    grid = vp.shape[0] // block
+    return pl.pallas_call(
+        _sumsq_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
+        interpret=True,
+    )(vp)
+
+
+def l2_norm(v: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """Full L2 norm via the Pallas partial reduction + trivial final pass."""
+    return jnp.sqrt(jnp.sum(l2_norm_partials(v, block)))

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel for the GlobalRandK front-end (paper §4.3/§4.4).
+
+GlobalRandK sparsification picks K coordinates *with a globally shared seed*
+(all workers pick the same indices — that is what makes the scheme all-reduce
+compatible), gathers them into a dense K-vector, and hands that dense vector
+to the QSGDMaxNorm / MultiScale quantizer.
+
+The gather is expressed as a Pallas kernel over K-blocks doing dynamic loads
+from the full gradient resident in HBM (``index_map`` keeps the whole source
+as one block; per-element ``pl.load`` with an index tile does the gather —
+on TPU this maps to VMEM scalar-indexed loads, the analogue of the paper's
+``torch.gather``). The scatter-back after decode is the transpose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .qsgd import _pad_to_block
+
+GATHER_BLOCK = 2048
+
+
+def _gather_kernel(idx_ref, v_ref, o_ref):
+    idx = idx_ref[...].astype(jnp.int32)
+    o_ref[...] = v_ref[idx]
+
+
+def randk_gather(v: jnp.ndarray, idx: jnp.ndarray, block: int = GATHER_BLOCK) -> jnp.ndarray:
+    """Gather K globally-shared coordinates: f32[n], i32[k] -> f32[k]."""
+    k = idx.shape[0]
+    ip = _pad_to_block(idx.astype(jnp.int32), block)  # pad with index 0
+    grid = ip.shape[0] // block
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(v.shape, lambda i: (0,)),  # full source resident
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(ip.shape, jnp.float32),
+        interpret=True,
+    )(ip, v.astype(jnp.float32))
+    return out[:k]
+
+
+def randk_scatter(n: int, idx: jnp.ndarray, dense_k: jnp.ndarray) -> jnp.ndarray:
+    """Scatter decoded K values into an n-vector of zeros (jnp scatter).
+
+    The scatter is a one-shot `.at[].set()` — XLA lowers it to a single
+    scatter HLO; a handwritten Pallas scatter buys nothing on top (it is
+    bandwidth-bound and write-once), so we keep the fused XLA op.
+    """
+    out = jnp.zeros((n,), jnp.float32)
+    return out.at[idx.astype(jnp.int32)].set(dense_k.astype(jnp.float32))

@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for the quantization kernels (L1 correctness ground truth).
+
+Every kernel in this package is validated against these functions by
+``python/tests``; the Rust implementations are additionally validated against
+the *lowered HLO* of the Pallas kernels, so this file is the root of the
+bit-exactness chain described in DESIGN.md §5.
+
+All stochastic rounding consumes an explicit uniform vector ``u`` in
+``[0, 1)`` so that every layer (jnp oracle, Pallas kernel, Rust hot path,
+PJRT-executed HLO) is a deterministic function of ``(v, wnorm, u)``.
+
+Paper equations ("Quantization for Distributed Optimization"):
+
+*  eq. (6)/(7): single-scale QSGDMaxNorm — for coordinate ``v_i`` with shared
+   scale ``s`` and shared max-norm ``||w||``, let ``a = |v_i| / ||w||`` and
+   ``l = floor(a * s)``. Then the transmitted integer level is
+   ``l + 1{u_i < a*s - l}`` and the encoded coordinate is
+   ``sign(v_i) * level``.
+*  eq. (9)/(10)/(11): multi-scale — per-coordinate scale ``s*_i`` is the
+   largest scale in the set ``S`` with ``s <= (||w|| / |v_i|) * min(S)``;
+   rounding then proceeds at ``s*_i``.
+*  eq. (8)/(12): reconstruction divides by the scale(s) and multiplies by
+   ``||w||``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qsgd_levels(v: jnp.ndarray, wnorm: jnp.ndarray, u: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Signed integer levels ``zeta = sign(v) * xi * s`` for QSGDMaxNorm.
+
+    Args:
+      v:     gradient vector, f32[n].
+      wnorm: shared scalar ``||w||_2 = max_m ||g_m||_2`` (f32 scalar).
+      u:     uniform randomness in [0, 1), f32[n].
+      s:     number of non-zero quantization levels (static int >= 1).
+
+    Returns:
+      f32[n] vector of signed integer levels in ``[-s, s]``. (f32 carrier so
+      the same HLO I/O dtype is used everywhere; values are exact integers.)
+    """
+    v = v.astype(jnp.float32)
+    wnorm = jnp.asarray(wnorm, jnp.float32)
+    # Guard w == 0 (all-zero gradients everywhere): levels are all zero.
+    safe_w = jnp.where(wnorm > 0.0, wnorm, jnp.float32(1.0))
+    a = jnp.abs(v) / safe_w  # in [0, 1] since |v_i| <= ||v|| <= ||w||
+    scaled = a * jnp.float32(s)
+    l = jnp.floor(scaled)
+    p = scaled - l
+    level = l + jnp.where(u < p, jnp.float32(1.0), jnp.float32(0.0))
+    zeta = jnp.sign(v) * level
+    return jnp.where(wnorm > 0.0, zeta, jnp.zeros_like(zeta))
+
+
+def qsgd_dequantize(zeta_sum: jnp.ndarray, wnorm: jnp.ndarray, s: int, m: int) -> jnp.ndarray:
+    """Reconstruct the *averaged* gradient from an all-reduced level sum.
+
+    eq. (8) applied to ``(1/M) * sum_m zeta_m``: ``||w|| * zeta / (s * M)``.
+    """
+    return (
+        zeta_sum.astype(jnp.float32)
+        * jnp.asarray(wnorm, jnp.float32)
+        / jnp.float32(s * m)
+    )
+
+
+def multiscale_scale_index(
+    v: jnp.ndarray, wnorm: jnp.ndarray, scales: tuple[int, ...]
+) -> jnp.ndarray:
+    """Per-coordinate scale index: largest ``s_j <= (||w||/|v_i|) * min(S)``.
+
+    The scale set is sorted ascending; index 0 == ``min(S)`` always
+    qualifies because ``|v_i| <= ||w||``. Returned as f32 integer values
+    for HLO-dtype uniformity.
+    """
+    v = v.astype(jnp.float32)
+    wnorm = jnp.asarray(wnorm, jnp.float32)
+    smin = jnp.float32(min(scales))
+    safe_w = jnp.where(wnorm > 0.0, wnorm, jnp.float32(1.0))
+    # threshold on s:  s * |v_i| <= ||w|| * smin   (multiplicative form avoids
+    # the |v_i| == 0 division special-case; v_i == 0 admits every scale).
+    idx = jnp.zeros(v.shape, jnp.float32)
+    for j, s in enumerate(sorted(scales)):
+        ok = jnp.float32(s) * jnp.abs(v) <= safe_w * smin
+        idx = jnp.where(ok, jnp.float32(j), idx)
+    return idx
+
+
+def multiscale_levels(
+    v: jnp.ndarray,
+    wnorm: jnp.ndarray,
+    u: jnp.ndarray,
+    scale_idx: jnp.ndarray,
+    scales: tuple[int, ...],
+) -> jnp.ndarray:
+    """Signed levels at the (already shared) per-coordinate scale.
+
+    ``scale_idx`` is the elementwise-min over workers of
+    :func:`multiscale_scale_index` (the paper's *scale sharing*), carried as
+    f32 integers.
+    """
+    v = v.astype(jnp.float32)
+    wnorm = jnp.asarray(wnorm, jnp.float32)
+    safe_w = jnp.where(wnorm > 0.0, wnorm, jnp.float32(1.0))
+    a = jnp.abs(v) / safe_w
+    srt = sorted(scales)
+    s_eff = jnp.zeros(v.shape, jnp.float32)
+    for j, s in enumerate(srt):
+        s_eff = jnp.where(scale_idx == jnp.float32(j), jnp.float32(s), s_eff)
+    scaled = a * s_eff
+    l = jnp.floor(scaled)
+    p = scaled - l
+    level = l + jnp.where(u < p, jnp.float32(1.0), jnp.float32(0.0))
+    zeta = jnp.sign(v) * level
+    return jnp.where(wnorm > 0.0, zeta, jnp.zeros_like(zeta))
+
+
+def multiscale_dequantize(
+    zeta_sum: jnp.ndarray,
+    wnorm: jnp.ndarray,
+    scale_idx: jnp.ndarray,
+    scales: tuple[int, ...],
+    m: int,
+) -> jnp.ndarray:
+    """eq. (12) on the all-reduced sum: elementwise divide by ``s*`` then /M."""
+    srt = sorted(scales)
+    s_eff = jnp.full(zeta_sum.shape, jnp.float32(srt[0]))
+    for j, s in enumerate(srt):
+        s_eff = jnp.where(scale_idx == jnp.float32(j), jnp.float32(s), s_eff)
+    return (
+        zeta_sum.astype(jnp.float32)
+        * jnp.asarray(wnorm, jnp.float32)
+        / (s_eff * jnp.float32(m))
+    )
+
+
+def randk_gather(v: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Sparsification front-end: gather the K globally-shared coordinates."""
+    return v.astype(jnp.float32)[idx]
+
+
+def randk_scatter(n: int, idx: jnp.ndarray, dense_k: jnp.ndarray) -> jnp.ndarray:
+    """Scatter decoded K values back into an n-vector (rest zeros)."""
+    out = jnp.zeros((n,), jnp.float32)
+    return out.at[idx].set(dense_k.astype(jnp.float32))
+
+
+def l2_norm(v: jnp.ndarray) -> jnp.ndarray:
+    """Shared-scale prerequisite: the worker-local L2 norm."""
+    v = v.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(v * v))

@@ -1,0 +1,156 @@
+"""L2 glue: flat-parameter train/eval steps over the model zoo.
+
+The Rust coordinator (L3) owns parameters as a single flat ``f32[P]`` buffer;
+every exported HLO takes/returns that flat layout. ``ravel_pytree`` defines
+the canonical ordering, and ``meta.json`` (written by aot.py) records the
+per-tensor segmentation so L3-side compressors that need layer structure
+(PowerSGD) can reshape slices without ever importing Python.
+
+Exports
+  * ``make_train_step(model, cfg, m)`` — f(params[P], x[M,B,...], y[M,B])
+    -> (loss[M], grads[M,P]): the vmapped multi-worker gradient step. The
+    per-worker gradients feed the compression + simulated-collective path in
+    Rust (DESIGN.md §2 substitution table).
+  * ``make_eval_step(model, cfg)``  — f(params[P], x[B,...], y[B])
+    -> (loss, correct_count).
+  * quantizer wrappers re-exported from kernels (lowered standalone so Rust
+    can cross-check its native encoder bit-for-bit against the Pallas HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import multiscale as ms_kernels
+from .kernels import qsgd as qsgd_kernels
+from .models import REGISTRY
+from .models import common
+
+SEED = 42
+
+
+def init_flat(model_name: str, cfg: dict):
+    """Initialize parameters; return (flat f32[P] array, unravel fn, segments).
+
+    ``segments`` is a list of (dotted-name, shape, offset, length) describing
+    the flat layout — persisted in meta.json for L3.
+    """
+    model = REGISTRY[model_name]
+    params = model.init(jax.random.PRNGKey(SEED), cfg)
+    flat, unravel = ravel_pytree(params)
+
+    segments = []
+    offset = 0
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in leaves_with_path:
+        name = ".".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        length = int(leaf.size)
+        segments.append(
+            {"name": name, "shape": list(leaf.shape), "offset": offset, "len": length}
+        )
+        offset += length
+    assert offset == flat.size
+    return flat.astype(jnp.float32), unravel, segments
+
+
+def _loss_classifier(model, cfg, unravel, params_flat, x, y):
+    params = unravel(params_flat)
+    logits = model.apply(params, x, cfg)
+    return common.softmax_xent(logits, y)
+
+
+def _loss_lm(model, cfg, unravel, params_flat, tokens):
+    """tokens: i32[B, T+1]; next-token CE over all T positions."""
+    params = unravel(params_flat)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = model.apply(params, inp, cfg)
+    return common.softmax_xent(logits, tgt)
+
+
+def make_train_step(model_name: str, cfg: dict, m: int):
+    """Multi-worker gradient step; worker axis is vmapped over the data only."""
+    model = REGISTRY[model_name]
+    _, unravel, _ = init_flat(model_name, cfg)
+
+    if model_name == "transformer":
+
+        def one(params_flat, tokens):
+            loss, grads = jax.value_and_grad(
+                lambda p: _loss_lm(model, cfg, unravel, p, tokens)
+            )(params_flat)
+            return loss, grads
+
+        def step(params_flat, tokens_m):
+            return jax.vmap(one, in_axes=(None, 0))(params_flat, tokens_m)
+
+    else:
+
+        def one(params_flat, x, y):
+            loss, grads = jax.value_and_grad(
+                lambda p: _loss_classifier(model, cfg, unravel, p, x, y)
+            )(params_flat)
+            return loss, grads
+
+        def step(params_flat, x_m, y_m):
+            return jax.vmap(one, in_axes=(None, 0, 0))(params_flat, x_m, y_m)
+
+    return step
+
+
+def make_eval_step(model_name: str, cfg: dict):
+    model = REGISTRY[model_name]
+    _, unravel, _ = init_flat(model_name, cfg)
+
+    if model_name == "transformer":
+
+        def step(params_flat, tokens):
+            loss = _loss_lm(model, cfg, unravel, params_flat, tokens)
+            return (loss, jnp.float32(0.0))
+
+    else:
+
+        def step(params_flat, x, y):
+            params = unravel(params_flat)
+            logits = model.apply(params, x, cfg)
+            return (common.softmax_xent(logits, y), common.accuracy_count(logits, y))
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# standalone kernel graphs (for the Rust bit-exactness parity artifacts)
+
+
+def make_qsgd_quantize(n: int, s: int):
+    def fn(v, wnorm, u):
+        return (qsgd_kernels.qsgd_quantize(v, wnorm, u, s),)
+
+    return fn
+
+
+def make_qsgd_roundtrip(n: int, s: int, m: int):
+    """quantize + dequantize composed — the full L1 hot path in one HLO."""
+
+    def fn(v, wnorm, u):
+        z = qsgd_kernels.qsgd_quantize(v, wnorm, u, s)
+        return (qsgd_kernels.qsgd_dequantize(z, wnorm, s, m),)
+
+    return fn
+
+
+def make_multiscale_quantize(n: int, scales: tuple[int, ...]):
+    def fn(v, wnorm, u):
+        idx = ms_kernels.scale_index(v, wnorm, scales)
+        z = ms_kernels.multiscale_quantize(v, wnorm, u, idx, scales)
+        return (idx, z)
+
+    return fn
+
+
+def make_l2_norm(n: int):
+    def fn(v):
+        return (qsgd_kernels.l2_norm(v),)
+
+    return fn

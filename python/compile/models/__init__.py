@@ -1,0 +1,20 @@
+"""L2 model zoo (build-time only; lowered to HLO by aot.py).
+
+Each model module exposes:
+
+* ``init(key, cfg) -> params``  — a pytree of f32 arrays.
+* ``apply(params, x, cfg) -> logits`` — pure forward pass.
+* ``default_cfg() -> dict``     — the configuration used by the paper repro.
+
+Models are pure-functional (no mutable state: GroupNorm instead of BatchNorm)
+so that ``jax.grad`` over a flat parameter vector lowers to a single HLO.
+"""
+
+from . import mlp, resnet_lite, transformer, vgg_lite  # noqa: F401
+
+REGISTRY = {
+    "mlp": mlp,
+    "resnet_lite": resnet_lite,
+    "vgg_lite": vgg_lite,
+    "transformer": transformer,
+}

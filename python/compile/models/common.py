@@ -1,0 +1,96 @@
+"""Shared layers/initializers for the L2 model zoo."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def he_normal(key, shape, fan_in):
+    """He/Kaiming normal initializer (matches the paper's PyTorch defaults)."""
+    std = jnp.sqrt(2.0 / fan_in)
+    return (jax.random.normal(key, shape) * std).astype(jnp.float32)
+
+
+def lecun_normal(key, shape, fan_in):
+    std = jnp.sqrt(1.0 / fan_in)
+    return (jax.random.normal(key, shape) * std).astype(jnp.float32)
+
+
+def dense_init(key, d_in, d_out):
+    kw, _ = jax.random.split(key)
+    return {
+        "w": he_normal(kw, (d_in, d_out), d_in),
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def conv_init(key, kh, kw_, cin, cout):
+    k, _ = jax.random.split(key)
+    return {
+        "w": he_normal(k, (kh, kw_, cin, cout), kh * kw_ * cin),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def conv(p, x, stride=1, padding="SAME"):
+    """NHWC conv with HWIO weights."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def group_norm_init(c):
+    return {"g": jnp.ones((c,), jnp.float32), "b": jnp.zeros((c,), jnp.float32)}
+
+
+def group_norm(p, x, groups=8, eps=1e-5):
+    """Stateless GroupNorm over NHWC (BatchNorm stand-in; see DESIGN.md §2)."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = ((xg - mean) ** 2).mean(axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mean) / jnp.sqrt(var + eps)).reshape(n, h, w, c)
+    return xn * p["g"] + p["b"]
+
+
+def layer_norm_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p, x, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def max_pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def avg_pool_global(x):
+    return x.mean(axis=(1, 2))
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy; labels are int class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy_count(logits, labels):
+    """Number of correct argmax predictions (f32 scalar)."""
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

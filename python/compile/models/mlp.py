@@ -1,0 +1,35 @@
+"""Plain MLP classifier on flattened 32x32x3 inputs (quickstart model)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def default_cfg():
+    return {
+        "input": [32, 32, 3],
+        "hidden": [512, 256],
+        "classes": 10,
+    }
+
+
+def init(key, cfg):
+    dims = [int(jnp.prod(jnp.asarray(cfg["input"])))] + list(cfg["hidden"]) + [cfg["classes"]]
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"fc{i}": common.dense_init(k, dims[i], dims[i + 1])
+        for i, k in enumerate(keys)
+    }
+
+
+def apply(params, x, cfg):
+    h = x.reshape(x.shape[0], -1)
+    n_layers = len(cfg["hidden"]) + 1
+    for i in range(n_layers):
+        h = common.dense(params[f"fc{i}"], h)
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h

@@ -1,0 +1,77 @@
+"""ResNet-lite: the computation-intensive model (ResNet50 stand-in, §2 of DESIGN.md).
+
+A CIFAR-style pre-activation residual network: stem conv, three stages of
+residual blocks at widths (16, 32, 64) with stride-2 transitions, global
+average pooling, linear head. Deep-and-narrow => high FLOPs-per-parameter,
+preserving the paper's computation-intensive vs communication-intensive
+contrast against vgg_lite.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def default_cfg():
+    return {
+        "input": [32, 32, 3],
+        "widths": [16, 32, 64],
+        "blocks_per_stage": 2,
+        "classes": 10,
+    }
+
+
+def _block_init(key, cin, cout):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "gn1": common.group_norm_init(cin),
+        "conv1": common.conv_init(k1, 3, 3, cin, cout),
+        "gn2": common.group_norm_init(cout),
+        "conv2": common.conv_init(k2, 3, 3, cout, cout),
+    }
+    if cin != cout:
+        p["proj"] = common.conv_init(k3, 1, 1, cin, cout)
+    return p
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(common.group_norm(p["gn1"], x))
+    h = common.conv(p["conv1"], h, stride=stride)
+    h = jax.nn.relu(common.group_norm(p["gn2"], h))
+    h = common.conv(p["conv2"], h)
+    if "proj" in p:
+        x = common.conv(p["proj"], x, stride=stride)
+    return x + h
+
+
+def init(key, cfg):
+    widths = cfg["widths"]
+    nb = cfg["blocks_per_stage"]
+    keys = jax.random.split(key, 2 + len(widths) * nb)
+    params = {"stem": common.conv_init(keys[0], 3, 3, cfg["input"][2], widths[0])}
+    ki = 1
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        for bi in range(nb):
+            params[f"s{si}b{bi}"] = _block_init(keys[ki], cin, w)
+            cin = w
+            ki += 1
+    params["head_gn"] = common.group_norm_init(widths[-1])
+    params["head"] = common.dense_init(keys[ki], widths[-1], cfg["classes"])
+    return params
+
+
+def apply(params, x, cfg):
+    widths = cfg["widths"]
+    nb = cfg["blocks_per_stage"]
+    h = common.conv(params["stem"], x)
+    for si, _w in enumerate(widths):
+        for bi in range(nb):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _block_apply(params[f"s{si}b{bi}"], h, stride)
+    h = jax.nn.relu(common.group_norm(params["head_gn"], h))
+    h = common.avg_pool_global(h)
+    return common.dense(params["head"], h)

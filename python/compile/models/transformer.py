@@ -1,0 +1,102 @@
+"""Decoder-only transformer LM — the end-to-end training workload.
+
+Used by ``examples/lm_pretrain.rs`` (EXPERIMENTS.md §E2E): data-parallel
+pretraining on a synthetic Markov corpus with the paper's quantizers on the
+gradient path. Pre-LN GPT-style blocks, learned positional embeddings, tied
+output head.
+
+``default_cfg`` is ~10M parameters (CPU-trainable in minutes); ``large_cfg``
+is ~100M for parity with the system-prompt scale target (compile-only on
+this testbed — documented substitution, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def default_cfg():
+    return {
+        "vocab": 256,
+        "seq": 128,
+        "d_model": 384,
+        "heads": 6,
+        "layers": 6,
+        "d_ff": 1536,
+    }
+
+
+def large_cfg():
+    return {
+        "vocab": 8192,
+        "seq": 256,
+        "d_model": 768,
+        "heads": 12,
+        "layers": 12,
+        "d_ff": 3072,
+    }
+
+
+def _block_init(key, cfg):
+    d, f = cfg["d_model"], cfg["d_ff"]
+    k = jax.random.split(key, 6)
+    return {
+        "ln1": common.layer_norm_init(d),
+        "wqkv": common.lecun_normal(k[0], (d, 3 * d), d),
+        "wo": common.lecun_normal(k[1], (d, d), d),
+        "ln2": common.layer_norm_init(d),
+        "w1": common.lecun_normal(k[2], (d, f), d),
+        "b1": jnp.zeros((f,), jnp.float32),
+        "w2": common.lecun_normal(k[3], (f, d), f),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _block_apply(p, x, cfg):
+    b, t, d = x.shape
+    h = cfg["heads"]
+    dh = d // h
+
+    # --- causal self-attention
+    xn = common.layer_norm(p["ln1"], x)
+    qkv = xn @ p["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    att = jnp.where(mask, att, jnp.float32(-1e30))
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + y @ p["wo"]
+
+    # --- MLP
+    xn = common.layer_norm(p["ln2"], x)
+    hdd = jax.nn.gelu(xn @ p["w1"] + p["b1"])
+    return x + hdd @ p["w2"] + p["b2"]
+
+
+def init(key, cfg):
+    keys = jax.random.split(key, cfg["layers"] + 3)
+    params = {
+        "tok_emb": common.lecun_normal(keys[0], (cfg["vocab"], cfg["d_model"]), cfg["d_model"]),
+        "pos_emb": common.lecun_normal(keys[1], (cfg["seq"], cfg["d_model"]), cfg["d_model"]),
+        "ln_f": common.layer_norm_init(cfg["d_model"]),
+    }
+    for i in range(cfg["layers"]):
+        params[f"blk{i}"] = _block_init(keys[2 + i], cfg)
+    return params
+
+
+def apply(params, x, cfg):
+    """x: i32[B, T] token ids -> logits f32[B, T, vocab] (tied head)."""
+    t = x.shape[1]
+    h = params["tok_emb"][x] + params["pos_emb"][:t]
+    for i in range(cfg["layers"]):
+        h = _block_apply(params[f"blk{i}"], h, cfg)
+    h = common.layer_norm(params["ln_f"], h)
+    return h @ params["tok_emb"].T

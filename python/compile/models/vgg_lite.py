@@ -1,0 +1,58 @@
+"""VGG-lite: the communication-intensive model (VGG16 stand-in, DESIGN.md §2).
+
+Classic VGG topology — conv-conv-pool stacks then wide dense layers. Most of
+the parameters live in the dense head, so the parameters-per-FLOP ratio is
+high: exactly the regime where the paper shows gradient compression pays off
+most (Figs 13/14 vs 11/12).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def default_cfg():
+    return {
+        "input": [32, 32, 3],
+        "stages": [[32, 32], [64, 64], [128, 128]],
+        "dense": [256],
+        "classes": 10,
+    }
+
+
+def init(key, cfg):
+    n_conv = sum(len(s) for s in cfg["stages"])
+    keys = jax.random.split(key, n_conv + len(cfg["dense"]) + 1)
+    params = {}
+    ki = 0
+    cin = cfg["input"][2]
+    for si, stage in enumerate(cfg["stages"]):
+        for ci, cout in enumerate(stage):
+            params[f"conv{si}_{ci}"] = common.conv_init(keys[ki], 3, 3, cin, cout)
+            params[f"gn{si}_{ci}"] = common.group_norm_init(cout)
+            cin = cout
+            ki += 1
+    hw = cfg["input"][0] // (2 ** len(cfg["stages"]))
+    d_in = hw * hw * cfg["stages"][-1][-1]
+    for di, d in enumerate(cfg["dense"]):
+        params[f"fc{di}"] = common.dense_init(keys[ki], d_in, d)
+        d_in = d
+        ki += 1
+    params["head"] = common.dense_init(keys[ki], d_in, cfg["classes"])
+    return params
+
+
+def apply(params, x, cfg):
+    h = x
+    for si, stage in enumerate(cfg["stages"]):
+        for ci, _cout in enumerate(stage):
+            h = common.conv(params[f"conv{si}_{ci}"], h)
+            h = jax.nn.relu(common.group_norm(params[f"gn{si}_{ci}"], h))
+        h = common.max_pool2(h)
+    h = h.reshape(h.shape[0], -1)
+    for di, _d in enumerate(cfg["dense"]):
+        h = jax.nn.relu(common.dense(params[f"fc{di}"], h))
+    return common.dense(params["head"], h)

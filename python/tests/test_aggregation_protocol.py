@@ -1,0 +1,100 @@
+"""Protocol-level tests of the paper's core invariant, in pure Python:
+the compression operators commute with summation (all-reduce compatibility,
+DESIGN.md §4), end to end through the jnp oracle — the same property the
+Rust side asserts on real model gradients in cluster_equivalence.rs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def simulate_workers(seed, m, n):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=n).astype(np.float32)) for _ in range(m)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=6),
+    n=st.integers(min_value=1, max_value=4000),
+    s=st.sampled_from([1, 7, 127]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_qsgd_commutes_with_aggregation(m, n, s, seed):
+    """decode(sum_m(levels_m)) == (1/M) * sum_m decode(levels_m)."""
+    rng = np.random.default_rng(seed)
+    grads = simulate_workers(seed, m, n)
+    wnorm = jnp.float32(max(float(ref.l2_norm(g)) for g in grads))
+    levels = []
+    for g in grads:
+        u = jnp.asarray(rng.random(n).astype(np.float32))
+        levels.append(ref.qsgd_levels(g, wnorm, u, s))
+    summed = sum(np.asarray(z, np.float64) for z in levels)
+    path_a = np.asarray(ref.qsgd_dequantize(jnp.asarray(summed, jnp.float32), wnorm, s, m))
+    path_b = np.mean(
+        [np.asarray(ref.qsgd_dequantize(z, wnorm, s, 1)) for z in levels], axis=0
+    )
+    np.testing.assert_allclose(path_a, path_b, rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=5),
+    n=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_scale_sharing_makes_multiscale_commute(m, n, seed):
+    """With the shared (min) scale index, multi-scale sums decode correctly;
+    without sharing, workers' levels are at incompatible scales."""
+    scales = (7, 127)
+    rng = np.random.default_rng(seed)
+    grads = simulate_workers(seed, m, n)
+    wnorm = jnp.float32(max(float(ref.l2_norm(g)) for g in grads))
+
+    # scale sharing: elementwise min over workers (paper Algorithm 2, line 7)
+    per_worker_idx = [ref.multiscale_scale_index(g, wnorm, scales) for g in grads]
+    shared_idx = jnp.min(jnp.stack(per_worker_idx), axis=0)
+
+    levels = []
+    for g in grads:
+        u = jnp.asarray(rng.random(n).astype(np.float32))
+        levels.append(ref.multiscale_levels(g, wnorm, u, shared_idx, scales))
+    summed = jnp.asarray(sum(np.asarray(z, np.float64) for z in levels), jnp.float32)
+    path_a = np.asarray(ref.multiscale_dequantize(summed, wnorm, shared_idx, scales, m))
+    path_b = np.mean(
+        [
+            np.asarray(ref.multiscale_dequantize(z, wnorm, shared_idx, scales, 1))
+            for z in levels
+        ],
+        axis=0,
+    )
+    np.testing.assert_allclose(path_a, path_b, rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=2000),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_shared_max_norm_dominates_every_worker(n, seed):
+    grads = simulate_workers(seed, 4, n)
+    wnorm = max(float(ref.l2_norm(g)) for g in grads)
+    for g in grads:
+        assert float(jnp.max(jnp.abs(g))) <= wnorm + 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_multiscale_index_monotone_in_magnitude(seed):
+    """Smaller |v_i| must never get a *smaller* scale than larger |v_i|."""
+    n = 1000
+    scales = (7, 31, 127)
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(np.sort(np.abs(rng.normal(size=n))).astype(np.float32))
+    w = ref.l2_norm(v) * jnp.float32(1.5)
+    idx = np.asarray(ref.multiscale_scale_index(v, w, scales))
+    # v ascending in magnitude => idx non-increasing
+    assert np.all(np.diff(idx) <= 0 + 1e-9)

@@ -1,0 +1,91 @@
+"""Artifact-index contract tests: meta.json written by aot.py must satisfy
+the invariants the Rust loader (rust/src/runtime/artifacts.rs) relies on.
+
+These run against the real artifacts/ directory when present (make
+artifacts); they skip cleanly otherwise so the pytest suite works in a
+fresh checkout.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+META = os.path.join(ART, "meta.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(META), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def meta():
+    with open(META) as f:
+        return json.load(f)
+
+
+def test_bits_to_s_matches_rust_mapping(meta):
+    """BITS_TO_S must be s = 2^(b-1) - 1 — mirrored in compress/kernels.rs."""
+    for b, s in meta["bits_to_s"].items():
+        assert s == 2 ** (int(b) - 1) - 1
+
+
+def test_segments_tile_flat_vector(meta):
+    for name, m in meta["models"].items():
+        off = 0
+        for seg in m["segments"]:
+            assert seg["offset"] == off, f"{name}: gap before {seg['name']}"
+            assert seg["len"] == int(np.prod(seg["shape"])) if seg["shape"] else 1
+            off += seg["len"]
+        assert off == m["param_count"], name
+
+
+def test_params_bin_sizes(meta):
+    for name, m in meta["models"].items():
+        path = os.path.join(ART, m["params_file"])
+        assert os.path.getsize(path) == 4 * m["param_count"], name
+        params = np.fromfile(path, dtype="<f4")
+        assert np.all(np.isfinite(params)), name
+        assert np.linalg.norm(params) > 0, name
+
+
+def test_step_inputs_consistent(meta):
+    for name, m in meta["models"].items():
+        for mstr, st in m["steps"].items():
+            mm = int(mstr)
+            assert st["workers"] == mm
+            kinds = [i["kind"] for i in st["inputs"]]
+            assert kinds[0] == "params"
+            assert st["inputs"][0]["shape"] == [m["param_count"]]
+            # worker axis leads every data tensor
+            for i in st["inputs"][1:]:
+                assert i["shape"][0] == mm, f"{name} M={mm}: {i}"
+            for o in st["outputs"]:
+                assert o["shape"][0] in (mm, mm * m["param_count"]) or o["shape"] == [
+                    mm,
+                    m["param_count"],
+                ]
+            assert os.path.exists(os.path.join(ART, st["file"]))
+
+
+def test_hlo_files_are_parseable_text(meta):
+    """HLO text (not proto) is the interchange format — cheap sanity check
+    that every artifact really is module text with an entry computation."""
+    for name, m in meta["models"].items():
+        for st in m["steps"].values():
+            head = open(os.path.join(ART, st["file"])).read(200)
+            assert head.startswith("HloModule"), f"{name}: {st['file']}"
+    for k in meta["kernels"].values():
+        head = open(os.path.join(ART, k["file"])).read(200)
+        assert head.startswith("HloModule"), k["file"]
+
+
+def test_kernel_inventory_complete(meta):
+    needed = {
+        "qsgd_roundtrip",
+        "multiscale_quantize",
+        "l2_norm",
+    } | {f"qsgd_quantize_s{s}" for s in (1, 7, 31, 127, 511, 2047)}
+    assert needed <= set(meta["kernels"].keys())

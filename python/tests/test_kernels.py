@@ -1,0 +1,178 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, scales and value distributions; every comparison
+is exact (the kernels are deterministic functions of (v, wnorm, u))."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import multiscale, qsgd, randk, ref
+
+SCALES_SETS = [(1, 31), (7, 127), (7, 31, 511), (127, 2047)]
+S_VALUES = [1, 7, 31, 127, 511, 2047]
+
+
+def make_inputs(seed, n, spread=1.0):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray((rng.normal(size=n) * spread).astype(np.float32))
+    u = jnp.asarray(rng.random(n).astype(np.float32))
+    w = ref.l2_norm(v) * np.float32(1.0 + rng.random())
+    return v, u, w
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=20000),
+    s=st.sampled_from(S_VALUES),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_qsgd_quantize_matches_ref(n, s, seed):
+    v, u, w = make_inputs(seed, n)
+    z_ref = ref.qsgd_levels(v, w, u, s)
+    z_pal = qsgd.qsgd_quantize(v, w, u, s)
+    np.testing.assert_array_equal(np.asarray(z_ref), np.asarray(z_pal))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=20000),
+    s=st.sampled_from(S_VALUES),
+    m=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_qsgd_dequantize_matches_ref(n, s, m, seed):
+    v, u, w = make_inputs(seed, n)
+    z = ref.qsgd_levels(v, w, u, s)
+    d_ref = ref.qsgd_dequantize(z, w, s, m)
+    d_pal = qsgd.qsgd_dequantize(z, w, s, m)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_pal), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(min_value=1, max_value=50000), seed=st.integers(min_value=0, max_value=2**31))
+def test_l2_norm_matches_ref(n, seed):
+    v, _, _ = make_inputs(seed, n)
+    np.testing.assert_allclose(float(ref.l2_norm(v)), float(qsgd.l2_norm(v)), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=20000),
+    scales=st.sampled_from(SCALES_SETS),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_multiscale_index_and_quantize_match_ref(n, scales, seed):
+    v, u, w = make_inputs(seed, n)
+    i_ref = ref.multiscale_scale_index(v, w, scales)
+    i_pal = multiscale.scale_index(v, w, scales)
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pal))
+    z_ref = ref.multiscale_levels(v, w, u, i_ref, scales)
+    z_pal = multiscale.multiscale_quantize(v, w, u, i_pal, scales)
+    np.testing.assert_array_equal(np.asarray(z_ref), np.asarray(z_pal))
+    d_ref = ref.multiscale_dequantize(z_ref, w, i_ref, scales, 4)
+    d_pal = multiscale.multiscale_dequantize(z_pal, w, i_pal, scales, 4)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_pal), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=20000),
+    frac=st.floats(min_value=0.01, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_randk_gather_scatter_match_ref(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    v, _, _ = make_inputs(seed, n)
+    k = max(1, int(n * frac))
+    idx = jnp.asarray(rng.choice(n, size=k, replace=False).astype(np.int32))
+    g_ref = ref.randk_gather(v, idx)
+    g_pal = randk.randk_gather(v, idx)
+    np.testing.assert_array_equal(np.asarray(g_ref), np.asarray(g_pal))
+    s_ref = ref.randk_scatter(n, idx, g_ref)
+    s_pal = randk.randk_scatter(n, idx, g_pal)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_pal))
+
+
+# ---------------------------------------------------------------------------
+# analytic invariants of the oracle itself
+
+
+def test_levels_are_integers_in_range():
+    v, u, w = make_inputs(0, 5000)
+    for s in S_VALUES:
+        z = np.asarray(ref.qsgd_levels(v, w, u, s))
+        assert np.all(z == np.round(z))
+        assert np.all(np.abs(z) <= s)
+
+
+def test_zero_norm_encodes_zero():
+    v = jnp.zeros(100, jnp.float32)
+    u = jnp.full(100, 0.5, jnp.float32)
+    z = ref.qsgd_levels(v, jnp.float32(0.0), u, 7)
+    assert np.all(np.asarray(z) == 0.0)
+    zp = qsgd.qsgd_quantize(v, jnp.float32(0.0), u, 7)
+    assert np.all(np.asarray(zp) == 0.0)
+
+
+def test_unbiasedness_lemma5():
+    """Monte-Carlo check of Lemma 5: E[Q_s(v)] = v."""
+    rng = np.random.default_rng(1)
+    n, s, trials = 64, 7, 4000
+    v, _, w = make_inputs(1, n)
+    acc = np.zeros(n, np.float64)
+    for _ in range(trials):
+        u = jnp.asarray(rng.random(n).astype(np.float32))
+        z = ref.qsgd_levels(v, w, u, s)
+        acc += np.asarray(ref.qsgd_dequantize(z, w, s, 1), np.float64)
+    est = acc / trials
+    se = 4.0 * float(w) / (s * np.sqrt(trials))
+    np.testing.assert_allclose(est, np.asarray(v, np.float64), atol=se)
+
+
+def test_variance_bound_lemma5():
+    """E||Q(v)-v||^2 <= (1 + min(n/s^2, sqrt(n)/s)) ||w||^2."""
+    rng = np.random.default_rng(2)
+    n, trials = 256, 600
+    v, _, w = make_inputs(2, n)
+    for s in (1, 7, 31):
+        err = 0.0
+        for _ in range(trials):
+            u = jnp.asarray(rng.random(n).astype(np.float32))
+            z = ref.qsgd_levels(v, w, u, s)
+            d = np.asarray(ref.qsgd_dequantize(z, w, s, 1), np.float64)
+            err += np.sum((d - np.asarray(v, np.float64)) ** 2)
+        err /= trials
+        bound = (1 + min(n / s**2, np.sqrt(n) / s)) * float(w) ** 2
+        assert err <= bound * 1.1, f"s={s}: {err} > {bound}"
+
+
+def test_multiscale_eq10_constraint():
+    """Every selected scale satisfies s* <= (||w||/|v_i|) * smin (eq. 10)."""
+    v, _, w = make_inputs(3, 4096)
+    scales = (7, 127)
+    idx = np.asarray(ref.multiscale_scale_index(v, w, scales), np.int64)
+    sel = np.asarray(sorted(scales))[idx]
+    va = np.abs(np.asarray(v, np.float64))
+    wf = float(w)
+    ok = sel * va <= wf * min(scales) * (1 + 1e-6)
+    assert np.all(ok)
+
+
+def test_multiscale_levels_fit_smin_bits():
+    """Levels at the shared scale stay <= smin + 1 — the wire-format claim."""
+    v, u, w = make_inputs(4, 4096)
+    scales = (7, 127)
+    idx = ref.multiscale_scale_index(v, w, scales)
+    z = np.asarray(ref.multiscale_levels(v, w, u, idx, scales))
+    assert np.max(np.abs(z)) <= scales[0] + 1
+
+
+@pytest.mark.parametrize("block", [256, 1024, 8192])
+def test_block_size_invariance(block):
+    """The BlockSpec tiling must not change results (padding correctness)."""
+    v, u, w = make_inputs(5, 3000)
+    z_ref = ref.qsgd_levels(v, w, u, 127)
+    z_pal = qsgd.qsgd_quantize(v, w, u, 127, block=block)
+    np.testing.assert_array_equal(np.asarray(z_ref), np.asarray(z_pal))

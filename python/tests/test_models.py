@@ -1,0 +1,112 @@
+"""L2 model-zoo shape/grad tests + flat-layout contract checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.models import REGISTRY
+
+CLASSIFIERS = ["mlp", "resnet_lite", "vgg_lite"]
+
+
+@pytest.mark.parametrize("name", CLASSIFIERS)
+def test_forward_shapes(name):
+    mod = REGISTRY[name]
+    cfg = mod.default_cfg()
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((4, *cfg["input"]), jnp.float32)
+    logits = mod.apply(params, x, cfg)
+    assert logits.shape == (4, cfg["classes"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_transformer_forward_shape():
+    mod = REGISTRY["transformer"]
+    cfg = dict(mod.default_cfg(), layers=2, d_model=64, heads=4, d_ff=128, seq=16)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((2, 16), jnp.int32)
+    logits = mod.apply(params, x, cfg)
+    assert logits.shape == (2, 16, cfg["vocab"])
+
+
+@pytest.mark.parametrize("name", CLASSIFIERS)
+def test_flat_segments_cover_params(name):
+    cfg = REGISTRY[name].default_cfg()
+    flat, _, segments = model_lib.init_flat(name, cfg)
+    total = sum(s["len"] for s in segments)
+    assert total == flat.size
+    # segments are contiguous and ordered
+    off = 0
+    for s in segments:
+        assert s["offset"] == off
+        assert s["len"] == int(np.prod(s["shape"])) if s["shape"] else 1
+        off += s["len"]
+
+
+def test_train_step_multiworker_shapes():
+    cfg = REGISTRY["mlp"].default_cfg()
+    flat, _, _ = model_lib.init_flat("mlp", cfg)
+    m, b = 3, 4
+    step = model_lib.make_train_step("mlp", cfg, m)
+    x = jnp.zeros((m, b, *cfg["input"]), jnp.float32)
+    y = jnp.zeros((m, b), jnp.int32)
+    loss, grads = step(flat, x, y)
+    assert loss.shape == (m,)
+    assert grads.shape == (m, flat.size)
+
+
+def test_identical_shards_give_identical_grads():
+    """vmap over the worker axis must not couple workers."""
+    cfg = REGISTRY["mlp"].default_cfg()
+    flat, _, _ = model_lib.init_flat("mlp", cfg)
+    step = model_lib.make_train_step("mlp", cfg, 2)
+    rng = np.random.default_rng(0)
+    x1 = jnp.asarray(rng.normal(size=(4, *cfg["input"])).astype(np.float32))
+    y1 = jnp.asarray(rng.integers(0, 10, size=(4,)).astype(np.int32))
+    x = jnp.stack([x1, x1])
+    y = jnp.stack([y1, y1])
+    loss, grads = step(flat, x, y)
+    np.testing.assert_allclose(np.asarray(loss[0]), np.asarray(loss[1]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grads[0]), np.asarray(grads[1]), rtol=1e-5, atol=1e-7)
+
+
+def test_grad_direction_decreases_loss():
+    cfg = REGISTRY["mlp"].default_cfg()
+    flat, _, _ = model_lib.init_flat("mlp", cfg)
+    step = model_lib.make_train_step("mlp", cfg, 1)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 8, *cfg["input"])).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(1, 8)).astype(np.int32))
+    loss0, grads = step(flat, x, y)
+    flat1 = flat - 0.01 * grads[0]
+    loss1, _ = step(flat1, x, y)
+    assert float(loss1[0]) < float(loss0[0])
+
+
+def test_eval_step_counts_correct():
+    cfg = REGISTRY["mlp"].default_cfg()
+    flat, _, _ = model_lib.init_flat("mlp", cfg)
+    ev = model_lib.make_eval_step("mlp", cfg)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16, *cfg["input"])).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(16,)).astype(np.int32))
+    loss, correct = ev(flat, x, y)
+    assert 0.0 <= float(correct) <= 16.0
+    assert float(loss) > 0.0
+
+
+def test_transformer_loss_at_init_near_uniform():
+    mod = REGISTRY["transformer"]
+    cfg = dict(mod.default_cfg(), layers=2, d_model=64, heads=4, d_ff=128, seq=16)
+    # build a matching init via model_lib internals
+    import jax.flatten_util as fu
+
+    params = mod.init(jax.random.PRNGKey(model_lib.SEED), cfg)
+    flat, unravel = fu.ravel_pytree(params)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg["vocab"], size=(2, 17)).astype(np.int32))
+    loss = model_lib._loss_lm(mod, cfg, unravel, flat, toks)
+    uniform = np.log(cfg["vocab"])
+    assert abs(float(loss) - uniform) < 1.0, f"init loss {loss} far from ln(V)={uniform}"

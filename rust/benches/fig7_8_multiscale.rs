@@ -1,0 +1,19 @@
+//! Figures 7 & 8: QSGDMaxNormMultiScale two-scale sweep
+//! {(8,12),(6,10),(4,8),(2,6)}. Paper claim: the 2-bit scheme, which failed
+//! in the single-scale sweep (Figs 3/4), performs on par with AllReduce-SGD
+//! once the second scale is available.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    common::run_figure_bench(
+        "fig7_8",
+        &[
+            "allreduce",
+            "qsgd-mn-ts-8-12",
+            "qsgd-mn-ts-6-10",
+            "qsgd-mn-ts-4-8",
+            "qsgd-mn-ts-2-6",
+        ],
+    )
+}

@@ -1,0 +1,17 @@
+//! Figures 9 & 10: GlobalRandKMaxNormMultiScale two-scale sweep. Paper
+//! claims mirror Figs 5/6: precision-resilient, strong early, lags late.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    common::run_figure_bench(
+        "fig9_10",
+        &[
+            "allreduce",
+            "grandk-mn-ts-8-12",
+            "grandk-mn-ts-6-10",
+            "grandk-mn-ts-4-8",
+            "grandk-mn-ts-2-6",
+        ],
+    )
+}

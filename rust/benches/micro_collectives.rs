@@ -1,0 +1,63 @@
+//! Micro-bench: the collective data plane (ring vs tree vs naive) and the
+//! simulated-time model across worker counts — the O(log M) vs O(M) story.
+
+mod common;
+
+use repro::collectives::{naive_allreduce_sum, ring_allreduce_sum, tree_allreduce_sum};
+use repro::netsim::NetConfig;
+use repro::util::rng::Rng;
+
+fn main() {
+    let n: usize = std::env::var("REPRO_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2_000_000);
+
+    println!("=== in-memory allreduce data plane, n={n} f32 ===");
+    println!("{:>8} {:>12} {:>12} {:>12}", "workers", "ring ms", "tree ms", "naive ms");
+    for m in [2usize, 4, 8, 16] {
+        let mut rng = Rng::new(m as u64);
+        let make = |rng: &mut Rng| -> Vec<Vec<f32>> {
+            (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    rng.fill_normal_f32(&mut v, 1.0);
+                    v
+                })
+                .collect()
+        };
+        let base = make(&mut rng);
+        let t_ring = common::time_median(3, || {
+            let mut b = base.clone();
+            ring_allreduce_sum(&mut b);
+            std::hint::black_box(&b);
+        });
+        let t_tree = common::time_median(3, || {
+            let mut b = base.clone();
+            tree_allreduce_sum(&mut b);
+            std::hint::black_box(&b);
+        });
+        let t_naive = common::time_median(3, || {
+            let mut b = base.clone();
+            naive_allreduce_sum(&mut b);
+            std::hint::black_box(&b);
+        });
+        println!(
+            "{:>8} {:>12.1} {:>12.1} {:>12.1}",
+            m,
+            t_ring * 1e3,
+            t_tree * 1e3,
+            t_naive * 1e3
+        );
+    }
+
+    println!("\n=== simulated wire time (VGG16 8-bit payload, 10 Gbps flat) ===");
+    println!("{:>8} {:>16} {:>16} {:>10}", "workers", "allreduce (s)", "allgather (s)", "ratio");
+    let bytes = 14_728_266.0;
+    for m in [4usize, 8, 16, 32, 64, 128, 256] {
+        let net = NetConfig::flat(m, 10.0);
+        let ar = net.allreduce_s(bytes);
+        let ag = net.allgather_s(bytes);
+        println!("{:>8} {:>16.4} {:>16.4} {:>10.1}", m, ar, ag, ag / ar);
+    }
+}

@@ -1,0 +1,111 @@
+//! Micro-bench: encoder/decoder throughput of every compressor on a
+//! gradient-sized vector — the L3 hot-path numbers behind EXPERIMENTS.md
+//! §Perf. Reports GB/s over the input gradient bytes.
+
+mod common;
+
+use repro::collectives::StepCtx;
+use repro::compress::{bitpack, kernels, Method};
+use repro::netsim::{NetConfig, SimClock};
+use repro::util::rng::Rng;
+
+fn main() {
+    let n: usize = std::env::var("REPRO_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4_000_000);
+    let m = 4;
+    let mut rng = Rng::new(1);
+    let grads: Vec<Vec<f32>> = (0..m)
+        .map(|_| {
+            let mut g = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut g, 1.0);
+            g
+        })
+        .collect();
+    let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let gbytes = (m * n * 4) as f64 / 1e9;
+
+    println!("=== aggregate() wall time, n={n} coords x M={m} workers ({gbytes:.2} GB of gradients) ===");
+    println!("{:>22} {:>10} {:>10} {:>12}", "method", "ms", "GB/s", "wire bits/c");
+    for spec in [
+        "allreduce",
+        "qsgd-mn-2",
+        "qsgd-mn-4",
+        "qsgd-mn-8",
+        "qsgd-mn-ts-2-6",
+        "qsgd-mn-ts-8-12",
+        "grandk-mn-8",
+        "grandk-mn-ts-8-12",
+        "terngrad",
+        "signsgd",
+        "topk",
+        "powersgd-2",
+    ] {
+        let method = Method::parse(spec).unwrap();
+        let mut agg = method.build(n, &[]).unwrap();
+        let net = NetConfig::flat(m, 10.0);
+        let t = common::time_median(3, || {
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            let mut r = Rng::new(7);
+            let out = agg.aggregate(&refs, &mut ctx, &mut r);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "{:>22} {:>10.1} {:>10.2} {:>12.2}",
+            agg.name(),
+            t * 1e3,
+            gbytes / t,
+            agg.nominal_bits()
+        );
+    }
+
+    // raw kernel rates (single worker, the innermost loops)
+    println!("\n=== raw kernel rates, n={n} ===");
+    let v = &grads[0];
+    let mut u = vec![0.0f32; n];
+    Rng::new(3).fill_uniform_f32(&mut u);
+    let w = kernels::l2_norm(v);
+    let mut z = vec![0.0f32; n];
+    let vb = (n * 4) as f64 / 1e9;
+
+    let t = common::time_median(5, || kernels::qsgd_encode(v, w, &u, 127, &mut z));
+    println!("qsgd_encode            {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+
+    let t = common::time_median(5, || {
+        let mut d = z.clone();
+        kernels::qsgd_decode_sum(&mut d, w, 127, m);
+        std::hint::black_box(&d);
+    });
+    println!("qsgd_decode(+clone)    {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+
+    let t = common::time_median(5, || {
+        std::hint::black_box(kernels::l2_norm(v));
+    });
+    println!("l2_norm                {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+
+    let mut idx = vec![0u8; n];
+    let scales = [7usize, 127];
+    let t = common::time_median(5, || {
+        kernels::multiscale_scale_index(v, w, &scales, &mut idx)
+    });
+    println!("multiscale_scale_index {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+
+    let t = common::time_median(5, || {
+        kernels::multiscale_encode(v, w, &u, &idx, &scales, &mut z)
+    });
+    println!("multiscale_encode      {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+
+    // bit-packing (the substrate the paper said was too slow in Python)
+    kernels::qsgd_encode(v, w, &u, 127, &mut z);
+    let t = common::time_median(5, || {
+        std::hint::black_box(bitpack::pack(&z, 8));
+    });
+    println!("bitpack::pack(8b)      {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+    let packed = bitpack::pack(&z, 8);
+    let t = common::time_median(5, || {
+        std::hint::black_box(bitpack::unpack(&packed));
+    });
+    println!("bitpack::unpack(8b)    {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+}

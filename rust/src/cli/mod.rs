@@ -1,0 +1,156 @@
+//! Hand-rolled CLI argument parser (no clap in the vendored set).
+//!
+//! Grammar: `repro <subcommand> [--key value]... [--flag]...`
+//! Values may also be given as `--key=value`. Unknown keys are an error —
+//! typos in experiment scripts should fail loudly, not silently fall back
+//! to defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: the subcommand plus key/value options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// keys the program looked up — for unknown-key detection
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --option, got '{tok}'"))?;
+            if let Some((k, v)) = key.split_once('=') {
+                args.opts.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                args.opts.insert(key.to_string(), it.next().unwrap());
+            } else {
+                args.flags.push(key.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.seen.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(name.to_string());
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    /// Comma-separated list, e.g. `--bits 2,4,8`.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|e| anyhow!("--{name} item '{p}': {e}")))
+                .collect(),
+        }
+    }
+
+    /// Call after all lookups: errors on any option the program never read.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.opts.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !seen.iter().any(|s| s == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --model mlp --steps 100 --verbose --lr=0.5");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.parse_or("steps", 0usize).unwrap(), 100);
+        assert_eq!(a.parse_or("lr", 0.0f64).unwrap(), 0.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("x --bits 2,4,8");
+        assert_eq!(a.parse_list("bits", &[0usize]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.parse_list("other", &[7usize]).unwrap(), vec![7]);
+        assert_eq!(a.get_or("model", "mlp"), "mlp");
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = parse("t --known 1 --typo 2");
+        let _ = a.get("known");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("typo");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse("t --steps abc");
+        assert!(a.parse_or("steps", 0usize).is_err());
+        assert!(a.require("nope").is_err());
+    }
+}

@@ -1,0 +1,317 @@
+//! Collective-communication substrate: the *data plane* of the simulated
+//! cluster.
+//!
+//! These functions really move and reduce bytes between the logical workers'
+//! buffers — the ring all-reduce below is the actual reduce-scatter +
+//! all-gather schedule, not a shortcut `sum()` — so that reduction order,
+//! chunking, and the compressed-domain aggregation invariant are exercised
+//! for real. Simulated wire time is charged separately through
+//! [`crate::netsim::NetConfig`] by [`StepCtx`].
+
+use crate::netsim::{NetConfig, SimClock};
+
+/// Elementwise sum all-reduce via the ring schedule (reduce-scatter phase
+/// then all-gather phase). All workers end with identical summed buffers.
+///
+/// Reduction order per element equals the ring order starting at its chunk
+/// owner — deterministic and identical across workers, which is what makes
+/// the compressed-domain sum bit-reproducible.
+pub fn ring_allreduce_sum(bufs: &mut [Vec<f32>]) {
+    let m = bufs.len();
+    if m <= 1 {
+        return;
+    }
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n), "ragged buffers");
+    if n == 0 {
+        return;
+    }
+
+    // chunk c spans [starts[c], starts[c+1])
+    let starts: Vec<usize> = (0..=m).map(|c| c * n / m).collect();
+    // one reusable staging buffer for the "send" (perf pass: the per-step
+    // to_vec allocations were ~2m² allocs per call)
+    let max_chunk = (1..=m).map(|c| starts[c] - starts[c - 1]).max().unwrap_or(0);
+    let mut seg = vec![0.0f32; max_chunk];
+
+    // reduce-scatter: after m-1 steps, worker r owns the full sum of chunk
+    // (r+1) mod m.
+    for step in 0..m - 1 {
+        for r in 0..m {
+            // worker r sends chunk (r - step) mod m to worker (r+1) mod m
+            let c = (r + m - step) % m;
+            let dst = (r + 1) % m;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let len = hi - lo;
+            // split borrow: stage the segment (the "send"), add into dst
+            seg[..len].copy_from_slice(&bufs[r][lo..hi]);
+            let dst_seg = &mut bufs[dst][lo..hi];
+            for (d, v) in dst_seg.iter_mut().zip(&seg[..len]) {
+                *d += v;
+            }
+        }
+    }
+
+    // all-gather: circulate the completed chunks
+    for step in 0..m - 1 {
+        for r in 0..m {
+            let c = (r + 1 + m - step) % m;
+            let dst = (r + 1) % m;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let len = hi - lo;
+            seg[..len].copy_from_slice(&bufs[r][lo..hi]);
+            bufs[dst][lo..hi].copy_from_slice(&seg[..len]);
+        }
+    }
+}
+
+/// Naive all-reduce: rank 0 gathers + sums + broadcasts. Reference
+/// implementation for equivalence tests.
+pub fn naive_allreduce_sum(bufs: &mut [Vec<f32>]) {
+    let m = bufs.len();
+    if m <= 1 {
+        return;
+    }
+    let n = bufs[0].len();
+    let mut acc = vec![0.0f32; n];
+    for b in bufs.iter() {
+        for (a, v) in acc.iter_mut().zip(b) {
+            *a += v;
+        }
+    }
+    for b in bufs.iter_mut() {
+        b.copy_from_slice(&acc);
+    }
+}
+
+/// Binary-tree all-reduce (reduce to rank 0 up the tree, broadcast down).
+pub fn tree_allreduce_sum(bufs: &mut [Vec<f32>]) {
+    let m = bufs.len();
+    if m <= 1 {
+        return;
+    }
+    // reduce
+    let mut gap = 1;
+    while gap < m {
+        let mut r = 0;
+        while r + gap < m {
+            let (left, right) = bufs.split_at_mut(r + gap);
+            let (dst, src) = (&mut left[r], &right[0]);
+            for (a, v) in dst.iter_mut().zip(src.iter()) {
+                *a += v;
+            }
+            r += gap * 2;
+        }
+        gap *= 2;
+    }
+    // broadcast
+    let root = bufs[0].clone();
+    for b in bufs.iter_mut().skip(1) {
+        b.copy_from_slice(&root);
+    }
+}
+
+/// Max all-reduce over one scalar per worker (the shared `||w||_2`).
+pub fn max_allreduce_scalar(vals: &[f32]) -> f32 {
+    vals.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b))
+}
+
+/// Elementwise min all-reduce over per-worker u8 vectors (scale sharing).
+pub fn min_allreduce_u8(vecs: &[Vec<u8>]) -> Vec<u8> {
+    let m = vecs.len();
+    assert!(m > 0);
+    let n = vecs[0].len();
+    let mut out = vecs[0].clone();
+    for v in &vecs[1..] {
+        assert_eq!(v.len(), n, "ragged scale vectors");
+        for (o, x) in out.iter_mut().zip(v) {
+            *o = (*o).min(*x);
+        }
+    }
+    out
+}
+
+/// Per-step context handed to aggregators: charges the simulated wire and
+/// tracks the bits ledger + phase timings.
+pub struct StepCtx<'a> {
+    pub net: &'a NetConfig,
+    pub clock: &'a mut SimClock,
+    /// Wire floor (paper §6: frameworks only ship >=8-bit tensors). When
+    /// set, payload bits per coordinate are rounded up to this.
+    pub wire_floor_bits: Option<f64>,
+}
+
+impl<'a> StepCtx<'a> {
+    pub fn new(net: &'a NetConfig, clock: &'a mut SimClock) -> StepCtx<'a> {
+        StepCtx { net, clock, wire_floor_bits: None }
+    }
+
+    fn effective_bits(&self, elems: f64, bits_per_elem: f64) -> f64 {
+        let bpe = match self.wire_floor_bits {
+            Some(floor) => bits_per_elem.max(floor).ceil(),
+            None => bits_per_elem,
+        };
+        elems * bpe
+    }
+
+    /// Sum all-reduce over per-worker equal-length vectors, charging
+    /// `bits_per_elem` per coordinate on the wire. Returns the shared sum.
+    pub fn allreduce_sum(&mut self, mut bufs: Vec<Vec<f32>>, bits_per_elem: f64) -> Vec<f32> {
+        self.allreduce_sum_in_place(&mut bufs, bits_per_elem);
+        bufs.into_iter().next().unwrap_or_default()
+    }
+
+    /// Zero-copy variant (perf pass): reduces into the callers' buffers —
+    /// all of them end holding the sum, exactly like the real collective.
+    pub fn allreduce_sum_in_place(&mut self, bufs: &mut [Vec<f32>], bits_per_elem: f64) {
+        let elems = bufs.first().map(|b| b.len()).unwrap_or(0) as f64;
+        let bits = self.effective_bits(elems, bits_per_elem);
+        self.clock.comm_s += self.net.allreduce_s(bits / 8.0);
+        self.clock.bits_per_worker += bits;
+        match self.net.algo {
+            crate::netsim::Algo::Ring => ring_allreduce_sum(bufs),
+            crate::netsim::Algo::Tree => tree_allreduce_sum(bufs),
+            crate::netsim::Algo::Naive => naive_allreduce_sum(bufs),
+        }
+    }
+
+    /// Scalar max all-reduce (`||w||_2` sharing): one 32-bit float.
+    pub fn allreduce_max_scalar(&mut self, vals: &[f32]) -> f32 {
+        self.clock.comm_s += self.net.scalar_allreduce_s();
+        self.clock.bits_per_worker += 32.0;
+        max_allreduce_scalar(vals)
+    }
+
+    /// Elementwise min all-reduce of scale-index vectors, `bits_per_elem` =
+    /// ceil(log2 N) per the paper's scale-sharing overhead.
+    pub fn allreduce_min_u8(&mut self, vecs: &[Vec<u8>], bits_per_elem: f64) -> Vec<u8> {
+        let elems = vecs.first().map(|v| v.len()).unwrap_or(0) as f64;
+        let bits = self.effective_bits(elems, bits_per_elem);
+        self.clock.comm_s += self.net.allreduce_s(bits / 8.0);
+        self.clock.bits_per_worker += bits;
+        min_allreduce_u8(vecs)
+    }
+
+    /// Charge an all-gather where each rank contributes `bits_per_rank`.
+    /// (Data is already centrally resident; only the wire is charged.)
+    pub fn charge_allgather(&mut self, bits_per_rank: f64) {
+        self.clock.comm_s += self.net.allgather_s(bits_per_rank / 8.0);
+        // each worker transmits its payload and receives M-1 others; the
+        // ledger tracks *sent* bits per worker to match the paper's metric
+        self.clock.bits_per_worker += bits_per_rank;
+    }
+
+    /// Time a closure into the encode bucket.
+    pub fn time_encode<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.clock.encode_s += t0.elapsed().as_secs_f64();
+        r
+    }
+
+    /// Time a closure into the decode bucket.
+    pub fn time_decode<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.clock.decode_s += t0.elapsed().as_secs_f64();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, ensure, ensure_slice_close};
+
+    #[test]
+    fn prop_ring_equals_naive() {
+        check("ring allreduce == naive sum", 150, |g| {
+            let m = g.usize_in(1, 9);
+            let n = g.size_scaled(0, 3000);
+            let bufs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let mut ring = bufs.clone();
+            let mut naive = bufs.clone();
+            ring_allreduce_sum(&mut ring);
+            naive_allreduce_sum(&mut naive);
+            for r in 0..m {
+                ensure_slice_close(&ring[r], &naive[0], 1e-5, &format!("rank {r}"))?;
+            }
+            ensure(true, "")
+        });
+    }
+
+    #[test]
+    fn prop_tree_equals_naive() {
+        check("tree allreduce == naive sum", 150, |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.size_scaled(0, 2000);
+            let bufs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let mut tree = bufs.clone();
+            let mut naive = bufs;
+            tree_allreduce_sum(&mut tree);
+            naive_allreduce_sum(&mut naive);
+            for r in 0..m {
+                ensure_slice_close(&tree[r], &naive[0], 1e-5, &format!("rank {r}"))?;
+            }
+            ensure(true, "")
+        });
+    }
+
+    #[test]
+    fn prop_ring_all_ranks_identical() {
+        check("ring leaves all ranks identical", 80, |g| {
+            let m = g.usize_in(2, 8);
+            let n = g.size_scaled(1, 2000);
+            let mut bufs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 2.0)).collect();
+            ring_allreduce_sum(&mut bufs);
+            for r in 1..m {
+                if bufs[r] != bufs[0] {
+                    return Err(format!("rank {r} differs from rank 0"));
+                }
+            }
+            ensure(true, "")
+        });
+    }
+
+    #[test]
+    fn ring_exact_on_integers() {
+        // integer-valued f32 sums are exact => ring must equal naive exactly
+        let mut bufs: Vec<Vec<f32>> =
+            (0..5).map(|r| (0..97).map(|i| ((r * i) % 11) as f32).collect()).collect();
+        let mut naive = bufs.clone();
+        ring_allreduce_sum(&mut bufs);
+        naive_allreduce_sum(&mut naive);
+        assert_eq!(bufs[0], naive[0]);
+    }
+
+    #[test]
+    fn min_u8_and_max_scalar() {
+        let a = vec![3u8, 0, 7];
+        let b = vec![1u8, 5, 7];
+        assert_eq!(min_allreduce_u8(&[a, b]), vec![1, 0, 7]);
+        assert_eq!(max_allreduce_scalar(&[1.0, 5.0, -2.0]), 5.0);
+    }
+
+    #[test]
+    fn step_ctx_charges_wire() {
+        let net = NetConfig::flat(4, 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1000]).collect();
+        let sum = ctx.allreduce_sum(bufs, 8.0);
+        assert_eq!(sum[0], 0.0 + 1.0 + 2.0 + 3.0);
+        assert!(clock.comm_s > 0.0);
+        assert_eq!(clock.bits_per_worker, 8000.0);
+    }
+
+    #[test]
+    fn wire_floor_rounds_up() {
+        let net = NetConfig::flat(2, 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.wire_floor_bits = Some(8.0);
+        let bufs: Vec<Vec<f32>> = vec![vec![1.0; 100], vec![2.0; 100]];
+        ctx.allreduce_sum(bufs, 3.0); // 3-bit payload floors to 8
+        assert_eq!(clock.bits_per_worker, 800.0);
+    }
+}

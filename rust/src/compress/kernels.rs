@@ -1,0 +1,393 @@
+//! Scalar quantization math — the Rust mirror of `python/compile/kernels/ref.py`.
+//!
+//! Every function here computes the exact f32 operation sequence of the
+//! Pallas kernels (same op order: `a = |v|/w`, `scaled = a*s`, `l = floor`,
+//! `p = scaled - l`, `level = l + 1{u < p}`), so the hot path is
+//! bit-for-bit identical to the lowered HLO — asserted by
+//! `rust/tests/pallas_parity.rs` (DESIGN.md §5).
+
+/// jnp.sign semantics: 0 for 0 (f32::signum would give ±1 for ±0).
+#[inline(always)]
+pub fn sign(v: f32) -> f32 {
+    if v > 0.0 {
+        1.0
+    } else if v < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Paper bit-width -> number of non-zero levels: b bits leave b-1 bits for
+/// the magnitude level, so `s = 2^(b-1) - 1` (r = ceil(log s) + 1 = b).
+pub fn s_for_bits(bits: usize) -> usize {
+    assert!((2..=16).contains(&bits), "bits out of range: {bits}");
+    (1usize << (bits - 1)) - 1
+}
+
+/// Wire bits per coordinate for s levels: the magnitude takes values
+/// 0..=s (s+1 of them), plus the sign bit — ceil(log2(s+1)) + 1.
+/// (The paper writes r = ceil(log s) + 1, which coincides for s = 2^k - 1,
+/// the only values the bit-width mapping produces.)
+pub fn bits_for_s(s: usize) -> f64 {
+    ((s + 1) as f64).log2().ceil() + 1.0
+}
+
+/// One coordinate of eq. (6)/(7): the signed integer level.
+///
+/// Branchless (perf pass, EXPERIMENTS.md §Perf): the stochastic-rounding
+/// comparison `u < p` is a coin flip — as a branch it mispredicts ~50% and
+/// costs ~20 cycles/coord; as an arithmetic select the loop vectorizes.
+/// The float op ORDER is identical to the Pallas kernel (|v|/w, *s, floor,
+/// compare), preserving the bit-exactness contract of DESIGN.md §5.
+#[inline(always)]
+pub fn qsgd_level(v: f32, safe_w: f32, u: f32, s: f32) -> f32 {
+    let a = v.abs() / safe_w;
+    let scaled = a * s;
+    let l = scaled.floor();
+    let p = scaled - l;
+    let level = l + (u < p) as u32 as f32;
+    let sg = ((v > 0.0) as i32 - (v < 0.0) as i32) as f32;
+    sg * level
+}
+
+/// Vectorized QSGDMaxNorm encode: fills `out[i] = zeta_i`.
+/// `wnorm` is the shared max norm; `u` the explicit uniform randomness.
+pub fn qsgd_encode(v: &[f32], wnorm: f32, u: &[f32], s: usize, out: &mut [f32]) {
+    debug_assert_eq!(v.len(), u.len());
+    debug_assert_eq!(v.len(), out.len());
+    if wnorm <= 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    let sf = s as f32;
+    for ((o, &vi), &ui) in out.iter_mut().zip(v).zip(u) {
+        *o = qsgd_level(vi, wnorm, ui, sf);
+    }
+}
+
+/// Decode an all-reduced level sum into the averaged gradient (eq. 8, /M).
+pub fn qsgd_decode_sum(zeta_sum: &mut [f32], wnorm: f32, s: usize, m: usize) {
+    let k = wnorm / (s as f32 * m as f32);
+    for z in zeta_sum.iter_mut() {
+        *z *= k;
+    }
+}
+
+/// eq. (10): per-coordinate scale index (largest qualifying scale).
+/// `scales` must be sorted ascending; returns indices in 0..N as u8.
+pub fn multiscale_scale_index(v: &[f32], wnorm: f32, scales: &[usize], out: &mut [u8]) {
+    debug_assert!(scales.windows(2).all(|w| w[0] < w[1]), "scales must be sorted");
+    debug_assert!(scales.len() <= 256);
+    let safe_w = if wnorm > 0.0 { wnorm } else { 1.0 };
+    let smin = scales[0] as f32;
+    let thresh = safe_w * smin;
+    // `s·|v| <= thresh` is monotone decreasing in s, so the qualifying
+    // scales are a prefix of the sorted set: the selected index is
+    // (count of qualifying scales) − 1. Branchless popcount-style select
+    // (perf pass) — index 0 always qualifies since |v| <= ||w||.
+    let sf: Vec<f32> = scales.iter().map(|&s| s as f32).collect();
+    for (o, &vi) in out.iter_mut().zip(v) {
+        let av = vi.abs();
+        let mut count = 0u32;
+        for &s in &sf {
+            count += (s * av <= thresh) as u32;
+        }
+        *o = (count.max(1) - 1) as u8;
+    }
+}
+
+/// eq. (9)/(11): stochastic rounding at the shared per-coordinate scale.
+pub fn multiscale_encode(
+    v: &[f32],
+    wnorm: f32,
+    u: &[f32],
+    scale_idx: &[u8],
+    scales: &[usize],
+    out: &mut [f32],
+) {
+    if wnorm <= 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    // branchless scale select (perf pass): N compares instead of a gather,
+    // mirroring the Pallas kernel's `where` chain — vectorizes cleanly.
+    let sf: Vec<f32> = scales.iter().map(|&s| s as f32).collect();
+    for i in 0..v.len() {
+        let idx = scale_idx[i] as u32;
+        let mut s_eff = 0.0f32;
+        for (j, &s) in sf.iter().enumerate() {
+            s_eff += (idx == j as u32) as u32 as f32 * s;
+        }
+        out[i] = qsgd_level(v[i], wnorm, u[i], s_eff);
+    }
+}
+
+/// eq. (12) on the all-reduced sum: elementwise divide by s*, then /M.
+pub fn multiscale_decode_sum(
+    zeta_sum: &mut [f32],
+    wnorm: f32,
+    scale_idx: &[u8],
+    scales: &[usize],
+    m: usize,
+) {
+    let mf = m as f32;
+    let sf: Vec<f32> = scales.iter().map(|&s| s as f32).collect();
+    for (z, &idx) in zeta_sum.iter_mut().zip(scale_idx) {
+        let idx = idx as u32;
+        let mut s = 0.0f32;
+        for (j, &sj) in sf.iter().enumerate() {
+            s += (idx == j as u32) as u32 as f32 * sj;
+        }
+        *z = *z * wnorm / (s * mf);
+    }
+}
+
+/// f32 L2 norm with f64 accumulation then rounding (matches the XLA
+/// reduction within 1 ulp at gradient scales — see tensor::norm2_f32).
+pub fn l2_norm(v: &[f32]) -> f32 {
+    crate::tensor::norm2_f32(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, ensure, ensure_close};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_levels_mapping() {
+        assert_eq!(s_for_bits(2), 1);
+        assert_eq!(s_for_bits(4), 7);
+        assert_eq!(s_for_bits(8), 127);
+        assert_eq!(s_for_bits(12), 2047);
+        assert_eq!(bits_for_s(1), 2.0); // levels {0,1} + sign
+        assert_eq!(bits_for_s(127), 8.0);
+        assert_eq!(bits_for_s(7), 4.0);
+        assert_eq!(bits_for_s(2047), 12.0);
+    }
+
+    #[test]
+    fn sign_matches_jnp() {
+        assert_eq!(sign(3.0), 1.0);
+        assert_eq!(sign(-3.0), -1.0);
+        assert_eq!(sign(0.0), 0.0);
+        assert_eq!(sign(-0.0), 0.0);
+    }
+
+    #[test]
+    fn zero_vector_encodes_to_zero() {
+        let v = vec![0.0f32; 16];
+        let u = vec![0.5f32; 16];
+        let mut out = vec![9.0f32; 16];
+        qsgd_encode(&v, 0.0, &u, 7, &mut out);
+        assert!(out.iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn prop_levels_bounded_and_integer() {
+        check("qsgd levels in [-s, s] and integral", 200, |g| {
+            let n = g.size_scaled(1, 4000);
+            let s = *g.pick(&[1usize, 7, 31, 127, 2047]);
+            let v = g.vec_normal(n, 1.5);
+            let mut u = vec![0.0f32; n];
+            g.rng().fill_uniform_f32(&mut u);
+            let w = l2_norm(&v) * g.f32_in(1.0, 3.0); // >= ||v||
+            let mut z = vec![0.0f32; n];
+            qsgd_encode(&v, w, &u, s, &mut z);
+            for (i, &zi) in z.iter().enumerate() {
+                ensure(zi.fract() == 0.0, &format!("integral at {i}: {zi}"))?;
+                ensure(zi.abs() <= s as f32, &format!("bounded at {i}: {zi} s={s}"))?;
+                ensure(
+                    sign(zi) == sign(v[i]) || zi == 0.0,
+                    &format!("sign preserved at {i}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_unbiasedness_statistical() {
+        // Lemma 5: E[Q_s(v)] = v. Monte-Carlo over the explicit u randomness.
+        check("qsgd unbiased (statistical)", 10, |g| {
+            let n = 64;
+            let s = *g.pick(&[1usize, 7, 127]);
+            let v = g.vec_normal(n, 1.0);
+            let w = l2_norm(&v) * 1.5;
+            let trials = 3000;
+            let mut acc = vec![0.0f64; n];
+            let mut rng = Rng::new(g.rng().next_u64());
+            let mut u = vec![0.0f32; n];
+            let mut z = vec![0.0f32; n];
+            for _ in 0..trials {
+                rng.fill_uniform_f32(&mut u);
+                qsgd_encode(&v, w, &u, s, &mut z);
+                let mut d = z.clone();
+                qsgd_decode_sum(&mut d, w, s, 1);
+                for i in 0..n {
+                    acc[i] += d[i] as f64;
+                }
+            }
+            // std error of the mean estimate per coord: w/(s*sqrt(trials))
+            let se = 4.0 * w as f64 / (s as f64 * (trials as f64).sqrt());
+            for i in 0..n {
+                let mean = acc[i] / trials as f64;
+                ensure_close(mean, v[i] as f64, (se / 1.0f64.max(v[i].abs() as f64)).max(1e-6), "E[Q(v)] = v")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_variance_bound_lemma5() {
+        // Lemma 5: E||Q(v) - v||^2 <= min(n/s^2, sqrt(n)/s) * ||w||^2  (+ ||w||²-||v||² slack;
+        // we check the tighter practical form E||Q(v)-v||² <= (1+min(...))||w||².
+        check("qsgd variance bound (statistical)", 8, |g| {
+            let n = 256;
+            let s = *g.pick(&[1usize, 7, 31]);
+            let v = g.vec_normal(n, 1.0);
+            let w = l2_norm(&v) * g.f32_in(1.0, 2.0);
+            let bound = {
+                let nn = n as f64;
+                let ss = s as f64;
+                (1.0 + (nn / (ss * ss)).min(nn.sqrt() / ss)) * (w as f64) * (w as f64)
+            };
+            let trials = 500;
+            let mut rng = Rng::new(g.rng().next_u64());
+            let mut u = vec![0.0f32; n];
+            let mut z = vec![0.0f32; n];
+            let mut err_acc = 0.0f64;
+            for _ in 0..trials {
+                rng.fill_uniform_f32(&mut u);
+                qsgd_encode(&v, w, &u, s, &mut z);
+                let mut d = z.clone();
+                qsgd_decode_sum(&mut d, w, s, 1);
+                err_acc += d
+                    .iter()
+                    .zip(&v)
+                    .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+                    .sum::<f64>();
+            }
+            let mean_err = err_acc / trials as f64;
+            ensure(
+                mean_err <= bound * 1.1,
+                &format!("variance {mean_err} exceeds Lemma 5 bound {bound} (s={s})"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_multiscale_matches_min_scale_quantizer_when_single_scale() {
+        check("multiscale with one scale == qsgd", 100, |g| {
+            let n = g.size_scaled(1, 2000);
+            let s = *g.pick(&[7usize, 127]);
+            let v = g.vec_normal(n, 1.0);
+            let mut u = vec![0.0f32; n];
+            g.rng().fill_uniform_f32(&mut u);
+            let w = l2_norm(&v) * 1.2;
+            let scales = [s];
+            let mut idx = vec![0u8; n];
+            multiscale_scale_index(&v, w, &scales, &mut idx);
+            let mut z_ms = vec![0.0f32; n];
+            multiscale_encode(&v, w, &u, &idx, &scales, &mut z_ms);
+            let mut z_q = vec![0.0f32; n];
+            qsgd_encode(&v, w, &u, s, &mut z_q);
+            ensure(z_ms == z_q, "single-scale multiscale must equal qsgd")
+        });
+    }
+
+    #[test]
+    fn prop_multiscale_levels_bounded_by_smin() {
+        // eq. (10) guarantees a*s* <= smin, so levels <= smin + 1 — this is
+        // exactly why the multi-scale wire format fits in the small-scale bits.
+        check("multiscale level bound", 150, |g| {
+            let n = g.size_scaled(1, 3000);
+            let scale_sets: [&[usize]; 3] = [&[1, 31], &[7, 127], &[7, 31, 511]];
+            let scales: &[usize] = scale_sets[g.usize_in(0, 2)];
+            let v = g.vec_normal(n, 1.0);
+            let mut u = vec![0.0f32; n];
+            g.rng().fill_uniform_f32(&mut u);
+            let w = l2_norm(&v) * g.f32_in(1.0, 2.0);
+            let mut idx = vec![0u8; n];
+            multiscale_scale_index(&v, w, scales, &mut idx);
+            let mut z = vec![0.0f32; n];
+            multiscale_encode(&v, w, &u, &idx, scales, &mut z);
+            let smin = scales[0] as f32;
+            for (i, &zi) in z.iter().enumerate() {
+                ensure(
+                    zi.abs() <= smin + 1.0,
+                    &format!("level {zi} at {i} exceeds smin+1={}", smin + 1.0),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_multiscale_unbiased_statistical() {
+        check("multiscale unbiased (statistical)", 6, |g| {
+            let n = 64;
+            let scales = [7usize, 127];
+            let v = g.vec_normal(n, 1.0);
+            let w = l2_norm(&v) * 1.5;
+            let mut idx = vec![0u8; n];
+            multiscale_scale_index(&v, w, &scales, &mut idx);
+            let trials = 3000;
+            let mut rng = Rng::new(g.rng().next_u64());
+            let mut acc = vec![0.0f64; n];
+            let mut u = vec![0.0f32; n];
+            let mut z = vec![0.0f32; n];
+            for _ in 0..trials {
+                rng.fill_uniform_f32(&mut u);
+                multiscale_encode(&v, w, &u, &idx, &scales, &mut z);
+                let mut d = z.clone();
+                multiscale_decode_sum(&mut d, w, &idx, &scales, 1);
+                for i in 0..n {
+                    acc[i] += d[i] as f64;
+                }
+            }
+            let se = 4.0 * w as f64 / (7.0 * (trials as f64).sqrt());
+            for i in 0..n {
+                let mean = acc[i] / trials as f64;
+                ensure_close(mean, v[i] as f64, (se / 1.0f64.max(v[i].abs() as f64)).max(1e-6), "E[Q_s(v)] = v")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_multiscale_variance_no_worse_than_single_scale() {
+        // The multi-scale scheme's raison d'être: variance at equal wire
+        // bits is <= the single-scale quantizer at the small scale.
+        check("multiscale variance <= smin-scale variance", 6, |g| {
+            let n = 512;
+            let scales = [7usize, 127];
+            let v = g.vec_normal(n, 1.0);
+            let w = l2_norm(&v) * 1.2;
+            let mut idx = vec![0u8; n];
+            multiscale_scale_index(&v, w, &scales, &mut idx);
+            let trials = 400;
+            let mut rng = Rng::new(g.rng().next_u64());
+            let (mut err_ms, mut err_ss) = (0.0f64, 0.0f64);
+            let mut u = vec![0.0f32; n];
+            let mut z = vec![0.0f32; n];
+            for _ in 0..trials {
+                rng.fill_uniform_f32(&mut u);
+                multiscale_encode(&v, w, &u, &idx, &scales, &mut z);
+                let mut d = z.clone();
+                multiscale_decode_sum(&mut d, w, &idx, &scales, 1);
+                err_ms += d.iter().zip(&v).map(|(a, b)| (*a as f64 - *b as f64).powi(2)).sum::<f64>();
+
+                qsgd_encode(&v, w, &u, scales[0], &mut z);
+                let mut d = z.clone();
+                qsgd_decode_sum(&mut d, w, scales[0], 1);
+                err_ss += d.iter().zip(&v).map(|(a, b)| (*a as f64 - *b as f64).powi(2)).sum::<f64>();
+            }
+            ensure(
+                err_ms <= err_ss * 1.02,
+                &format!("multiscale variance {err_ms} should be <= single-scale {err_ss}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! QSGDMaxNormMultiScale Quantization (paper §4.2, Algorithm 2).
+//!
+//! Extends the single-scale scheme with a *set* of scales: small-magnitude
+//! coordinates are quantized at a larger scale (finer grid) while their
+//! levels still fit the small scale's bit budget — eq. (10) guarantees
+//! `a·s* <= s_min`. Coordinate scales differ across workers, so the paper's
+//! *scale sharing* (elementwise min-all-reduce of the scale indices,
+//! ceil(log2 N) bits/coord overhead) makes the scheme all-reduce compatible.
+
+use crate::collectives::StepCtx;
+use crate::util::rng::Rng;
+
+use super::kernels;
+use super::Aggregator;
+
+pub struct QsgdMultiScale {
+    pub bits: Vec<usize>,
+    /// sorted ascending levels per scale
+    pub scales: Vec<usize>,
+    scratch: Vec<Vec<f32>>,
+    idx_scratch: Vec<Vec<u8>>,
+    uniform: Vec<Vec<f32>>,
+}
+
+impl QsgdMultiScale {
+    pub fn new(bits: &[usize]) -> anyhow::Result<QsgdMultiScale> {
+        anyhow::ensure!(bits.len() >= 2, "multi-scale needs >= 2 scales");
+        let mut scales: Vec<usize> = bits.iter().map(|&b| kernels::s_for_bits(b)).collect();
+        scales.sort_unstable();
+        anyhow::ensure!(
+            scales.windows(2).all(|w| w[0] < w[1]),
+            "scales must be distinct"
+        );
+        Ok(QsgdMultiScale {
+            bits: bits.to_vec(),
+            scales,
+            scratch: Vec::new(),
+            idx_scratch: Vec::new(),
+            uniform: Vec::new(),
+        })
+    }
+
+    /// Paper r = ceil(log s_min) + 1 + ceil(log N): level bits at the small
+    /// scale plus sign plus the scale-index share.
+    fn payload_bits(&self) -> f64 {
+        kernels::bits_for_s(self.scales[0])
+    }
+
+    fn index_bits(&self) -> f64 {
+        (self.scales.len() as f64).log2().ceil().max(1.0)
+    }
+}
+
+impl Aggregator for QsgdMultiScale {
+    fn name(&self) -> String {
+        format!("QSGD-MN-TS-({})", self.bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(","))
+    }
+
+    fn allreduce_compatible(&self) -> bool {
+        true
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        self.payload_bits() + self.index_bits()
+    }
+
+    fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32> {
+        let m = grads.len();
+        let n = grads[0].len();
+
+        // 1. shared max norm (Algorithm 2 line 5)
+        let norms: Vec<f32> = grads.iter().map(|g| kernels::l2_norm(g)).collect();
+        let wnorm = ctx.allreduce_max_scalar(&norms);
+
+        // 2. per-worker coordinate scales (line 6) — parallel across workers
+        self.idx_scratch.resize_with(m, Vec::new);
+        let (scales, idx_scratch) = (&self.scales, &mut self.idx_scratch);
+        ctx.time_encode(|| {
+            std::thread::scope(|sc| {
+                for (idx, g) in idx_scratch.iter_mut().zip(grads) {
+                    sc.spawn(move || {
+                        idx.resize(n, 0);
+                        kernels::multiscale_scale_index(g, wnorm, scales, idx);
+                    });
+                }
+            });
+        });
+
+        // 3. scale sharing: elementwise min across workers (line 7),
+        //    ceil(log2 N) bits per coordinate of overhead
+        let shared_idx = ctx.allreduce_min_u8(&self.idx_scratch, self.index_bits());
+
+        // 4. quantize at the shared scales (line 8) — parallel across workers
+        self.scratch.resize_with(m, Vec::new);
+        self.uniform.resize_with(m, Vec::new);
+        let (scratch, uniform) = (&mut self.scratch, &mut self.uniform);
+        let shared_idx_ref = &shared_idx;
+        ctx.time_encode(|| {
+            std::thread::scope(|sc| {
+                for (w, ((buf, uni), g)) in
+                    scratch.iter_mut().zip(uniform.iter_mut()).zip(grads).enumerate()
+                {
+                    let wrng = rng.derive(&[w as u64]);
+                    sc.spawn(move || {
+                        let mut wrng = wrng;
+                        buf.resize(n, 0.0);
+                        uni.resize(n, 0.0);
+                        wrng.fill_uniform_f32(uni);
+                        kernels::multiscale_encode(g, wnorm, uni, shared_idx_ref, scales, buf);
+                    });
+                }
+            });
+        });
+
+        // 5. compressed-domain sum all-reduce (line 9), zero-copy
+        let payload_bits = self.payload_bits();
+        ctx.allreduce_sum_in_place(&mut self.scratch, payload_bits);
+        let mut sum = std::mem::take(&mut self.scratch[0]);
+
+        // 6. single reconstruct with the shared scales (line 10)
+        let scales = &self.scales;
+        ctx.time_decode(|| kernels::multiscale_decode_sum(&mut sum, wnorm, &shared_idx, scales, m));
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, SimClock};
+    use crate::util::quickcheck::{check, ensure, ensure_close};
+
+    fn run(agg: &mut QsgdMultiScale, grads: &[Vec<f32>], seed: u64) -> (Vec<f32>, f64) {
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let net = NetConfig::flat(grads.len(), 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut rng = Rng::new(seed);
+        let out = agg.aggregate(&refs, &mut ctx, &mut rng);
+        (out, clock.bits_per_worker)
+    }
+
+    #[test]
+    fn wire_bits_match_paper_formula() {
+        // 32 (norm) + d*ceil(log N) (scale share) + d*r (levels)
+        let n = 1000;
+        let grads: Vec<Vec<f32>> = (0..4).map(|w| vec![0.1 * (w as f32 + 1.0); n]).collect();
+        let mut agg = QsgdMultiScale::new(&[2, 6]).unwrap();
+        let (_, bits) = run(&mut agg, &grads, 7);
+        // s_min = 1 -> 2-bit levels + 1-bit scale index share
+        assert_eq!(bits, 32.0 + (n as f64) * 2.0 + (n as f64) * 1.0);
+    }
+
+    #[test]
+    fn prop_scale_sharing_invariant() {
+        // after sharing, every worker quantizes coordinate i at the same
+        // scale, and the min rule picks the smallest proposed index.
+        check("scale sharing = elementwise min", 60, |g| {
+            let m = g.usize_in(2, 6);
+            let n = g.size_scaled(1, 800);
+            let scales = [7usize, 127];
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let wnorm = grads.iter().map(|v| kernels::l2_norm(v)).fold(0.0f32, f32::max);
+            let mut per_worker: Vec<Vec<u8>> = Vec::new();
+            for gr in &grads {
+                let mut idx = vec![0u8; n];
+                kernels::multiscale_scale_index(gr, wnorm, &scales, &mut idx);
+                per_worker.push(idx);
+            }
+            let shared = crate::collectives::min_allreduce_u8(&per_worker);
+            for i in 0..n {
+                let want = per_worker.iter().map(|v| v[i]).min().unwrap();
+                ensure(shared[i] == want, &format!("idx {i}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_unbiased_aggregate_statistical() {
+        check("multiscale aggregate unbiased", 4, |g| {
+            let m = 3;
+            let n = 96;
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let mean =
+                crate::tensor::mean_of(&grads.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+            let mut agg = QsgdMultiScale::new(&[4, 8]).unwrap();
+            let trials = 1500;
+            let mut acc = vec![0.0f64; n];
+            for t in 0..trials {
+                let (out, _) = run(&mut agg, &grads, 50_000 + t as u64);
+                for i in 0..n {
+                    acc[i] += out[i] as f64;
+                }
+            }
+            let wmax = grads.iter().map(|v| crate::tensor::norm2_f32(v)).fold(0.0f32, f32::max);
+            let se = 4.0 * wmax as f64 / (7.0 * (trials as f64 * m as f64).sqrt());
+            for i in 0..n {
+                let est = acc[i] / trials as f64;
+                ensure_close(est, mean[i] as f64, (se / 1.0f64.max(mean[i].abs() as f64)).max(1e-6), "unbiased")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn two_scale_beats_single_scale_error_same_bits() {
+        // Fig 7/8 mechanism: (2,6) two-scale should have lower squared error
+        // than plain 2-bit on the same gradient at (almost) the same bits.
+        let mut g2 = QsgdMultiScale::new(&[2, 6]).unwrap();
+        let mut q2 = super::super::qsgd_maxnorm::QsgdMaxNorm::new(2).unwrap();
+        let mut rng = Rng::new(31);
+        let n = 4096;
+        let mut base = vec![0.0f32; n];
+        rng.fill_normal_f32(&mut base, 1.0);
+        let grads = vec![base.clone(), base.clone()];
+        let (mut e_ts, mut e_ss) = (0.0f64, 0.0f64);
+        for t in 0..200 {
+            let (out_ts, _) = run(&mut g2, &grads, 900 + t);
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let net = NetConfig::flat(2, 10.0);
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            let mut r2 = Rng::new(900 + t);
+            let out_ss = q2.aggregate(&refs, &mut ctx, &mut r2);
+            for i in 0..n {
+                e_ts += (out_ts[i] as f64 - base[i] as f64).powi(2);
+                e_ss += (out_ss[i] as f64 - base[i] as f64).powi(2);
+            }
+        }
+        assert!(
+            e_ts < e_ss,
+            "two-scale error {e_ts} must beat single-scale {e_ss}"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_scale_sets() {
+        assert!(QsgdMultiScale::new(&[4]).is_err());
+        assert!(QsgdMultiScale::new(&[4, 4]).is_err());
+        assert!(QsgdMultiScale::new(&[2, 6, 10]).is_ok());
+    }
+}

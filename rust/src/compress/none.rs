@@ -1,0 +1,66 @@
+//! AllReduce-SGD: the dense fp32 baseline (PyTorch's default aggregation).
+
+use crate::collectives::StepCtx;
+use crate::util::rng::Rng;
+
+use super::Aggregator;
+
+pub struct DenseAllReduce;
+
+impl DenseAllReduce {
+    pub fn new() -> DenseAllReduce {
+        DenseAllReduce
+    }
+}
+
+impl Default for DenseAllReduce {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Aggregator for DenseAllReduce {
+    fn name(&self) -> String {
+        "AllReduce-SGD".into()
+    }
+
+    fn allreduce_compatible(&self) -> bool {
+        true
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        32.0
+    }
+
+    fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, _rng: &mut Rng) -> Vec<f32> {
+        let m = grads.len();
+        let bufs: Vec<Vec<f32>> = grads.iter().map(|g| g.to_vec()).collect();
+        let mut sum = ctx.allreduce_sum(bufs, 32.0);
+        ctx.time_decode(|| crate::tensor::scale(1.0 / m as f32, &mut sum));
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, SimClock};
+    use crate::util::quickcheck::{check, ensure_slice_close};
+
+    #[test]
+    fn prop_dense_is_exact_mean() {
+        check("dense allreduce == mean", 100, |g| {
+            let m = g.usize_in(1, 8);
+            let n = g.size_scaled(1, 2000);
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let net = NetConfig::flat(m, 10.0);
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            let mut rng = Rng::new(0);
+            let out = DenseAllReduce::new().aggregate(&refs, &mut ctx, &mut rng);
+            let mean = crate::tensor::mean_of(&refs);
+            ensure_slice_close(&out, &mean, 1e-5, "mean")
+        });
+    }
+}

@@ -1,0 +1,419 @@
+//! PowerSGD baseline (Vogels, Karimireddy, Jaggi 2020) — the all-reduce
+//! compatible low-rank scheme the paper benchmarks against (Figs 1/2, 15).
+//!
+//! Per matrix-shaped layer M (d1×d2), one step of subspace/power iteration:
+//!   P = M·Q          (all-reduce mean over workers)
+//!   P̂ = orthonormalize(P)           (local, deterministic Gram-Schmidt)
+//!   Q = Mᵀ·P̂         (all-reduce mean over workers)
+//!   ĝ = P̂·Qᵀ
+//! with per-worker error feedback e ← (g + e) − ĝ and warm-started Q.
+//! 1-D segments (biases, norms) are aggregated uncompressed, as in the
+//! reference implementation.
+//!
+//! The paper's observation that PowerSGD converges worse than QSGD-MN (its
+//! one-step power iteration has large compression error) reproduces here —
+//! see `rust/benches/fig1_2_benchmark.rs`.
+
+use crate::collectives::StepCtx;
+use crate::runtime::Segment;
+use crate::util::rng::Rng;
+
+use super::Aggregator;
+
+struct Layer {
+    offset: usize,
+    rows: usize,
+    cols: usize,
+}
+
+pub struct PowerSgd {
+    pub rank: usize,
+    n: usize,
+    layers: Vec<Layer>,
+    /// coordinates aggregated uncompressed (1-D segments)
+    dense_coords: usize,
+    /// per-worker error feedback, lazily sized to [M][n]
+    errors: Vec<Vec<f32>>,
+    /// warm-started Q per layer (shared across workers)
+    qs: Vec<Vec<f32>>,
+}
+
+impl PowerSgd {
+    pub fn new(rank: usize, n: usize, segments: &[Segment]) -> anyhow::Result<PowerSgd> {
+        anyhow::ensure!(rank >= 1, "rank must be >= 1");
+        let mut layers = Vec::new();
+        let mut dense_coords = 0usize;
+        if segments.is_empty() {
+            // flat-vector fallback: treat as one square-ish matrix
+            let rows = (n as f64).sqrt() as usize;
+            if rows >= 2 {
+                let cols = n / rows;
+                layers.push(Layer { offset: 0, rows, cols });
+                dense_coords = n - rows * cols;
+            } else {
+                dense_coords = n;
+            }
+        } else {
+            for seg in segments {
+                if seg.shape.len() >= 2 {
+                    let rows = seg.shape[0];
+                    let cols: usize = seg.shape[1..].iter().product();
+                    layers.push(Layer { offset: seg.offset, rows, cols });
+                } else {
+                    dense_coords += seg.len;
+                }
+            }
+        }
+        // seed Q with a fixed shared gaussian
+        let mut rng = Rng::new(0x50575253); // "PWRS"
+        let qs = layers
+            .iter()
+            .map(|l| {
+                let mut q = vec![0.0f32; l.cols * rank];
+                rng.fill_normal_f32(&mut q, 1.0);
+                q
+            })
+            .collect();
+        Ok(PowerSgd { rank, n, layers, dense_coords, errors: Vec::new(), qs })
+    }
+
+    /// Modified Gram-Schmidt on the columns of a (rows×rank) column-major
+    /// matrix stored row-major [rows][rank].
+    fn orthonormalize(p: &mut [f32], rows: usize, rank: usize) {
+        for c in 0..rank {
+            // subtract projections on previous columns
+            for prev in 0..c {
+                let mut dot = 0.0f64;
+                for r in 0..rows {
+                    dot += p[r * rank + c] as f64 * p[r * rank + prev] as f64;
+                }
+                for r in 0..rows {
+                    p[r * rank + c] -= dot as f32 * p[r * rank + prev];
+                }
+            }
+            let mut norm = 0.0f64;
+            for r in 0..rows {
+                norm += (p[r * rank + c] as f64).powi(2);
+            }
+            let norm = norm.sqrt().max(1e-12) as f32;
+            for r in 0..rows {
+                p[r * rank + c] /= norm;
+            }
+        }
+    }
+}
+
+impl Aggregator for PowerSgd {
+    fn name(&self) -> String {
+        format!("PowerSGD-Rank-{}", self.rank)
+    }
+
+    fn allreduce_compatible(&self) -> bool {
+        // P and Q all-reduce (the scheme's selling point), even though the
+        // operator itself is biased; error feedback compensates.
+        true
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        let compressed: usize = self
+            .layers
+            .iter()
+            .map(|l| (l.rows + l.cols) * self.rank)
+            .sum();
+        32.0 * (compressed + self.dense_coords) as f64 / self.n as f64
+    }
+
+    fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, _rng: &mut Rng) -> Vec<f32> {
+        let m = grads.len();
+        let n = grads[0].len();
+        debug_assert_eq!(n, self.n);
+        let rank = self.rank;
+
+        if self.errors.len() != m {
+            self.errors = vec![vec![0.0f32; n]; m];
+        }
+
+        // corrected gradient per worker: c_w = g_w + e_w
+        let corrected: Vec<Vec<f32>> = ctx.time_encode(|| {
+            grads
+                .iter()
+                .zip(&self.errors)
+                .map(|(g, e)| g.iter().zip(e).map(|(a, b)| a + b).collect())
+                .collect()
+        });
+
+        let mut out = vec![0.0f32; n];
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (rows, cols, off) = (layer.rows, layer.cols, layer.offset);
+            let q0 = &self.qs[li];
+
+            // P_w = M_w · Q  (rows×rank), then all-reduce mean
+            let ps: Vec<Vec<f32>> = ctx.time_encode(|| {
+                corrected
+                    .iter()
+                    .map(|c| {
+                        let mat = &c[off..off + rows * cols];
+                        let mut p = vec![0.0f32; rows * rank];
+                        for r in 0..rows {
+                            for k in 0..cols {
+                                let mrk = mat[r * cols + k];
+                                if mrk != 0.0 {
+                                    for c2 in 0..rank {
+                                        p[r * rank + c2] += mrk * q0[k * rank + c2];
+                                    }
+                                }
+                            }
+                        }
+                        p
+                    })
+                    .collect()
+            });
+            let mut p_shared = ctx.allreduce_sum(ps, 32.0);
+            crate::tensor::scale(1.0 / m as f32, &mut p_shared);
+            Self::orthonormalize(&mut p_shared, rows, rank);
+
+            // Q_w = M_wᵀ · P̂ (cols×rank), all-reduce mean
+            let qs_new: Vec<Vec<f32>> = ctx.time_encode(|| {
+                corrected
+                    .iter()
+                    .map(|c| {
+                        let mat = &c[off..off + rows * cols];
+                        let mut q = vec![0.0f32; cols * rank];
+                        for r in 0..rows {
+                            for k in 0..cols {
+                                let mrk = mat[r * cols + k];
+                                if mrk != 0.0 {
+                                    for c2 in 0..rank {
+                                        q[k * rank + c2] += mrk * p_shared[r * rank + c2];
+                                    }
+                                }
+                            }
+                        }
+                        q
+                    })
+                    .collect()
+            });
+            let mut q_shared = ctx.allreduce_sum(qs_new, 32.0);
+            crate::tensor::scale(1.0 / m as f32, &mut q_shared);
+
+            // decode ĝ = P̂ · Qᵀ and update error feedback
+            ctx.time_decode(|| {
+                for r in 0..rows {
+                    for k in 0..cols {
+                        let mut acc = 0.0f32;
+                        for c2 in 0..rank {
+                            acc += p_shared[r * rank + c2] * q_shared[k * rank + c2];
+                        }
+                        out[off + r * cols + k] = acc;
+                    }
+                }
+                for w in 0..m {
+                    for r in 0..rows {
+                        for k in 0..cols {
+                            let i = off + r * cols + k;
+                            self.errors[w][i] = corrected[w][i] - out[i];
+                        }
+                    }
+                }
+            });
+            self.qs[li] = q_shared;
+        }
+
+        // 1-D segments: uncompressed mean all-reduce. Collect them into one
+        // contiguous buffer to charge the wire once.
+        let dense_idx: Vec<(usize, usize)> = {
+            let mut covered = vec![false; n];
+            for l in &self.layers {
+                for i in l.offset..l.offset + l.rows * l.cols {
+                    covered[i] = true;
+                }
+            }
+            let mut spans = Vec::new();
+            let mut i = 0;
+            while i < n {
+                if !covered[i] {
+                    let start = i;
+                    while i < n && !covered[i] {
+                        i += 1;
+                    }
+                    spans.push((start, i));
+                } else {
+                    i += 1;
+                }
+            }
+            spans
+        };
+        if !dense_idx.is_empty() {
+            let bufs: Vec<Vec<f32>> = corrected
+                .iter()
+                .map(|c| {
+                    dense_idx
+                        .iter()
+                        .flat_map(|&(a, b)| c[a..b].iter().copied())
+                        .collect()
+                })
+                .collect();
+            let mut sum = ctx.allreduce_sum(bufs, 32.0);
+            crate::tensor::scale(1.0 / m as f32, &mut sum);
+            let mut j = 0;
+            for &(a, b) in &dense_idx {
+                for i in a..b {
+                    out[i] = sum[j];
+                    j += 1;
+                }
+            }
+            // dense coords carry no error
+            for w in 0..m {
+                for &(a, b) in &dense_idx {
+                    for i in a..b {
+                        self.errors[w][i] = 0.0;
+                    }
+                }
+            }
+        }
+
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, SimClock};
+    use crate::util::quickcheck::{check, ensure};
+
+    fn seg(name: &str, shape: &[usize], offset: usize) -> Segment {
+        Segment {
+            name: name.into(),
+            shape: shape.to_vec(),
+            offset,
+            len: shape.iter().product(),
+        }
+    }
+
+    fn run(agg: &mut PowerSgd, grads: &[Vec<f32>]) -> Vec<f32> {
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let net = NetConfig::flat(grads.len(), 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut rng = Rng::new(0);
+        agg.aggregate(&refs, &mut ctx, &mut rng)
+    }
+
+    #[test]
+    fn exact_on_rank1_matrix() {
+        // a rank-1 gradient is reproduced (almost) exactly by rank-1 PowerSGD
+        let rows = 16;
+        let cols = 24;
+        let segs = vec![seg("w", &[rows, cols], 0)];
+        let mut agg = PowerSgd::new(1, rows * cols, &segs).unwrap();
+        let u: Vec<f32> = (0..rows).map(|i| (i as f32 * 0.37).sin()).collect();
+        let v: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut g = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                g[r * cols + c] = u[r] * v[c];
+            }
+        }
+        let grads = vec![g.clone(), g.clone()];
+        // warm up the Q power iteration a few steps
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            out = run(&mut agg, &grads);
+        }
+        let err = crate::tensor::max_rel_err(&out, &g);
+        assert!(err < 1e-3, "rank-1 should converge to exact: err={err}");
+    }
+
+    #[test]
+    fn error_feedback_preserves_signal_over_time() {
+        // sum over steps of decoded output approaches sum of true gradients
+        // (the error-feedback telescoping property).
+        let rows = 8;
+        let cols = 8;
+        let segs = vec![seg("w", &[rows, cols], 0)];
+        let mut agg = PowerSgd::new(1, rows * cols, &segs).unwrap();
+        let mut rng = Rng::new(3);
+        let mut true_sum = vec![0.0f32; rows * cols];
+        let mut dec_sum = vec![0.0f32; rows * cols];
+        for _ in 0..60 {
+            let mut g = vec![0.0f32; rows * cols];
+            rng.fill_normal_f32(&mut g, 1.0);
+            crate::tensor::add_assign(&mut true_sum, &g);
+            let out = run(&mut agg, &[g.clone(), g]);
+            crate::tensor::add_assign(&mut dec_sum, &out);
+        }
+        // residual = current error buffer; bounded, not growing
+        let resid: f64 = true_sum
+            .iter()
+            .zip(&dec_sum)
+            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let total = crate::tensor::norm2(&true_sum);
+        assert!(
+            resid < total,
+            "error feedback must keep residual bounded: resid={resid} total={total}"
+        );
+    }
+
+    #[test]
+    fn dense_1d_segments_pass_through_exactly() {
+        let segs = vec![seg("w", &[4, 4], 0), seg("b", &[6], 16)];
+        let n = 22;
+        let mut agg = PowerSgd::new(2, n, &segs).unwrap();
+        let mut g = vec![0.0f32; n];
+        for (i, v) in g.iter_mut().enumerate() {
+            *v = i as f32 * 0.1;
+        }
+        let out = run(&mut agg, &[g.clone(), g.clone()]);
+        // bias segment must be exact
+        for i in 16..22 {
+            assert!((out[i] - g[i]).abs() < 1e-6, "bias coord {i}");
+        }
+    }
+
+    #[test]
+    fn prop_orthonormalize_produces_orthonormal_columns() {
+        check("gram-schmidt orthonormality", 50, |g| {
+            let rows = g.usize_in(2, 40);
+            let rank = g.usize_in(1, rows.min(4));
+            let mut p = g.vec_normal(rows * rank, 1.0);
+            PowerSgd::orthonormalize(&mut p, rows, rank);
+            for a in 0..rank {
+                for b in 0..=a {
+                    let mut dot = 0.0f64;
+                    for r in 0..rows {
+                        dot += p[r * rank + a] as f64 * p[r * rank + b] as f64;
+                    }
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    if (dot - want).abs() > 1e-3 {
+                        return Err(format!("col {a}·col {b} = {dot}, want {want}"));
+                    }
+                }
+            }
+            ensure(true, "")
+        });
+    }
+
+    #[test]
+    fn wire_bits_scale_with_rank_not_size() {
+        let rows = 64;
+        let cols = 64;
+        let segs = vec![seg("w", &[rows, cols], 0)];
+        let n = rows * cols;
+        let g: Vec<Vec<f32>> = (0..2).map(|_| vec![0.1f32; n]).collect();
+        for rank in [1usize, 2] {
+            let mut agg = PowerSgd::new(rank, n, &segs).unwrap();
+            let refs: Vec<&[f32]> = g.iter().map(|v| v.as_slice()).collect();
+            let net = NetConfig::flat(2, 10.0);
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            let mut rng = Rng::new(0);
+            agg.aggregate(&refs, &mut ctx, &mut rng);
+            let expect = 32.0 * ((rows + cols) * rank) as f64;
+            assert_eq!(clock.bits_per_worker, expect, "rank {rank}");
+        }
+    }
+}

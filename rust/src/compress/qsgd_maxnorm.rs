@@ -1,0 +1,179 @@
+//! QSGDMaxNorm Quantization (paper §4.1, Algorithm 1).
+//!
+//! Protocol per step:
+//! 1. max-all-reduce the per-worker L2 norms -> shared scale `||w||_2`;
+//! 2. each worker stochastically quantizes against `||w||_2` at s levels
+//!    (the Pallas-kernel-equivalent hot path, `kernels::qsgd_encode`);
+//! 3. one sum-all-reduce of the signed integer levels (r = b bits/coord);
+//! 4. a single decode of the reduced sum (eq. 8) — the all-reduce
+//!    compatibility property: decode commutes with the sum.
+
+use crate::collectives::StepCtx;
+use crate::util::rng::Rng;
+
+use super::kernels;
+use super::Aggregator;
+
+pub struct QsgdMaxNorm {
+    pub bits: usize,
+    pub s: usize,
+    /// reused per-step scratch (levels per worker) — zero steady-state alloc
+    scratch: Vec<Vec<f32>>,
+    uniform: Vec<Vec<f32>>,
+}
+
+impl QsgdMaxNorm {
+    pub fn new(bits: usize) -> anyhow::Result<QsgdMaxNorm> {
+        anyhow::ensure!((2..=16).contains(&bits), "qsgd bits must be in 2..=16, got {bits}");
+        Ok(QsgdMaxNorm { bits, s: kernels::s_for_bits(bits), scratch: Vec::new(), uniform: Vec::new() })
+    }
+}
+
+impl Aggregator for QsgdMaxNorm {
+    fn name(&self) -> String {
+        format!("QSGD-MN-{}", self.bits)
+    }
+
+    fn allreduce_compatible(&self) -> bool {
+        true
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32> {
+        let m = grads.len();
+        let n = grads[0].len();
+
+        // 1. shared max norm (Algorithm 1 line 5)
+        let norms: Vec<f32> = grads.iter().map(|g| kernels::l2_norm(g)).collect();
+        let wnorm = ctx.allreduce_max_scalar(&norms);
+
+        // 2. per-worker stochastic quantization (line 6) — one OS thread per
+        //    simulated worker (perf pass: the encode is embarrassingly
+        //    parallel across workers and each stream is independent).
+        self.scratch.resize_with(m, Vec::new);
+        self.uniform.resize_with(m, Vec::new);
+        let (s, scratch, uniform) = (self.s, &mut self.scratch, &mut self.uniform);
+        ctx.time_encode(|| {
+            std::thread::scope(|sc| {
+                for (w, ((buf, uni), g)) in
+                    scratch.iter_mut().zip(uniform.iter_mut()).zip(grads).enumerate()
+                {
+                    let wrng = rng.derive(&[w as u64]);
+                    sc.spawn(move || {
+                        let mut wrng = wrng;
+                        buf.resize(n, 0.0);
+                        uni.resize(n, 0.0);
+                        wrng.fill_uniform_f32(uni);
+                        kernels::qsgd_encode(g, wnorm, uni, s, buf);
+                    });
+                }
+            });
+        });
+
+        // 3. compressed-domain sum all-reduce (line 7), r = b bits/coord —
+        //    in place over the scratch buffers (zero-copy)
+        ctx.allreduce_sum_in_place(&mut self.scratch, kernels::bits_for_s(self.s));
+        let mut sum = std::mem::take(&mut self.scratch[0]);
+
+        // 4. single reconstruct (line 8)
+        ctx.time_decode(|| kernels::qsgd_decode_sum(&mut sum, wnorm, self.s, m));
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, SimClock};
+    use crate::util::quickcheck::{check, ensure, ensure_close};
+
+    fn run(agg: &mut QsgdMaxNorm, grads: &[Vec<f32>], seed: u64) -> (Vec<f32>, f64) {
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let net = NetConfig::flat(grads.len(), 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut rng = Rng::new(seed);
+        let out = agg.aggregate(&refs, &mut ctx, &mut rng);
+        (out, clock.bits_per_worker)
+    }
+
+    #[test]
+    fn wire_bits_match_paper_formula() {
+        // paper: 32 + d*r bits (norm share + payload)
+        let n = 1000;
+        let grads: Vec<Vec<f32>> = (0..4).map(|w| vec![0.1 * (w as f32 + 1.0); n]).collect();
+        let mut agg = QsgdMaxNorm::new(8).unwrap();
+        let (_, bits) = run(&mut agg, &grads, 7);
+        assert_eq!(bits, 32.0 + (n as f64) * 8.0);
+    }
+
+    #[test]
+    fn prop_unbiased_aggregate_statistical() {
+        // mean over many steps approaches the true mean gradient
+        check("qsgd aggregate unbiased", 5, |g| {
+            let m = g.usize_in(2, 4);
+            let n = 128;
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let mean = crate::tensor::mean_of(&grads.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+            let mut agg = QsgdMaxNorm::new(4).unwrap();
+            let trials = 1500;
+            let mut acc = vec![0.0f64; n];
+            for t in 0..trials {
+                let (out, _) = run(&mut agg, &grads, 1000 + t as u64);
+                for i in 0..n {
+                    acc[i] += out[i] as f64;
+                }
+            }
+            let wmax = grads.iter().map(|v| crate::tensor::norm2_f32(v)).fold(0.0f32, f32::max);
+            let se = 4.0 * wmax as f64 / (7.0 * (trials as f64 * m as f64).sqrt());
+            for i in 0..n {
+                let est = acc[i] / trials as f64;
+                ensure_close(est, mean[i] as f64, (se / 1.0f64.max(mean[i].abs() as f64)).max(1e-6), "unbiased mean")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_identical_grads_high_precision_near_exact() {
+        // at 12 bits the quantization error per coordinate is <= w/(2047)
+        check("high precision ~ exact", 30, |g| {
+            let m = g.usize_in(1, 6);
+            let n = g.size_scaled(1, 1000);
+            let base = g.vec_normal(n, 1.0);
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| base.clone()).collect();
+            let mut agg = QsgdMaxNorm::new(12).unwrap();
+            let (out, _) = run(&mut agg, &grads, g.rng().next_u64());
+            let w = crate::tensor::norm2_f32(&base);
+            let tol = (w / 2047.0) * 1.01;
+            for i in 0..n {
+                ensure(
+                    (out[i] - base[i]).abs() <= tol,
+                    &format!("coord {i}: |{} - {}| > {tol}", out[i], base[i]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let grads: Vec<Vec<f32>> = (0..3).map(|w| vec![0.3 * (w as f32 - 1.0); 500]).collect();
+        let mut a = QsgdMaxNorm::new(4).unwrap();
+        let mut b = QsgdMaxNorm::new(4).unwrap();
+        let (x, _) = run(&mut a, &grads, 99);
+        let (y, _) = run(&mut b, &grads, 99);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn zero_gradients_stay_zero() {
+        let grads: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0f32; 64]).collect();
+        let mut agg = QsgdMaxNorm::new(4).unwrap();
+        let (out, _) = run(&mut agg, &grads, 5);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+}

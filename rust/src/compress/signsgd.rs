@@ -1,0 +1,121 @@
+//! SignSGD with majority vote (Bernstein et al.) — 1-bit baseline.
+//!
+//! Each worker transmits sign bits; the vote is a sum of ±1 which *could*
+//! ride an all-reduce, but the published scheme (and [30]'s bit-packed
+//! implementation the paper cites) exchanges the packed sign tensors via
+//! all-gather — we follow that, so SignSGD pays the O(M) gather cost in the
+//! scalability analysis, matching its classification as non-linear in [16].
+
+use crate::collectives::StepCtx;
+use crate::util::rng::Rng;
+
+use super::kernels::sign;
+use super::Aggregator;
+
+pub struct SignSgdMajority;
+
+impl SignSgdMajority {
+    pub fn new() -> SignSgdMajority {
+        SignSgdMajority
+    }
+}
+
+impl Default for SignSgdMajority {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Aggregator for SignSgdMajority {
+    fn name(&self) -> String {
+        "SignSGD-MV".into()
+    }
+
+    fn allreduce_compatible(&self) -> bool {
+        false
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        1.0
+    }
+
+    fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, _rng: &mut Rng) -> Vec<f32> {
+        let n = grads[0].len();
+        // encode: sign vectors (conceptually bit-packed; wire charged 1 b/coord)
+        let signs: Vec<Vec<f32>> = ctx.time_encode(|| {
+            grads
+                .iter()
+                .map(|g| g.iter().map(|&v| sign(v)).collect())
+                .collect()
+        });
+        ctx.charge_allgather(n as f64);
+        // majority vote, decoded once per worker
+        ctx.time_decode(|| {
+            let mut out = vec![0.0f32; n];
+            for s in &signs {
+                crate::tensor::add_assign(&mut out, s);
+            }
+            for o in out.iter_mut() {
+                *o = sign(*o);
+            }
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, SimClock};
+    use crate::util::quickcheck::{check, ensure};
+
+    fn run(grads: &[Vec<f32>]) -> (Vec<f32>, f64) {
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let net = NetConfig::flat(grads.len(), 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut rng = Rng::new(0);
+        let out = SignSgdMajority::new().aggregate(&refs, &mut ctx, &mut rng);
+        (out, clock.bits_per_worker)
+    }
+
+    #[test]
+    fn majority_vote_basic() {
+        let grads = vec![
+            vec![1.0, -1.0, 2.0, 0.0],
+            vec![3.0, -2.0, -1.0, 0.0],
+            vec![-1.0, -3.0, 4.0, 0.0],
+        ];
+        let (out, bits) = run(&grads);
+        assert_eq!(out, vec![1.0, -1.0, 1.0, 0.0]);
+        assert_eq!(bits, 4.0);
+    }
+
+    #[test]
+    fn prop_output_is_sign_valued() {
+        check("signsgd output in {-1,0,1}", 80, |g| {
+            let m = g.usize_in(1, 7);
+            let n = g.size_scaled(1, 1500);
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_adversarial(n)).collect();
+            let (out, _) = run(&grads);
+            for (i, &o) in out.iter().enumerate() {
+                ensure(
+                    o == 1.0 || o == -1.0 || o == 0.0,
+                    &format!("idx {i}: {o}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unanimous_sign_always_wins() {
+        check_unanimous();
+    }
+
+    fn check_unanimous() {
+        let grads: Vec<Vec<f32>> = (0..5).map(|w| vec![0.1 + w as f32; 32]).collect();
+        let (out, _) = run(&grads);
+        assert!(out.iter().all(|&o| o == 1.0));
+    }
+}

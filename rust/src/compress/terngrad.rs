@@ -1,0 +1,160 @@
+//! TernGrad baseline (Wen et al. 2017): unbiased ternary quantization.
+//!
+//! Levels {-1, 0, +1} scaled by the gradient's max magnitude:
+//! `q_i = s_t · sign(v_i) · b_i` with `b_i ~ Bernoulli(|v_i| / s_t)`.
+//! The original shares the per-worker scaler via "scaler sharing" (max over
+//! workers) to allow parameter-server summation — the exact analogue of the
+//! paper's MaxNorm trick, so our implementation max-all-reduces
+//! `s_t = max_m max_i |v_i^m|` and aggregates ternary levels with a single
+//! sum all-reduce at 2 bits/coordinate.
+
+use crate::collectives::StepCtx;
+use crate::util::rng::Rng;
+
+use super::kernels::sign;
+use super::Aggregator;
+
+pub struct TernGrad {
+    scratch: Vec<Vec<f32>>,
+}
+
+impl TernGrad {
+    pub fn new() -> TernGrad {
+        TernGrad { scratch: Vec::new() }
+    }
+}
+
+impl Default for TernGrad {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Aggregator for TernGrad {
+    fn name(&self) -> String {
+        "TernGrad".into()
+    }
+
+    fn allreduce_compatible(&self) -> bool {
+        true
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        2.0
+    }
+
+    fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32> {
+        let m = grads.len();
+        let n = grads[0].len();
+
+        // scaler sharing: global max magnitude
+        let local_max: Vec<f32> = grads.iter().map(|g| crate::tensor::norm_inf(g)).collect();
+        let st = ctx.allreduce_max_scalar(&local_max);
+
+        self.scratch.resize_with(m, Vec::new);
+        let scratch = &mut self.scratch;
+        ctx.time_encode(|| {
+            for (w, g) in grads.iter().enumerate() {
+                let mut wrng = rng.derive(&[w as u64]);
+                scratch[w].resize(n, 0.0);
+                if st <= 0.0 {
+                    scratch[w].fill(0.0);
+                    continue;
+                }
+                for (o, &v) in scratch[w].iter_mut().zip(g.iter()) {
+                    let p = v.abs() / st;
+                    let b = if wrng.next_f32() < p { 1.0 } else { 0.0 };
+                    *o = sign(v) * b;
+                }
+            }
+        });
+
+        let bufs: Vec<Vec<f32>> = scratch.iter().map(|v| v.clone()).collect();
+        let mut sum = ctx.allreduce_sum(bufs, 2.0);
+        ctx.time_decode(|| crate::tensor::scale(st / m as f32, &mut sum));
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, SimClock};
+    use crate::util::quickcheck::{check, ensure, ensure_close};
+
+    fn run(grads: &[Vec<f32>], seed: u64) -> (Vec<f32>, f64) {
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let net = NetConfig::flat(grads.len(), 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut rng = Rng::new(seed);
+        let out = TernGrad::new().aggregate(&refs, &mut ctx, &mut rng);
+        (out, clock.bits_per_worker)
+    }
+
+    #[test]
+    fn prop_output_is_ternary_scaled() {
+        check("terngrad levels in {-st,0,st}/M scale", 60, |g| {
+            let m = g.usize_in(1, 5);
+            let n = g.size_scaled(1, 1000);
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let st = grads
+                .iter()
+                .map(|v| crate::tensor::norm_inf(v))
+                .fold(0.0f32, f32::max);
+            let (out, _) = run(&grads, g.rng().next_u64());
+            let unit = st / m as f32;
+            for (i, &o) in out.iter().enumerate() {
+                let k = o / unit;
+                ensure(
+                    (k.round() - k).abs() < 1e-4 && k.abs() <= m as f32 + 0.01,
+                    &format!("idx {i}: {o} not a ternary sum multiple (unit {unit})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_unbiased_statistical() {
+        check("terngrad unbiased", 4, |g| {
+            let n = 64;
+            let grads: Vec<Vec<f32>> = (0..2).map(|_| g.vec_normal(n, 1.0)).collect();
+            let mean =
+                crate::tensor::mean_of(&grads.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+            let trials = 4000;
+            let mut acc = vec![0.0f64; n];
+            for t in 0..trials {
+                let (out, _) = run(&grads, 31337 + t as u64);
+                for i in 0..n {
+                    acc[i] += out[i] as f64;
+                }
+            }
+            let st = grads.iter().map(|v| crate::tensor::norm_inf(v)).fold(0.0f32, f32::max) as f64;
+            let se = 4.0 * st / (trials as f64).sqrt();
+            for i in 0..n {
+                ensure_close(
+                    acc[i] / trials as f64,
+                    mean[i] as f64,
+                    (se / 1.0f64.max(mean[i].abs() as f64)).max(1e-6),
+                    "unbiased",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wire_is_two_bits() {
+        let grads: Vec<Vec<f32>> = (0..4).map(|_| vec![0.5f32; 100]).collect();
+        let (_, bits) = run(&grads, 1);
+        assert_eq!(bits, 32.0 + 200.0);
+    }
+
+    #[test]
+    fn zero_grads_zero_output() {
+        let grads: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0f32; 10]).collect();
+        let (out, _) = run(&grads, 2);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,153 @@
+//! Top-K sparsification baseline ([9]/[14]: Gradient Dropping / sparsified
+//! SGD) with per-worker error accumulation.
+//!
+//! Each worker selects its own top-K coordinates by magnitude of
+//! (gradient + accumulated residual). Indices differ per worker, so the
+//! payloads cannot be summed in compressed form — the scheme is
+//! all-reduce *incompatible* ([16]'s "non-linear" class) and pays the
+//! all-gather: (32-bit index + 32-bit value) × K per worker, O(M) scaling.
+
+use crate::collectives::StepCtx;
+use crate::util::rng::Rng;
+
+use super::Aggregator;
+
+pub struct TopK {
+    pub k: usize,
+    n: usize,
+    /// per-worker residual accumulation ([14]'s "gradient dropping" memory)
+    residual: Vec<Vec<f32>>,
+}
+
+impl TopK {
+    pub fn new(k: usize, n: usize) -> TopK {
+        TopK { k: k.min(n), n, residual: Vec::new() }
+    }
+}
+
+impl Aggregator for TopK {
+    fn name(&self) -> String {
+        "TopK".into()
+    }
+
+    fn allreduce_compatible(&self) -> bool {
+        false
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        64.0 * self.k as f64 / self.n as f64
+    }
+
+    fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, _rng: &mut Rng) -> Vec<f32> {
+        let m = grads.len();
+        let n = grads[0].len();
+        if self.residual.len() != m {
+            self.residual = vec![vec![0.0f32; n]; m];
+        }
+
+        // encode: per-worker corrected top-K sparse payloads
+        let payloads: Vec<Vec<(usize, f32)>> = ctx.time_encode(|| {
+            grads
+                .iter()
+                .zip(self.residual.iter_mut())
+                .map(|(g, res)| {
+                    for (r, &gi) in res.iter_mut().zip(g.iter()) {
+                        *r += gi;
+                    }
+                    let idx = crate::tensor::top_k_abs_indices(res, self.k);
+                    let payload: Vec<(usize, f32)> = idx.iter().map(|&i| (i, res[i])).collect();
+                    for &(i, _) in &payload {
+                        res[i] = 0.0;
+                    }
+                    payload
+                })
+                .collect()
+        });
+
+        // all-gather: each worker ships K (idx, val) pairs
+        ctx.charge_allgather(64.0 * self.k as f64);
+
+        // decode: average the M sparse vectors
+        ctx.time_decode(|| {
+            let mut out = vec![0.0f32; n];
+            for p in &payloads {
+                for &(i, v) in p {
+                    out[i] += v;
+                }
+            }
+            crate::tensor::scale(1.0 / m as f32, &mut out);
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, SimClock};
+    use crate::util::quickcheck::{check, ensure};
+
+    fn run(agg: &mut TopK, grads: &[Vec<f32>]) -> (Vec<f32>, f64) {
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let net = NetConfig::flat(grads.len(), 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut rng = Rng::new(0);
+        let out = agg.aggregate(&refs, &mut ctx, &mut rng);
+        (out, clock.bits_per_worker)
+    }
+
+    #[test]
+    fn prop_support_bounded_by_mk() {
+        check("topk support <= M*K", 60, |g| {
+            let n = g.size_scaled(16, 2000);
+            let k = g.usize_in(1, n / 4 + 1);
+            let m = g.usize_in(1, 5);
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let mut agg = TopK::new(k, n);
+            let (out, _) = run(&mut agg, &grads);
+            let nz = out.iter().filter(|x| **x != 0.0).count();
+            ensure(nz <= m * k, &format!("support {nz} > M*K {}", m * k))
+        });
+    }
+
+    #[test]
+    fn residual_telescopes() {
+        // after T steps, sum(decoded) + residual == sum(grads) per worker
+        let n = 200;
+        let k = 10;
+        let mut agg = TopK::new(k, n);
+        let mut rng = Rng::new(5);
+        let mut g_sum = vec![0.0f32; n];
+        let mut d_sum = vec![0.0f32; n];
+        for _ in 0..50 {
+            let mut g = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut g, 1.0);
+            crate::tensor::add_assign(&mut g_sum, &g);
+            let (out, _) = run(&mut agg, &[g]);
+            crate::tensor::add_assign(&mut d_sum, &out);
+        }
+        crate::tensor::add_assign(&mut d_sum, &agg.residual[0]);
+        let err = crate::tensor::max_rel_err(&d_sum, &g_sum);
+        assert!(err < 1e-4, "telescoping identity violated: {err}");
+    }
+
+    #[test]
+    fn picks_largest_coordinates_first_step() {
+        let n = 8;
+        let g = vec![0.1, -9.0, 0.2, 5.0, -0.1, 0.0, 7.0, 0.3];
+        let mut agg = TopK::new(3, n);
+        let (out, _) = run(&mut agg, &[g]);
+        assert!(out[1] != 0.0 && out[3] != 0.0 && out[6] != 0.0);
+        assert_eq!(out.iter().filter(|x| **x != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn allgather_wire_cost() {
+        let n = 1000;
+        let grads: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; n]).collect();
+        let mut agg = TopK::new(50, n);
+        let (_, bits) = run(&mut agg, &grads);
+        assert_eq!(bits, 64.0 * 50.0);
+    }
+}

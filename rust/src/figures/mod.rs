@@ -1,0 +1,227 @@
+//! Figure regeneration: one entry point per figure family in the paper's
+//! evaluation section (DESIGN.md experiment index). Each function prints
+//! the same series the paper plots and writes CSVs under `results/`.
+//!
+//! Training figures use the lite models and step counts scaled to this CPU
+//! testbed; the *shape* claims (method ordering, 2-bit gap, multi-scale
+//! recovery, sparsified early advantage) are what EXPERIMENTS.md checks.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::compress::Method;
+use crate::metrics::render_table;
+use crate::netsim::NetConfig;
+use crate::perfmodel::{paper_schemes, throughput, ModelProfile};
+use crate::runtime::Artifacts;
+use crate::train::{summary_table, write_summaries, Experiment};
+
+pub struct FigureOpts {
+    pub steps: usize,
+    pub workers: usize,
+    pub out_dir: PathBuf,
+    pub models: Vec<String>,
+    pub quiet: bool,
+}
+
+impl Default for FigureOpts {
+    fn default() -> Self {
+        FigureOpts {
+            steps: 200,
+            workers: 4,
+            out_dir: PathBuf::from("results"),
+            models: vec!["resnet_lite".into(), "vgg_lite".into()],
+            quiet: false,
+        }
+    }
+}
+
+fn parse_methods(specs: &[&str]) -> Vec<Method> {
+    specs.iter().map(|s| Method::parse(s).expect("bad method spec")).collect()
+}
+
+fn run_experiment(arts: &Artifacts, name: &str, methods: Vec<Method>, opts: &FigureOpts) -> Result<()> {
+    for model in &opts.models {
+        let mut exp = Experiment::new(&format!("{name}_{model}"), model, methods.clone());
+        exp.steps = opts.steps;
+        exp.workers = opts.workers;
+        exp.out_dir = opts.out_dir.clone();
+        exp.quiet = opts.quiet;
+        let results = exp.run(arts)?;
+        let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
+        println!("\n=== {name} / {model} (loss & accuracy vs step -> results/) ===");
+        println!("{}", summary_table(&summaries));
+        write_summaries(&opts.out_dir, &format!("{name}_{model}"), &summaries)?;
+    }
+    Ok(())
+}
+
+/// Figures 1 & 2: benchmark all methods vs AllReduce-SGD and PowerSGD.
+pub fn fig1_2(arts: &Artifacts, opts: &FigureOpts) -> Result<()> {
+    run_experiment(
+        arts,
+        "fig1_2",
+        parse_methods(&[
+            "allreduce",
+            "qsgd-mn-8",
+            "qsgd-mn-ts-8-12",
+            "grandk-mn-8",
+            "grandk-mn-ts-8-12",
+            "powersgd-1",
+            "powersgd-2",
+        ]),
+        opts,
+    )
+}
+
+/// Figures 3 & 4: QSGDMaxNorm precision sweep {8, 4, 2}.
+pub fn fig3_4(arts: &Artifacts, opts: &FigureOpts) -> Result<()> {
+    run_experiment(
+        arts,
+        "fig3_4",
+        parse_methods(&["allreduce", "qsgd-mn-8", "qsgd-mn-4", "qsgd-mn-2"]),
+        opts,
+    )
+}
+
+/// Figures 5 & 6: GlobalRandKMaxNorm precision sweep {8, 4, 2}.
+pub fn fig5_6(arts: &Artifacts, opts: &FigureOpts) -> Result<()> {
+    run_experiment(
+        arts,
+        "fig5_6",
+        parse_methods(&["allreduce", "grandk-mn-8", "grandk-mn-4", "grandk-mn-2"]),
+        opts,
+    )
+}
+
+/// Figures 7 & 8: two-scale sweep {(8,12),(6,10),(4,8),(2,6)}.
+pub fn fig7_8(arts: &Artifacts, opts: &FigureOpts) -> Result<()> {
+    run_experiment(
+        arts,
+        "fig7_8",
+        parse_methods(&[
+            "allreduce",
+            "qsgd-mn-ts-8-12",
+            "qsgd-mn-ts-6-10",
+            "qsgd-mn-ts-4-8",
+            "qsgd-mn-ts-2-6",
+        ]),
+        opts,
+    )
+}
+
+/// Figures 9 & 10: sparsified two-scale sweep.
+pub fn fig9_10(arts: &Artifacts, opts: &FigureOpts) -> Result<()> {
+    run_experiment(
+        arts,
+        "fig9_10",
+        parse_methods(&[
+            "allreduce",
+            "grandk-mn-ts-8-12",
+            "grandk-mn-ts-6-10",
+            "grandk-mn-ts-4-8",
+            "grandk-mn-ts-2-6",
+        ]),
+        opts,
+    )
+}
+
+/// Figures 11–14: analytical throughput projections (§6.6), 32 nodes × 4
+/// V100, {1, 10} Gbps × {ResNet50, VGG16} × bits {2, 4, 8}.
+pub fn fig11_14(floor_bits: Option<f64>) -> String {
+    let mut out = String::new();
+    for (fig, model, gbps) in [
+        ("Figure 11", ModelProfile::resnet50(), 1.0),
+        ("Figure 12", ModelProfile::resnet50(), 10.0),
+        ("Figure 13", ModelProfile::vgg16(), 1.0),
+        ("Figure 14", ModelProfile::vgg16(), 10.0),
+    ] {
+        let net = NetConfig::paper_cluster(gbps);
+        out.push_str(&format!(
+            "\n=== {fig}: {} @ {gbps} Gbps Ethernet, 32 nodes x 4 V100 (images/s) ===\n",
+            model.name
+        ));
+        let mut rows = Vec::new();
+        for bits in [2usize, 4, 8] {
+            for scheme in paper_schemes(bits) {
+                let tp = throughput(&model, &net, &scheme, floor_bits);
+                rows.push(vec![format!("{bits}"), scheme.label(), format!("{tp:.0}")]);
+            }
+        }
+        out.push_str(&render_table(&["bits", "method", "img/s"], &rows));
+    }
+    out
+}
+
+/// Figure 15: time breakdown per method on the 4-worker testbed.
+/// Returns rows (method, compute_s, encode_s, comm_s, decode_s, total_s)
+/// from an actual instrumented short run.
+pub fn fig15(arts: &Artifacts, opts: &FigureOpts) -> Result<String> {
+    let methods = parse_methods(&[
+        "allreduce",
+        "qsgd-mn-8",
+        "qsgd-mn-ts-8-12",
+        "grandk-mn-8",
+        "grandk-mn-ts-8-12",
+        "powersgd-1",
+        "powersgd-2",
+    ]);
+    let mut out = String::new();
+    for model in &opts.models {
+        let mut exp = Experiment::new(&format!("fig15_{model}"), model, methods.clone());
+        exp.steps = opts.steps.min(40);
+        exp.workers = opts.workers;
+        exp.out_dir = opts.out_dir.clone();
+        exp.quiet = true;
+        let results = exp.run(arts)?;
+        out.push_str(&format!("\n=== Figure 15: time breakdown / {model} (s, {} steps) ===\n", exp.steps));
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|(_, s)| {
+                vec![
+                    s.label.clone(),
+                    format!("{:.3}", s.t_compute),
+                    format!("{:.3}", s.t_encode),
+                    format!("{:.4}", s.t_comm_sim),
+                    format!("{:.3}", s.t_decode),
+                    format!("{:.3}", s.sim_time_s),
+                ]
+            })
+            .collect();
+        out.push_str(&render_table(
+            &["method", "compute", "encode", "comm(sim)", "decode", "total"],
+            &rows,
+        ));
+        write_summaries(
+            &opts.out_dir,
+            &format!("fig15_{model}"),
+            &results.into_iter().map(|(_, s)| s).collect::<Vec<_>>(),
+        )?;
+    }
+    Ok(out)
+}
+
+/// Scalability series (paper §1 / §6.6 discussion): simulated communication
+/// time vs number of workers for all-reduce vs all-gather aggregation.
+pub fn scalability_table() -> String {
+    let n = 14_728_266usize; // VGG16 gradient
+    let mut rows = Vec::new();
+    for m in [2usize, 4, 8, 16, 32, 64, 128] {
+        let net = NetConfig::flat(m, 10.0);
+        let dense = net.allreduce_s(4.0 * n as f64);
+        let q8 = net.allreduce_s(1.0 * n as f64);
+        let gather = net.allgather_s(1.0 * n as f64);
+        rows.push(vec![
+            format!("{m}"),
+            format!("{:.4}", dense),
+            format!("{:.4}", q8),
+            format!("{:.4}", gather),
+            format!("{:.2}", gather / q8),
+        ]);
+    }
+    render_table(
+        &["workers", "fp32 allreduce (s)", "8-bit allreduce (s)", "8-bit allgather (s)", "gather/reduce"],
+        &rows,
+    )
+}

@@ -1,0 +1,31 @@
+//! # repro — Unbiased Single-/Multi-scale Quantizers for Distributed Optimization
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of the paper's system:
+//! all-reduce-compatible gradient compression (QSGDMaxNorm, its multi-scale
+//! extension, and sparsified GlobalRandK variants) inside a simulated
+//! data-parallel training cluster whose model compute is AOT-compiled JAX
+//! executed through PJRT. See DESIGN.md for the full inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`runtime`] — PJRT bridge to the build-time-lowered HLO artifacts
+//! * [`compress`] — the paper's contribution + every baseline
+//! * [`collectives`] / [`netsim`] / [`cluster`] — the distributed substrate
+//! * [`optim`] / [`data`] / [`train`] — the training framework around it
+//! * [`perfmodel`] — the §6.6 analytical throughput model
+//! * [`figures`] — regenerates every figure in the paper
+
+pub mod cli;
+pub mod cluster;
+pub mod collectives;
+pub mod compress;
+pub mod data;
+pub mod figures;
+pub mod metrics;
+pub mod netsim;
+pub mod optim;
+pub mod perfmodel;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,137 @@
+//! `repro` — CLI for the distributed-quantization reproduction.
+//!
+//! Subcommands:
+//!   train      train one model with one compression method
+//!   figures    regenerate a paper figure family (1..15, or "scalability")
+//!   perfmodel  print the §6.6 throughput projections (Figures 11-14)
+//!   info       show artifact inventory
+//!
+//! Examples:
+//!   repro train --model resnet_lite --method qsgd-mn-4 --steps 200 --workers 4
+//!   repro figures --fig 3 --steps 150
+//!   repro perfmodel --floor-bits 8
+
+use anyhow::{bail, Result};
+
+use repro::cli::Args;
+use repro::compress::Method;
+use repro::figures::{self, FigureOpts};
+use repro::runtime::Artifacts;
+use repro::train::{summary_table, Experiment};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("perfmodel") => cmd_perfmodel(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (try train|figures|perfmodel|info)"),
+        None => {
+            eprintln!("usage: repro <train|figures|perfmodel|info> [options]");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mlp").to_string();
+    let method = Method::parse(args.get_or("method", "qsgd-mn-8"))?;
+    let steps: usize = args.parse_or("steps", 100)?;
+    let workers: usize = args.parse_or("workers", 4)?;
+    let lr0: f64 = args.parse_or("lr", 0.05)?;
+    let seed: u64 = args.parse_or("seed", 42)?;
+    let out_dir = args.get_or("out-dir", "results").to_string();
+    args.reject_unknown()?;
+
+    let arts = Artifacts::load_default()?;
+    let mut exp = Experiment::new("train", &model, vec![method]);
+    exp.steps = steps;
+    exp.workers = workers;
+    exp.lr0 = lr0;
+    exp.seed = seed;
+    exp.out_dir = out_dir.into();
+    let results = exp.run(&arts)?;
+    let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
+    println!("{}", summary_table(&summaries));
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let fig = args.get_or("fig", "all").to_string();
+    let mut opts = FigureOpts::default();
+    opts.steps = args.parse_or("steps", 200)?;
+    opts.workers = args.parse_or("workers", 4)?;
+    opts.out_dir = args.get_or("out-dir", "results").to_string().into();
+    if let Some(models) = args.get("models") {
+        opts.models = models.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    opts.quiet = args.flag("quiet");
+    args.reject_unknown()?;
+
+    let needs_artifacts = !matches!(fig.as_str(), "11" | "12" | "13" | "14" | "scalability");
+    let arts = if needs_artifacts { Some(Artifacts::load_default()?) } else { None };
+
+    match fig.as_str() {
+        "1" | "2" | "1_2" => figures::fig1_2(arts.as_ref().unwrap(), &opts)?,
+        "3" | "4" | "3_4" => figures::fig3_4(arts.as_ref().unwrap(), &opts)?,
+        "5" | "6" | "5_6" => figures::fig5_6(arts.as_ref().unwrap(), &opts)?,
+        "7" | "8" | "7_8" => figures::fig7_8(arts.as_ref().unwrap(), &opts)?,
+        "9" | "10" | "9_10" => figures::fig9_10(arts.as_ref().unwrap(), &opts)?,
+        "11" | "12" | "13" | "14" => println!("{}", figures::fig11_14(None)),
+        "15" => println!("{}", figures::fig15(arts.as_ref().unwrap(), &opts)?),
+        "scalability" => println!("{}", figures::scalability_table()),
+        "all" => {
+            let a = arts.as_ref().unwrap();
+            figures::fig1_2(a, &opts)?;
+            figures::fig3_4(a, &opts)?;
+            figures::fig5_6(a, &opts)?;
+            figures::fig7_8(a, &opts)?;
+            figures::fig9_10(a, &opts)?;
+            println!("{}", figures::fig11_14(None));
+            println!("{}", figures::fig15(a, &opts)?);
+            println!("{}", figures::scalability_table());
+        }
+        other => bail!("unknown figure '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_perfmodel(args: &Args) -> Result<()> {
+    let floor: Option<f64> = match args.get("floor-bits") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    args.reject_unknown()?;
+    println!("{}", figures::fig11_14(floor));
+    println!("{}", figures::scalability_table());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.reject_unknown()?;
+    let arts = Artifacts::load_default()?;
+    println!("artifacts dir: {:?}", arts.dir);
+    println!("\nmodels:");
+    for (name, m) in &arts.models {
+        println!(
+            "  {name:14} params={:>10}  input={:7} batch={}  steps for M={:?}",
+            m.param_count,
+            m.input_kind,
+            m.batch,
+            m.steps.keys().collect::<Vec<_>>()
+        );
+    }
+    println!("\nkernels:");
+    for (name, k) in &arts.kernels {
+        println!("  {name:22} n={}  file={}", k.n, k.file);
+    }
+    Ok(())
+}

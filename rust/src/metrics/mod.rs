@@ -1,0 +1,182 @@
+//! Run metrics: CSV series + JSON run summaries.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Append-oriented CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: std::fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file =
+            std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        anyhow::ensure!(values.len() == self.cols, "row arity mismatch");
+        let line = values
+            .iter()
+            .map(|v| {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    format!("{}", *v as i64)
+                } else {
+                    format!("{v:.6}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+}
+
+/// One training step's record.
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    /// wall-clock seconds in PJRT compute
+    pub t_compute: f64,
+    pub t_encode: f64,
+    pub t_decode: f64,
+    /// *simulated* communication seconds (netsim)
+    pub t_comm_sim: f64,
+    pub bits_per_worker: f64,
+}
+
+/// Whole-run summary, serializable for EXPERIMENTS.md extraction.
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    pub label: String,
+    pub model: String,
+    pub workers: usize,
+    pub steps: usize,
+    pub final_loss: f64,
+    pub final_eval_loss: f64,
+    pub final_eval_acc: f64,
+    pub mean_bits_per_step: f64,
+    pub sim_time_s: f64,
+    pub wall_time_s: f64,
+    pub t_compute: f64,
+    pub t_encode: f64,
+    pub t_decode: f64,
+    pub t_comm_sim: f64,
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", s(&self.label)),
+            ("model", s(&self.model)),
+            ("workers", num(self.workers as f64)),
+            ("steps", num(self.steps as f64)),
+            ("final_loss", num(self.final_loss)),
+            ("final_eval_loss", num(self.final_eval_loss)),
+            ("final_eval_acc", num(self.final_eval_acc)),
+            ("mean_bits_per_step", num(self.mean_bits_per_step)),
+            ("sim_time_s", num(self.sim_time_s)),
+            ("wall_time_s", num(self.wall_time_s)),
+            (
+                "time_breakdown",
+                obj(vec![
+                    ("compute", num(self.t_compute)),
+                    ("encode", num(self.t_encode)),
+                    ("decode", num(self.t_decode)),
+                    ("comm_sim", num(self.t_comm_sim)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Write a list of summaries as a JSON report.
+pub fn write_report(path: &Path, summaries: &[RunSummary]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let j = arr(summaries.iter().map(|r| r.to_json()).collect());
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+/// Render an aligned plain-text table (for bench/figure stdout).
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = header.iter().map(|h| h.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("repro_metrics_test");
+        let path = dir.join("x.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&[1.0, 2.5]).unwrap();
+        w.row(&[3.0, 4.0]).unwrap();
+        assert!(w.row(&[1.0]).is_err());
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n1,2.500000\n"));
+    }
+
+    #[test]
+    fn summary_json_parses_back() {
+        let r = RunSummary { label: "QSGD-MN-8".into(), steps: 10, ..Default::default() };
+        let j = r.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.req("label").unwrap().as_str().unwrap(), "QSGD-MN-8");
+        assert_eq!(parsed.req("steps").unwrap().as_usize().unwrap(), 10);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["name", "val"],
+            &[vec!["x".into(), "1".into()], vec!["long-name".into(), "2".into()]],
+        );
+        assert!(t.contains("long-name"));
+        assert_eq!(t.lines().count(), 4);
+    }
+}

@@ -1,0 +1,257 @@
+//! α–β network cost model (the simulated wire).
+//!
+//! The paper's scalability argument is about *communication time*: all-reduce
+//! scales O(log M) / O(1) in bandwidth terms while all-gather scales O(M).
+//! We reproduce that with the standard latency–bandwidth (α–β) model over a
+//! two-level hierarchy: GPUs within a node connected by NVLink, nodes
+//! connected by Ethernet — the same topology §6.6 profiles (AWS p3.8xlarge,
+//! 4×V100 + 10 Gbps).
+//!
+//! Every simulated collective charges this model; the physical data movement
+//! happens in [`crate::collectives`] (real bytes through real encoders), so
+//! simulated time and real numerics are decoupled but consistent.
+
+/// One link class: latency (s) + inverse bandwidth (s/byte).
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    pub alpha_s: f64,
+    pub bytes_per_s: f64,
+}
+
+impl Link {
+    pub fn nvlink() -> Link {
+        // NVLink2 ~25 GB/s effective per direction, ~2us launch latency
+        Link { alpha_s: 2e-6, bytes_per_s: 25e9 }
+    }
+
+    pub fn ethernet_gbps(gbps: f64) -> Link {
+        // TCP/IP stack latency ~50us
+        Link { alpha_s: 50e-6, bytes_per_s: gbps * 1e9 / 8.0 }
+    }
+
+    fn xfer_s(&self, bytes: f64) -> f64 {
+        self.alpha_s + bytes / self.bytes_per_s
+    }
+}
+
+/// All-reduce algorithm the cost model assumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Bandwidth-optimal ring: reduce-scatter + all-gather.
+    Ring,
+    /// Latency-optimal binary tree (reduce + broadcast).
+    Tree,
+    /// Every rank sends its full buffer to every other rank.
+    Naive,
+}
+
+impl std::str::FromStr for Algo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "ring" => Ok(Algo::Ring),
+            "tree" => Ok(Algo::Tree),
+            "naive" => Ok(Algo::Naive),
+            other => Err(format!("unknown allreduce algo '{other}'")),
+        }
+    }
+}
+
+/// Cluster shape + links.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    pub workers: usize,
+    pub gpus_per_node: usize,
+    pub intra: Link,
+    pub inter: Link,
+    pub algo: Algo,
+}
+
+impl NetConfig {
+    /// Single-node cluster over NVLink (the Fig 15 testbed uses Ethernet
+    /// between single-GPU machines — see [`NetConfig::flat`]).
+    pub fn single_node(workers: usize) -> NetConfig {
+        NetConfig {
+            workers,
+            gpus_per_node: workers.max(1),
+            intra: Link::nvlink(),
+            inter: Link::ethernet_gbps(10.0),
+            algo: Algo::Ring,
+        }
+    }
+
+    /// Flat cluster: one GPU per node, everything over Ethernet.
+    pub fn flat(workers: usize, gbps: f64) -> NetConfig {
+        NetConfig {
+            workers,
+            gpus_per_node: 1,
+            intra: Link::nvlink(),
+            inter: Link::ethernet_gbps(gbps),
+            algo: Algo::Ring,
+        }
+    }
+
+    /// The paper's §6.6 projection target: 32 nodes × 4 V100 w/ NVLink.
+    pub fn paper_cluster(gbps: f64) -> NetConfig {
+        NetConfig {
+            workers: 128,
+            gpus_per_node: 4,
+            intra: Link::nvlink(),
+            inter: Link::ethernet_gbps(gbps),
+            algo: Algo::Ring,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.workers.div_ceil(self.gpus_per_node)
+    }
+
+    /// Ring all-reduce of `bytes` over `n` ranks on `link`:
+    /// 2(n−1) steps of α + (bytes/n)·β.
+    fn ring_s(link: &Link, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (n - 1);
+        steps as f64 * link.alpha_s + (steps as f64 / n as f64) * bytes / link.bytes_per_s
+    }
+
+    /// Tree all-reduce: 2·log2(n) rounds of the full buffer.
+    fn tree_s(link: &Link, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let rounds = 2.0 * (n as f64).log2().ceil();
+        rounds * link.xfer_s(bytes)
+    }
+
+    /// Naive all-reduce == all-gather then local sum: (n−1) full buffers.
+    fn naive_s(link: &Link, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n - 1) as f64 * link.xfer_s(bytes)
+    }
+
+    fn one_level_allreduce_s(&self, link: &Link, bytes: f64, n: usize) -> f64 {
+        match self.algo {
+            Algo::Ring => Self::ring_s(link, bytes, n),
+            Algo::Tree => Self::tree_s(link, bytes, n),
+            Algo::Naive => Self::naive_s(link, bytes, n),
+        }
+    }
+
+    /// Hierarchical all-reduce of a `bytes`-sized buffer across all workers:
+    /// intra-node reduce-scatter/all-gather + inter-node ring (NCCL-style).
+    pub fn allreduce_s(&self, bytes: f64) -> f64 {
+        let g = self.gpus_per_node.min(self.workers).max(1);
+        let nodes = self.nodes();
+        let mut t = self.one_level_allreduce_s(&self.intra, bytes, g);
+        if nodes > 1 {
+            t += self.one_level_allreduce_s(&self.inter, bytes, nodes);
+        }
+        t
+    }
+
+    /// All-gather where every rank contributes `bytes_per_rank`:
+    /// O(M) total bytes per rank — the scalability killer the paper plots.
+    pub fn allgather_s(&self, bytes_per_rank: f64) -> f64 {
+        let g = self.gpus_per_node.min(self.workers).max(1);
+        let nodes = self.nodes();
+        let mut t = if g > 1 {
+            (g - 1) as f64 * self.intra.alpha_s
+                + (g - 1) as f64 * bytes_per_rank / self.intra.bytes_per_s
+        } else {
+            0.0
+        };
+        if nodes > 1 {
+            // after intra gather, each node forwards g×bytes_per_rank
+            let node_bytes = g as f64 * bytes_per_rank;
+            t += (nodes - 1) as f64 * self.inter.alpha_s
+                + (nodes - 1) as f64 * node_bytes / self.inter.bytes_per_s;
+        }
+        t
+    }
+
+    /// A scalar max/min all-reduce (one f32): latency-dominated.
+    pub fn scalar_allreduce_s(&self) -> f64 {
+        self.allreduce_s(4.0)
+    }
+}
+
+/// Accumulating simulated clock + wire ledger for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    pub comm_s: f64,
+    pub compute_s: f64,
+    pub encode_s: f64,
+    pub decode_s: f64,
+    /// payload bits sent per worker (the paper's 32 + d·r accounting)
+    pub bits_per_worker: f64,
+}
+
+impl SimClock {
+    pub fn total_s(&self) -> f64 {
+        self.comm_s + self.compute_s + self.encode_s + self.decode_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_beats_naive_at_scale() {
+        let bytes = 4.0 * 23_520_842.0; // ResNet50 fp32 gradient
+        for workers in [8usize, 32, 128] {
+            let mut ring = NetConfig::flat(workers, 10.0);
+            ring.algo = Algo::Ring;
+            let mut naive = ring.clone();
+            naive.algo = Algo::Naive;
+            assert!(
+                ring.allreduce_s(bytes) < naive.allreduce_s(bytes),
+                "ring must beat naive at M={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_is_size_invariant_in_m() {
+        // Ring all-reduce total bytes per rank ~2·bytes regardless of M:
+        // time grows only via latency terms.
+        let bytes = 1e8;
+        let t8 = NetConfig::flat(8, 10.0).allreduce_s(bytes);
+        let t64 = NetConfig::flat(64, 10.0).allreduce_s(bytes);
+        assert!(t64 < t8 * 1.5, "ring allreduce should scale gently: {t8} vs {t64}");
+        // all-gather by contrast grows linearly
+        let g8 = NetConfig::flat(8, 10.0).allgather_s(bytes);
+        let g64 = NetConfig::flat(64, 10.0).allgather_s(bytes);
+        assert!(g64 > g8 * 6.0, "allgather must scale ~linearly: {g8} vs {g64}");
+    }
+
+    #[test]
+    fn hierarchy_uses_fast_intra_link() {
+        let bytes = 1e8;
+        let hier = NetConfig::paper_cluster(10.0); // 32 nodes × 4
+        let flat = NetConfig::flat(128, 10.0);
+        assert!(
+            hier.allreduce_s(bytes) < flat.allreduce_s(bytes),
+            "NVLink hierarchy should beat flat ethernet"
+        );
+    }
+
+    #[test]
+    fn single_worker_is_free() {
+        let net = NetConfig::flat(1, 10.0);
+        assert_eq!(net.allreduce_s(1e9), 0.0);
+        assert_eq!(net.allgather_s(1e9), 0.0);
+    }
+
+    #[test]
+    fn compressed_buffer_is_faster() {
+        let net = NetConfig::flat(16, 1.0);
+        let full = net.allreduce_s(4.0 * 14_728_266.0); // VGG16 fp32
+        let q4 = net.allreduce_s(0.5 * 14_728_266.0); // 4-bit packed
+        assert!(q4 < full / 4.0, "4-bit should be ~8x faster: {full} vs {q4}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Learning-rate schedules. The paper uses Cosine Annealing (SGDR [31])
+//! over the full 150-epoch run; warmup and step schedules are provided for
+//! the ablation benches.
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant { lr: f64 },
+    /// lr(t) = lr_min + 0.5 (lr0 - lr_min)(1 + cos(pi t / T))
+    Cosine { lr0: f64, lr_min: f64, total_steps: usize },
+    /// linear warmup into cosine
+    WarmupCosine { lr0: f64, lr_min: f64, warmup: usize, total_steps: usize },
+    /// multiply by gamma at each milestone
+    Step { lr0: f64, gamma: f64, milestones: Vec<usize> },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f64 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::Cosine { lr0, lr_min, total_steps } => {
+                let t = (step.min(*total_steps)) as f64 / (*total_steps).max(1) as f64;
+                lr_min + 0.5 * (lr0 - lr_min) * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            LrSchedule::WarmupCosine { lr0, lr_min, warmup, total_steps } => {
+                if step < *warmup {
+                    lr0 * (step + 1) as f64 / *warmup as f64
+                } else {
+                    LrSchedule::Cosine {
+                        lr0: *lr0,
+                        lr_min: *lr_min,
+                        total_steps: total_steps.saturating_sub(*warmup).max(1),
+                    }
+                    .at(step - warmup)
+                }
+            }
+            LrSchedule::Step { lr0, gamma, milestones } => {
+                let k = milestones.iter().filter(|&&m| step >= m).count();
+                lr0 * gamma.powi(k as i32)
+            }
+        }
+    }
+
+    /// The paper's schedule for a run of `total_steps`.
+    pub fn paper(lr0: f64, total_steps: usize) -> LrSchedule {
+        LrSchedule::Cosine { lr0, lr_min: 0.0, total_steps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, ensure};
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = LrSchedule::Cosine { lr0: 1.0, lr_min: 0.1, total_steps: 100 };
+        assert!((s.at(0) - 1.0).abs() < 1e-12);
+        assert!((s.at(100) - 0.1).abs() < 1e-12);
+        assert!((s.at(50) - 0.55).abs() < 1e-12);
+        assert_eq!(s.at(1000), s.at(100)); // clamped past the horizon
+    }
+
+    #[test]
+    fn prop_cosine_monotone_decreasing() {
+        check("cosine is monotone", 30, |g| {
+            let total = g.usize_in(2, 500);
+            let s = LrSchedule::Cosine { lr0: g.f64_in(0.1, 2.0), lr_min: 0.0, total_steps: total };
+            for t in 1..=total {
+                if s.at(t) > s.at(t - 1) + 1e-12 {
+                    return Err(format!("increase at {t}"));
+                }
+            }
+            ensure(true, "")
+        });
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = LrSchedule::WarmupCosine { lr0: 1.0, lr_min: 0.0, warmup: 10, total_steps: 110 };
+        assert!(s.at(0) < s.at(5));
+        assert!(s.at(5) < s.at(9));
+        assert!((s.at(10) - 1.0).abs() < 1e-9);
+        assert!(s.at(60) < 1.0);
+    }
+
+    #[test]
+    fn step_schedule() {
+        let s = LrSchedule::Step { lr0: 1.0, gamma: 0.1, milestones: vec![10, 20] };
+        assert_eq!(s.at(9), 1.0);
+        assert!((s.at(10) - 0.1).abs() < 1e-12);
+        assert!((s.at(25) - 0.01).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,249 @@
+//! §6.6 analytical performance model (after TernGrad [12]).
+//!
+//! Projects system throughput (images/s) for a cluster from:
+//!   * a model profile — true parameter count + measured per-GPU step time
+//!     (the paper profiled an AWS p3.8xlarge, 4×V100 NVLink; we encode the
+//!     published/derived constants in [`ModelProfile`]);
+//!   * the two-level α–β network model ([`crate::netsim::NetConfig`]);
+//!   * a compression scheme's wire bits and encode/decode cost.
+//!
+//! `throughput = M·B / (t_compute + t_encode + t_comm + t_decode)`.
+//!
+//! Regenerates Figures 11–14 (`repro perfmodel`, bench `fig11_14_perfmodel`).
+
+use crate::compress::kernels;
+use crate::netsim::NetConfig;
+
+/// Paper-scale model profiles (the *real* ResNet50/VGG16, not the lite
+/// stand-ins used for the training curves — DESIGN.md §2).
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub params: usize,
+    /// per-GPU fwd+bwd seconds at `batch` on a V100 (fp32)
+    pub compute_s: f64,
+    pub batch: usize,
+}
+
+impl ModelProfile {
+    /// ResNet50 on CIFAR10: 23 520 842 params (paper §6.7). The paper calls
+    /// it *computation-intensive*: deep, many cheap layers — per-GPU step
+    /// time dominated by kernel launches + compute. V100 batch-128 profile
+    /// ≈ 610 img/s (0.21 s/step), params/compute ≈ 112 M/s.
+    pub fn resnet50() -> ModelProfile {
+        ModelProfile { name: "ResNet50", params: 23_520_842, compute_s: 0.21, batch: 128 }
+    }
+
+    /// VGG16 (CIFAR variant): 14 728 266 params (paper §6.7). The paper
+    /// calls it *communication-intensive*: shallow and wide, so its
+    /// params/compute ratio is ~2× ResNet50's. V100 batch-128 profile
+    /// ≈ 1830 img/s (0.07 s/step), params/compute ≈ 210 M/s.
+    pub fn vgg16() -> ModelProfile {
+        ModelProfile { name: "VGG16", params: 14_728_266, compute_s: 0.07, batch: 128 }
+    }
+}
+
+/// GPU-side processing rates for the compression stages (bytes/s through an
+/// elementwise kernel ≈ HBM bandwidth-bound; V100 ≈ 900 GB/s theoretical,
+/// ~300 GB/s effective for a read-modify-write quantizer chain).
+const QUANTIZE_BYTES_PER_S: f64 = 300e9;
+/// norm / scale-index extra pass
+const REDUCE_BYTES_PER_S: f64 = 500e9;
+/// low-rank matmul efficiency for PowerSGD (V100 fp32 ≈ 14 TFLOP/s, small
+/// matrices reach ~20%)
+const POWERSGD_FLOPS: f64 = 2.8e12;
+
+/// A compression scheme as the performance model sees it.
+#[derive(Clone, Debug)]
+pub enum Scheme {
+    AllReduceSgd,
+    Qsgd { bits: usize },
+    QsgdTs { bits_lo: usize, bits_hi: usize },
+    RandK { bits: usize, k: usize },
+    RandKTs { bits_lo: usize, bits_hi: usize, k: usize },
+    PowerSgd { rank: usize },
+}
+
+impl Scheme {
+    pub fn label(&self) -> String {
+        match self {
+            Scheme::AllReduceSgd => "AllReduce-SGD".into(),
+            Scheme::Qsgd { bits } => format!("QSGD-MN-{bits}"),
+            Scheme::QsgdTs { bits_lo, bits_hi } => format!("QSGD-MN-TS-({bits_lo},{bits_hi})"),
+            Scheme::RandK { bits, .. } => format!("GRandK-MN-{bits}"),
+            Scheme::RandKTs { bits_lo, bits_hi, .. } => {
+                format!("GRandK-MN-TS-({bits_lo},{bits_hi})")
+            }
+            Scheme::PowerSgd { rank } => format!("PowerSGD-Rank-{rank}"),
+        }
+    }
+
+    /// Payload bytes all-reduced per step for an n-coordinate gradient,
+    /// plus a flag for schemes that need a second all-reduce round (the
+    /// two-scale index share — the Fig 15 "two all-reduce ops" effect).
+    fn wire(&self, n: usize, floor_bits: Option<f64>) -> WireCost {
+        let f = |bits: f64| -> f64 {
+            let b = match floor_bits {
+                Some(fl) => bits.max(fl),
+                None => bits,
+            };
+            b / 8.0
+        };
+        match self {
+            Scheme::AllReduceSgd => WireCost { allreduce_bytes: 4.0 * n as f64, rounds: 1 },
+            Scheme::Qsgd { bits } => WireCost {
+                allreduce_bytes: f(*bits as f64) * n as f64,
+                rounds: 1,
+            },
+            Scheme::QsgdTs { bits_lo, .. } => WireCost {
+                // level payload at the small scale + 1-bit scale share
+                allreduce_bytes: f(*bits_lo as f64) * n as f64 + f(1.0) * n as f64,
+                rounds: 2,
+            },
+            Scheme::RandK { bits, k } => WireCost {
+                allreduce_bytes: f(*bits as f64) * *k as f64,
+                rounds: 1,
+            },
+            Scheme::RandKTs { bits_lo, k, .. } => WireCost {
+                allreduce_bytes: (f(*bits_lo as f64) + f(1.0)) * *k as f64,
+                rounds: 2,
+            },
+            Scheme::PowerSgd { rank } => {
+                // P (sqrt-ish split) — use the paper's observed ~rank·(d1+d2)
+                // with a generic 4:1 aspect: d1+d2 ≈ 2.24·sqrt(n)
+                let d = 2.24 * (n as f64).sqrt();
+                WireCost { allreduce_bytes: 4.0 * *rank as f64 * d, rounds: 2 }
+            }
+        }
+    }
+
+    /// Encode+decode seconds on the GPU for an n-coordinate gradient.
+    fn codec_s(&self, n: usize) -> f64 {
+        let nb = 4.0 * n as f64;
+        match self {
+            Scheme::AllReduceSgd => 0.0,
+            Scheme::Qsgd { .. } => nb / QUANTIZE_BYTES_PER_S + nb / REDUCE_BYTES_PER_S,
+            Scheme::QsgdTs { .. } => 2.0 * nb / QUANTIZE_BYTES_PER_S + nb / REDUCE_BYTES_PER_S,
+            Scheme::RandK { k, .. } => {
+                (4.0 * *k as f64) / QUANTIZE_BYTES_PER_S + nb / REDUCE_BYTES_PER_S * 0.1
+            }
+            Scheme::RandKTs { k, .. } => {
+                (8.0 * *k as f64) / QUANTIZE_BYTES_PER_S + nb / REDUCE_BYTES_PER_S * 0.1
+            }
+            Scheme::PowerSgd { rank } => {
+                // two n×rank GEMMs + orthogonalization
+                (4.0 * n as f64 * *rank as f64) / POWERSGD_FLOPS * 3.0
+            }
+        }
+    }
+}
+
+struct WireCost {
+    allreduce_bytes: f64,
+    rounds: usize,
+}
+
+/// Throughput in images/s for `model` on `net` with `scheme`.
+pub fn throughput(model: &ModelProfile, net: &NetConfig, scheme: &Scheme, floor_bits: Option<f64>) -> f64 {
+    let wire = scheme.wire(model.params, floor_bits);
+    let mut t_comm = net.allreduce_s(wire.allreduce_bytes);
+    // extra latency per extra round (the scale-share all-reduce)
+    if wire.rounds > 1 {
+        t_comm += (wire.rounds - 1) as f64 * net.scalar_allreduce_s();
+    }
+    let t = model.compute_s + scheme.codec_s(model.params) + t_comm;
+    net.workers as f64 * model.batch as f64 / t
+}
+
+/// The K used by the paper's sparsified schemes in §6: 10000.
+pub const PAPER_K: usize = 10_000;
+
+/// Build the scheme grid of Figures 11–14 for a bit-width.
+pub fn paper_schemes(bits: usize) -> Vec<Scheme> {
+    vec![
+        Scheme::AllReduceSgd,
+        Scheme::Qsgd { bits },
+        Scheme::QsgdTs { bits_lo: bits, bits_hi: bits + 4 },
+        Scheme::RandK { bits, k: PAPER_K },
+        Scheme::RandKTs { bits_lo: bits, bits_hi: bits + 4, k: PAPER_K },
+    ]
+}
+
+/// Sanity accessor used by tests: bits/coordinate the quantizer would claim.
+pub fn nominal_bits(bits: usize) -> f64 {
+    kernels::bits_for_s(kernels::s_for_bits(bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(gbps: f64) -> NetConfig {
+        NetConfig::paper_cluster(gbps)
+    }
+
+    #[test]
+    fn compression_helps_more_on_vgg_than_resnet() {
+        // paper §6.6: VGG16 (communication-intensive) gains more
+        let net = cluster(1.0);
+        for (model, min_gain) in [(ModelProfile::vgg16(), 2.0), (ModelProfile::resnet50(), 1.05)] {
+            let base = throughput(&model, &net, &Scheme::AllReduceSgd, None);
+            let q2 = throughput(&model, &net, &Scheme::Qsgd { bits: 2 }, None);
+            assert!(
+                q2 / base > min_gain,
+                "{}: gain {} < {min_gain}",
+                model.name,
+                q2 / base
+            );
+        }
+        let vgg_gain = throughput(&ModelProfile::vgg16(), &net, &Scheme::Qsgd { bits: 2 }, None)
+            / throughput(&ModelProfile::vgg16(), &net, &Scheme::AllReduceSgd, None);
+        let res_gain =
+            throughput(&ModelProfile::resnet50(), &net, &Scheme::Qsgd { bits: 2 }, None)
+                / throughput(&ModelProfile::resnet50(), &net, &Scheme::AllReduceSgd, None);
+        assert!(vgg_gain > res_gain, "VGG gain {vgg_gain} vs ResNet gain {res_gain}");
+    }
+
+    #[test]
+    fn throughput_decreases_with_bits() {
+        // paper §6.6: "throughput decreases with an increase in bits"
+        let net = cluster(1.0);
+        let model = ModelProfile::resnet50();
+        let t2 = throughput(&model, &net, &Scheme::Qsgd { bits: 2 }, None);
+        let t4 = throughput(&model, &net, &Scheme::Qsgd { bits: 4 }, None);
+        let t8 = throughput(&model, &net, &Scheme::Qsgd { bits: 8 }, None);
+        assert!(t2 > t4 && t4 > t8, "{t2} > {t4} > {t8} violated");
+    }
+
+    #[test]
+    fn sparsified_wins_at_low_bandwidth() {
+        // paper §6.6: under 1 Gbps, sparsified methods significantly win
+        let net = cluster(1.0);
+        let model = ModelProfile::vgg16();
+        let q = throughput(&model, &net, &Scheme::Qsgd { bits: 4 }, None);
+        let rk = throughput(&model, &net, &Scheme::RandK { bits: 4, k: PAPER_K }, None);
+        assert!(rk > 1.5 * q, "sparsified {rk} should beat dense-quantized {q}");
+    }
+
+    #[test]
+    fn ten_gbps_shrinks_the_gap() {
+        let model = ModelProfile::resnet50();
+        let gain_1g = throughput(&model, &cluster(1.0), &Scheme::Qsgd { bits: 4 }, None)
+            / throughput(&model, &cluster(1.0), &Scheme::AllReduceSgd, None);
+        let gain_10g = throughput(&model, &cluster(10.0), &Scheme::Qsgd { bits: 4 }, None)
+            / throughput(&model, &cluster(10.0), &Scheme::AllReduceSgd, None);
+        assert!(
+            gain_1g > gain_10g,
+            "compression gain must shrink with bandwidth: {gain_1g} vs {gain_10g}"
+        );
+    }
+
+    #[test]
+    fn wire_floor_hurts_subbyte_schemes() {
+        let net = cluster(1.0);
+        let model = ModelProfile::vgg16();
+        let free = throughput(&model, &net, &Scheme::Qsgd { bits: 2 }, None);
+        let floored = throughput(&model, &net, &Scheme::Qsgd { bits: 2 }, Some(8.0));
+        assert!(free > floored, "8-bit floor must cost throughput: {free} vs {floored}");
+    }
+}

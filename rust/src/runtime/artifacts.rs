@@ -1,0 +1,281 @@
+//! Artifact index: typed view over `artifacts/meta.json` + params.bin loading.
+//!
+//! `meta.json` is written by `python/compile/aot.py` (the only Python that
+//! ever runs) and describes every lowered HLO: input/output shapes, the flat
+//! parameter layout (segments), batch geometry and FLOP estimates.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor's slice of the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Dtype carried on the wire between L3 and PJRT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One input/output tensor of a lowered step.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A lowered multi-worker gradient step.
+#[derive(Clone, Debug)]
+pub struct StepSpec {
+    pub file: String,
+    pub workers: usize,
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub flops: f64,
+}
+
+/// A lowered eval step.
+#[derive(Clone, Debug)]
+pub struct EvalSpec {
+    pub file: String,
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// One model's artifact family.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub name: String,
+    pub param_count: usize,
+    pub params_file: String,
+    pub segments: Vec<Segment>,
+    pub steps: BTreeMap<usize, StepSpec>,
+    pub eval: EvalSpec,
+    /// "image" or "tokens"
+    pub input_kind: String,
+    pub batch: usize,
+    pub cfg: Json,
+}
+
+/// A parity-kernel artifact (Pallas graph lowered standalone).
+#[derive(Clone, Debug)]
+pub struct KernelArtifact {
+    pub file: String,
+    pub n: usize,
+    pub extra: Json,
+}
+
+/// The whole artifact directory.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+    pub kernels: BTreeMap<String, KernelArtifact>,
+    /// paper's bits-per-coordinate -> number of levels s
+    pub bits_to_s: BTreeMap<usize, usize>,
+}
+
+fn parse_dtype(s: &str) -> Result<Dtype> {
+    match s {
+        "f32" => Ok(Dtype::F32),
+        "i32" => Ok(Dtype::I32),
+        other => bail!("unknown dtype '{other}'"),
+    }
+}
+
+fn parse_tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                kind: t.req("kind")?.as_str()?.to_string(),
+                shape: t
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: parse_dtype(t.req("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+impl Artifacts {
+    /// Locate the artifacts directory: `$REPRO_ARTIFACTS`, else `./artifacts`,
+    /// else walk up from cwd (so tests/examples work from any subdir).
+    pub fn locate() -> Result<PathBuf> {
+        if let Ok(p) = std::env::var("REPRO_ARTIFACTS") {
+            return Ok(PathBuf::from(p));
+        }
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts").join("meta.json");
+            if cand.exists() {
+                return Ok(dir.join("artifacts"));
+            }
+            if !dir.pop() {
+                bail!(
+                    "artifacts/meta.json not found — run `make artifacts` \
+                     (or set REPRO_ARTIFACTS)"
+                );
+            }
+        }
+    }
+
+    pub fn load_default() -> Result<Artifacts> {
+        Self::load(&Self::locate()?)
+    }
+
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?}"))?;
+        let meta = Json::parse(&text).context("parsing meta.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in meta.req("models")?.as_obj()? {
+            let segments = m
+                .req("segments")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(Segment {
+                        name: s.req("name")?.as_str()?.to_string(),
+                        shape: s
+                            .req("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                        offset: s.req("offset")?.as_usize()?,
+                        len: s.req("len")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+
+            let mut steps = BTreeMap::new();
+            for (mstr, st) in m.req("steps")?.as_obj()? {
+                let spec = StepSpec {
+                    file: st.req("file")?.as_str()?.to_string(),
+                    workers: st.req("workers")?.as_usize()?,
+                    batch: st.req("batch")?.as_usize()?,
+                    inputs: parse_tensor_specs(st.req("inputs")?)?,
+                    flops: st.req("flops")?.as_f64()?,
+                };
+                steps.insert(mstr.parse::<usize>()?, spec);
+            }
+
+            let ev = m.req("eval")?;
+            let eval = EvalSpec {
+                file: ev.req("file")?.as_str()?.to_string(),
+                batch: ev.req("batch")?.as_usize()?,
+                inputs: parse_tensor_specs(ev.req("inputs")?)?,
+            };
+
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    name: name.clone(),
+                    param_count: m.req("param_count")?.as_usize()?,
+                    params_file: m.req("params_file")?.as_str()?.to_string(),
+                    segments,
+                    steps,
+                    eval,
+                    input_kind: m.req("input")?.as_str()?.to_string(),
+                    batch: m.req("batch")?.as_usize()?,
+                    cfg: m.req("cfg")?.clone(),
+                },
+            );
+        }
+
+        let mut kernels = BTreeMap::new();
+        for (name, k) in meta.req("kernels")?.as_obj()? {
+            kernels.insert(
+                name.clone(),
+                KernelArtifact {
+                    file: k.req("file")?.as_str()?.to_string(),
+                    n: k.req("n")?.as_usize()?,
+                    extra: k.clone(),
+                },
+            );
+        }
+
+        let mut bits_to_s = BTreeMap::new();
+        for (b, s) in meta.req("bits_to_s")?.as_obj()? {
+            bits_to_s.insert(b.parse::<usize>()?, s.as_usize()?);
+        }
+
+        Ok(Artifacts { dir: dir.to_path_buf(), models, kernels, bits_to_s })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in artifacts (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&KernelArtifact> {
+        self.kernels
+            .get(name)
+            .with_context(|| format!("kernel '{name}' not in artifacts"))
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load a params.bin (little-endian f32) into a Vec.
+    pub fn load_params(&self, model: &ModelArtifacts) -> Result<Vec<f32>> {
+        let path = self.path_of(&model.params_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != model.param_count * 4 {
+            bail!(
+                "{path:?}: expected {} bytes for {} params, got {}",
+                model.param_count * 4,
+                model.param_count,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Paper bit-width -> quantization levels s (r = ceil(log s) + 1).
+    pub fn s_for_bits(&self, bits: usize) -> Result<usize> {
+        self.bits_to_s
+            .get(&bits)
+            .copied()
+            .with_context(|| format!("no s for {bits}-bit (have {:?})", self.bits_to_s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(parse_dtype("f32").unwrap(), Dtype::F32);
+        assert_eq!(parse_dtype("i32").unwrap(), Dtype::I32);
+        assert!(parse_dtype("f64").is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! L3 <-> PJRT bridge: load AOT-compiled HLO text, compile once, execute on
+//! the hot path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Compiled executables are cached per file,
+//! so each model variant compiles exactly once per process.
+//!
+//! NOTE: the `xla` crate's handles wrap raw PJRT pointers without Send/Sync,
+//! so the runtime lives on the coordinator thread. Per-worker *compute* is
+//! already parallel inside one call — the step HLO is vmapped over the
+//! worker axis and XLA CPU multithreads it (DESIGN.md §2).
+
+pub mod artifacts;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use artifacts::{Artifacts, Dtype, ModelArtifacts, Segment, StepSpec, TensorSpec};
+
+/// An input tensor for one execution.
+pub enum Input<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+}
+
+impl<'a> Input<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Input::F32(data, dims) => {
+                let lit = xla::Literal::vec1(data);
+                if dims.len() == 1 {
+                    lit
+                } else {
+                    lit.reshape(dims)?
+                }
+            }
+            Input::I32(data, dims) => {
+                let lit = xla::Literal::vec1(data);
+                if dims.len() == 1 {
+                    lit
+                } else {
+                    lit.reshape(dims)?
+                }
+            }
+        })
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Input::F32(d, _) => d.len(),
+            Input::I32(d, _) => d.len(),
+        }
+    }
+}
+
+/// One decoded output tensor.
+#[derive(Debug)]
+pub enum Output {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Output {
+    pub fn f32(self) -> Result<Vec<f32>> {
+        match self {
+            Output::F32(v) => Ok(v),
+            other => bail!("expected f32 output, got {other:?}"),
+        }
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative time spent inside PJRT execute (compute profiling)
+    exec_seconds: RefCell<f64>,
+    exec_calls: RefCell<u64>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            exec_seconds: RefCell::new(0.0),
+            exec_calls: RefCell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by absolute path).
+    pub fn load(&self, path: &Path) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))?,
+        );
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled artifact. The lowered functions return a tuple
+    /// root (aot.py lowers with return_tuple=True); outputs come back
+    /// decomposed in order.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[Input<'_>],
+    ) -> Result<Vec<Output>> {
+        let literals = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        *self.exec_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        *self.exec_calls.borrow_mut() += 1;
+
+        let parts = root.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let ty = lit.ty()?;
+                Ok(match ty {
+                    xla::ElementType::F32 => Output::F32(lit.to_vec::<f32>()?),
+                    xla::ElementType::S32 => Output::I32(lit.to_vec::<i32>()?),
+                    other => bail!("unsupported output element type {other:?}"),
+                })
+            })
+            .collect()
+    }
+
+    /// (total seconds inside execute, number of calls) — perf accounting.
+    pub fn exec_stats(&self) -> (f64, u64) {
+        (*self.exec_seconds.borrow(), *self.exec_calls.borrow())
+    }
+}
+
+/// A model's training-step handle: validates shapes once, then executes.
+pub struct StepFn {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    pub spec: StepSpec,
+    pub param_count: usize,
+}
+
+/// Output of one multi-worker gradient step.
+pub struct StepOut {
+    /// per-worker loss, len M
+    pub losses: Vec<f32>,
+    /// row-major [M, P] per-worker gradients
+    pub grads: Vec<f32>,
+}
+
+impl StepFn {
+    pub fn load(rt: &Runtime, arts: &Artifacts, model: &ModelArtifacts, workers: usize) -> Result<StepFn> {
+        let spec = model
+            .steps
+            .get(&workers)
+            .with_context(|| {
+                format!(
+                    "no lowered step for M={workers} (have {:?}) — re-run aot.py with --workers",
+                    model.steps.keys().collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let exe = rt.load(&arts.path_of(&spec.file))?;
+        Ok(StepFn { exe, spec, param_count: model.param_count })
+    }
+
+    /// Classifier batch: x f32[M,B,...], y i32[M,B]. LM batch: tokens i32[M,B,T+1]
+    /// passed through `x_i32`.
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        params: &[f32],
+        x_f32: Option<&[f32]>,
+        x_i32: Option<&[i32]>,
+        y_i32: Option<&[i32]>,
+    ) -> Result<StepOut> {
+        anyhow::ensure!(params.len() == self.param_count, "params length mismatch");
+        let mut inputs: Vec<Input> = Vec::with_capacity(self.spec.inputs.len());
+        for spec in &self.spec.inputs {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let input = match (spec.kind.as_str(), spec.dtype) {
+                ("params", Dtype::F32) => Input::F32(params, dims),
+                ("images", Dtype::F32) => {
+                    Input::F32(x_f32.context("step needs images")?, dims)
+                }
+                ("labels", Dtype::I32) => Input::I32(y_i32.context("step needs labels")?, dims),
+                ("tokens", Dtype::I32) => Input::I32(x_i32.context("step needs tokens")?, dims),
+                (k, d) => bail!("unhandled step input kind={k} dtype={d:?}"),
+            };
+            anyhow::ensure!(
+                input.len() == spec.elements(),
+                "input '{}' length {} != expected {}",
+                spec.kind,
+                input.len(),
+                spec.elements()
+            );
+            inputs.push(input);
+        }
+        let mut outs = rt.execute(&self.exe, &inputs)?;
+        anyhow::ensure!(outs.len() == 2, "step should return (loss, grads), got {} outputs", outs.len());
+        let grads = outs.pop().unwrap().f32()?;
+        let losses = outs.pop().unwrap().f32()?;
+        anyhow::ensure!(losses.len() == self.spec.workers, "loss vector length mismatch");
+        anyhow::ensure!(
+            grads.len() == self.spec.workers * self.param_count,
+            "grads length mismatch"
+        );
+        Ok(StepOut { losses, grads })
+    }
+}
+
+/// Eval-step handle: returns (mean loss, correct count).
+pub struct EvalFn {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    pub spec: artifacts::EvalSpec,
+    param_count: usize,
+}
+
+impl EvalFn {
+    pub fn load(rt: &Runtime, arts: &Artifacts, model: &ModelArtifacts) -> Result<EvalFn> {
+        let exe = rt.load(&arts.path_of(&model.eval.file))?;
+        Ok(EvalFn { exe, spec: model.eval.clone(), param_count: model.param_count })
+    }
+
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        params: &[f32],
+        x_f32: Option<&[f32]>,
+        x_i32: Option<&[i32]>,
+        y_i32: Option<&[i32]>,
+    ) -> Result<(f32, f32)> {
+        anyhow::ensure!(params.len() == self.param_count, "params length mismatch");
+        let mut inputs: Vec<Input> = Vec::new();
+        for spec in &self.spec.inputs {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let input = match (spec.kind.as_str(), spec.dtype) {
+                ("params", Dtype::F32) => Input::F32(params, dims),
+                ("images", Dtype::F32) => Input::F32(x_f32.context("eval needs images")?, dims),
+                ("labels", Dtype::I32) => Input::I32(y_i32.context("eval needs labels")?, dims),
+                ("tokens", Dtype::I32) => Input::I32(x_i32.context("eval needs tokens")?, dims),
+                (k, d) => bail!("unhandled eval input kind={k} dtype={d:?}"),
+            };
+            inputs.push(input);
+        }
+        let outs = rt.execute(&self.exe, &inputs)?;
+        anyhow::ensure!(outs.len() == 2, "eval should return (loss, correct)");
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().f32()?[0];
+        let correct = it.next().unwrap().f32()?[0];
+        Ok((loss, correct))
+    }
+}

@@ -1,0 +1,225 @@
+//! Flat f32 vector math used across the coordinator hot path.
+//!
+//! Parameters, gradients and compressed payload buffers all live as flat
+//! `Vec<f32>` (DESIGN.md: the L2 step functions take/return the same flat
+//! layout). These kernels are written to autovectorize; the perf pass
+//! (EXPERIMENTS.md §Perf) confirms they run at memory bandwidth.
+
+/// y += a * x
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = a * x + b * y
+pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // f64 accumulator: gradients have ~1e7 coordinates, f32 accumulation
+    // loses ~3 digits there.
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|a| *a as f64 * *a as f64).sum()
+}
+
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// f32 L2 norm matching the L1/L2 layers' f32 accumulation order closely
+/// enough for parity tests (they accumulate in f32 pairwise; we use f64 and
+/// round — within 1 ulp of pairwise-f32 for gradient-scale inputs).
+pub fn norm2_f32(x: &[f32]) -> f32 {
+    norm2(x) as f32
+}
+
+pub fn norm1(x: &[f32]) -> f64 {
+    x.iter().map(|a| a.abs() as f64).sum()
+}
+
+pub fn norm_inf(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, a| m.max(a.abs()))
+}
+
+pub fn add_assign(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter_mut().zip(y) {
+        *xi += yi;
+    }
+}
+
+pub fn sub_assign(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter_mut().zip(y) {
+        *xi -= yi;
+    }
+}
+
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|a| *a as f64).sum::<f64>() / x.len() as f64
+}
+
+/// Elementwise mean of several equal-length vectors.
+pub fn mean_of(vs: &[&[f32]]) -> Vec<f32> {
+    assert!(!vs.is_empty());
+    let n = vs[0].len();
+    let mut out = vec![0.0f32; n];
+    for v in vs {
+        add_assign(&mut out, v);
+    }
+    scale(1.0 / vs.len() as f32, &mut out);
+    out
+}
+
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in x.iter().enumerate() {
+        if *v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the K largest |x_i| (unordered), via partial selection.
+/// O(n log k) with a min-heap keyed on magnitude.
+pub fn top_k_abs_indices(x: &[f32], k: usize) -> Vec<usize> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Mag(f32, usize);
+    impl Eq for Mag {}
+    impl PartialOrd for Mag {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Mag {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.0.total_cmp(&o.0).then(self.1.cmp(&o.1))
+        }
+    }
+
+    let k = k.min(x.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut heap: BinaryHeap<Reverse<Mag>> = BinaryHeap::with_capacity(k + 1);
+    for (i, v) in x.iter().enumerate() {
+        let m = v.abs();
+        if heap.len() < k {
+            heap.push(Reverse(Mag(m, i)));
+        } else if m > heap.peek().unwrap().0 .0 {
+            heap.pop();
+            heap.push(Reverse(Mag(m, i)));
+        }
+    }
+    let mut idx: Vec<usize> = heap.into_iter().map(|Reverse(Mag(_, i))| i).collect();
+    idx.sort_unstable();
+    idx
+}
+
+/// Max |relative error| between two vectors (0-safe).
+pub fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let scale = 1.0f64.max(x.abs() as f64).max(y.abs() as f64);
+            (*x as f64 - *y as f64).abs() / scale
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, ensure, ensure_close};
+
+    #[test]
+    fn axpy_and_dot_basics() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert!((norm2(&x) - 14f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_small_exact() {
+        let x = vec![0.1, -5.0, 3.0, 0.0, -2.0];
+        assert_eq!(top_k_abs_indices(&x, 2), vec![1, 2]);
+        assert_eq!(top_k_abs_indices(&x, 0), Vec::<usize>::new());
+        assert_eq!(top_k_abs_indices(&x, 99).len(), 5);
+    }
+
+    #[test]
+    fn prop_topk_matches_full_sort() {
+        check("topk == sort-based selection", 100, |g| {
+            let n = g.size_scaled(1, 2000);
+            let k = g.usize_in(0, n);
+            let v = g.vec_normal(n, 1.0);
+            let fast = top_k_abs_indices(&v, k);
+            let mut all: Vec<usize> = (0..n).collect();
+            all.sort_by(|&a, &b| v[b].abs().total_cmp(&v[a].abs()).then(a.cmp(&b)));
+            let mut slow: Vec<usize> = all[..k].to_vec();
+            slow.sort_unstable();
+            // ties can legitimately differ in index choice; compare magnitudes
+            let mag = |idx: &[usize]| -> f64 { idx.iter().map(|&i| v[i].abs() as f64).sum() };
+            ensure_close(mag(&fast), mag(&slow), 1e-9, "selected magnitude mass")
+        });
+    }
+
+    #[test]
+    fn prop_mean_of_matches_manual() {
+        check("mean_of", 50, |g| {
+            let n = g.size_scaled(1, 512);
+            let a = g.vec_normal(n, 2.0);
+            let b = g.vec_normal(n, 2.0);
+            let m = mean_of(&[&a, &b]);
+            for i in 0..n {
+                let want = (a[i] + b[i]) / 2.0;
+                if (m[i] - want).abs() > 1e-6 {
+                    return Err(format!("idx {i}: {} vs {want}", m[i]));
+                }
+            }
+            ensure(true, "")
+        });
+    }
+
+    #[test]
+    fn norms_on_adversarial() {
+        check("norm relations", 100, |g| {
+            let n = g.size_scaled(1, 1024);
+            let v = g.vec_adversarial(n);
+            let n2 = norm2(&v);
+            let n1 = norm1(&v);
+            let ninf = norm_inf(&v) as f64;
+            ensure(n2 <= n1 * (1.0 + 1e-9) || n1 == 0.0, "||v||2 <= ||v||1")?;
+            ensure(
+                ninf <= n2 * (1.0 + 1e-6) + 1e-30,
+                "||v||inf <= ||v||2",
+            )
+        });
+    }
+}

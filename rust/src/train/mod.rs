@@ -1,0 +1,128 @@
+//! High-level training driver: runs method sweeps, logs CSV curves, prints
+//! comparison tables. This is the engine behind `repro train`,
+//! `repro figures` and the per-figure benches.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::cluster::{run_training, ClusterConfig};
+use crate::compress::Method;
+use crate::metrics::{render_table, CsvWriter, RunSummary, StepRecord};
+use crate::runtime::Artifacts;
+
+/// One experiment: a model trained with a list of methods under identical
+/// data/seed/schedule, logging loss curves per method.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub name: String,
+    pub model: String,
+    pub methods: Vec<Method>,
+    pub workers: usize,
+    pub steps: usize,
+    pub lr0: f64,
+    pub seed: u64,
+    pub net_gbps: f64,
+    pub eval_every: usize,
+    pub out_dir: PathBuf,
+    pub quiet: bool,
+}
+
+impl Experiment {
+    pub fn new(name: &str, model: &str, methods: Vec<Method>) -> Experiment {
+        Experiment {
+            name: name.to_string(),
+            model: model.to_string(),
+            methods,
+            workers: 4,
+            steps: 200,
+            lr0: 0.05,
+            seed: 42,
+            net_gbps: 10.0,
+            eval_every: 0,
+            out_dir: PathBuf::from("results"),
+            quiet: false,
+        }
+    }
+
+    fn csv_path(&self, label: &str) -> PathBuf {
+        let safe: String = label
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' { c } else { '_' })
+            .collect();
+        self.out_dir.join(format!("{}_{}.csv", self.name, safe))
+    }
+
+    /// Run all methods; returns (per-method curves, summaries).
+    pub fn run(&self, arts: &Artifacts) -> Result<Vec<(Vec<StepRecord>, RunSummary)>> {
+        let mut results = Vec::new();
+        for method in &self.methods {
+            let mut cfg = ClusterConfig::new(&self.model, self.workers, method.clone());
+            cfg.seed = self.seed;
+            cfg.lr0 = self.lr0;
+            cfg.total_steps = self.steps;
+            cfg.net_gbps = self.net_gbps;
+
+            let label = method.label();
+            if !self.quiet {
+                eprintln!("[{}] {} on {} (M={}, {} steps)", self.name, label, self.model, self.workers, self.steps);
+            }
+            let mut csv = CsvWriter::create(
+                &self.csv_path(&label),
+                &["step", "loss", "lr", "t_compute", "t_encode", "t_decode", "t_comm_sim", "bits_per_worker"],
+            )?;
+            let quiet = self.quiet;
+            let steps = self.steps;
+            let (records, summary) = run_training(arts, cfg, |rec| {
+                let _ = csv.row(&[
+                    rec.step as f64,
+                    rec.loss,
+                    rec.lr,
+                    rec.t_compute,
+                    rec.t_encode,
+                    rec.t_decode,
+                    rec.t_comm_sim,
+                    rec.bits_per_worker,
+                ]);
+                if !quiet && (rec.step % 20 == 0 || rec.step + 1 == steps) {
+                    eprintln!("  step {:>5}  loss {:.4}  lr {:.4}", rec.step, rec.loss, rec.lr);
+                }
+            })?;
+            if !self.quiet {
+                eprintln!(
+                    "  -> final loss {:.4}, eval loss {:.4}, eval acc {:.3}, sim {:.3}s",
+                    summary.final_loss, summary.final_eval_loss, summary.final_eval_acc, summary.sim_time_s
+                );
+            }
+            results.push((records, summary));
+        }
+        Ok(results)
+    }
+}
+
+/// Render the standard comparison table for a finished experiment.
+pub fn summary_table(summaries: &[RunSummary]) -> String {
+    let rows: Vec<Vec<String>> = summaries
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                format!("{:.4}", r.final_loss),
+                format!("{:.4}", r.final_eval_loss),
+                format!("{:.3}", r.final_eval_acc),
+                format!("{:.1}", r.mean_bits_per_step / 1e3),
+                format!("{:.3}", r.sim_time_s),
+                format!("{:.1}", r.wall_time_s),
+            ]
+        })
+        .collect();
+    render_table(
+        &["method", "train_loss", "eval_loss", "eval_acc", "kbits/step", "sim_s", "wall_s"],
+        &rows,
+    )
+}
+
+/// Write summaries as JSON next to the CSVs.
+pub fn write_summaries(dir: &Path, name: &str, summaries: &[RunSummary]) -> Result<()> {
+    crate::metrics::write_report(&dir.join(format!("{name}_summary.json")), summaries)
+}

@@ -1,0 +1,46 @@
+//! Cross-cutting substrates: PRNG, JSON, property testing, thread helpers.
+//!
+//! Everything here exists because the vendored crate set ships only the
+//! `xla` crate and its build dependencies — no rand/serde/rayon/proptest.
+//! Each submodule is a from-scratch implementation sized to this repo's
+//! needs, with its own unit tests.
+
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod threads;
+
+/// Wall-clock stopwatch with lap support — metrics plumbing.
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since start, then reset.
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = std::time::Instant::now();
+        e
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes >= 1e9 {
+        format!("{:.2} GB", bytes / 1e9)
+    } else if bytes >= 1e6 {
+        format!("{:.2} MB", bytes / 1e6)
+    } else if bytes >= 1e3 {
+        format!("{:.2} KB", bytes / 1e3)
+    } else {
+        format!("{bytes:.0} B")
+    }
+}

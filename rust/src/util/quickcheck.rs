@@ -1,0 +1,177 @@
+//! Tiny property-based testing harness (the vendored set has no `proptest`).
+//!
+//! Usage:
+//! ```ignore
+//! check("ring allreduce == naive sum", 200, |g| {
+//!     let n = g.usize_in(1, 4096);
+//!     let v = g.vec_f32(n, -10.0, 10.0);
+//!     /* ... */
+//!     ensure(cond, "message")
+//! });
+//! ```
+//! Each case runs with a seed derived from (global seed, case index); on
+//! failure the harness panics with the failing seed so the case can be
+//! replayed with `QC_SEED=<seed> QC_CASES=1`. No shrinking — generators are
+//! encouraged to start small (case index scales sizes).
+
+use super::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    rng: Rng,
+    /// 0.0 at the first case, 1.0 at the last — generators can use this to
+    /// grow sizes over the run (cheap stand-in for shrinking).
+    pub progress: f64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        lo + self.rng.next_below((hi_inclusive - lo + 1) as u64) as usize
+    }
+
+    /// Size that grows with `progress` (small early cases catch trivial bugs
+    /// fast, large late cases stress invariants).
+    pub fn size_scaled(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_now = lo + ((hi - lo) as f64 * self.progress.max(0.05)) as usize;
+        self.usize_in(lo, hi_now.max(lo))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Gaussian vector — the natural gradient-like input.
+    pub fn vec_normal(&mut self, n: usize, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal_f32(&mut v, sigma);
+        v
+    }
+
+    /// Vector with adversarial structure: mixes zeros, tiny, huge, and
+    /// denormal-ish values — edge-case fodder for quantizers.
+    pub fn vec_adversarial(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| match self.usize_in(0, 5) {
+                0 => 0.0,
+                1 => self.f32_in(-1e-30, 1e-30),
+                2 => self.f32_in(-1e6, 1e6),
+                3 => self.f32_in(-1.0, 1.0),
+                4 => -0.0,
+                _ => self.f32_in(-1e-3, 1e-3),
+            })
+            .collect()
+    }
+}
+
+/// Property outcome helper.
+pub fn ensure(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, msg: &str) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+pub fn ensure_slice_close(a: &[f32], b: &[f32], tol: f32, msg: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{msg}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("{msg}: idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Run `cases` seeded cases of the property `f`. Panics (test failure) with
+/// a replayable seed on the first failing case.
+pub fn check<F>(name: &str, cases: usize, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let cases = std::env::var("QC_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    let root = Rng::new(base_seed);
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: root.derive(&[0x9C, case as u64]),
+            progress: case as f64 / cases.max(1) as f64,
+        };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases}: {msg}\n\
+                 replay with QC_SEED={base_seed} (case index {case})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("tautology", 50, |g| {
+            let n = g.usize_in(0, 10);
+            ensure(n <= 10, "bounded")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_panics_with_seed() {
+        check("falsum", 10, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            ensure(x < 0.0, "impossible")
+        });
+    }
+
+    #[test]
+    fn adversarial_vec_has_zeros_and_magnitude_spread() {
+        check("adversarial composition", 5, |g| {
+            let v = g.vec_adversarial(1000);
+            let zeros = v.iter().filter(|x| **x == 0.0).count();
+            ensure(zeros > 0, "contains zeros")?;
+            let max = v.iter().fold(0.0f32, |a, b| a.max(b.abs()));
+            ensure(max > 1.0, "contains large values")
+        });
+    }
+}

@@ -1,0 +1,100 @@
+//! Scoped-thread parallel helpers (no rayon in the vendored set).
+//!
+//! Used on the L3 hot path to parallelize per-worker encode/decode across
+//! OS threads. Keep granularity coarse (one task per simulated worker or
+//! per large chunk) — task spawn cost is a thread spawn.
+
+/// Parallel map over `items`, at most `max_threads` concurrent threads.
+/// Preserves input order in the output.
+pub fn par_map<T, R, F>(items: Vec<T>, max_threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = max_threads.max(1).min(n);
+    if threads == 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(work);
+    let results = std::sync::Mutex::new(&mut out);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = { queue.lock().unwrap().pop() };
+                match item {
+                    Some((i, t)) => {
+                        let r = f(i, t);
+                        results.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+
+    out.into_iter().map(|r| r.expect("par_map: task not run")).collect()
+}
+
+/// Split `buf` into `parts` near-equal mutable chunks and run `f` on each in
+/// parallel — the zero-copy path for elementwise kernels over big vectors.
+pub fn par_chunks_mut<F>(buf: &mut [f32], parts: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let n = buf.len();
+    let parts = parts.max(1).min(n.max(1));
+    let chunk = n.div_ceil(parts);
+    std::thread::scope(|scope| {
+        for (i, piece) in buf.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i, i * chunk, piece));
+        }
+    });
+}
+
+/// Number of worker threads to use by default (leave one core for the OS).
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(items, 8, |_, x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_thread_and_empty() {
+        assert_eq!(par_map(vec![1, 2, 3], 1, |_, x| x + 1), vec![2, 3, 4]);
+        assert_eq!(par_map(Vec::<i32>::new(), 4, |_, x| x), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_everything() {
+        let mut buf = vec![0.0f32; 1003];
+        par_chunks_mut(&mut buf, 7, |_, off, piece| {
+            for (i, v) in piece.iter_mut().enumerate() {
+                *v = (off + i) as f32;
+            }
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+}

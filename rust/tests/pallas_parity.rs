@@ -1,0 +1,174 @@
+//! Cross-layer bit-exactness (DESIGN.md §5): the Rust hot-path quantizer
+//! must equal the lowered Pallas kernel executed through PJRT, bit for bit,
+//! on the same (v, wnorm, u) inputs.
+
+use repro::compress::kernels;
+use repro::runtime::{Artifacts, Input, Output, Runtime};
+use repro::util::rng::Rng;
+
+fn artifacts() -> Artifacts {
+    Artifacts::load_default().expect("run `make artifacts` before cargo test")
+}
+
+fn exec_kernel(
+    rt: &Runtime,
+    arts: &Artifacts,
+    name: &str,
+    inputs: &[Input<'_>],
+) -> Vec<Vec<f32>> {
+    let k = arts.kernel(name).unwrap();
+    let exe = rt.load(&arts.path_of(&k.file)).unwrap();
+    rt.execute(&exe, inputs)
+        .unwrap()
+        .into_iter()
+        .map(|o| match o {
+            Output::F32(v) => v,
+            other => panic!("expected f32, got {other:?}"),
+        })
+        .collect()
+}
+
+fn test_vectors(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, f32) {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v, 1.0);
+    // sprinkle exact zeros and large coords — quantizer edge cases
+    for i in (0..n).step_by(97) {
+        v[i] = 0.0;
+    }
+    v[1] = repro::tensor::norm_inf(&v) * 2.0;
+    let mut u = vec![0.0f32; n];
+    rng.fill_uniform_f32(&mut u);
+    let wnorm = kernels::l2_norm(&v) * 1.25;
+    (v, u, wnorm)
+}
+
+#[test]
+fn qsgd_quantize_bit_exact_all_scales() {
+    let arts = artifacts();
+    let rt = Runtime::new().unwrap();
+    for s in [1usize, 7, 31, 127, 511, 2047] {
+        let name = format!("qsgd_quantize_s{s}");
+        let k = arts.kernel(&name).unwrap();
+        let n = k.n;
+        let (v, u, wnorm) = test_vectors(n, 1000 + s as u64);
+        let outs = exec_kernel(
+            &rt,
+            &arts,
+            &name,
+            &[
+                Input::F32(&v, vec![n as i64]),
+                Input::F32(std::slice::from_ref(&wnorm), vec![]),
+                Input::F32(&u, vec![n as i64]),
+            ],
+        );
+        let hlo_levels = &outs[0];
+
+        let mut rust_levels = vec![0.0f32; n];
+        kernels::qsgd_encode(&v, wnorm, &u, s, &mut rust_levels);
+
+        let mismatches: Vec<usize> = (0..n)
+            .filter(|&i| rust_levels[i] != hlo_levels[i])
+            .take(5)
+            .collect();
+        assert!(
+            mismatches.is_empty(),
+            "s={s}: {} mismatches, first at {:?} (rust {:?} vs hlo {:?})",
+            (0..n).filter(|&i| rust_levels[i] != hlo_levels[i]).count(),
+            mismatches,
+            mismatches.iter().map(|&i| rust_levels[i]).collect::<Vec<_>>(),
+            mismatches.iter().map(|&i| hlo_levels[i]).collect::<Vec<_>>(),
+        );
+    }
+}
+
+#[test]
+fn multiscale_quantize_bit_exact() {
+    let arts = artifacts();
+    let rt = Runtime::new().unwrap();
+    let k = arts.kernel("multiscale_quantize").unwrap();
+    let n = k.n;
+    let scales: Vec<usize> = k
+        .extra
+        .req("scales")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap())
+        .collect();
+    let (v, u, wnorm) = test_vectors(n, 77);
+    let outs = exec_kernel(
+        &rt,
+        &arts,
+        "multiscale_quantize",
+        &[
+            Input::F32(&v, vec![n as i64]),
+            Input::F32(std::slice::from_ref(&wnorm), vec![]),
+            Input::F32(&u, vec![n as i64]),
+        ],
+    );
+    let (hlo_idx, hlo_levels) = (&outs[0], &outs[1]);
+
+    let mut rust_idx = vec![0u8; n];
+    kernels::multiscale_scale_index(&v, wnorm, &scales, &mut rust_idx);
+    let mut rust_levels = vec![0.0f32; n];
+    kernels::multiscale_encode(&v, wnorm, &u, &rust_idx, &scales, &mut rust_levels);
+
+    for i in 0..n {
+        assert_eq!(rust_idx[i] as f32, hlo_idx[i], "scale idx mismatch at {i}");
+        assert_eq!(rust_levels[i], hlo_levels[i], "level mismatch at {i}");
+    }
+}
+
+#[test]
+fn l2_norm_close_to_pallas_reduction() {
+    // The Pallas norm reduces in f32 block partials; the Rust norm uses an
+    // f64 accumulator. Equality is within f32 rounding of the partials.
+    let arts = artifacts();
+    let rt = Runtime::new().unwrap();
+    let k = arts.kernel("l2_norm").unwrap();
+    let n = k.n;
+    let (v, _, _) = test_vectors(n, 4242);
+    let outs = exec_kernel(&rt, &arts, "l2_norm", &[Input::F32(&v, vec![n as i64])]);
+    let hlo = outs[0][0];
+    let rust = kernels::l2_norm(&v);
+    let rel = ((hlo - rust) / rust).abs();
+    assert!(rel < 1e-5, "norm mismatch: hlo={hlo} rust={rust} rel={rel}");
+}
+
+#[test]
+fn qsgd_roundtrip_decode_matches() {
+    let arts = artifacts();
+    let rt = Runtime::new().unwrap();
+    let k = arts.kernel("qsgd_roundtrip").unwrap();
+    let (n, s, m) = (
+        k.n,
+        k.extra.req("s").unwrap().as_usize().unwrap(),
+        k.extra.req("m").unwrap().as_usize().unwrap(),
+    );
+    let (v, u, wnorm) = test_vectors(n, 9);
+    let outs = exec_kernel(
+        &rt,
+        &arts,
+        "qsgd_roundtrip",
+        &[
+            Input::F32(&v, vec![n as i64]),
+            Input::F32(std::slice::from_ref(&wnorm), vec![]),
+            Input::F32(&u, vec![n as i64]),
+        ],
+    );
+    let hlo = &outs[0];
+    let mut rust = vec![0.0f32; n];
+    kernels::qsgd_encode(&v, wnorm, &u, s, &mut rust);
+    kernels::qsgd_decode_sum(&mut rust, wnorm, s, m);
+    for i in 0..n {
+        let d = (rust[i] - hlo[i]).abs();
+        assert!(
+            d <= f32::EPSILON * rust[i].abs().max(1.0),
+            "roundtrip mismatch at {i}: {} vs {}",
+            rust[i],
+            hlo[i]
+        );
+    }
+}

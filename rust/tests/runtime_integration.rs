@@ -1,0 +1,102 @@
+//! Integration: artifact loading + PJRT execution of the lowered L2 steps.
+//!
+//! Requires `make artifacts` (fails with a clear message otherwise).
+
+use repro::runtime::{Artifacts, EvalFn, Runtime, StepFn};
+
+fn artifacts() -> Artifacts {
+    Artifacts::load_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn meta_inventory_is_complete() {
+    let arts = artifacts();
+    assert!(arts.models.contains_key("mlp"));
+    for (name, m) in &arts.models {
+        assert!(m.param_count > 0, "{name}");
+        assert!(!m.segments.is_empty(), "{name}");
+        let seg_total: usize = m.segments.iter().map(|s| s.len).sum();
+        assert_eq!(seg_total, m.param_count, "{name}: segments must tile the flat vector");
+        for spec in m.steps.values() {
+            assert!(arts.path_of(&spec.file).exists(), "{name}: missing {}", spec.file);
+        }
+        assert!(arts.path_of(&m.eval.file).exists());
+        assert!(arts.path_of(&m.params_file).exists());
+    }
+    assert_eq!(arts.s_for_bits(8).unwrap(), 127);
+    assert!(arts.s_for_bits(3).is_err());
+}
+
+#[test]
+fn params_bin_loads_with_finite_values() {
+    let arts = artifacts();
+    for m in arts.models.values() {
+        let p = arts.load_params(m).unwrap();
+        assert_eq!(p.len(), m.param_count);
+        assert!(p.iter().all(|x| x.is_finite()));
+        let norm = repro::tensor::norm2(&p);
+        assert!(norm > 0.0, "{}: all-zero init?", m.name);
+    }
+}
+
+#[test]
+fn mlp_step_executes_and_grads_are_finite() {
+    let arts = artifacts();
+    let rt = Runtime::new().unwrap();
+    let model = arts.model("mlp").unwrap();
+    let step = StepFn::load(&rt, &arts, model, 2).unwrap();
+    let params = arts.load_params(model).unwrap();
+    let b = step.spec.batch;
+    let dim: usize = 32 * 32 * 3;
+    let x = vec![0.1f32; 2 * b * dim];
+    let y: Vec<i32> = (0..2 * b as i32).map(|i| i % 10).collect();
+    let out = step.run(&rt, &params, Some(&x), None, Some(&y)).unwrap();
+    assert_eq!(out.losses.len(), 2);
+    assert!(out.losses.iter().all(|l| l.is_finite() && *l > 0.0));
+    assert_eq!(out.grads.len(), 2 * model.param_count);
+    assert!(out.grads.iter().all(|g| g.is_finite()));
+    assert!(repro::tensor::norm2(&out.grads) > 1e-6, "gradient must be non-trivial");
+}
+
+#[test]
+fn eval_step_runs() {
+    let arts = artifacts();
+    let rt = Runtime::new().unwrap();
+    let model = arts.model("mlp").unwrap();
+    let ev = EvalFn::load(&rt, &arts, model).unwrap();
+    let params = arts.load_params(model).unwrap();
+    let n = ev.spec.batch;
+    let x = vec![0.0f32; n * 32 * 32 * 3];
+    let y = vec![0i32; n];
+    let (loss, correct) = ev.run(&rt, &params, Some(&x), None, Some(&y)).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=n as f32).contains(&correct));
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let arts = artifacts();
+    let rt = Runtime::new().unwrap();
+    let model = arts.model("mlp").unwrap();
+    let p1 = rt.load(&arts.path_of(&model.eval.file)).unwrap();
+    let p2 = rt.load(&arts.path_of(&model.eval.file)).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&p1, &p2), "second load must hit the cache");
+}
+
+#[test]
+fn step_shape_validation_errors() {
+    let arts = artifacts();
+    let rt = Runtime::new().unwrap();
+    let model = arts.model("mlp").unwrap();
+    let step = StepFn::load(&rt, &arts, model, 1).unwrap();
+    let params = arts.load_params(model).unwrap();
+    // missing labels
+    let x = vec![0.0f32; step.spec.batch * 32 * 32 * 3];
+    assert!(step.run(&rt, &params, Some(&x), None, None).is_err());
+    // wrong param length
+    assert!(step
+        .run(&rt, &params[..10], Some(&x), None, Some(&vec![0; step.spec.batch]))
+        .is_err());
+    // no lowered step for absurd M
+    assert!(StepFn::load(&rt, &arts, model, 999).is_err());
+}

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""ASCII plotter for the training curves in results/*.csv.
+
+The paper's figures are loss/accuracy vs epoch line plots; this renders the
+same series in the terminal so runs can be compared without matplotlib:
+
+    python tools/plot_results.py results/fig3_4_resnet_lite_*.csv
+    python tools/plot_results.py --col loss --smooth 5 results/train_*.csv
+
+Columns available: loss, lr, t_compute, t_encode, t_decode, t_comm_sim,
+bits_per_worker (see rust/src/train/mod.rs CSV header).
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import math
+import os
+import sys
+
+WIDTH = 78
+HEIGHT = 22
+MARKS = "ox+*#@%&"
+
+
+def load(path: str, col: str) -> list[float]:
+    with open(path) as f:
+        reader = csv.DictReader(f)
+        return [float(row[col]) for row in reader]
+
+
+def smooth(ys: list[float], k: int) -> list[float]:
+    if k <= 1:
+        return ys
+    out = []
+    for i in range(len(ys)):
+        lo = max(0, i - k + 1)
+        out.append(sum(ys[lo : i + 1]) / (i + 1 - lo))
+    return out
+
+
+def render(series: dict[str, list[float]], col: str, logy: bool) -> str:
+    all_vals = [v for ys in series.values() for v in ys if math.isfinite(v)]
+    if not all_vals:
+        return "(no finite data)"
+    lo, hi = min(all_vals), max(all_vals)
+    if logy:
+        floor = min(v for v in all_vals if v > 0) if any(v > 0 for v in all_vals) else 1e-9
+        f = lambda v: math.log10(max(v, floor))
+        lo, hi = f(lo if lo > 0 else floor), f(hi)
+    else:
+        f = float
+    if hi <= lo:
+        hi = lo + 1e-9
+    max_len = max(len(ys) for ys in series.values())
+
+    grid = [[" "] * WIDTH for _ in range(HEIGHT)]
+    for si, (_name, ys) in enumerate(series.items()):
+        mark = MARKS[si % len(MARKS)]
+        for i, v in enumerate(ys):
+            if not math.isfinite(v):
+                continue
+            x = int(i * (WIDTH - 1) / max(1, max_len - 1))
+            y = int((f(v) - lo) / (hi - lo) * (HEIGHT - 1))
+            grid[HEIGHT - 1 - y][x] = mark
+
+    top = 10 ** hi if logy else hi
+    bot = 10 ** lo if logy else lo
+    lines = [f"{col}{' (log)' if logy else ''}   top={top:.4g}  bottom={bot:.4g}"]
+    lines += ["|" + "".join(row) + "|" for row in grid]
+    lines.append("+" + "-" * WIDTH + "+")
+    lines.append(f" step 0 {' ' * (WIDTH - 16)} step {max_len - 1}")
+    for si, name in enumerate(series):
+        lines.append(f"  {MARKS[si % len(MARKS)]} {name}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--col", default="loss")
+    ap.add_argument("--smooth", type=int, default=1, help="trailing-mean window")
+    ap.add_argument("--log", action="store_true", help="log-scale y axis")
+    args = ap.parse_args()
+
+    series: dict[str, list[float]] = {}
+    for path in args.files:
+        if not os.path.exists(path):
+            print(f"skip missing {path}", file=sys.stderr)
+            continue
+        name = os.path.basename(path).removesuffix(".csv")
+        try:
+            series[name] = smooth(load(path, args.col), args.smooth)
+        except KeyError:
+            print(f"skip {path}: no column '{args.col}'", file=sys.stderr)
+    if not series:
+        sys.exit("no data")
+    print(render(series, args.col, args.log))
+
+
+if __name__ == "__main__":
+    main()
