@@ -1,11 +1,61 @@
-//! Micro-bench: the collective data plane (ring vs tree vs naive) and the
-//! simulated-time model across worker counts — the O(log M) vs O(M) story.
+//! Micro-bench: the collective data plane (ring vs tree vs naive) across
+//! element widths — f32 gradients vs the widened i16/i32 level buffers of
+//! the integer-domain hot path — and the simulated-time model across worker
+//! counts (the O(log M) vs O(M) story). GB/s is over the per-rank payload.
+//!
+//! Set `REPRO_BENCH_JSON=<path>` to also emit the numbers as JSON
+//! (consumed by `tools/bench_compress.py` -> `BENCH_compress.json`).
 
 mod common;
 
-use repro::collectives::{naive_allreduce_sum, ring_allreduce_sum, tree_allreduce_sum};
+use repro::collectives::{
+    naive_allreduce_sum_t, ring_allreduce_sum_t, tree_allreduce_sum_t,
+};
 use repro::netsim::NetConfig;
+use repro::util::json::{arr, num, obj, s as js, Json};
 use repro::util::rng::Rng;
+
+fn bench_width<T: repro::tensor::LevelInt>(
+    n: usize,
+    m: usize,
+    rng: &mut Rng,
+    entries: &mut Vec<Json>,
+) -> (f64, f64, f64) {
+    // quantizer-level-ranged random ints (|x| <= 127) so i16 sums stay safe
+    let base: Vec<Vec<T>> = (0..m)
+        .map(|_| {
+            (0..n)
+                .map(|_| T::from_level(rng.next_below(255) as f32 - 127.0))
+                .collect()
+        })
+        .collect();
+    let bytes = (n * std::mem::size_of::<T>()) as f64 / 1e9;
+    let t_ring = common::time_median(3, || {
+        let mut b = base.clone();
+        ring_allreduce_sum_t(&mut b);
+        std::hint::black_box(&b);
+    });
+    let t_tree = common::time_median(3, || {
+        let mut b = base.clone();
+        tree_allreduce_sum_t(&mut b);
+        std::hint::black_box(&b);
+    });
+    let t_naive = common::time_median(3, || {
+        let mut b = base.clone();
+        naive_allreduce_sum_t(&mut b);
+        std::hint::black_box(&b);
+    });
+    for (algo, t) in [("ring", t_ring), ("tree", t_tree), ("naive", t_naive)] {
+        entries.push(obj(vec![
+            ("width", js(T::TAG)),
+            ("workers", num(m as f64)),
+            ("algo", js(algo)),
+            ("ms", num(t * 1e3)),
+            ("gbps", num(bytes / t)),
+        ]));
+    }
+    (t_ring, t_tree, t_naive)
+}
 
 fn main() {
     let n: usize = std::env::var("REPRO_BENCH_N")
@@ -13,33 +63,33 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(2_000_000);
 
+    let mut entries: Vec<Json> = Vec::new();
+
     println!("=== in-memory allreduce data plane, n={n} f32 ===");
     println!("{:>8} {:>12} {:>12} {:>12}", "workers", "ring ms", "tree ms", "naive ms");
     for m in [2usize, 4, 8, 16] {
         let mut rng = Rng::new(m as u64);
-        let make = |rng: &mut Rng| -> Vec<Vec<f32>> {
-            (0..m)
-                .map(|_| {
-                    let mut v = vec![0.0f32; n];
-                    rng.fill_normal_f32(&mut v, 1.0);
-                    v
-                })
-                .collect()
-        };
-        let base = make(&mut rng);
+        let base: Vec<Vec<f32>> = (0..m)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let bytes = (n * 4) as f64 / 1e9;
         let t_ring = common::time_median(3, || {
             let mut b = base.clone();
-            ring_allreduce_sum(&mut b);
+            ring_allreduce_sum_t(&mut b);
             std::hint::black_box(&b);
         });
         let t_tree = common::time_median(3, || {
             let mut b = base.clone();
-            tree_allreduce_sum(&mut b);
+            tree_allreduce_sum_t(&mut b);
             std::hint::black_box(&b);
         });
         let t_naive = common::time_median(3, || {
             let mut b = base.clone();
-            naive_allreduce_sum(&mut b);
+            naive_allreduce_sum_t(&mut b);
             std::hint::black_box(&b);
         });
         println!(
@@ -48,6 +98,38 @@ fn main() {
             t_ring * 1e3,
             t_tree * 1e3,
             t_naive * 1e3
+        );
+        for (algo, t) in [("ring", t_ring), ("tree", t_tree), ("naive", t_naive)] {
+            entries.push(obj(vec![
+                ("width", js("f32")),
+                ("workers", num(m as f64)),
+                ("algo", js(algo)),
+                ("ms", num(t * 1e3)),
+                ("gbps", num(bytes / t)),
+            ]));
+        }
+    }
+
+    println!("\n=== integer-domain allreduce: f32 vs i16 vs i32 level buffers, ring ===");
+    println!("{:>8} {:>12} {:>12} {:>12}", "workers", "f32 ms", "i16 ms", "i32 ms");
+    for m in [2usize, 4, 8, 16] {
+        let mut rng = Rng::new(100 + m as u64);
+        let base32f: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..n).map(|_| rng.next_below(255) as f32 - 127.0).collect())
+            .collect();
+        let t_f32 = common::time_median(3, || {
+            let mut b = base32f.clone();
+            ring_allreduce_sum_t(&mut b);
+            std::hint::black_box(&b);
+        });
+        let (t_i16, _, _) = bench_width::<i16>(n, m, &mut rng, &mut entries);
+        let (t_i32, _, _) = bench_width::<i32>(n, m, &mut rng, &mut entries);
+        println!(
+            "{:>8} {:>12.1} {:>12.1} {:>12.1}",
+            m,
+            t_f32 * 1e3,
+            t_i16 * 1e3,
+            t_i32 * 1e3
         );
     }
 
@@ -59,5 +141,15 @@ fn main() {
         let ar = net.allreduce_s(bytes);
         let ag = net.allgather_s(bytes);
         println!("{:>8} {:>16.4} {:>16.4} {:>10.1}", m, ar, ag, ag / ar);
+    }
+
+    if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
+        let json = obj(vec![
+            ("schema", js("repro-micro-collectives-v1")),
+            ("n", num(n as f64)),
+            ("entries", arr(entries)),
+        ]);
+        std::fs::write(&path, json.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
     }
 }

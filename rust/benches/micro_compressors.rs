@@ -1,13 +1,44 @@
 //! Micro-bench: encoder/decoder throughput of every compressor on a
-//! gradient-sized vector — the L3 hot-path numbers behind EXPERIMENTS.md
-//! §Perf. Reports GB/s over the input gradient bytes.
+//! gradient-sized vector, plus the old-vs-new comparisons for this repo's
+//! integer-domain rewrite: scalar-reference vs word-level bitpack, f32-level
+//! vs fused integer QSGD-MN-4 aggregation. Reports GB/s over the input
+//! gradient bytes.
+//!
+//! Set `REPRO_BENCH_JSON=<path>` to also emit the numbers as JSON
+//! (consumed by `tools/bench_compress.py` -> `BENCH_compress.json`).
 
 mod common;
 
 use repro::collectives::StepCtx;
-use repro::compress::{bitpack, kernels, Method};
+use repro::compress::{bitpack, fused, kernels, Method};
 use repro::netsim::{NetConfig, SimClock};
+use repro::util::json::{arr, num, obj, s as js, Json};
 use repro::util::rng::Rng;
+
+struct Report {
+    entries: Vec<(String, f64, f64)>, // (name, ms, GB/s)
+}
+
+impl Report {
+    fn push(&mut self, name: &str, t_s: f64, gbytes: f64) {
+        println!("{:>34} {:>9.2} ms {:>8.2} GB/s", name, t_s * 1e3, gbytes / t_s);
+        self.entries.push((name.to_string(), t_s * 1e3, gbytes / t_s));
+    }
+
+    fn gbps(&self, name: &str) -> f64 {
+        self.entries.iter().find(|(n, _, _)| n == name).map(|(_, _, g)| *g).unwrap_or(0.0)
+    }
+
+    fn to_json(&self) -> Json {
+        arr(self
+            .entries
+            .iter()
+            .map(|(n, ms, g)| {
+                obj(vec![("name", js(n)), ("ms", num(*ms)), ("gbps", num(*g))])
+            })
+            .collect())
+    }
+}
 
 fn main() {
     let n: usize = std::env::var("REPRO_BENCH_N")
@@ -25,9 +56,12 @@ fn main() {
         .collect();
     let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
     let gbytes = (m * n * 4) as f64 / 1e9;
+    let vb = (n * 4) as f64 / 1e9;
+    let mut report = Report { entries: Vec::new() };
 
     println!("=== aggregate() wall time, n={n} coords x M={m} workers ({gbytes:.2} GB of gradients) ===");
     println!("{:>22} {:>10} {:>10} {:>12}", "method", "ms", "GB/s", "wire bits/c");
+    let mut agg_entries: Vec<Json> = Vec::new();
     for spec in [
         "allreduce",
         "qsgd-mn-2",
@@ -59,53 +93,142 @@ fn main() {
             gbytes / t,
             agg.nominal_bits()
         );
+        agg_entries.push(obj(vec![
+            ("name", js(&agg.name())),
+            ("ms", num(t * 1e3)),
+            ("gbps", num(gbytes / t)),
+            ("wire_bits_per_coord", num(agg.nominal_bits())),
+        ]));
     }
 
     // raw kernel rates (single worker, the innermost loops)
-    println!("\n=== raw kernel rates, n={n} ===");
+    println!("\n=== raw kernel rates, n={n} (GB/s over {vb:.2} GB input) ===");
     let v = &grads[0];
     let mut u = vec![0.0f32; n];
     Rng::new(3).fill_uniform_f32(&mut u);
     let w = kernels::l2_norm(v);
     let mut z = vec![0.0f32; n];
-    let vb = (n * 4) as f64 / 1e9;
+    let mut z16 = vec![0i16; n];
 
     let t = common::time_median(5, || kernels::qsgd_encode(v, w, &u, 127, &mut z));
-    println!("qsgd_encode            {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+    report.push("qsgd_encode(f32 levels)", t, vb);
+
+    let t = common::time_median(5, || kernels::qsgd_encode_int::<i16>(v, w, &u, 127, &mut z16));
+    report.push("qsgd_encode_int(i16 levels)", t, vb);
 
     let t = common::time_median(5, || {
         let mut d = z.clone();
         kernels::qsgd_decode_sum(&mut d, w, 127, m);
         std::hint::black_box(&d);
     });
-    println!("qsgd_decode(+clone)    {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+    report.push("qsgd_decode(+clone)", t, vb);
 
     let t = common::time_median(5, || {
         std::hint::black_box(kernels::l2_norm(v));
     });
-    println!("l2_norm                {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+    report.push("l2_norm", t, vb);
 
     let mut idx = vec![0u8; n];
     let scales = [7usize, 127];
-    let t = common::time_median(5, || {
-        kernels::multiscale_scale_index(v, w, &scales, &mut idx)
-    });
-    println!("multiscale_scale_index {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+    let t = common::time_median(5, || kernels::multiscale_scale_index(v, w, &scales, &mut idx));
+    report.push("multiscale_scale_index", t, vb);
 
     let t = common::time_median(5, || {
         kernels::multiscale_encode(v, w, &u, &idx, &scales, &mut z)
     });
-    println!("multiscale_encode      {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+    report.push("multiscale_encode", t, vb);
 
-    // bit-packing (the substrate the paper said was too slow in Python)
-    kernels::qsgd_encode(v, w, &u, 127, &mut z);
-    let t = common::time_median(5, || {
-        std::hint::black_box(bitpack::pack(&z, 8));
+    // bit-packing old vs new (the substrate the paper said was too slow in
+    // Python; the word-level rewrite is this PR's >=4x target)
+    println!("\n=== bitpack: scalar reference vs word-level, n={n} ===");
+    for bits in [4u32, 8] {
+        let s_q = kernels::s_for_bits(bits as usize);
+        kernels::qsgd_encode(v, w, &u, s_q, &mut z);
+
+        let t = common::time_median(5, || {
+            std::hint::black_box(bitpack::pack_scalar_reference(&z, bits));
+        });
+        report.push(&format!("pack_ref({bits}b)"), t, vb);
+
+        let t = common::time_median(5, || {
+            std::hint::black_box(bitpack::pack(&z, bits));
+        });
+        report.push(&format!("pack({bits}b)"), t, vb);
+
+        kernels::qsgd_encode_int::<i16>(v, w, &u, s_q, &mut z16);
+        let mut words = Vec::new();
+        let t = common::time_median(5, || {
+            bitpack::pack_int_into(&z16, bits, &mut words);
+            std::hint::black_box(&words);
+        });
+        report.push(&format!("pack_int({bits}b,i16)"), t, vb);
+
+        let packed = bitpack::pack(&z, bits);
+        let t = common::time_median(5, || {
+            std::hint::black_box(bitpack::unpack_scalar_reference(&packed));
+        });
+        report.push(&format!("unpack_ref({bits}b)"), t, vb);
+
+        let t = common::time_median(5, || {
+            std::hint::black_box(bitpack::unpack(&packed));
+        });
+        report.push(&format!("unpack({bits}b)"), t, vb);
+
+        let t = common::time_median(5, || {
+            bitpack::unpack_int_into(&packed, &mut z16);
+            std::hint::black_box(&z16);
+        });
+        report.push(&format!("unpack_int({bits}b,i16)"), t, vb);
+    }
+
+    // fused QSGD-MN-4 step: legacy f32-level pipeline vs integer domain
+    println!("\n=== fused QSGD-MN-4 encode->allreduce->decode, old vs new ===");
+    let wnorm = refs.iter().map(|g| kernels::l2_norm(g)).fold(0.0f32, f32::max);
+    let s4 = kernels::s_for_bits(4);
+    let step_rng = Rng::new(11);
+
+    let t_old = common::time_median(3, || {
+        let out = fused::reference_qsgd_aggregate(&refs, wnorm, s4, &step_rng);
+        std::hint::black_box(&out);
     });
-    println!("bitpack::pack(8b)      {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
-    let packed = bitpack::pack(&z, 8);
-    let t = common::time_median(5, || {
-        std::hint::black_box(bitpack::unpack(&packed));
+    report.push("fused_qsgd4_f32_reference", t_old, gbytes);
+
+    let t_new = common::time_median(3, || {
+        let (out, _) = fused::wire_roundtrip_qsgd::<i16>(&refs, wnorm, 4, &step_rng);
+        std::hint::black_box(&out);
     });
-    println!("bitpack::unpack(8b)    {:>8.1} ms  {:>6.2} GB/s", t * 1e3, vb / t);
+    report.push("fused_qsgd4_int_wire", t_new, gbytes);
+
+    let speedups = vec![
+        ("pack_4b", report.gbps("pack(4b)") / report.gbps("pack_ref(4b)")),
+        ("unpack_4b", report.gbps("unpack(4b)") / report.gbps("unpack_ref(4b)")),
+        ("pack_int_4b", report.gbps("pack_int(4b,i16)") / report.gbps("pack_ref(4b)")),
+        (
+            "unpack_int_4b",
+            report.gbps("unpack_int(4b,i16)") / report.gbps("unpack_ref(4b)"),
+        ),
+        ("pack_8b", report.gbps("pack(8b)") / report.gbps("pack_ref(8b)")),
+        ("unpack_8b", report.gbps("unpack(8b)") / report.gbps("unpack_ref(8b)")),
+        ("fused_qsgd_mn_4", t_old / t_new),
+    ];
+    println!("\n=== speedups (new / old) ===");
+    for (name, x) in &speedups {
+        println!("{name:>20}: {x:.2}x");
+    }
+
+    if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
+        let json = obj(vec![
+            ("schema", js("repro-micro-compressors-v1")),
+            ("n", num(n as f64)),
+            ("workers", num(m as f64)),
+            ("aggregate", arr(agg_entries)),
+            ("kernels", report.to_json()),
+            (
+                "speedups",
+                obj(speedups.iter().map(|(k, v)| (*k, num(*v))).collect()),
+            ),
+        ]);
+        std::fs::write(&path, json.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
 }

@@ -9,14 +9,23 @@
 //! [`crate::netsim::NetConfig`] by [`StepCtx`].
 
 use crate::netsim::{NetConfig, SimClock};
+use crate::tensor::LevelInt;
 
-/// Elementwise sum all-reduce via the ring schedule (reduce-scatter phase
-/// then all-gather phase). All workers end with identical summed buffers.
+/// Elementwise sum all-reduce via the ring schedule, generic over the
+/// element type — the same schedule reduces `f32` gradients and the widened
+/// integer level buffers of the compressed-domain hot path ([`LevelInt`]).
 ///
 /// Reduction order per element equals the ring order starting at its chunk
-/// owner — deterministic and identical across workers, which is what makes
-/// the compressed-domain sum bit-reproducible.
-pub fn ring_allreduce_sum(bufs: &mut [Vec<f32>]) {
+/// owner — deterministic and identical across workers and element types,
+/// which is what makes the compressed-domain sum bit-reproducible (and lets
+/// the integer path be property-tested bit-identical to the f32 path).
+///
+/// Integer overflow is excluded by the aggregators' widening rule
+/// (`workers * s <= T::MAX`); debug builds would panic on violation.
+pub fn ring_allreduce_sum_t<T>(bufs: &mut [Vec<T>])
+where
+    T: Copy + Default + std::ops::AddAssign,
+{
     let m = bufs.len();
     if m <= 1 {
         return;
@@ -32,7 +41,7 @@ pub fn ring_allreduce_sum(bufs: &mut [Vec<f32>]) {
     // one reusable staging buffer for the "send" (perf pass: the per-step
     // to_vec allocations were ~2m² allocs per call)
     let max_chunk = (1..=m).map(|c| starts[c] - starts[c - 1]).max().unwrap_or(0);
-    let mut seg = vec![0.0f32; max_chunk];
+    let mut seg = vec![T::default(); max_chunk];
 
     // reduce-scatter: after m-1 steps, worker r owns the full sum of chunk
     // (r+1) mod m.
@@ -47,7 +56,7 @@ pub fn ring_allreduce_sum(bufs: &mut [Vec<f32>]) {
             seg[..len].copy_from_slice(&bufs[r][lo..hi]);
             let dst_seg = &mut bufs[dst][lo..hi];
             for (d, v) in dst_seg.iter_mut().zip(&seg[..len]) {
-                *d += v;
+                *d += *v;
             }
         }
     }
@@ -65,18 +74,21 @@ pub fn ring_allreduce_sum(bufs: &mut [Vec<f32>]) {
     }
 }
 
-/// Naive all-reduce: rank 0 gathers + sums + broadcasts. Reference
-/// implementation for equivalence tests.
-pub fn naive_allreduce_sum(bufs: &mut [Vec<f32>]) {
+/// Naive all-reduce, generic: rank 0 gathers + sums + broadcasts.
+/// Reference implementation for equivalence tests.
+pub fn naive_allreduce_sum_t<T>(bufs: &mut [Vec<T>])
+where
+    T: Copy + Default + std::ops::AddAssign,
+{
     let m = bufs.len();
     if m <= 1 {
         return;
     }
     let n = bufs[0].len();
-    let mut acc = vec![0.0f32; n];
+    let mut acc = vec![T::default(); n];
     for b in bufs.iter() {
         for (a, v) in acc.iter_mut().zip(b) {
-            *a += v;
+            *a += *v;
         }
     }
     for b in bufs.iter_mut() {
@@ -84,8 +96,12 @@ pub fn naive_allreduce_sum(bufs: &mut [Vec<f32>]) {
     }
 }
 
-/// Binary-tree all-reduce (reduce to rank 0 up the tree, broadcast down).
-pub fn tree_allreduce_sum(bufs: &mut [Vec<f32>]) {
+/// Binary-tree all-reduce, generic (reduce to rank 0 up the tree,
+/// broadcast down).
+pub fn tree_allreduce_sum_t<T>(bufs: &mut [Vec<T>])
+where
+    T: Copy + Default + std::ops::AddAssign,
+{
     let m = bufs.len();
     if m <= 1 {
         return;
@@ -98,7 +114,7 @@ pub fn tree_allreduce_sum(bufs: &mut [Vec<f32>]) {
             let (left, right) = bufs.split_at_mut(r + gap);
             let (dst, src) = (&mut left[r], &right[0]);
             for (a, v) in dst.iter_mut().zip(src.iter()) {
-                *a += v;
+                *a += *v;
             }
             r += gap * 2;
         }
@@ -109,6 +125,33 @@ pub fn tree_allreduce_sum(bufs: &mut [Vec<f32>]) {
     for b in bufs.iter_mut().skip(1) {
         b.copy_from_slice(&root);
     }
+}
+
+/// f32 ring all-reduce (the dense-gradient data plane).
+pub fn ring_allreduce_sum(bufs: &mut [Vec<f32>]) {
+    ring_allreduce_sum_t(bufs)
+}
+
+/// f32 naive all-reduce.
+pub fn naive_allreduce_sum(bufs: &mut [Vec<f32>]) {
+    naive_allreduce_sum_t(bufs)
+}
+
+/// f32 tree all-reduce.
+pub fn tree_allreduce_sum(bufs: &mut [Vec<f32>]) {
+    tree_allreduce_sum_t(bufs)
+}
+
+/// Integer-domain ring all-reduce over i16 level buffers (the fused hot
+/// path's narrow operand: half the memory traffic of the old f32 levels).
+pub fn ring_allreduce_sum_i16(bufs: &mut [Vec<i16>]) {
+    ring_allreduce_sum_t(bufs)
+}
+
+/// Integer-domain ring all-reduce over i32 level buffers (the widened
+/// fallback for extreme `bits × workers` products).
+pub fn ring_allreduce_sum_i32(bufs: &mut [Vec<i32>]) {
+    ring_allreduce_sum_t(bufs)
 }
 
 /// Max all-reduce over one scalar per worker (the shared `||w||_2`).
@@ -161,18 +204,41 @@ impl<'a> StepCtx<'a> {
         bufs.into_iter().next().unwrap_or_default()
     }
 
-    /// Zero-copy variant (perf pass): reduces into the callers' buffers —
-    /// all of them end holding the sum, exactly like the real collective.
-    pub fn allreduce_sum_in_place(&mut self, bufs: &mut [Vec<f32>], bits_per_elem: f64) {
+    /// One body for every element width: charge the wire, then run the
+    /// configured reduction schedule over the callers' buffers.
+    fn allreduce_sum_in_place_impl<T>(&mut self, bufs: &mut [Vec<T>], bits_per_elem: f64)
+    where
+        T: Copy + Default + std::ops::AddAssign,
+    {
         let elems = bufs.first().map(|b| b.len()).unwrap_or(0) as f64;
         let bits = self.effective_bits(elems, bits_per_elem);
         self.clock.comm_s += self.net.allreduce_s(bits / 8.0);
         self.clock.bits_per_worker += bits;
         match self.net.algo {
-            crate::netsim::Algo::Ring => ring_allreduce_sum(bufs),
-            crate::netsim::Algo::Tree => tree_allreduce_sum(bufs),
-            crate::netsim::Algo::Naive => naive_allreduce_sum(bufs),
+            crate::netsim::Algo::Ring => ring_allreduce_sum_t(bufs),
+            crate::netsim::Algo::Tree => tree_allreduce_sum_t(bufs),
+            crate::netsim::Algo::Naive => naive_allreduce_sum_t(bufs),
         }
+    }
+
+    /// Zero-copy variant (perf pass): reduces into the callers' buffers —
+    /// all of them end holding the sum, exactly like the real collective.
+    pub fn allreduce_sum_in_place(&mut self, bufs: &mut [Vec<f32>], bits_per_elem: f64) {
+        self.allreduce_sum_in_place_impl(bufs, bits_per_elem)
+    }
+
+    /// Integer-domain sum all-reduce over widened level buffers — the fused
+    /// hot path's collective. Charges the same wire bits as the f32-level
+    /// path (the wire format is the packed `bits_per_elem` codes either
+    /// way); what changes is the *memory* the data plane moves: `i16` is
+    /// half the f32 traffic. Overflow is excluded by the aggregators'
+    /// widening rule (asserted at construction).
+    pub fn allreduce_sum_in_place_int<T: LevelInt>(
+        &mut self,
+        bufs: &mut [Vec<T>],
+        bits_per_elem: f64,
+    ) {
+        self.allreduce_sum_in_place_impl(bufs, bits_per_elem)
     }
 
     /// Scalar max all-reduce (`||w||_2` sharing): one 32-bit float.
@@ -282,6 +348,55 @@ mod tests {
         ring_allreduce_sum(&mut bufs);
         naive_allreduce_sum(&mut naive);
         assert_eq!(bufs[0], naive[0]);
+    }
+
+    #[test]
+    fn prop_int_reducers_agree_exactly() {
+        // integer sums are exact, so ring/tree/naive must agree with
+        // assert_eq (no tolerance), on every rank, for i16 and i32.
+        check("int ring == tree == naive (exact)", 120, |g| {
+            let m = g.usize_in(1, 9);
+            let n = g.size_scaled(0, 3000);
+            // keep |level| <= 512 so m * level fits i16 comfortably
+            let base: Vec<Vec<i32>> = (0..m)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| g.rng().next_below(1025) as i32 - 512)
+                        .collect()
+                })
+                .collect();
+            let mut ring32 = base.clone();
+            let mut tree32 = base.clone();
+            let mut naive32 = base.clone();
+            ring_allreduce_sum_t(&mut ring32);
+            tree_allreduce_sum_t(&mut tree32);
+            naive_allreduce_sum_t(&mut naive32);
+            let as16: Vec<Vec<i16>> =
+                base.iter().map(|b| b.iter().map(|&x| x as i16).collect()).collect();
+            let mut ring16 = as16.clone();
+            ring_allreduce_sum_i16(&mut ring16);
+            for r in 0..m {
+                if ring32[r] != naive32[0] || tree32[r] != naive32[0] {
+                    return Err(format!("rank {r}: int reducers disagree"));
+                }
+                let widened: Vec<i32> = ring16[r].iter().map(|&x| x as i32).collect();
+                if widened != naive32[0] {
+                    return Err(format!("rank {r}: i16 ring differs from i32 naive"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn step_ctx_int_allreduce_charges_same_wire_as_f32() {
+        let net = NetConfig::flat(4, 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut bufs: Vec<Vec<i16>> = (0..4).map(|r| vec![r as i16; 1000]).collect();
+        ctx.allreduce_sum_in_place_int(&mut bufs, 8.0);
+        assert!(bufs.iter().all(|b| b.iter().all(|&x| x == 6))); // 0+1+2+3
+        assert_eq!(clock.bits_per_worker, 8000.0);
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Fused integer-domain hot path shared by the all-reduce-compatible
+//! aggregators (QSGD-MN, QSGD-MN-TS, GRandK variants).
+//!
+//! The pre-integer pipeline carried quantizer levels as `f32`: 32 bits per
+//! coordinate through encode, the ring all-reduce, and decode — for a
+//! nominally 2–16-bit wire format. Exactly the gap ScaleCom (Chen et al.,
+//! 2020) identifies between paper speedups and deployed speedups. Here the
+//! levels are written straight into widened integer buffers
+//! ([`LevelInt`]: `i16` when `workers * s` fits, `i32` otherwise — the
+//! overflow-safe widening rule), reduced in the integer domain, and decoded
+//! once from the exact integer sum. Encode fan-out runs on the persistent
+//! [`threads::pool`] instead of spawning OS threads per step, and every
+//! buffer lives in the aggregator across steps.
+//!
+//! [`wire_roundtrip_qsgd`] additionally pushes each worker's levels through
+//! the packed wire format (`bitpack`) before reducing — the property tests
+//! use it to pin the full encode→pack→allreduce→unpack→decode chain
+//! bit-identical to the legacy f32 path ([`reference_qsgd_aggregate`]).
+
+use crate::collectives::{self, StepCtx};
+use crate::tensor::{sum_fits, LevelInt};
+use crate::util::rng::Rng;
+use crate::util::threads;
+
+use super::bitpack;
+use super::kernels::{self, ScaleTable};
+
+/// Hard cap on simulated workers for the integer-domain aggregators. The
+/// constructors assert `MAX_WORKERS * s <= i32::MAX`, making overflow
+/// impossible by construction anywhere below this bound (for b <= 16,
+/// `s <= 32767`, so `4096 * s <= 1.35e8` — two orders under `i32::MAX`).
+pub const MAX_WORKERS: usize = 4096;
+
+/// Construction-time overflow proof for a quantizer with `s` levels.
+pub fn assert_widening_rule(s: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        sum_fits::<i32>(s, MAX_WORKERS),
+        "widening rule violated: {MAX_WORKERS} workers x s={s} overflows i32"
+    );
+    Ok(())
+}
+
+/// Does the narrow (i16) accumulator suffice for this step?
+pub fn narrow_fits(s: usize, workers: usize) -> bool {
+    sum_fits::<i16>(s, workers)
+}
+
+/// Parallel per-worker QSGD encode into reusable integer scratch. Worker
+/// streams derive from `rng` exactly like the legacy path (`derive([w])`),
+/// so outputs are bit-identical given the same step rng.
+pub fn encode_qsgd_into<T: LevelInt>(
+    grads: &[&[f32]],
+    wnorm: f32,
+    s: usize,
+    scratch: &mut Vec<Vec<T>>,
+    uniform: &mut Vec<Vec<f32>>,
+    rng: &Rng,
+) {
+    let m = grads.len();
+    let n = grads[0].len();
+    scratch.resize_with(m, Vec::new);
+    uniform.resize_with(m, Vec::new);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m);
+    for (w, ((buf, uni), g)) in scratch.iter_mut().zip(uniform.iter_mut()).zip(grads).enumerate() {
+        let mut wrng = rng.derive(&[w as u64]);
+        tasks.push(Box::new(move || {
+            buf.resize(n, T::default());
+            uni.resize(n, 0.0);
+            wrng.fill_uniform_f32(uni);
+            kernels::qsgd_encode_int(g, wnorm, uni, s, buf);
+        }));
+    }
+    threads::pool().scope_run(tasks);
+}
+
+/// Parallel per-worker multi-scale encode at the shared coordinate scales.
+pub fn encode_multiscale_into<T: LevelInt>(
+    grads: &[&[f32]],
+    wnorm: f32,
+    table: &ScaleTable,
+    shared_idx: &[u8],
+    scratch: &mut Vec<Vec<T>>,
+    uniform: &mut Vec<Vec<f32>>,
+    rng: &Rng,
+) {
+    let m = grads.len();
+    let n = grads[0].len();
+    scratch.resize_with(m, Vec::new);
+    uniform.resize_with(m, Vec::new);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m);
+    for (w, ((buf, uni), g)) in scratch.iter_mut().zip(uniform.iter_mut()).zip(grads).enumerate() {
+        let mut wrng = rng.derive(&[w as u64]);
+        tasks.push(Box::new(move || {
+            buf.resize(n, T::default());
+            uni.resize(n, 0.0);
+            wrng.fill_uniform_f32(uni);
+            kernels::multiscale_encode_int(g, wnorm, uni, shared_idx, table, buf);
+        }));
+    }
+    threads::pool().scope_run(tasks);
+}
+
+/// Parallel per-worker scale-index proposal (eq. 10) into reusable scratch.
+pub fn scale_index_into(
+    grads: &[&[f32]],
+    wnorm: f32,
+    table: &ScaleTable,
+    idx_scratch: &mut Vec<Vec<u8>>,
+) {
+    let m = grads.len();
+    let n = grads[0].len();
+    idx_scratch.resize_with(m, Vec::new);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m);
+    for (idx, g) in idx_scratch.iter_mut().zip(grads) {
+        tasks.push(Box::new(move || {
+            idx.resize(n, 0);
+            kernels::multiscale_scale_index_t(g, wnorm, table, idx);
+        }));
+    }
+    threads::pool().scope_run(tasks);
+}
+
+/// One full integer-domain QSGD step at a chosen accumulator width:
+/// pool-parallel encode into `scratch`, in-place integer all-reduce
+/// (charging `wire_bits`/coord), decode of the exact sum into `out`.
+/// The single body behind both arms of every aggregator's i16/i32 dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn qsgd_step_int<T: LevelInt>(
+    grads: &[&[f32]],
+    wnorm: f32,
+    s: usize,
+    wire_bits: f64,
+    scratch: &mut Vec<Vec<T>>,
+    uniform: &mut Vec<Vec<f32>>,
+    ctx: &mut StepCtx,
+    rng: &Rng,
+    out: &mut [f32],
+) {
+    let m = grads.len();
+    // explicit reborrows: the closures must capture borrows of the &mut
+    // params, not move them, so the later stages can reuse the buffers
+    ctx.time_encode(|| encode_qsgd_into(grads, wnorm, s, &mut *scratch, &mut *uniform, rng));
+    ctx.allreduce_sum_in_place_int(&mut *scratch, wire_bits);
+    ctx.time_decode(|| kernels::qsgd_decode_sum_int(&scratch[0], wnorm, s, m, &mut *out));
+}
+
+/// Multi-scale analogue of [`qsgd_step_int`]: encode at the shared
+/// per-coordinate scales, integer all-reduce, decode via the scale table.
+#[allow(clippy::too_many_arguments)]
+pub fn multiscale_step_int<T: LevelInt>(
+    grads: &[&[f32]],
+    wnorm: f32,
+    table: &ScaleTable,
+    shared_idx: &[u8],
+    payload_bits: f64,
+    scratch: &mut Vec<Vec<T>>,
+    uniform: &mut Vec<Vec<f32>>,
+    ctx: &mut StepCtx,
+    rng: &Rng,
+    out: &mut [f32],
+) {
+    let m = grads.len();
+    ctx.time_encode(|| {
+        encode_multiscale_into(grads, wnorm, table, shared_idx, &mut *scratch, &mut *uniform, rng)
+    });
+    ctx.allreduce_sum_in_place_int(&mut *scratch, payload_bits);
+    ctx.time_decode(|| {
+        kernels::multiscale_decode_sum_int(&scratch[0], wnorm, shared_idx, table, m, &mut *out)
+    });
+}
+
+/// The legacy f32-level QSGD-MN aggregation (encode f32 → f32 ring
+/// all-reduce → in-place decode), preserved verbatim as the baseline the
+/// integer-domain path is property-tested bit-identical to and benchmarked
+/// against. Not used by the production aggregators.
+pub fn reference_qsgd_aggregate(grads: &[&[f32]], wnorm: f32, s: usize, rng: &Rng) -> Vec<f32> {
+    let m = grads.len();
+    let n = grads[0].len();
+    let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(m);
+    for (w, g) in grads.iter().enumerate() {
+        let mut wrng = rng.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; n];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut buf = vec![0.0f32; n];
+        kernels::qsgd_encode(g, wnorm, &uni, s, &mut buf);
+        bufs.push(buf);
+    }
+    collectives::ring_allreduce_sum(&mut bufs);
+    let mut sum = bufs.swap_remove(0);
+    kernels::qsgd_decode_sum(&mut sum, wnorm, s, m);
+    sum
+}
+
+/// Fused integer pipeline WITH the packed wire hop:
+/// encode → pack(b bits) → unpack → integer ring all-reduce → decode.
+/// Returns the averaged gradient and the packed wire bytes per worker.
+/// The pack/unpack round-trip is the wire format the simulator charges
+/// for; running it in the data plane proves it lossless end-to-end.
+pub fn wire_roundtrip_qsgd<T: LevelInt>(
+    grads: &[&[f32]],
+    wnorm: f32,
+    bits: usize,
+    rng: &Rng,
+) -> (Vec<f32>, usize) {
+    let m = grads.len();
+    let n = grads[0].len();
+    let s = kernels::s_for_bits(bits);
+    assert!(
+        sum_fits::<T>(s, m),
+        "widening rule: {m} workers x s={s} overflows {}",
+        T::TAG
+    );
+    let mut scratch: Vec<Vec<T>> = Vec::new();
+    let mut uniform: Vec<Vec<f32>> = Vec::new();
+    encode_qsgd_into(grads, wnorm, s, &mut scratch, &mut uniform, rng);
+
+    let mut wire_bytes = 0;
+    for buf in scratch.iter_mut() {
+        let packed = bitpack::pack_int(buf, bits as u32);
+        wire_bytes = packed.wire_bytes();
+        buf.fill(T::default()); // prove decode uses only wire data
+        bitpack::unpack_int_into(&packed, buf);
+    }
+
+    collectives::ring_allreduce_sum_t(&mut scratch);
+    let mut out = vec![0.0f32; n];
+    kernels::qsgd_decode_sum_int(&scratch[0], wnorm, s, m, &mut out);
+    (out, wire_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::kernels::l2_norm;
+    use crate::util::quickcheck::{check, ensure};
+
+    #[test]
+    fn prop_wire_roundtrip_matches_reference_bit_exact() {
+        // the tentpole invariant: integer-domain encode→pack→allreduce→
+        // unpack→decode == legacy f32-level path, bit for bit.
+        check("fused wire path == f32 reference", 60, |g| {
+            let m = g.usize_in(1, 8);
+            let bits = *g.pick(&[2usize, 4, 6, 8, 12]);
+            let n = g.size_scaled(1, 2000);
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let wnorm = refs.iter().map(|v| l2_norm(v)).fold(0.0f32, f32::max);
+            let rng = Rng::new(g.rng().next_u64());
+
+            let want = reference_qsgd_aggregate(&refs, wnorm, kernels::s_for_bits(bits), &rng);
+            let s = kernels::s_for_bits(bits);
+            let (got, wire) = if narrow_fits(s, m) {
+                wire_roundtrip_qsgd::<i16>(&refs, wnorm, bits, &rng)
+            } else {
+                wire_roundtrip_qsgd::<i32>(&refs, wnorm, bits, &rng)
+            };
+            if got != want {
+                let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                return Err(format!(
+                    "bits={bits} m={m} n={n}: first diff at {bad}: {} vs {}",
+                    got[bad], want[bad]
+                ));
+            }
+            ensure(wire == (n * bits).div_ceil(8), "wire bytes must be byte-exact")
+        });
+    }
+
+    #[test]
+    fn widening_rule_bounds() {
+        assert!(narrow_fits(7, 4096)); // 4-bit, max workers: 28672 < 32767
+        assert!(!narrow_fits(2047, 17)); // 12-bit: 17 * 2047 > i16::MAX
+        assert!(assert_widening_rule(32767).is_ok()); // 16-bit at MAX_WORKERS
+    }
+}

@@ -6,6 +6,8 @@
 //! bit-for-bit identical to the lowered HLO — asserted by
 //! `rust/tests/pallas_parity.rs` (DESIGN.md §5).
 
+use crate::tensor::LevelInt;
+
 /// jnp.sign semantics: 0 for 0 (f32::signum would give ±1 for ±0).
 #[inline(always)]
 pub fn sign(v: f32) -> f32 {
@@ -66,6 +68,25 @@ pub fn qsgd_encode(v: &[f32], wnorm: f32, u: &[f32], s: usize, out: &mut [f32]) 
     }
 }
 
+/// Integer-domain QSGDMaxNorm encode: identical float op order to
+/// [`qsgd_encode`], but the exact-integer level lands directly in a widened
+/// integer buffer — the 8×/16× narrower all-reduce operand of the fused hot
+/// path (DESIGN.md §Performance). Bit-identical to the f32 path by
+/// construction: the level value is the same f32 before the lossless cast.
+pub fn qsgd_encode_int<T: LevelInt>(v: &[f32], wnorm: f32, u: &[f32], s: usize, out: &mut [T]) {
+    debug_assert_eq!(v.len(), u.len());
+    debug_assert_eq!(v.len(), out.len());
+    debug_assert!((s as i64) <= T::MAX_MAG, "s={s} overflows {}", T::TAG);
+    if wnorm <= 0.0 {
+        out.fill(T::default());
+        return;
+    }
+    let sf = s as f32;
+    for ((o, &vi), &ui) in out.iter_mut().zip(v).zip(u) {
+        *o = T::from_level(qsgd_level(vi, wnorm, ui, sf));
+    }
+}
+
 /// Decode an all-reduced level sum into the averaged gradient (eq. 8, /M).
 pub fn qsgd_decode_sum(zeta_sum: &mut [f32], wnorm: f32, s: usize, m: usize) {
     let k = wnorm / (s as f32 * m as f32);
@@ -74,24 +95,108 @@ pub fn qsgd_decode_sum(zeta_sum: &mut [f32], wnorm: f32, s: usize, m: usize) {
     }
 }
 
+/// eq. (8) from an integer level sum. Mirrors [`qsgd_decode_sum`]'s float
+/// ops exactly (`sum * k`), so the output is bit-identical to the f32-level
+/// path whenever that path's f32 sum was itself exact — i.e. `m*s < 2^24`
+/// (e.g. any `bits <= 12` at <= 4096 workers, or 16-bit at <= 512). Beyond
+/// that the widening rule still guarantees the *integer* sum is exact while
+/// the legacy f32 sum would have rounded: the paths diverge and the integer
+/// result is the correct one.
+pub fn qsgd_decode_sum_int<T: LevelInt>(
+    sum: &[T],
+    wnorm: f32,
+    s: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(sum.len(), out.len());
+    let k = wnorm / (s as f32 * m as f32);
+    for (o, &z) in out.iter_mut().zip(sum) {
+        *o = z.to_f32() * k;
+    }
+}
+
+/// Cap on the number of scales in a multi-scale set. The paper uses 2–3;
+/// eight covers any plausible sweep while keeping the per-coordinate select
+/// a fixed-trip-count (fully unrollable) loop.
+pub const MAX_SCALES: usize = 8;
+
+/// Precomputed scale tables for the multi-scale kernels.
+///
+/// The previous kernels rebuilt a `Vec<f32>` of casted scales on *every
+/// call* (per worker, per step). This table is built once per aggregator:
+/// `qual` is padded with `+inf` so the qualifying-count compare is false for
+/// padding lanes, `sel` with `0.0` so the branchless select accumulates
+/// nothing there — both loops run a fixed `MAX_SCALES` trip count that LLVM
+/// unrolls and vectorizes.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleTable {
+    qual: [f32; MAX_SCALES],
+    sel: [f32; MAX_SCALES],
+    len: usize,
+    /// smallest scale (the wire-format bit budget)
+    pub smin: f32,
+}
+
+impl ScaleTable {
+    pub fn new(scales: &[usize]) -> ScaleTable {
+        assert!(
+            !scales.is_empty() && scales.len() <= MAX_SCALES,
+            "scale set size {} not in 1..={MAX_SCALES}",
+            scales.len()
+        );
+        assert!(scales.windows(2).all(|w| w[0] < w[1]), "scales must be sorted");
+        let mut qual = [f32::INFINITY; MAX_SCALES];
+        let mut sel = [0.0f32; MAX_SCALES];
+        for (i, &s) in scales.iter().enumerate() {
+            qual[i] = s as f32;
+            sel[i] = s as f32;
+        }
+        ScaleTable { qual, sel, len: scales.len(), smin: scales[0] as f32 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Branchless select of scale `idx`: sum of `(idx==j) * s_j` over the
+    /// padded table — the same compare chain the Pallas kernel lowers to.
+    #[inline(always)]
+    pub fn select(&self, idx: u32) -> f32 {
+        let mut s_eff = 0.0f32;
+        for j in 0..MAX_SCALES {
+            s_eff += (idx == j as u32) as u32 as f32 * self.sel[j];
+        }
+        s_eff
+    }
+}
+
 /// eq. (10): per-coordinate scale index (largest qualifying scale).
 /// `scales` must be sorted ascending; returns indices in 0..N as u8.
 pub fn multiscale_scale_index(v: &[f32], wnorm: f32, scales: &[usize], out: &mut [u8]) {
-    debug_assert!(scales.windows(2).all(|w| w[0] < w[1]), "scales must be sorted");
-    debug_assert!(scales.len() <= 256);
+    multiscale_scale_index_t(v, wnorm, &ScaleTable::new(scales), out)
+}
+
+/// Table-based form of [`multiscale_scale_index`] — the zero-allocation
+/// hot-path entry used by the aggregators.
+pub fn multiscale_scale_index_t(v: &[f32], wnorm: f32, table: &ScaleTable, out: &mut [u8]) {
+    debug_assert_eq!(v.len(), out.len());
     let safe_w = if wnorm > 0.0 { wnorm } else { 1.0 };
-    let smin = scales[0] as f32;
-    let thresh = safe_w * smin;
+    let thresh = safe_w * table.smin;
     // `s·|v| <= thresh` is monotone decreasing in s, so the qualifying
     // scales are a prefix of the sorted set: the selected index is
-    // (count of qualifying scales) − 1. Branchless popcount-style select
-    // (perf pass) — index 0 always qualifies since |v| <= ||w||.
-    let sf: Vec<f32> = scales.iter().map(|&s| s as f32).collect();
+    // (count of qualifying scales) − 1. Branchless popcount-style select —
+    // index 0 always qualifies since |v| <= ||w||. Padding lanes hold +inf
+    // (inf·|v| > thresh, and inf·0 = NaN compares false), contributing 0.
     for (o, &vi) in out.iter_mut().zip(v) {
         let av = vi.abs();
         let mut count = 0u32;
-        for &s in &sf {
-            count += (s * av <= thresh) as u32;
+        for j in 0..MAX_SCALES {
+            count += (table.qual[j] * av <= thresh) as u32;
         }
         *o = (count.max(1) - 1) as u8;
     }
@@ -106,20 +211,45 @@ pub fn multiscale_encode(
     scales: &[usize],
     out: &mut [f32],
 ) {
+    multiscale_encode_t(v, wnorm, u, scale_idx, &ScaleTable::new(scales), out)
+}
+
+/// Table-based form of [`multiscale_encode`].
+pub fn multiscale_encode_t(
+    v: &[f32],
+    wnorm: f32,
+    u: &[f32],
+    scale_idx: &[u8],
+    table: &ScaleTable,
+    out: &mut [f32],
+) {
     if wnorm <= 0.0 {
         out.fill(0.0);
         return;
     }
-    // branchless scale select (perf pass): N compares instead of a gather,
-    // mirroring the Pallas kernel's `where` chain — vectorizes cleanly.
-    let sf: Vec<f32> = scales.iter().map(|&s| s as f32).collect();
     for i in 0..v.len() {
-        let idx = scale_idx[i] as u32;
-        let mut s_eff = 0.0f32;
-        for (j, &s) in sf.iter().enumerate() {
-            s_eff += (idx == j as u32) as u32 as f32 * s;
-        }
+        let s_eff = table.select(scale_idx[i] as u32);
         out[i] = qsgd_level(v[i], wnorm, u[i], s_eff);
+    }
+}
+
+/// Integer-domain multi-scale encode (see [`qsgd_encode_int`]).
+pub fn multiscale_encode_int<T: LevelInt>(
+    v: &[f32],
+    wnorm: f32,
+    u: &[f32],
+    scale_idx: &[u8],
+    table: &ScaleTable,
+    out: &mut [T],
+) {
+    debug_assert_eq!(v.len(), out.len());
+    if wnorm <= 0.0 {
+        out.fill(T::default());
+        return;
+    }
+    for i in 0..v.len() {
+        let s_eff = table.select(scale_idx[i] as u32);
+        out[i] = T::from_level(qsgd_level(v[i], wnorm, u[i], s_eff));
     }
 }
 
@@ -131,15 +261,30 @@ pub fn multiscale_decode_sum(
     scales: &[usize],
     m: usize,
 ) {
+    let table = ScaleTable::new(scales);
     let mf = m as f32;
-    let sf: Vec<f32> = scales.iter().map(|&s| s as f32).collect();
     for (z, &idx) in zeta_sum.iter_mut().zip(scale_idx) {
-        let idx = idx as u32;
-        let mut s = 0.0f32;
-        for (j, &sj) in sf.iter().enumerate() {
-            s += (idx == j as u32) as u32 as f32 * sj;
-        }
+        let s = table.select(idx as u32);
         *z = *z * wnorm / (s * mf);
+    }
+}
+
+/// eq. (12) from an integer level sum; float ops mirror
+/// [`multiscale_decode_sum`] exactly.
+pub fn multiscale_decode_sum_int<T: LevelInt>(
+    sum: &[T],
+    wnorm: f32,
+    scale_idx: &[u8],
+    table: &ScaleTable,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(sum.len(), out.len());
+    debug_assert_eq!(sum.len(), scale_idx.len());
+    let mf = m as f32;
+    for i in 0..sum.len() {
+        let s = table.select(scale_idx[i] as u32);
+        out[i] = sum[i].to_f32() * wnorm / (s * mf);
     }
 }
 

@@ -9,6 +9,9 @@
 //! analysis (§1, §6.6) turns on.
 //!
 //! Implementations:
+//! * [`fused`]          — integer-domain fused hot path (widened level
+//!   buffers, persistent-pool encode fan-out, overflow-safe widening rule)
+//! * [`bitpack`]        — word-level b-bit wire format (pack/unpack)
 //! * [`none`]           — AllReduce-SGD, dense fp32 (the PyTorch default)
 //! * [`qsgd_maxnorm`]   — §4.1 QSGDMaxNorm (single-scale, unbiased)
 //! * [`multiscale`]     — §4.2 QSGDMaxNormMultiScale + scale sharing
@@ -19,6 +22,7 @@
 //! * [`topk`]           — magnitude sparsification baseline (all-gather)
 
 pub mod bitpack;
+pub mod fused;
 pub mod kernels;
 pub mod multiscale;
 pub mod none;

@@ -10,14 +10,18 @@
 use crate::collectives::StepCtx;
 use crate::util::rng::Rng;
 
-use super::kernels;
+use super::fused;
+use super::kernels::{self, ScaleTable};
 use super::Aggregator;
 
 pub struct QsgdMultiScale {
     pub bits: Vec<usize>,
     /// sorted ascending levels per scale
     pub scales: Vec<usize>,
-    scratch: Vec<Vec<f32>>,
+    /// precomputed padded scale tables (no per-call Vec<f32> builds)
+    table: ScaleTable,
+    scratch16: Vec<Vec<i16>>,
+    scratch32: Vec<Vec<i32>>,
     idx_scratch: Vec<Vec<u8>>,
     uniform: Vec<Vec<f32>>,
 }
@@ -25,16 +29,28 @@ pub struct QsgdMultiScale {
 impl QsgdMultiScale {
     pub fn new(bits: &[usize]) -> anyhow::Result<QsgdMultiScale> {
         anyhow::ensure!(bits.len() >= 2, "multi-scale needs >= 2 scales");
+        anyhow::ensure!(
+            bits.len() <= kernels::MAX_SCALES,
+            "multi-scale supports at most {} scales",
+            kernels::MAX_SCALES
+        );
         let mut scales: Vec<usize> = bits.iter().map(|&b| kernels::s_for_bits(b)).collect();
         scales.sort_unstable();
         anyhow::ensure!(
             scales.windows(2).all(|w| w[0] < w[1]),
             "scales must be distinct"
         );
+        // levels are bounded by s_min + 1 (eq. 10), but the decode divides
+        // by the *selected* scale; the sum bound that matters for widening
+        // is M * (s_min + 1). Prove i32 safety at the largest scale anyway.
+        fused::assert_widening_rule(scales[scales.len() - 1])?;
+        let table = ScaleTable::new(&scales);
         Ok(QsgdMultiScale {
             bits: bits.to_vec(),
             scales,
-            scratch: Vec::new(),
+            table,
+            scratch16: Vec::new(),
+            scratch32: Vec::new(),
             idx_scratch: Vec::new(),
             uniform: Vec::new(),
         })
@@ -67,60 +83,57 @@ impl Aggregator for QsgdMultiScale {
     fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32> {
         let m = grads.len();
         let n = grads[0].len();
+        assert!(m <= fused::MAX_WORKERS, "M={m} exceeds MAX_WORKERS");
 
         // 1. shared max norm (Algorithm 2 line 5)
         let norms: Vec<f32> = grads.iter().map(|g| kernels::l2_norm(g)).collect();
         let wnorm = ctx.allreduce_max_scalar(&norms);
 
-        // 2. per-worker coordinate scales (line 6) — parallel across workers
-        self.idx_scratch.resize_with(m, Vec::new);
-        let (scales, idx_scratch) = (&self.scales, &mut self.idx_scratch);
-        ctx.time_encode(|| {
-            std::thread::scope(|sc| {
-                for (idx, g) in idx_scratch.iter_mut().zip(grads) {
-                    sc.spawn(move || {
-                        idx.resize(n, 0);
-                        kernels::multiscale_scale_index(g, wnorm, scales, idx);
-                    });
-                }
-            });
-        });
+        // 2. per-worker coordinate scales (line 6) — persistent pool
+        let table = self.table;
+        let idx_scratch = &mut self.idx_scratch;
+        ctx.time_encode(|| fused::scale_index_into(grads, wnorm, &table, idx_scratch));
 
         // 3. scale sharing: elementwise min across workers (line 7),
         //    ceil(log2 N) bits per coordinate of overhead
         let shared_idx = ctx.allreduce_min_u8(&self.idx_scratch, self.index_bits());
 
-        // 4. quantize at the shared scales (line 8) — parallel across workers
-        self.scratch.resize_with(m, Vec::new);
-        self.uniform.resize_with(m, Vec::new);
-        let (scratch, uniform) = (&mut self.scratch, &mut self.uniform);
-        let shared_idx_ref = &shared_idx;
-        ctx.time_encode(|| {
-            std::thread::scope(|sc| {
-                for (w, ((buf, uni), g)) in
-                    scratch.iter_mut().zip(uniform.iter_mut()).zip(grads).enumerate()
-                {
-                    let wrng = rng.derive(&[w as u64]);
-                    sc.spawn(move || {
-                        let mut wrng = wrng;
-                        buf.resize(n, 0.0);
-                        uni.resize(n, 0.0);
-                        wrng.fill_uniform_f32(uni);
-                        kernels::multiscale_encode(g, wnorm, uni, shared_idx_ref, scales, buf);
-                    });
-                }
-            });
-        });
-
-        // 5. compressed-domain sum all-reduce (line 9), zero-copy
+        // 4. quantize at the shared scales (line 8) into widened integer
+        //    buffers (levels bounded by s_min + 1, eq. 10); 5. integer-domain
+        //    sum all-reduce (line 9), zero-copy; 6. single reconstruct from
+        //    the exact integer sum (line 10).
         let payload_bits = self.payload_bits();
-        ctx.allreduce_sum_in_place(&mut self.scratch, payload_bits);
-        let mut sum = std::mem::take(&mut self.scratch[0]);
-
-        // 6. single reconstruct with the shared scales (line 10)
-        let scales = &self.scales;
-        ctx.time_decode(|| kernels::multiscale_decode_sum(&mut sum, wnorm, &shared_idx, scales, m));
-        sum
+        // the per-coordinate level bound is s_min + 1, so the narrow
+        // accumulator fits iff M * (s_min + 1) does
+        let mut out = vec![0.0f32; n];
+        if fused::narrow_fits(self.scales[0] + 1, m) {
+            fused::multiscale_step_int(
+                grads,
+                wnorm,
+                &table,
+                &shared_idx,
+                payload_bits,
+                &mut self.scratch16,
+                &mut self.uniform,
+                ctx,
+                rng,
+                &mut out,
+            );
+        } else {
+            fused::multiscale_step_int(
+                grads,
+                wnorm,
+                &table,
+                &shared_idx,
+                payload_bits,
+                &mut self.scratch32,
+                &mut self.uniform,
+                ctx,
+                rng,
+                &mut out,
+            );
+        }
+        out
     }
 }
 

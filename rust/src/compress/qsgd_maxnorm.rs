@@ -1,31 +1,47 @@
-//! QSGDMaxNorm Quantization (paper §4.1, Algorithm 1).
+//! QSGDMaxNorm Quantization (paper §4.1, Algorithm 1), integer domain.
 //!
 //! Protocol per step:
 //! 1. max-all-reduce the per-worker L2 norms -> shared scale `||w||_2`;
-//! 2. each worker stochastically quantizes against `||w||_2` at s levels
-//!    (the Pallas-kernel-equivalent hot path, `kernels::qsgd_encode`);
-//! 3. one sum-all-reduce of the signed integer levels (r = b bits/coord);
-//! 4. a single decode of the reduced sum (eq. 8) — the all-reduce
+//! 2. each worker stochastically quantizes against `||w||_2` at s levels,
+//!    writing levels straight into widened integer buffers (i16 when
+//!    `M * s` fits, i32 otherwise — the overflow-safe widening rule,
+//!    asserted at construction) on the persistent thread pool;
+//! 3. one sum-all-reduce of the signed integer levels (r = b bits/coord on
+//!    the wire; i16/i32 in memory instead of the old f32 — half/same the
+//!    traffic for a bit-identical result);
+//! 4. a single decode of the reduced integer sum (eq. 8) — the all-reduce
 //!    compatibility property: decode commutes with the sum.
 
 use crate::collectives::StepCtx;
 use crate::util::rng::Rng;
 
+use super::fused;
 use super::kernels;
 use super::Aggregator;
 
 pub struct QsgdMaxNorm {
     pub bits: usize,
     pub s: usize,
-    /// reused per-step scratch (levels per worker) — zero steady-state alloc
-    scratch: Vec<Vec<f32>>,
+    /// reused per-step scratch (integer levels per worker, both widths) —
+    /// zero steady-state alloc
+    scratch16: Vec<Vec<i16>>,
+    scratch32: Vec<Vec<i32>>,
     uniform: Vec<Vec<f32>>,
 }
 
 impl QsgdMaxNorm {
     pub fn new(bits: usize) -> anyhow::Result<QsgdMaxNorm> {
         anyhow::ensure!((2..=16).contains(&bits), "qsgd bits must be in 2..=16, got {bits}");
-        Ok(QsgdMaxNorm { bits, s: kernels::s_for_bits(bits), scratch: Vec::new(), uniform: Vec::new() })
+        let s = kernels::s_for_bits(bits);
+        // overflow impossible by construction up to fused::MAX_WORKERS
+        fused::assert_widening_rule(s)?;
+        Ok(QsgdMaxNorm {
+            bits,
+            s,
+            scratch16: Vec::new(),
+            scratch32: Vec::new(),
+            uniform: Vec::new(),
+        })
     }
 }
 
@@ -45,42 +61,45 @@ impl Aggregator for QsgdMaxNorm {
     fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32> {
         let m = grads.len();
         let n = grads[0].len();
+        assert!(m <= fused::MAX_WORKERS, "M={m} exceeds MAX_WORKERS");
 
         // 1. shared max norm (Algorithm 1 line 5)
         let norms: Vec<f32> = grads.iter().map(|g| kernels::l2_norm(g)).collect();
         let wnorm = ctx.allreduce_max_scalar(&norms);
 
-        // 2. per-worker stochastic quantization (line 6) — one OS thread per
-        //    simulated worker (perf pass: the encode is embarrassingly
-        //    parallel across workers and each stream is independent).
-        self.scratch.resize_with(m, Vec::new);
-        self.uniform.resize_with(m, Vec::new);
-        let (s, scratch, uniform) = (self.s, &mut self.scratch, &mut self.uniform);
-        ctx.time_encode(|| {
-            std::thread::scope(|sc| {
-                for (w, ((buf, uni), g)) in
-                    scratch.iter_mut().zip(uniform.iter_mut()).zip(grads).enumerate()
-                {
-                    let wrng = rng.derive(&[w as u64]);
-                    sc.spawn(move || {
-                        let mut wrng = wrng;
-                        buf.resize(n, 0.0);
-                        uni.resize(n, 0.0);
-                        wrng.fill_uniform_f32(uni);
-                        kernels::qsgd_encode(g, wnorm, uni, s, buf);
-                    });
-                }
-            });
-        });
-
-        // 3. compressed-domain sum all-reduce (line 7), r = b bits/coord —
-        //    in place over the scratch buffers (zero-copy)
-        ctx.allreduce_sum_in_place(&mut self.scratch, kernels::bits_for_s(self.s));
-        let mut sum = std::mem::take(&mut self.scratch[0]);
-
-        // 4. single reconstruct (line 8)
-        ctx.time_decode(|| kernels::qsgd_decode_sum(&mut sum, wnorm, self.s, m));
-        sum
+        // 2–4. per-worker stochastic quantization (line 6) into the widened
+        // integer buffers, compressed-domain sum all-reduce (line 7) in
+        // place, single reconstruct from the exact integer sum (line 8) —
+        // accumulator width chosen per step by the widening rule.
+        let s = self.s;
+        let wire_bits = kernels::bits_for_s(s);
+        let mut out = vec![0.0f32; n];
+        if fused::narrow_fits(s, m) {
+            fused::qsgd_step_int(
+                grads,
+                wnorm,
+                s,
+                wire_bits,
+                &mut self.scratch16,
+                &mut self.uniform,
+                ctx,
+                rng,
+                &mut out,
+            );
+        } else {
+            fused::qsgd_step_int(
+                grads,
+                wnorm,
+                s,
+                wire_bits,
+                &mut self.scratch32,
+                &mut self.uniform,
+                ctx,
+                rng,
+                &mut out,
+            );
+        }
+        out
     }
 }
 
@@ -156,6 +175,31 @@ mod tests {
                 )?;
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_integer_domain_bit_identical_to_f32_reference() {
+        // the tentpole contract at aggregator level: the widened-integer
+        // pipeline must reproduce the legacy f32-level pipeline exactly.
+        check("qsgd int aggregate == f32 reference", 40, |g| {
+            let m = g.usize_in(1, 6);
+            let bits = *g.pick(&[2usize, 4, 8, 12]);
+            let n = g.size_scaled(1, 1500);
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let seed = g.rng().next_u64();
+
+            let mut agg = QsgdMaxNorm::new(bits).unwrap();
+            let (got, _) = run(&mut agg, &grads, seed);
+
+            let wnorm = refs
+                .iter()
+                .map(|v| crate::compress::kernels::l2_norm(v))
+                .fold(0.0f32, f32::max);
+            let rng = Rng::new(seed);
+            let want = crate::compress::fused::reference_qsgd_aggregate(&refs, wnorm, agg.s, &rng);
+            ensure(got == want, "integer-domain output differs from f32 reference")
         });
     }
 

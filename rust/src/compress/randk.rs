@@ -16,8 +16,10 @@
 
 use crate::collectives::StepCtx;
 use crate::util::rng::Rng;
+use crate::util::threads;
 
-use super::kernels;
+use super::fused;
+use super::kernels::{self, ScaleTable};
 use super::Aggregator;
 
 /// Shared-seed coordinate draw: every worker derives the same stream.
@@ -31,6 +33,18 @@ fn gather(v: &[f32], idx: &[usize], out: &mut Vec<f32>) {
     out.extend(idx.iter().map(|&i| v[i]));
 }
 
+/// Parallel per-worker gather of the shared K coordinates into reusable
+/// dense scratch (persistent pool — gathers are random-access bound).
+fn gather_all(grads: &[&[f32]], idx: &[usize], dense: &mut Vec<Vec<f32>>) {
+    let m = grads.len();
+    dense.resize_with(m, Vec::new);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m);
+    for (d, g) in dense.iter_mut().zip(grads) {
+        tasks.push(Box::new(move || gather(g, idx, d)));
+    }
+    threads::pool().scope_run(tasks);
+}
+
 pub struct GlobalRandK {
     pub bits: usize,
     pub s: usize,
@@ -38,21 +52,25 @@ pub struct GlobalRandK {
     pub n: usize,
     pub rescale: bool,
     dense: Vec<Vec<f32>>,
-    levels: Vec<Vec<f32>>,
-    uniform: Vec<f32>,
+    levels16: Vec<Vec<i16>>,
+    levels32: Vec<Vec<i32>>,
+    uniform: Vec<Vec<f32>>,
 }
 
 impl GlobalRandK {
     pub fn new(bits: usize, k: usize, n: usize) -> anyhow::Result<GlobalRandK> {
         anyhow::ensure!(k >= 1 && k <= n, "K must be in 1..=n (K={k}, n={n})");
+        let s = kernels::s_for_bits(bits);
+        fused::assert_widening_rule(s)?;
         Ok(GlobalRandK {
             bits,
-            s: kernels::s_for_bits(bits),
+            s,
             k,
             n,
             rescale: false,
             dense: Vec::new(),
-            levels: Vec::new(),
+            levels16: Vec::new(),
+            levels32: Vec::new(),
             uniform: Vec::new(),
         })
     }
@@ -76,49 +94,57 @@ impl Aggregator for GlobalRandK {
         let m = grads.len();
         let n = grads[0].len();
         debug_assert_eq!(n, self.n);
+        assert!(m <= fused::MAX_WORKERS, "M={m} exceeds MAX_WORKERS");
 
         // shared coordinate draw (no wire cost: shared seed)
         let idx = shared_indices(rng, n, self.k);
 
         // gather sub-vectors; norms are over the gathered K-vector
-        self.dense.resize_with(m, Vec::new);
         let dense = &mut self.dense;
-        ctx.time_encode(|| {
-            for (w, g) in grads.iter().enumerate() {
-                gather(g, &idx, &mut dense[w]);
-            }
-        });
+        ctx.time_encode(|| gather_all(grads, &idx, dense));
         let norms: Vec<f32> = self.dense.iter().map(|d| kernels::l2_norm(d)).collect();
         let wnorm = ctx.allreduce_max_scalar(&norms);
 
-        // QSGDMaxNorm on the K-vector
-        self.levels.resize_with(m, Vec::new);
-        self.uniform.resize(self.k, 0.0);
-        let (s, k, levels, uniform, dense) =
-            (self.s, self.k, &mut self.levels, &mut self.uniform, &self.dense);
-        ctx.time_encode(|| {
-            for w in 0..m {
-                let mut wrng = rng.derive(&[w as u64]);
-                levels[w].resize(k, 0.0);
-                wrng.fill_uniform_f32(uniform);
-                kernels::qsgd_encode(&dense[w], wnorm, uniform, s, &mut levels[w]);
-            }
-        });
-
-        let bufs: Vec<Vec<f32>> = self.levels.iter().map(|v| v.clone()).collect();
-        let mut sum = ctx.allreduce_sum(bufs, kernels::bits_for_s(self.s));
-
-        // decode + scatter back (+ n/K unbiasedness rescale)
+        // QSGDMaxNorm on the K-vector: integer-domain encode + all-reduce
+        let s = self.s;
+        let wire_bits = kernels::bits_for_s(s);
+        let dense_refs: Vec<&[f32]> = self.dense.iter().map(|d| d.as_slice()).collect();
         let rescale = if self.rescale { n as f32 / self.k as f32 } else { 1.0 };
+        let mut sub = vec![0.0f32; self.k];
+        if fused::narrow_fits(s, m) {
+            fused::qsgd_step_int(
+                &dense_refs,
+                wnorm,
+                s,
+                wire_bits,
+                &mut self.levels16,
+                &mut self.uniform,
+                ctx,
+                rng,
+                &mut sub,
+            );
+        } else {
+            fused::qsgd_step_int(
+                &dense_refs,
+                wnorm,
+                s,
+                wire_bits,
+                &mut self.levels32,
+                &mut self.uniform,
+                ctx,
+                rng,
+                &mut sub,
+            );
+        }
+
+        // scatter back (+ n/K unbiasedness rescale)
+        let mut out = vec![0.0f32; n];
         ctx.time_decode(|| {
-            kernels::qsgd_decode_sum(&mut sum, wnorm, s, m);
-            let mut out = vec![0.0f32; n];
             for (j, &i) in idx.iter().enumerate() {
-                out[i] = sum[j] * rescale;
+                out[i] = sub[j] * rescale;
             }
-            sum = out;
         });
-        sum
+        out
     }
 }
 
@@ -129,27 +155,38 @@ pub struct GlobalRandKMultiScale {
     pub k: usize,
     pub n: usize,
     pub rescale: bool,
+    table: ScaleTable,
     dense: Vec<Vec<f32>>,
-    levels: Vec<Vec<f32>>,
+    levels16: Vec<Vec<i16>>,
+    levels32: Vec<Vec<i32>>,
     idx_scratch: Vec<Vec<u8>>,
-    uniform: Vec<f32>,
+    uniform: Vec<Vec<f32>>,
 }
 
 impl GlobalRandKMultiScale {
     pub fn new(bits: &[usize], k: usize, n: usize) -> anyhow::Result<GlobalRandKMultiScale> {
         anyhow::ensure!(k >= 1 && k <= n, "K must be in 1..=n (K={k}, n={n})");
         anyhow::ensure!(bits.len() >= 2, "multi-scale needs >= 2 scales");
+        anyhow::ensure!(
+            bits.len() <= kernels::MAX_SCALES,
+            "multi-scale supports at most {} scales",
+            kernels::MAX_SCALES
+        );
         let mut scales: Vec<usize> = bits.iter().map(|&b| kernels::s_for_bits(b)).collect();
         scales.sort_unstable();
         anyhow::ensure!(scales.windows(2).all(|w| w[0] < w[1]), "scales must be distinct");
+        fused::assert_widening_rule(scales[scales.len() - 1])?;
+        let table = ScaleTable::new(&scales);
         Ok(GlobalRandKMultiScale {
             bits: bits.to_vec(),
             scales,
+            table,
             k,
             n,
             rescale: false,
             dense: Vec::new(),
-            levels: Vec::new(),
+            levels16: Vec::new(),
+            levels32: Vec::new(),
             idx_scratch: Vec::new(),
             uniform: Vec::new(),
         })
@@ -179,65 +216,62 @@ impl Aggregator for GlobalRandKMultiScale {
     fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32> {
         let m = grads.len();
         let n = grads[0].len();
+        assert!(m <= fused::MAX_WORKERS, "M={m} exceeds MAX_WORKERS");
 
         let idx = shared_indices(rng, n, self.k);
 
-        self.dense.resize_with(m, Vec::new);
         let dense = &mut self.dense;
-        ctx.time_encode(|| {
-            for (w, g) in grads.iter().enumerate() {
-                gather(g, &idx, &mut dense[w]);
-            }
-        });
+        ctx.time_encode(|| gather_all(grads, &idx, dense));
         let norms: Vec<f32> = self.dense.iter().map(|d| kernels::l2_norm(d)).collect();
         let wnorm = ctx.allreduce_max_scalar(&norms);
 
         // per-worker scale proposal + scale sharing on the K-vector
-        self.idx_scratch.resize_with(m, Vec::new);
-        let (scales, k, idx_scratch, dense) =
-            (&self.scales, self.k, &mut self.idx_scratch, &self.dense);
-        ctx.time_encode(|| {
-            for w in 0..m {
-                idx_scratch[w].resize(k, 0);
-                kernels::multiscale_scale_index(&dense[w], wnorm, scales, &mut idx_scratch[w]);
-            }
-        });
+        let table = self.table;
+        let dense_refs: Vec<&[f32]> = self.dense.iter().map(|d| d.as_slice()).collect();
+        let idx_scratch = &mut self.idx_scratch;
+        ctx.time_encode(|| fused::scale_index_into(&dense_refs, wnorm, &table, idx_scratch));
         let shared_scale_idx = ctx.allreduce_min_u8(&self.idx_scratch, self.index_bits());
 
-        self.levels.resize_with(m, Vec::new);
-        self.uniform.resize(self.k, 0.0);
-        let (levels, uniform, dense) = (&mut self.levels, &mut self.uniform, &self.dense);
-        let scales = &self.scales;
-        ctx.time_encode(|| {
-            for w in 0..m {
-                let mut wrng = rng.derive(&[w as u64]);
-                levels[w].resize(k, 0.0);
-                wrng.fill_uniform_f32(uniform);
-                kernels::multiscale_encode(
-                    &dense[w],
-                    wnorm,
-                    uniform,
-                    &shared_scale_idx,
-                    scales,
-                    &mut levels[w],
-                );
-            }
-        });
-
-        let bufs: Vec<Vec<f32>> = self.levels.iter().map(|v| v.clone()).collect();
-        let mut sum = ctx.allreduce_sum(bufs, kernels::bits_for_s(self.scales[0]));
-
+        // multi-scale encode into widened integer buffers + integer-domain
+        // sum all-reduce (levels bounded by s_min + 1)
+        let payload_bits = kernels::bits_for_s(self.scales[0]);
         let rescale = if self.rescale { n as f32 / self.k as f32 } else { 1.0 };
-        let scales = &self.scales;
+        let mut sub = vec![0.0f32; self.k];
+        if fused::narrow_fits(self.scales[0] + 1, m) {
+            fused::multiscale_step_int(
+                &dense_refs,
+                wnorm,
+                &table,
+                &shared_scale_idx,
+                payload_bits,
+                &mut self.levels16,
+                &mut self.uniform,
+                ctx,
+                rng,
+                &mut sub,
+            );
+        } else {
+            fused::multiscale_step_int(
+                &dense_refs,
+                wnorm,
+                &table,
+                &shared_scale_idx,
+                payload_bits,
+                &mut self.levels32,
+                &mut self.uniform,
+                ctx,
+                rng,
+                &mut sub,
+            );
+        }
+
+        let mut out = vec![0.0f32; n];
         ctx.time_decode(|| {
-            kernels::multiscale_decode_sum(&mut sum, wnorm, &shared_scale_idx, scales, m);
-            let mut out = vec![0.0f32; n];
             for (j, &i) in idx.iter().enumerate() {
-                out[i] = sum[j] * rescale;
+                out[i] = sub[j] * rescale;
             }
-            sum = out;
         });
-        sum
+        out
     }
 }
 

@@ -5,6 +5,79 @@
 //! layout). These kernels are written to autovectorize; the perf pass
 //! (EXPERIMENTS.md §Perf) confirms they run at memory bandwidth.
 
+/// Widened integer level buffers for the compressed-domain hot path.
+///
+/// Quantizer levels are exact small integers; carrying them as `f32` (the
+/// pre-integer-domain pipeline) moves 32 bits per coordinate through memory
+/// for a nominally 2–16-bit wire format. A `LevelInt` buffer is the widened
+/// accumulator the all-reduce sums into: the width is chosen so that
+/// `workers * s` cannot overflow (`DESIGN.md` §Performance, the widening
+/// rule `bits × workers → accumulator width`). `i16` halves the memory
+/// traffic of the old `f32` path; `i32` is the fallback for extreme
+/// `bits × workers` products.
+pub trait LevelInt:
+    Copy
+    + Default
+    + Send
+    + Sync
+    + PartialEq
+    + std::fmt::Debug
+    + std::ops::AddAssign
+    + 'static
+{
+    /// Largest magnitude the accumulator can hold.
+    const MAX_MAG: i64;
+    /// Short type tag for bench/report labels ("i16", "i32", ...).
+    const TAG: &'static str;
+
+    /// Cast an exact-integer f32 quantizer level. Debug-asserts the value
+    /// is integral and in range — quantizer level bounds guarantee it.
+    fn from_level(level: f32) -> Self;
+    fn to_f32(self) -> f32;
+    fn to_i64(self) -> i64;
+}
+
+macro_rules! impl_level_int {
+    ($t:ty, $tag:literal) => {
+        impl LevelInt for $t {
+            const MAX_MAG: i64 = <$t>::MAX as i64;
+            const TAG: &'static str = $tag;
+
+            #[inline(always)]
+            fn from_level(level: f32) -> Self {
+                debug_assert_eq!(level.fract(), 0.0, "non-integer level {level}");
+                debug_assert!(
+                    (level.abs() as i64) <= Self::MAX_MAG,
+                    "level {level} overflows {}",
+                    Self::TAG
+                );
+                level as $t
+            }
+
+            #[inline(always)]
+            fn to_f32(self) -> f32 {
+                self as f32
+            }
+
+            #[inline(always)]
+            fn to_i64(self) -> i64 {
+                self as i64
+            }
+        }
+    };
+}
+
+impl_level_int!(i8, "i8");
+impl_level_int!(i16, "i16");
+impl_level_int!(i32, "i32");
+
+/// The widening rule, reusable anywhere a buffer width is chosen: can an
+/// all-reduce over `workers` buffers of levels bounded by `s` accumulate in
+/// `T` without overflow?
+pub fn sum_fits<T: LevelInt>(s: usize, workers: usize) -> bool {
+    (workers as i64).saturating_mul(s as i64) <= T::MAX_MAG
+}
+
 /// y += a * x
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -154,6 +227,24 @@ pub fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
 mod tests {
     use super::*;
     use crate::util::quickcheck::{check, ensure, ensure_close};
+
+    #[test]
+    fn level_int_widening_rule_and_casts() {
+        // every width round-trips exact integer levels losslessly
+        for lv in [-127.0f32, -1.0, 0.0, 1.0, 127.0] {
+            assert_eq!(i8::from_level(lv).to_f32(), lv);
+            assert_eq!(i16::from_level(lv).to_f32(), lv);
+            assert_eq!(i32::from_level(lv).to_f32(), lv);
+            assert_eq!(i8::from_level(lv).to_i64(), lv as i64);
+        }
+        // the widening rule: workers * s must fit the accumulator
+        assert!(sum_fits::<i8>(7, 18)); // 4-bit levels, 18 workers: 126
+        assert!(!sum_fits::<i8>(7, 19)); // 133 > i8::MAX
+        assert!(sum_fits::<i16>(2047, 16)); // 12-bit, 16 workers: 32752
+        assert!(!sum_fits::<i16>(2047, 17));
+        assert!(sum_fits::<i32>(32767, 4096)); // 16-bit at MAX_WORKERS
+        assert_eq!(i16::TAG, "i16");
+    }
 
     #[test]
     fn axpy_and_dot_basics() {

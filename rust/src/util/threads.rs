@@ -1,11 +1,221 @@
-//! Scoped-thread parallel helpers (no rayon in the vendored set).
+//! Persistent worker pool for the L3 hot path.
 //!
-//! Used on the L3 hot path to parallelize per-worker encode/decode across
-//! OS threads. Keep granularity coarse (one task per simulated worker or
-//! per large chunk) — task spawn cost is a thread spawn.
+//! The previous incarnation spawned OS threads per call (`std::thread::scope`
+//! in every aggregator step) and funneled `par_map` results through a
+//! `Mutex<Vec>` while claiming work from the *end* of the queue. This module
+//! replaces both with one process-wide pool:
+//!
+//! * workers are spawned once ([`pool`]) and woken through a condvar — a
+//!   per-step task costs a queue push, not a thread spawn;
+//! * [`par_map`] / [`par_chunks_mut`] claim work FIFO via an atomic index and
+//!   write results into disjoint slots — no result mutex, order preserved;
+//! * callers *help*: the thread that submits a batch drains the queue until
+//!   its batch completes, which keeps nested submissions deadlock-free and
+//!   uses the caller's core instead of parking it.
+//!
+//! Keep granularity coarse (one task per simulated worker or per large
+//! chunk) — a task still costs a queue round-trip.
 
-/// Parallel map over `items`, at most `max_threads` concurrent threads.
-/// Preserves input order in the output.
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Completion latch shared by one batch of submitted tasks.
+struct Batch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Batch {
+    fn new(n: usize) -> Arc<Batch> {
+        Arc::new(Batch {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        })
+    }
+
+    fn job_done(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.done.wait(rem).unwrap();
+        }
+    }
+}
+
+/// A queued unit of work. The closure is transmuted to `'static`; soundness
+/// comes from [`ThreadPool::scope_run`] blocking until the batch completes,
+/// so every borrow captured by the closure outlives its execution.
+struct Job {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    batch: Arc<Batch>,
+}
+
+fn run_job(job: Job) {
+    let result = catch_unwind(AssertUnwindSafe(job.run));
+    if result.is_err() {
+        job.batch.panicked.store(true, Ordering::SeqCst);
+    }
+    job.batch.job_done();
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    work: Condvar,
+}
+
+/// Persistent worker pool. One global instance serves the whole process
+/// ([`pool`]); dedicated instances are only built by tests.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        run_job(job);
+    }
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("repro-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, threads }
+    }
+
+    /// Number of pool worker threads (the submitting thread helps too).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a batch of borrowed closures to completion across the pool.
+    ///
+    /// Blocks until every task has finished — that blocking is what makes
+    /// the internal lifetime transmute sound. The calling thread helps drain
+    /// the queue, so nested `scope_run` from inside a task cannot deadlock.
+    /// Panics (after the whole batch has settled) if any task panicked.
+    pub fn scope_run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let batch = Batch::new(tasks.len());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                // SAFETY: `batch.wait()` below does not return until this
+                // closure has run to completion (or the pool worker running
+                // it has counted it done after a panic), so the 'scope
+                // borrows it captures are live throughout its execution.
+                let run: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(t)
+                };
+                q.jobs.push_back(Job { run, batch: batch.clone() });
+            }
+        }
+        self.shared.work.notify_all();
+
+        // Caller-helps loop: execute queued jobs (ours or another batch's)
+        // until our batch is done; park only when the queue is drained.
+        loop {
+            if batch.is_done() {
+                break;
+            }
+            let job = self.shared.queue.lock().unwrap().jobs.pop_front();
+            match job {
+                Some(j) => run_job(j),
+                None => {
+                    batch.wait();
+                    break;
+                }
+            }
+        }
+        if batch.panicked.load(Ordering::SeqCst) {
+            panic!("ThreadPool task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide pool, spawned on first use with
+/// [`default_parallelism`] workers.
+pub fn pool() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_parallelism()))
+}
+
+/// Raw-pointer wrapper for handing disjoint slots/slices to pool tasks.
+struct SendPtr<P>(*mut P);
+impl<P> Clone for SendPtr<P> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<P> Copy for SendPtr<P> {}
+// SAFETY: every use partitions the pointee by index so no two tasks touch
+// the same element; completion is ordered by the batch latch.
+unsafe impl<P> Send for SendPtr<P> {}
+
+/// Parallel map over `items`, at most `max_threads` concurrent workers.
+/// Preserves input order in the output. Work is claimed FIFO through an
+/// atomic index; each result is written to its own slot (no result mutex).
 pub fn par_map<T, R, F>(items: Vec<T>, max_threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -16,49 +226,82 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let threads = max_threads.max(1).min(n);
+    let threads = max_threads.max(1).min(n).min(pool().threads() + 1);
     if threads == 1 {
         return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
 
+    let mut slots: Vec<Option<T>> = items.into_iter().map(Some).collect();
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
-    let queue = std::sync::Mutex::new(work);
-    let results = std::sync::Mutex::new(&mut out);
+    let next = AtomicUsize::new(0);
+    let in_ptr = SendPtr(slots.as_mut_ptr());
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let fref = &f;
+    let nref = &next;
 
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let item = { queue.lock().unwrap().pop() };
-                match item {
-                    Some((i, t)) => {
-                        let r = f(i, t);
-                        results.lock().unwrap()[i] = Some(r);
-                    }
-                    None => break,
-                }
-            });
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        tasks.push(Box::new(move || loop {
+            let i = nref.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            // SAFETY: the atomic fetch_add hands index i to exactly one
+            // task, so the take/write below touch disjoint slots.
+            let item = unsafe { (*in_ptr.0.add(i)).take().expect("item claimed twice") };
+            let r = fref(i, item);
+            unsafe {
+                *out_ptr.0.add(i) = Some(r);
+            }
+        }));
+    }
+    pool().scope_run(tasks);
 
     out.into_iter().map(|r| r.expect("par_map: task not run")).collect()
 }
 
 /// Split `buf` into `parts` near-equal mutable chunks and run `f` on each in
 /// parallel — the zero-copy path for elementwise kernels over big vectors.
+/// Chunks are claimed through an atomic index on the persistent pool.
 pub fn par_chunks_mut<F>(buf: &mut [f32], parts: usize, f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
     let n = buf.len();
-    let parts = parts.max(1).min(n.max(1));
+    if n == 0 {
+        return;
+    }
+    let parts = parts.max(1).min(n);
     let chunk = n.div_ceil(parts);
-    std::thread::scope(|scope| {
+    let nchunks = n.div_ceil(chunk);
+    let threads = (pool().threads() + 1).min(nchunks);
+    if threads <= 1 || nchunks == 1 {
         for (i, piece) in buf.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            scope.spawn(move || f(i, i * chunk, piece));
+            f(i, i * chunk, piece);
         }
-    });
+        return;
+    }
+
+    let base = SendPtr(buf.as_mut_ptr());
+    let next = AtomicUsize::new(0);
+    let fref = &f;
+    let nref = &next;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        tasks.push(Box::new(move || loop {
+            let c = nref.fetch_add(1, Ordering::Relaxed);
+            if c >= nchunks {
+                break;
+            }
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            // SAFETY: chunk ranges [lo, hi) are disjoint across claimed
+            // indices, so each task gets an exclusive subslice.
+            let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+            fref(c, lo, piece);
+        }));
+    }
+    pool().scope_run(tasks);
 }
 
 /// Number of worker threads to use by default (leave one core for the OS).
@@ -96,5 +339,67 @@ mod tests {
         for (i, v) in buf.iter().enumerate() {
             assert_eq!(*v, i as f32);
         }
+    }
+
+    #[test]
+    fn pool_reused_across_many_batches() {
+        // regression for the per-call spawn cost: the same pool instance
+        // must serve many submissions (threads stay up between batches).
+        let p = pool();
+        let hits = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let h = &hits;
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| Box::new(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>)
+                .collect();
+            p.scope_run(tasks);
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn nested_scope_run_does_not_deadlock() {
+        let total = AtomicUsize::new(0);
+        let t = &total;
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| Box::new(move || {
+                            t.fetch_add(1, Ordering::Relaxed);
+                        }) as Box<dyn FnOnce() + Send + '_>)
+                        .collect();
+                    pool().scope_run(inner);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool().scope_run(outer);
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn dedicated_pool_shuts_down_cleanly() {
+        let p = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let h = &hits;
+        p.scope_run(
+            (0..8)
+                .map(|_| Box::new(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>)
+                .collect(),
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        drop(p); // must join workers without hanging
+    }
+
+    #[test]
+    #[should_panic(expected = "ThreadPool task panicked")]
+    fn task_panic_propagates() {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("boom")), Box::new(|| {})];
+        pool().scope_run(tasks);
     }
 }

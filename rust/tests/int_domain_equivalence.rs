@@ -1,0 +1,303 @@
+//! Integer-domain equivalence (the tentpole acceptance property):
+//!
+//! For random gradients, worker counts, and bit-widths, the fused
+//! encode→pack→ring-allreduce→unpack→decode path — and the production
+//! integer-domain aggregators — produce **bit-identical** output to the
+//! legacy f32-level pipeline, under every reduction algorithm. Integer sums
+//! are exact, so comparisons are `assert_eq`-strict (no tolerance).
+//!
+//! These tests run without lowered artifacts or a PJRT backend: they
+//! exercise L3 (kernels, bitpack, collectives, aggregators) only.
+
+use repro::collectives::{self, StepCtx};
+use repro::compress::{fused, kernels, Aggregator, Method};
+use repro::netsim::{Algo, NetConfig, SimClock};
+use repro::util::quickcheck::{check, ensure};
+use repro::util::rng::Rng;
+
+fn random_grads(g: &mut repro::util::quickcheck::Gen, m: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..m).map(|_| g.vec_normal(n, 1.0)).collect()
+}
+
+fn max_norm(refs: &[&[f32]]) -> f32 {
+    refs.iter().map(|v| kernels::l2_norm(v)).fold(0.0f32, f32::max)
+}
+
+fn run_aggregator(
+    spec: &str,
+    n: usize,
+    grads: &[Vec<f32>],
+    seed: u64,
+    algo: Algo,
+) -> Vec<f32> {
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let mut agg = Method::parse(spec).unwrap().build(n, &[]).unwrap();
+    let mut net = NetConfig::flat(grads.len(), 10.0);
+    net.algo = algo;
+    let mut clock = SimClock::default();
+    let mut ctx = StepCtx::new(&net, &mut clock);
+    let mut rng = Rng::new(seed);
+    agg.aggregate(&refs, &mut ctx, &mut rng)
+}
+
+fn f32_allreduce(bufs: &mut [Vec<f32>], algo: Algo) {
+    match algo {
+        Algo::Ring => collectives::ring_allreduce_sum(bufs),
+        Algo::Tree => collectives::tree_allreduce_sum(bufs),
+        Algo::Naive => collectives::naive_allreduce_sum(bufs),
+    }
+}
+
+/// Legacy f32-level QSGD-MN pipeline, replicated through public APIs.
+fn reference_qsgd(grads: &[&[f32]], bits: usize, seed: u64, algo: Algo) -> Vec<f32> {
+    let m = grads.len();
+    let n = grads[0].len();
+    let s = kernels::s_for_bits(bits);
+    let wnorm = max_norm(grads);
+    let rng = Rng::new(seed);
+    let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(m);
+    for (w, g) in grads.iter().enumerate() {
+        let mut wrng = rng.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; n];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut buf = vec![0.0f32; n];
+        kernels::qsgd_encode(g, wnorm, &uni, s, &mut buf);
+        bufs.push(buf);
+    }
+    f32_allreduce(&mut bufs, algo);
+    let mut sum = bufs.swap_remove(0);
+    kernels::qsgd_decode_sum(&mut sum, wnorm, s, m);
+    sum
+}
+
+/// Legacy f32-level QSGD-MN-TS pipeline, replicated through public APIs.
+fn reference_multiscale(grads: &[&[f32]], scales: &[usize], seed: u64, algo: Algo) -> Vec<f32> {
+    let m = grads.len();
+    let n = grads[0].len();
+    let wnorm = max_norm(grads);
+    let rng = Rng::new(seed);
+
+    let mut proposals: Vec<Vec<u8>> = Vec::with_capacity(m);
+    for g in grads {
+        let mut idx = vec![0u8; n];
+        kernels::multiscale_scale_index(g, wnorm, scales, &mut idx);
+        proposals.push(idx);
+    }
+    let shared = collectives::min_allreduce_u8(&proposals);
+
+    let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(m);
+    for (w, g) in grads.iter().enumerate() {
+        let mut wrng = rng.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; n];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut buf = vec![0.0f32; n];
+        kernels::multiscale_encode(g, wnorm, &uni, &shared, scales, &mut buf);
+        bufs.push(buf);
+    }
+    f32_allreduce(&mut bufs, algo);
+    let mut sum = bufs.swap_remove(0);
+    kernels::multiscale_decode_sum(&mut sum, wnorm, &shared, scales, m);
+    sum
+}
+
+/// Legacy f32-level GRandK-MN pipeline, replicated through public APIs.
+fn reference_grandk(grads: &[&[f32]], bits: usize, k: usize, seed: u64, algo: Algo) -> Vec<f32> {
+    let m = grads.len();
+    let n = grads[0].len();
+    let s = kernels::s_for_bits(bits);
+    let root = Rng::new(seed);
+    let idx = root.derive(&[0x6B6579]).sample_distinct(n, k);
+
+    let dense: Vec<Vec<f32>> = grads
+        .iter()
+        .map(|g| idx.iter().map(|&i| g[i]).collect())
+        .collect();
+    let dense_refs: Vec<&[f32]> = dense.iter().map(|d| d.as_slice()).collect();
+    let wnorm = max_norm(&dense_refs);
+
+    let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(m);
+    for (w, d) in dense.iter().enumerate() {
+        let mut wrng = root.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; k];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut buf = vec![0.0f32; k];
+        kernels::qsgd_encode(d, wnorm, &uni, s, &mut buf);
+        bufs.push(buf);
+    }
+    f32_allreduce(&mut bufs, algo);
+    let mut sum = bufs.swap_remove(0);
+    kernels::qsgd_decode_sum(&mut sum, wnorm, s, m);
+
+    let mut out = vec![0.0f32; n];
+    for (j, &i) in idx.iter().enumerate() {
+        out[i] = sum[j];
+    }
+    out
+}
+
+fn pick_algo(g: &mut repro::util::quickcheck::Gen) -> Algo {
+    *g.pick(&[Algo::Ring, Algo::Tree, Algo::Naive])
+}
+
+#[test]
+fn prop_qsgd_aggregator_bit_identical_across_algos() {
+    check("QSGD-MN int == f32 reference (ring/tree/naive)", 60, |g| {
+        let m = g.usize_in(1, 8);
+        let bits = *g.pick(&[2usize, 3, 4, 6, 8, 12, 16]);
+        let n = g.size_scaled(1, 2500);
+        let grads = random_grads(g, m, n);
+        let seed = g.rng().next_u64();
+        let algo = pick_algo(g);
+        let got = run_aggregator(&format!("qsgd-mn-{bits}"), n, &grads, seed, algo);
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let want = reference_qsgd(&refs, bits, seed, algo);
+        if got != want {
+            let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "bits={bits} m={m} n={n} algo={algo:?}: first diff at {bad}: {} vs {}",
+                got[bad], want[bad]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multiscale_aggregator_bit_identical_across_algos() {
+    check("QSGD-MN-TS int == f32 reference", 40, |g| {
+        let m = g.usize_in(1, 6);
+        let bit_sets: [&[usize]; 3] = [&[2, 6], &[4, 8], &[2, 6, 10]];
+        let bits: &[usize] = bit_sets[g.usize_in(0, 2)];
+        let n = g.size_scaled(1, 2000);
+        let grads = random_grads(g, m, n);
+        let seed = g.rng().next_u64();
+        let algo = pick_algo(g);
+        let spec = format!(
+            "qsgd-mn-ts-{}-{}",
+            bits[0],
+            bits[1] // CLI spec takes two scales; 3-scale set tested below
+        );
+        let (got, scales) = if bits.len() == 2 {
+            let scales: Vec<usize> = bits.iter().map(|&b| kernels::s_for_bits(b)).collect();
+            (run_aggregator(&spec, n, &grads, seed, algo), scales)
+        } else {
+            // build directly for >2 scales
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let mut agg = repro::compress::multiscale::QsgdMultiScale::new(bits).unwrap();
+            let mut net = NetConfig::flat(m, 10.0);
+            net.algo = algo;
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            let mut rng = Rng::new(seed);
+            let out = agg.aggregate(&refs, &mut ctx, &mut rng);
+            (out, agg.scales.clone())
+        };
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let want = reference_multiscale(&refs, &scales, seed, algo);
+        if got != want {
+            let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "bits={bits:?} m={m} n={n} algo={algo:?}: first diff at {bad}: {} vs {}",
+                got[bad], want[bad]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grandk_aggregator_bit_identical() {
+    check("GRandK-MN int == f32 reference", 40, |g| {
+        let m = g.usize_in(1, 6);
+        let bits = *g.pick(&[2usize, 4, 8]);
+        let n = g.size_scaled(32, 3000);
+        let k = g.usize_in(1, n / 2);
+        let grads = random_grads(g, m, n);
+        let seed = g.rng().next_u64();
+        let algo = pick_algo(g);
+        let got = run_aggregator(&format!("grandk-mn-{bits}-k{k}"), n, &grads, seed, algo);
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let want = reference_grandk(&refs, bits, k, seed, algo);
+        if got != want {
+            let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "bits={bits} m={m} n={n} k={k} algo={algo:?}: diff at {bad}: {} vs {}",
+                got[bad], want[bad]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_wire_path_bit_identical_and_byte_exact() {
+    // the full fused chain including the packed wire hop:
+    // encode → pack → unpack → int ring-allreduce → decode.
+    check("fused wire chain == f32 reference", 50, |g| {
+        let m = g.usize_in(1, 8);
+        let bits = *g.pick(&[2usize, 3, 4, 5, 6, 8, 12]);
+        let n = g.size_scaled(1, 2000);
+        let grads = random_grads(g, m, n);
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let wnorm = max_norm(&refs);
+        let seed = g.rng().next_u64();
+        let rng = Rng::new(seed);
+        let s = kernels::s_for_bits(bits);
+
+        let (got, wire_bytes) = if repro::tensor::sum_fits::<i16>(s, m) {
+            fused::wire_roundtrip_qsgd::<i16>(&refs, wnorm, bits, &rng)
+        } else {
+            fused::wire_roundtrip_qsgd::<i32>(&refs, wnorm, bits, &rng)
+        };
+        let want = reference_qsgd(&refs, bits, seed, Algo::Ring);
+        ensure(got == want, "fused wire chain differs from f32 reference")?;
+        ensure(
+            wire_bytes == (n * bits).div_ceil(8),
+            "wire bytes must be byte-exact ceil(n*b/8)",
+        )
+    });
+}
+
+#[test]
+fn int_reducers_agree_exactly_on_quantizer_output() {
+    // ring/tree/naive integer reducers on real quantizer levels: exact
+    // agreement, every rank, both widths.
+    let mut rng = Rng::new(42);
+    for &(m, bits, n) in &[(4usize, 4usize, 1000usize), (7, 8, 517), (3, 12, 64)] {
+        let s = kernels::s_for_bits(bits);
+        let grads: Vec<Vec<f32>> = (0..m)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let wnorm = max_norm(&refs);
+        let mut levels: Vec<Vec<i32>> = Vec::new();
+        let mut uniform: Vec<Vec<f32>> = Vec::new();
+        fused::encode_qsgd_into(&refs, wnorm, s, &mut levels, &mut uniform, &Rng::new(7));
+
+        let mut ring = levels.clone();
+        let mut tree = levels.clone();
+        let mut naive = levels.clone();
+        collectives::ring_allreduce_sum_i32(&mut ring);
+        collectives::tree_allreduce_sum_t(&mut tree);
+        collectives::naive_allreduce_sum_t(&mut naive);
+        for r in 0..m {
+            assert_eq!(ring[r], naive[0], "ring rank {r} (m={m} bits={bits})");
+            assert_eq!(tree[r], naive[0], "tree rank {r} (m={m} bits={bits})");
+        }
+        // i16 width agrees after widening
+        let as16: Vec<Vec<i16>> = levels
+            .iter()
+            .map(|b| b.iter().map(|&x| x as i16).collect())
+            .collect();
+        let mut ring16 = as16;
+        collectives::ring_allreduce_sum_i16(&mut ring16);
+        for r in 0..m {
+            let widened: Vec<i32> = ring16[r].iter().map(|&x| x as i32).collect();
+            assert_eq!(widened, naive[0], "i16 ring rank {r}");
+        }
+    }
+}

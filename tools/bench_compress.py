@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Run the compression micro-benches and emit BENCH_compress.json.
+
+Runs `cargo bench --bench micro_compressors` and `--bench micro_collectives`
+(release profile, custom harness) with REPRO_BENCH_JSON pointed at temp
+files, merges the two reports, and writes `BENCH_compress.json` at the repo
+root so the perf trajectory is tracked from this PR onward.
+
+Usage:
+    python3 tools/bench_compress.py [--n COORDS] [--out PATH]
+
+The acceptance gates this file evidences (ISSUE 1):
+  * >= 4x throughput on pack/unpack vs the scalar reference;
+  * a measured speedup on the fused QSGD-MN-4 encode->allreduce->decode
+    step vs the seed f32-level path, same machine, same run.
+"""
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUST_DIR = os.path.join(REPO_ROOT, "rust")
+
+
+def run_bench(name: str, n: int | None) -> dict:
+    fd, path = tempfile.mkstemp(prefix=f"repro_{name}_", suffix=".json")
+    os.close(fd)
+    env = dict(os.environ, REPRO_BENCH_JSON=path)
+    if n is not None:
+        env["REPRO_BENCH_N"] = str(n)
+    try:
+        subprocess.run(
+            ["cargo", "bench", "--bench", name],
+            cwd=RUST_DIR,
+            env=env,
+            check=True,
+        )
+        with open(path) as f:
+            return json.load(f)
+    finally:
+        os.unlink(path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=None, help="coordinates per gradient")
+    ap.add_argument(
+        "--out",
+        default=os.path.join(REPO_ROOT, "BENCH_compress.json"),
+        help="output path (default: repo-root BENCH_compress.json)",
+    )
+    args = ap.parse_args()
+
+    compressors = run_bench("micro_compressors", args.n)
+    collectives = run_bench("micro_collectives", args.n)
+
+    speedups = compressors.get("speedups", {})
+    gates = {
+        "pack_ge_4x": speedups.get("pack_4b", 0.0) >= 4.0
+        and speedups.get("pack_8b", 0.0) >= 4.0,
+        "unpack_ge_4x": speedups.get("unpack_4b", 0.0) >= 4.0
+        and speedups.get("unpack_8b", 0.0) >= 4.0,
+        "fused_qsgd_mn_4_faster": speedups.get("fused_qsgd_mn_4", 0.0) > 1.0,
+    }
+
+    report = {
+        "schema": "repro-bench-compress-v1",
+        "generated_unix": int(time.time()),
+        "machine": {
+            "platform": platform.platform(),
+            "cpu_count": os.cpu_count(),
+        },
+        "speedups": speedups,
+        "gates": gates,
+        "micro_compressors": compressors,
+        "micro_collectives": collectives,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    for k, ok in gates.items():
+        print(f"  {k}: {'PASS' if ok else 'FAIL'}")
+    return 0 if all(gates.values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
