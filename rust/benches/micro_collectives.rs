@@ -9,8 +9,11 @@
 mod common;
 
 use repro::collectives::{
-    naive_allreduce_sum_t, ring_allreduce_sum_t, tree_allreduce_sum_t,
+    naive_allreduce_sum_t, ring_allreduce_sum_packed, ring_allreduce_sum_t,
+    ring_allreduce_sum_t_counted, tree_allreduce_sum_t, RingTraffic,
 };
+use repro::compress::bitpack::{pack_biased_int, packed_sum_bits, Packed};
+use repro::compress::kernels::s_for_bits;
 use repro::netsim::NetConfig;
 use repro::util::json::{arr, num, obj, s as js, Json};
 use repro::util::rng::Rng;
@@ -131,6 +134,99 @@ fn main() {
             t_i16 * 1e3,
             t_i32 * 1e3
         );
+    }
+
+    // ---- packed-resident vs i16-resident ring (the PR 2 tentpole) ------
+    // The acceptance gate: with the resident reduce operand being Packed
+    // biased codes, the data plane's bytes-moved must be at most
+    // (bits/16 + eps) of the i16 plane's, eps = 0.20 covering the resident
+    // width's log2(workers) headroom for partial sums.
+    let np = (n / 4).max(64);
+    println!("\n=== packed-resident vs i16-resident ring, n={np} ===");
+    println!(
+        "{:>5} {:>8} {:>6} {:>10} {:>10} {:>12} {:>12} {:>7}",
+        "bits", "workers", "rbits", "i16 ms", "packed ms", "i16 MB", "packed MB", "ratio"
+    );
+    for bits in [2usize, 4, 8] {
+        let s = s_for_bits(bits);
+        for m in [4usize, 16, 64] {
+            let rbits = packed_sum_bits(s, m);
+            let mut rng = Rng::new((1000 * bits + m) as u64);
+            let levels: Vec<Vec<i32>> = (0..m)
+                .map(|_| {
+                    (0..np)
+                        .map(|_| rng.next_below(2 * s as u64 + 1) as i32 - s as i32)
+                        .collect()
+                })
+                .collect();
+
+            // i16-resident plane (the PR 1 data plane) + its bytes counter
+            let base16: Vec<Vec<i16>> = levels
+                .iter()
+                .map(|l| l.iter().map(|&x| x as i16).collect())
+                .collect();
+            let mut i16_bytes = 0.0f64;
+            {
+                let mut b = base16.clone();
+                ring_allreduce_sum_t_counted(&mut b, &mut i16_bytes);
+            }
+            let t_i16 = common::time_median(3, || {
+                let mut b = base16.clone();
+                ring_allreduce_sum_t(&mut b);
+                std::hint::black_box(&b);
+            });
+
+            // packed-resident plane: biased codes at the carry-safe width
+            let base_packed: Vec<Packed> = levels
+                .iter()
+                .map(|l| pack_biased_int(l, s as i64, rbits))
+                .collect();
+            let mut traffic = RingTraffic::default();
+            {
+                let mut b = base_packed.clone();
+                ring_allreduce_sum_packed(&mut b, &mut traffic);
+            }
+            let t_packed = common::time_median(3, || {
+                let mut b = base_packed.clone();
+                let mut t = RingTraffic::default();
+                ring_allreduce_sum_packed(&mut b, &mut t);
+                std::hint::black_box(&b);
+            });
+
+            let ratio = traffic.bytes_moved / i16_bytes;
+            let gate = bits as f64 / 16.0 + 0.20;
+            println!(
+                "{:>5} {:>8} {:>6} {:>10.1} {:>10.1} {:>12.1} {:>12.1} {:>7.3}",
+                bits,
+                m,
+                rbits,
+                t_i16 * 1e3,
+                t_packed * 1e3,
+                i16_bytes / 1e6,
+                traffic.bytes_moved / 1e6,
+                ratio
+            );
+            assert!(
+                ratio <= gate,
+                "packed-resident traffic ratio {ratio:.3} exceeds bits/16 + 0.20 = {gate:.3} \
+                 (bits={bits}, m={m}, rbits={rbits})"
+            );
+            for (width, t, bytes) in [
+                ("i16", t_i16, i16_bytes),
+                ("packed", t_packed, traffic.bytes_moved),
+            ] {
+                entries.push(obj(vec![
+                    ("width", js(width)),
+                    ("payload_bits", num(bits as f64)),
+                    ("resident_bits", num(if width == "packed" { rbits as f64 } else { 16.0 })),
+                    ("workers", num(m as f64)),
+                    ("algo", js("ring")),
+                    ("ms", num(t * 1e3)),
+                    ("bytes_moved", num(bytes)),
+                    ("traffic_ratio_vs_i16", num(ratio)),
+                ]));
+            }
+        }
     }
 
     println!("\n=== simulated wire time (VGG16 8-bit payload, 10 Gbps flat) ===");

@@ -203,6 +203,7 @@ impl Cluster {
         self.clock.encode_s += step_clock.encode_s;
         self.clock.decode_s += step_clock.decode_s;
         self.clock.bits_per_worker += step_clock.bits_per_worker;
+        self.clock.hop_bits_per_worker += step_clock.hop_bits_per_worker;
 
         let loss = out.losses.iter().map(|l| *l as f64).sum::<f64>() / m as f64;
         Ok(StepRecord {

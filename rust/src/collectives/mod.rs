@@ -7,9 +7,19 @@
 //! chunking, and the compressed-domain aggregation invariant are exercised
 //! for real. Simulated wire time is charged separately through
 //! [`crate::netsim::NetConfig`] by [`StepCtx`].
+//!
+//! The compressed hot path's production schedule lives in [`packed`]: a
+//! ring whose *resident* reduce operand is packed biased codes, reduced by
+//! in-place field-wise adds and charged hop-accurately at the resident
+//! segment width ([`StepCtx::charge_ring_packed`]).
 
+pub mod packed;
+
+use crate::compress::bitpack::{self, Packed};
 use crate::netsim::{NetConfig, SimClock};
 use crate::tensor::LevelInt;
+
+pub use packed::{ring_allreduce_sum_packed, RingTraffic};
 
 /// Elementwise sum all-reduce via the ring schedule, generic over the
 /// element type — the same schedule reduces `f32` gradients and the widened
@@ -26,6 +36,20 @@ pub fn ring_allreduce_sum_t<T>(bufs: &mut [Vec<T>])
 where
     T: Copy + Default + std::ops::AddAssign,
 {
+    let mut bytes = 0.0;
+    ring_allreduce_sum_t_counted(bufs, &mut bytes);
+}
+
+/// [`ring_allreduce_sum_t`] with a bytes-moved ledger: accumulates the
+/// element bytes the schedule reads and writes (stage copy = 2 accesses,
+/// add = 3, all-gather copy-through = 4) into `bytes_moved`. The micro
+/// bench compares this against the packed-resident plane's
+/// [`packed::RingTraffic`].
+pub fn ring_allreduce_sum_t_counted<T>(bufs: &mut [Vec<T>], bytes_moved: &mut f64)
+where
+    T: Copy + Default + std::ops::AddAssign,
+{
+    let elem = std::mem::size_of::<T>() as f64;
     let m = bufs.len();
     if m <= 1 {
         return;
@@ -58,6 +82,8 @@ where
             for (d, v) in dst_seg.iter_mut().zip(&seg[..len]) {
                 *d += *v;
             }
+            // stage copy (r+w) + add (r+r+w)
+            *bytes_moved += 5.0 * len as f64 * elem;
         }
     }
 
@@ -70,6 +96,8 @@ where
             let len = hi - lo;
             seg[..len].copy_from_slice(&bufs[r][lo..hi]);
             bufs[dst][lo..hi].copy_from_slice(&seg[..len]);
+            // copy-through the staging buffer: r+w, r+w
+            *bytes_moved += 4.0 * len as f64 * elem;
         }
     }
 }
@@ -189,12 +217,19 @@ impl<'a> StepCtx<'a> {
         StepCtx { net, clock, wire_floor_bits: None }
     }
 
+    /// Byte-exact payload bits for `elems` coordinates at `bits_per_elem`:
+    /// the wire floor (if set) rounds each coordinate up to whole bits, and
+    /// the *total* is rounded up to whole bytes — exactly
+    /// `8 * bitpack::wire_bytes_for(elems, bpe)`, so the simulated ledger
+    /// and the packed wire format agree on every payload. (Previously the
+    /// total kept fractional bits, so e.g. 97 coords at 3 bits charged
+    /// 291 bits where the packed payload is 37 bytes = 296.)
     fn effective_bits(&self, elems: f64, bits_per_elem: f64) -> f64 {
         let bpe = match self.wire_floor_bits {
             Some(floor) => bits_per_elem.max(floor).ceil(),
             None => bits_per_elem,
         };
-        elems * bpe
+        ((elems * bpe) / 8.0).ceil() * 8.0
     }
 
     /// Sum all-reduce over per-worker equal-length vectors, charging
@@ -258,13 +293,64 @@ impl<'a> StepCtx<'a> {
         min_allreduce_u8(vecs)
     }
 
-    /// Charge an all-gather where each rank contributes `bits_per_rank`.
-    /// (Data is already centrally resident; only the wire is charged.)
-    pub fn charge_allgather(&mut self, bits_per_rank: f64) {
+    /// Charge an all-gather where each rank contributes `elems` coordinates
+    /// of `bits_per_elem` — byte-exact through [`StepCtx::effective_bits`],
+    /// so the sparsified baselines (top-K, sign bits) charge
+    /// `ceil(elems*bits/8)` wire bytes instead of fractional bits, matching
+    /// the packed wire format. (Data is already centrally resident; only
+    /// the wire is charged.)
+    pub fn charge_allgather(&mut self, elems: f64, bits_per_elem: f64) {
+        let bits_per_rank = self.effective_bits(elems, bits_per_elem);
         self.clock.comm_s += self.net.allgather_s(bits_per_rank / 8.0);
         // each worker transmits its payload and receives M-1 others; the
         // ledger tracks *sent* bits per worker to match the paper's metric
         self.clock.bits_per_worker += bits_per_rank;
+    }
+
+    /// Ledger + simulated-time charge for a packed-resident ring all-reduce
+    /// of `elems` coordinates whose hops shipped `resident_bits`-wide
+    /// segments. Two books are kept:
+    ///
+    /// * `bits_per_worker` — the paper's nominal accounting (byte-exact
+    ///   `elems * payload_bits_per_elem`), unchanged vs the int path so the
+    ///   ledgers stay comparable across data planes;
+    /// * `comm_s` / `hop_bits_per_worker` — **hop-accurate**: `2(m-1)` ring
+    ///   steps each moving a `ceil(elems/m)`-code segment at the *resident*
+    ///   width (partial sums need headroom beyond the nominal payload) —
+    ///   the deployment overhead the uniform model hides.
+    pub fn charge_ring_packed(
+        &mut self,
+        elems: usize,
+        resident_bits: u32,
+        payload_bits_per_elem: f64,
+    ) {
+        self.clock.bits_per_worker += self.effective_bits(elems as f64, payload_bits_per_elem);
+        let m = self.net.workers.max(1);
+        if m <= 1 || elems == 0 {
+            return;
+        }
+        let steps = 2 * (m - 1);
+        let seg_bytes = bitpack::wire_bytes_for(elems.div_ceil(m), resident_bits) as f64;
+        self.clock.comm_s += self.net.ring_steps_s(steps, seg_bytes);
+        self.clock.hop_bits_per_worker += steps as f64 * seg_bytes * 8.0;
+    }
+
+    /// Packed-resident sum all-reduce over per-worker biased [`Packed`]
+    /// buffers (see [`packed::ring_allreduce_sum_packed`]), with
+    /// hop-accurate wire charging. `payload_bits_per_elem` is the nominal
+    /// wire payload for the paper ledger. Returns the data-plane traffic.
+    pub fn allreduce_sum_packed(
+        &mut self,
+        bufs: &mut [Packed],
+        payload_bits_per_elem: f64,
+    ) -> RingTraffic {
+        let mut traffic = RingTraffic::default();
+        if let Some(first) = bufs.first() {
+            let (elems, bits) = (first.len, first.bits);
+            packed::ring_allreduce_sum_packed(bufs, &mut traffic);
+            self.charge_ring_packed(elems, bits, payload_bits_per_elem);
+        }
+        traffic
     }
 
     /// Time a closure into the encode bucket.
@@ -428,5 +514,79 @@ mod tests {
         let bufs: Vec<Vec<f32>> = vec![vec![1.0; 100], vec![2.0; 100]];
         ctx.allreduce_sum(bufs, 3.0); // 3-bit payload floors to 8
         assert_eq!(clock.bits_per_worker, 800.0);
+    }
+
+    #[test]
+    fn effective_bits_is_byte_exact() {
+        // 97 coords at 3 bits: the packed payload is ceil(291/8) = 37 bytes,
+        // and the ledger must say the same — not fractional 291 bits.
+        let net = NetConfig::flat(2, 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let bufs: Vec<Vec<f32>> = vec![vec![1.0; 97], vec![2.0; 97]];
+        ctx.allreduce_sum(bufs, 3.0);
+        assert_eq!(
+            clock.bits_per_worker,
+            (8 * bitpack::wire_bytes_for(97, 3)) as f64
+        );
+    }
+
+    #[test]
+    fn wire_floor_and_packed_path_agree_on_byte_totals() {
+        // regression (satellite): the floor path and the packed wire format
+        // must produce the same byte-exact totals, with and without floor.
+        let net = NetConfig::flat(4, 10.0);
+
+        // no floor: 13 sign bits -> 2 wire bytes -> 16 ledger bits
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.charge_allgather(13.0, 1.0);
+        assert_eq!(clock.bits_per_worker, (8 * bitpack::wire_bytes_for(13, 1)) as f64);
+
+        // floor 8: every coordinate widens to 8 bits -> 13 bytes -> 104
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.wire_floor_bits = Some(8.0);
+        ctx.charge_allgather(13.0, 1.0);
+        assert_eq!(clock.bits_per_worker, (8 * bitpack::wire_bytes_for(13, 8)) as f64);
+
+        // and the packed-resident ring's nominal ledger uses the same rule
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.wire_floor_bits = Some(8.0);
+        ctx.charge_ring_packed(13, 8, 1.0);
+        assert_eq!(clock.bits_per_worker, (8 * bitpack::wire_bytes_for(13, 8)) as f64);
+    }
+
+    #[test]
+    fn packed_allreduce_sums_and_charges_hop_accurately() {
+        let m = 4;
+        let net = NetConfig::flat(m, 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let n = 1000;
+        let lmax = 7usize; // 4-bit payload levels
+        let bits = bitpack::packed_sum_bits(lmax, m);
+        let levels: Vec<Vec<i32>> = (0..m).map(|r| vec![r as i32 - 1; n]).collect();
+        let mut bufs: Vec<Packed> = levels
+            .iter()
+            .map(|l| bitpack::pack_biased_int(l, lmax as i64, bits))
+            .collect();
+        let traffic = ctx.allreduce_sum_packed(&mut bufs, 4.0);
+        // every rank holds the biased sum: (-1+0+1+2) + 4*7 = 30
+        let mut out = vec![0i64; n];
+        for p in &bufs {
+            bitpack::unpack_biased_i64_at(&p.words, bits, 0, (m as i64) * lmax as i64, &mut out);
+            assert!(out.iter().all(|&x| x == 2));
+        }
+        // nominal ledger: byte-exact 4-bit payload
+        assert_eq!(clock.bits_per_worker, (8 * bitpack::wire_bytes_for(n, 4)) as f64);
+        // hop-accurate ledger: 2(m-1) segments at the *resident* width,
+        // strictly more than the nominal payload (the ScaleCom gap)
+        let seg = bitpack::wire_bytes_for(n.div_ceil(m), bits) as f64;
+        assert_eq!(clock.hop_bits_per_worker, 6.0 * seg * 8.0);
+        assert!(clock.hop_bits_per_worker > clock.bits_per_worker);
+        assert!(clock.comm_s > 0.0);
+        assert!(traffic.bytes_moved > 0.0);
     }
 }

@@ -1,0 +1,276 @@
+//! Packed-resident ring all-reduce: the compressed collective whose
+//! *resident* reduce operand is [`Packed`] words, not widened `i16`/`i32`
+//! level buffers.
+//!
+//! The PR 1 data plane reduced widened integer buffers and only measured the
+//! packed wire format on the side — the memory it moved did not match the
+//! wire bytes it charged (the paper-vs-deployed gap ScaleCom documents).
+//! Here every hop of the ring schedule ships a segment of packed codes:
+//!
+//! * codes are **biased** (`code = level + lmax`, all non-negative), so a
+//!   hop's reduce is a field-wise *add* of two packed segments and biases
+//!   accumulate linearly with the contribution count;
+//! * the resident width ([`bitpack::packed_sum_bits`]) gives every field
+//!   headroom for the full `m`-worker sum — the **carry-safety condition**:
+//!   no per-field sum can overflow its field, so one big-integer
+//!   add-with-carry per segment ([`bitpack::add_packed_codes`]) is exact
+//!   field-wise addition, with zero unpack/repack work per hop;
+//! * a pack-per-hop **reference** schedule (unpack → add → repack through
+//!   the offset kernels) pins the fast path bit-identical.
+//!
+//! Memory traffic per hop is `segment_codes * resident_bits / 8` bytes —
+//! tracked by [`RingTraffic`] so the bench can verify the packed-resident
+//! plane moves ~`bits/16` of the i16 plane's bytes.
+
+use crate::compress::bitpack::{self, Packed};
+
+/// Bytes-moved ledger for a data-plane collective: counts the packed-buffer
+/// bytes read and written by reduce/copy segments (field bits, not word
+/// slack), plus the per-step wire payload for hop-accurate charging.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RingTraffic {
+    /// total packed bytes read + written by the data plane
+    pub bytes_moved: f64,
+    /// ring steps executed (reduce-scatter + all-gather)
+    pub steps: usize,
+}
+
+impl RingTraffic {
+    #[inline]
+    fn seg(&mut self, codes: usize, bits: u32, accesses: f64) {
+        self.bytes_moved += accesses * (codes * bits as usize) as f64 / 8.0;
+    }
+}
+
+/// Two disjoint `&mut` elements of one slice (the ring's send/recv pair).
+fn pair_mut<'a, T>(s: &'a mut [T], i: usize, j: usize) -> (&'a mut T, &'a mut T) {
+    assert_ne!(i, j);
+    if i < j {
+        let (a, b) = s.split_at_mut(j);
+        (&mut a[i], &mut b[0])
+    } else {
+        let (a, b) = s.split_at_mut(i);
+        (&mut b[0], &mut a[j])
+    }
+}
+
+/// Chunk boundaries of the ring schedule over `n` codes and `m` ranks.
+#[inline]
+fn chunk_starts(n: usize, m: usize) -> Vec<usize> {
+    (0..=m).map(|c| c * n / m).collect()
+}
+
+/// Ring all-reduce over per-worker packed **biased** code buffers covering
+/// codes `[0, n_codes)` at width `bits`. Same schedule (and therefore the
+/// same per-element reduction order) as [`super::ring_allreduce_sum_t`];
+/// integer field sums are exact, so the result is bit-identical to reducing
+/// the unpacked levels. On return every worker's buffer holds the biased
+/// sum of all `m` contributions (bias = `m * per_contribution_bias`).
+pub fn ring_allreduce_biased_range(
+    bufs: &mut [&mut [u64]],
+    bits: u32,
+    n_codes: usize,
+    traffic: &mut RingTraffic,
+) {
+    let m = bufs.len();
+    if m <= 1 || n_codes == 0 {
+        return;
+    }
+    let starts = chunk_starts(n_codes, m);
+
+    // reduce-scatter: each hop adds the sender's packed segment into the
+    // receiver's, field-wise, in place — no unpack, no repack.
+    for step in 0..m - 1 {
+        for r in 0..m {
+            let c = (r + m - step) % m;
+            let dst = (r + 1) % m;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let (dst_words, src_words) = pair_mut(bufs, dst, r);
+            bitpack::add_packed_codes(&mut **dst_words, &**src_words, bits, lo, hi);
+            // read src + read dst + write dst
+            traffic.seg(hi - lo, bits, 3.0);
+            traffic.steps += 1;
+        }
+    }
+
+    // all-gather: circulate the completed packed chunks.
+    for step in 0..m - 1 {
+        for r in 0..m {
+            let c = (r + 1 + m - step) % m;
+            let dst = (r + 1) % m;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let (dst_words, src_words) = pair_mut(bufs, dst, r);
+            bitpack::copy_packed_codes(&mut **dst_words, &**src_words, bits, lo, hi);
+            // read src + write dst
+            traffic.seg(hi - lo, bits, 2.0);
+            traffic.steps += 1;
+        }
+    }
+}
+
+/// Pack-per-hop reference schedule: identical ring, but every reduce hop
+/// unpacks both segments through the offset kernels, adds in the integer
+/// domain, and repacks. Kept as the baseline the property tests pin
+/// [`ring_allreduce_biased_range`] bit-identical to, and as the shape a
+/// width-growing (wire-minimal) variant would take — see DESIGN.md
+/// §Performance for the trade-off.
+pub fn ring_allreduce_biased_range_reference(
+    bufs: &mut [&mut [u64]],
+    bits: u32,
+    n_codes: usize,
+) {
+    let m = bufs.len();
+    if m <= 1 || n_codes == 0 {
+        return;
+    }
+    let starts = chunk_starts(n_codes, m);
+    let max_chunk = (1..=m).map(|c| starts[c] - starts[c - 1]).max().unwrap_or(0);
+    let mut a = vec![0u64; max_chunk];
+    let mut b = vec![0u64; max_chunk];
+
+    for step in 0..m - 1 {
+        for r in 0..m {
+            let c = (r + m - step) % m;
+            let dst = (r + 1) % m;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let len = hi - lo;
+            let (dst_words, src_words) = pair_mut(bufs, dst, r);
+            bitpack::unpack_codes_at(&**src_words, bits, lo, &mut a[..len]);
+            bitpack::unpack_codes_at(&**dst_words, bits, lo, &mut b[..len]);
+            for (x, y) in b[..len].iter_mut().zip(&a[..len]) {
+                *x += *y;
+            }
+            bitpack::pack_codes_at(&b[..len], bits, &mut **dst_words, lo);
+        }
+    }
+    for step in 0..m - 1 {
+        for r in 0..m {
+            let c = (r + 1 + m - step) % m;
+            let dst = (r + 1) % m;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let (dst_words, src_words) = pair_mut(bufs, dst, r);
+            bitpack::copy_packed_codes(&mut **dst_words, &**src_words, bits, lo, hi);
+        }
+    }
+}
+
+/// Convenience wrapper over whole [`Packed`] buffers (all at the same
+/// resident width and length, biased codes). Used by the benches and tests;
+/// the fused pipelined hot path drives [`ring_allreduce_biased_range`]
+/// directly on per-chunk word views.
+pub fn ring_allreduce_sum_packed(bufs: &mut [Packed], traffic: &mut RingTraffic) {
+    let m = bufs.len();
+    if m <= 1 {
+        return;
+    }
+    let bits = bufs[0].bits;
+    let len = bufs[0].len;
+    assert!(
+        bufs.iter().all(|p| p.bits == bits && p.len == len),
+        "ragged packed buffers"
+    );
+    let mut views: Vec<&mut [u64]> = bufs.iter_mut().map(|p| p.words.as_mut_slice()).collect();
+    ring_allreduce_biased_range(&mut views, bits, len, traffic);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::bitpack::{pack_biased_int, packed_sum_bits, unpack_biased_i64_at};
+    use crate::util::quickcheck::{check, ensure};
+
+    fn random_levels(
+        g: &mut crate::util::quickcheck::Gen,
+        lmax: usize,
+        m: usize,
+        n: usize,
+    ) -> Vec<Vec<i32>> {
+        (0..m)
+            .map(|_| {
+                (0..n)
+                    .map(|_| g.rng().next_below(2 * lmax as u64 + 1) as i32 - lmax as i32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_packed_ring_equals_integer_naive() {
+        check("packed ring == naive integer sum", 120, |g| {
+            let m = g.usize_in(1, 9);
+            let lmax = *g.pick(&[1usize, 7, 127, 2047]);
+            let n = g.size_scaled(0, 2500);
+            let bits = packed_sum_bits(lmax, m);
+            let levels = random_levels(g, lmax, m, n);
+            let mut bufs: Vec<Packed> =
+                levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
+            let mut traffic = RingTraffic::default();
+            ring_allreduce_sum_packed(&mut bufs, &mut traffic);
+            let want: Vec<i64> = (0..n)
+                .map(|i| levels.iter().map(|l| l[i] as i64).sum::<i64>())
+                .collect();
+            let bias_total = (m as i64) * lmax as i64;
+            let mut got = vec![0i64; n];
+            for (r, p) in bufs.iter().enumerate() {
+                unpack_biased_i64_at(&p.words, bits, 0, bias_total, &mut got);
+                if got != want {
+                    let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                    return Err(format!(
+                        "rank {r} field {bad}: {} vs {} (m={m} lmax={lmax} bits={bits})",
+                        got[bad], want[bad]
+                    ));
+                }
+            }
+            if m > 1 && n > 0 {
+                ensure(traffic.bytes_moved > 0.0, "traffic counter must move")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fast_add_path_bit_identical_to_pack_per_hop_reference() {
+        // the tentpole contract at the collective level: the in-place
+        // add-with-carry hops produce the exact same packed words as the
+        // unpack -> add -> repack reference schedule.
+        check("adc ring == pack-per-hop reference", 120, |g| {
+            let m = g.usize_in(2, 9);
+            let lmax = *g.pick(&[1usize, 7, 127]);
+            let n = g.size_scaled(1, 2000);
+            let bits = packed_sum_bits(lmax, m);
+            let levels = random_levels(g, lmax, m, n);
+            let mut fast: Vec<Packed> =
+                levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
+            let mut slow = fast.clone();
+            let mut traffic = RingTraffic::default();
+            ring_allreduce_sum_packed(&mut fast, &mut traffic);
+            let mut views: Vec<&mut [u64]> =
+                slow.iter_mut().map(|p| p.words.as_mut_slice()).collect();
+            ring_allreduce_biased_range_reference(&mut views, bits, n);
+            for r in 0..m {
+                if fast[r] != slow[r] {
+                    return Err(format!("rank {r} words differ (m={m} lmax={lmax} n={n})"));
+                }
+            }
+            ensure(traffic.steps == 2 * m * (m - 1), "step count")
+        });
+    }
+
+    #[test]
+    fn traffic_scales_with_resident_width() {
+        // same layout, twice the resident width -> twice the bytes moved
+        let n = 4096;
+        let m = 8;
+        let levels: Vec<Vec<i32>> = (0..m).map(|r| vec![(r % 3) as i32; n]).collect();
+        let run = |bits: u32| {
+            let mut bufs: Vec<Packed> =
+                levels.iter().map(|l| pack_biased_int(l, 4, bits)).collect();
+            let mut t = RingTraffic::default();
+            ring_allreduce_sum_packed(&mut bufs, &mut t);
+            t.bytes_moved
+        };
+        let b8 = run(8);
+        let b16 = run(16);
+        assert!((b16 / b8 - 2.0).abs() < 1e-9, "width ratio: {b8} vs {b16}");
+    }
+}

@@ -33,8 +33,43 @@ impl Packed {
     /// Byte-exact wire cost: `ceil(len*bits/8)`. (Previously reported whole
     /// `u64` words, overstating small payloads by up to 7 bytes.)
     pub fn wire_bytes(&self) -> usize {
-        (self.len * self.bits as usize).div_ceil(8)
+        wire_bytes_for(self.len, self.bits)
     }
+}
+
+/// Byte-exact wire cost of any `(len, bits)` payload: `ceil(len*bits/8)`.
+/// The one formula the packed wire format, the sparsified all-gather
+/// baselines, and `StepCtx`'s byte-exact ledger all share.
+pub fn wire_bytes_for(len: usize, bits: u32) -> usize {
+    (len * bits as usize).div_ceil(8)
+}
+
+/// Resident width of the packed-resident ring: the smallest code width that
+/// holds the *biased* sum of `m` contributions whose levels are bounded by
+/// `lmax` — codes live in `[0, 2*m*lmax]` (each contribution is stored as
+/// `level + lmax`), so the width is `bitlen(2*m*lmax)`. This headroom is the
+/// carry-safety condition of [`add_packed_codes`]: no per-field sum can
+/// overflow its field, hence no carry can cross a code boundary.
+pub fn packed_sum_bits(lmax: usize, m: usize) -> u32 {
+    let max_code = 2u64 * (m as u64).max(1) * (lmax as u64).max(1);
+    let w = 64 - max_code.leading_zeros();
+    assert!(w <= 32, "packed sum width {w} > 32 (lmax={lmax}, m={m})");
+    w.max(2)
+}
+
+/// Code-count period at which field boundaries re-align with `u64` word
+/// boundaries: chunk starts that are multiples of this never share a word
+/// with the previous chunk — the disjointness the pipelined encode relies on
+/// to pack chunks concurrently into one resident buffer.
+pub fn codes_per_word_period(bits: u32) -> usize {
+    fn gcd(a: u64, b: u64) -> u64 {
+        if b == 0 {
+            a
+        } else {
+            gcd(b, a % b)
+        }
+    }
+    (64 / gcd(bits as u64, 64)) as usize
 }
 
 #[inline(always)]
@@ -66,7 +101,9 @@ fn decode_code(code: u64, mag_bits: u32, mag_mask: u64) -> i64 {
     }
 }
 
-fn words_for(len: usize, bits: u32) -> usize {
+/// `u64` words needed for `len` codes of `bits` each (public: the fused
+/// pipelined path sizes its resident buffers with it).
+pub fn words_for(len: usize, bits: u32) -> usize {
     (len as u64 * bits as u64).div_ceil(64) as usize
 }
 
@@ -160,6 +197,206 @@ fn unpack_core(p: &Packed, mut emit: impl FnMut(usize, u64)) {
             acc >>= bits;
             fill -= bits;
         }
+    }
+}
+
+/// Offset variant of [`pack_core`]: writes codes `0..n` into the bit range
+/// `[start_bit, start_bit + n*bits)` of `words`, preserving every bit of
+/// `words` outside that range (read-modify-write on the boundary words).
+/// The same u128 staging register as [`pack_core`], seeded with the
+/// boundary word's existing low bits.
+#[inline(always)]
+fn pack_core_at(
+    words: &mut [u64],
+    start_bit: usize,
+    n: usize,
+    bits: u32,
+    code_at: impl Fn(usize) -> u64,
+) {
+    if n == 0 {
+        return;
+    }
+    let mut w = start_bit / 64;
+    let off = (start_bit % 64) as u32;
+    // seed with the existing bits below the range so they survive the spill
+    let mut acc: u128 = (words[w] & low_mask(off)) as u128;
+    let mut fill: u32 = off;
+    for i in 0..n {
+        acc |= (code_at(i) as u128) << fill;
+        fill += bits;
+        if fill >= 64 {
+            words[w] = acc as u64;
+            w += 1;
+            acc >>= 64;
+            fill -= 64;
+        }
+    }
+    if fill > 0 {
+        // merge with the existing bits above the range (the next chunk's)
+        words[w] = (acc as u64) | (words[w] & !low_mask(fill));
+    }
+}
+
+/// Offset variant of [`unpack_core`]: emits the `len` codes stored in the
+/// bit range starting at `start_bit`.
+#[inline(always)]
+fn unpack_core_at(
+    words: &[u64],
+    start_bit: usize,
+    len: usize,
+    bits: u32,
+    mut emit: impl FnMut(usize, u64),
+) {
+    if len == 0 {
+        return;
+    }
+    let mask = (1u64 << bits) - 1;
+    let mut w = start_bit / 64;
+    let off = (start_bit % 64) as u32;
+    let mut acc: u128 = (words[w] as u128) >> off;
+    let mut fill: u32 = 64 - off;
+    w += 1;
+    for i in 0..len {
+        if fill < bits {
+            acc |= (words[w] as u128) << fill;
+            w += 1;
+            fill += 64;
+        }
+        emit(i, (acc as u64) & mask);
+        acc >>= bits;
+        fill -= bits;
+    }
+}
+
+/// Mask of the low `b` bits (`b` in 0..=64, shift-safe).
+#[inline(always)]
+fn low_mask(b: u32) -> u64 {
+    if b >= 64 {
+        !0
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// Pack raw (already-encoded) codes into fields
+/// `[code_off, code_off + codes.len())` of `words`. Codes must be < 2^bits.
+pub fn pack_codes_at(codes: &[u64], bits: u32, words: &mut [u64], code_off: usize) {
+    pack_core_at(words, code_off * bits as usize, codes.len(), bits, |i| codes[i]);
+}
+
+/// Unpack `out.len()` raw codes starting at field `code_off`.
+pub fn unpack_codes_at(words: &[u64], bits: u32, code_off: usize, out: &mut [u64]) {
+    unpack_core_at(words, code_off * bits as usize, out.len(), bits, |i, c| out[i] = c);
+}
+
+/// Closure form of [`unpack_codes_at`]: emits `(i, code)` for the `len`
+/// fields starting at `code_off` — the zero-scratch decode entry the fused
+/// pipelined path feeds its per-chunk reconstruct from.
+pub fn unpack_codes_at_with(
+    words: &[u64],
+    bits: u32,
+    code_off: usize,
+    len: usize,
+    emit: impl FnMut(usize, u64),
+) {
+    unpack_core_at(words, code_off * bits as usize, len, bits, emit);
+}
+
+/// Pack biased codes `levels[i] + bias` (all non-negative by construction:
+/// `bias >= |level|`) into fields `[code_off, code_off + levels.len())`.
+/// The biased representation is what makes ring hops a field-wise *add*:
+/// biases accumulate linearly with the number of contributions, so the
+/// decoder subtracts `contributions * bias` once at the end.
+pub fn pack_biased_int_at<T: LevelInt>(
+    levels: &[T],
+    bias: i64,
+    bits: u32,
+    words: &mut [u64],
+    code_off: usize,
+) {
+    debug_assert!((2..=32).contains(&bits), "biased bits out of range: {bits}");
+    let max_code = low_mask(bits) as i64;
+    pack_core_at(words, code_off * bits as usize, levels.len(), bits, |i| {
+        let code = levels[i].to_i64() + bias;
+        debug_assert!(
+            (0..=max_code).contains(&code),
+            "biased code {code} out of {bits}-bit range"
+        );
+        code as u64
+    });
+}
+
+/// Unpack biased fields `[code_off, code_off + out.len())`, subtracting
+/// `bias` (pass `contributions * per_contribution_bias` after a reduction).
+pub fn unpack_biased_i64_at(words: &[u64], bits: u32, code_off: usize, bias: i64, out: &mut [i64]) {
+    unpack_core_at(words, code_off * bits as usize, out.len(), bits, |i, c| {
+        out[i] = c as i64 - bias;
+    });
+}
+
+/// Whole-buffer biased pack into a fresh [`Packed`] (codes = level + bias).
+pub fn pack_biased_int<T: LevelInt>(levels: &[T], bias: i64, bits: u32) -> Packed {
+    let mut words = vec![0u64; words_for(levels.len(), bits)];
+    pack_biased_int_at(levels, bias, bits, &mut words, 0);
+    Packed { bits, len: levels.len(), words }
+}
+
+/// In-place field-wise add of `src`'s biased codes `[code_lo, code_hi)` into
+/// the same fields of `dst` — the packed-resident ring's reduce kernel.
+///
+/// Works as one big-integer add-with-carry over the covered words, with the
+/// out-of-range bits of the boundary `src` words masked off. Sound only
+/// under the carry-safety condition established by [`packed_sum_bits`]:
+/// every resulting field value stays `< 2^bits`, so no carry ever
+/// propagates past a field's top bit — the word-level carries the adc chain
+/// forwards are exactly the *intra*-field carries of codes straddling a
+/// word boundary.
+pub fn add_packed_codes(dst: &mut [u64], src: &[u64], bits: u32, code_lo: usize, code_hi: usize) {
+    if code_hi <= code_lo {
+        return;
+    }
+    let lo_bit = code_lo * bits as usize;
+    let hi_bit = code_hi * bits as usize;
+    let w0 = lo_bit / 64;
+    let w1 = (hi_bit - 1) / 64;
+    let mut carry = 0u64;
+    for w in w0..=w1 {
+        let mut s = src[w];
+        if w == w0 {
+            s &= !low_mask((lo_bit % 64) as u32);
+        }
+        if w == w1 {
+            let rem = hi_bit - w * 64;
+            s &= low_mask(rem as u32);
+        }
+        let (a, c1) = dst[w].overflowing_add(s);
+        let (b, c2) = a.overflowing_add(carry);
+        dst[w] = b;
+        carry = (c1 | c2) as u64;
+    }
+    // the range's top field has headroom, so the chain cannot carry out
+    debug_assert_eq!(carry, 0, "add_packed_codes: carry escaped the range (overflowed field)");
+}
+
+/// Copy `src`'s fields `[code_lo, code_hi)` into `dst` (boundary words
+/// merged bit-exactly) — the packed-resident ring's all-gather kernel.
+pub fn copy_packed_codes(dst: &mut [u64], src: &[u64], bits: u32, code_lo: usize, code_hi: usize) {
+    if code_hi <= code_lo {
+        return;
+    }
+    let lo_bit = code_lo * bits as usize;
+    let hi_bit = code_hi * bits as usize;
+    let w0 = lo_bit / 64;
+    let w1 = (hi_bit - 1) / 64;
+    for w in w0..=w1 {
+        let mut mask = !0u64;
+        if w == w0 {
+            mask &= !low_mask((lo_bit % 64) as u32);
+        }
+        if w == w1 {
+            mask &= low_mask((hi_bit - w * 64) as u32);
+        }
+        dst[w] = (dst[w] & !mask) | (src[w] & mask);
     }
 }
 
@@ -384,6 +621,126 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_offset_pack_unpack_roundtrip_preserves_neighbors() {
+        // packing a segment at an arbitrary code offset must (a) round-trip
+        // the segment and (b) leave every bit outside the segment untouched.
+        check("offset pack/unpack + neighbor preservation", 200, |g| {
+            let bits = g.usize_in(2, 32) as u32;
+            let total = g.size_scaled(1, 800);
+            let lo = g.usize_in(0, total - 1);
+            let hi = g.usize_in(lo + 1, total);
+            let mut words = vec![0u64; words_for(total, bits)];
+            // background: fill every field with a random code
+            let bg: Vec<u64> =
+                (0..total).map(|_| g.rng().next_u64() & low_mask(bits)).collect();
+            pack_codes_at(&bg, bits, &mut words, 0);
+            // overwrite [lo, hi) with fresh codes
+            let seg: Vec<u64> =
+                (0..hi - lo).map(|_| g.rng().next_u64() & low_mask(bits)).collect();
+            pack_codes_at(&seg, bits, &mut words, lo);
+            // every field reads back as expected
+            let mut all = vec![0u64; total];
+            unpack_codes_at(&words, bits, 0, &mut all);
+            for i in 0..total {
+                let want = if i >= lo && i < hi { seg[i - lo] } else { bg[i] };
+                if all[i] != want {
+                    return Err(format!("field {i}: {} vs {want} (bits={bits} lo={lo} hi={hi})", all[i]));
+                }
+            }
+            // offset unpack agrees with the full unpack
+            let mut sub = vec![0u64; hi - lo];
+            unpack_codes_at(&words, bits, lo, &mut sub);
+            ensure(sub == seg, "offset unpack differs")
+        });
+    }
+
+    #[test]
+    fn prop_biased_pack_roundtrip_and_packed_add() {
+        // add_packed_codes over a segment == field-wise integer addition,
+        // and it must not disturb fields outside the segment.
+        check("biased pack + in-place packed add", 200, |g| {
+            let m = g.usize_in(1, 9);
+            let lmax = *g.pick(&[1usize, 7, 127, 2047]);
+            let bits = packed_sum_bits(lmax, m);
+            let n = g.size_scaled(1, 600);
+            let lo = g.usize_in(0, n - 1);
+            let hi = g.usize_in(lo + 1, n);
+            let bufs: Vec<Vec<i32>> = (0..m)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| g.rng().next_below(2 * lmax as u64 + 1) as i32 - lmax as i32)
+                        .collect()
+                })
+                .collect();
+            // accumulate workers 1.. into worker 0's packed buffer over [lo, hi)
+            let mut dst = pack_biased_int(&bufs[0], lmax as i64, bits);
+            for b in &bufs[1..] {
+                let src = pack_biased_int(b, lmax as i64, bits);
+                add_packed_codes(&mut dst.words, &src.words, bits, lo, hi);
+            }
+            let mut got = vec![0i64; n];
+            // inside [lo, hi): m contributions (bias m*lmax); outside: 1
+            unpack_biased_i64_at(&dst.words, bits, 0, 0, &mut got);
+            for i in 0..n {
+                let want: i64 = if i >= lo && i < hi {
+                    bufs.iter().map(|b| b[i] as i64).sum::<i64>() + (m as i64) * lmax as i64
+                } else {
+                    bufs[0][i] as i64 + lmax as i64
+                };
+                if got[i] != want {
+                    return Err(format!(
+                        "field {i}: {} vs {want} (bits={bits} m={m} lmax={lmax} lo={lo} hi={hi})",
+                        got[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_copy_packed_codes_segment_exact() {
+        check("copy_packed_codes", 150, |g| {
+            let bits = g.usize_in(2, 32) as u32;
+            let n = g.size_scaled(1, 500);
+            let lo = g.usize_in(0, n - 1);
+            let hi = g.usize_in(lo + 1, n);
+            let a: Vec<u64> = (0..n).map(|_| g.rng().next_u64() & low_mask(bits)).collect();
+            let b: Vec<u64> = (0..n).map(|_| g.rng().next_u64() & low_mask(bits)).collect();
+            let mut pa = vec![0u64; words_for(n, bits)];
+            let mut pb = vec![0u64; words_for(n, bits)];
+            pack_codes_at(&a, bits, &mut pa, 0);
+            pack_codes_at(&b, bits, &mut pb, 0);
+            copy_packed_codes(&mut pa, &pb, bits, lo, hi);
+            let mut out = vec![0u64; n];
+            unpack_codes_at(&pa, bits, 0, &mut out);
+            for i in 0..n {
+                let want = if i >= lo && i < hi { b[i] } else { a[i] };
+                if out[i] != want {
+                    return Err(format!("field {i}: {} vs {want}", out[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sum_width_and_alignment_helpers() {
+        // 4-bit quantizer (s=7), 16 workers: codes up to 224 -> 8 bits
+        assert_eq!(packed_sum_bits(7, 16), 8);
+        // 2-bit (s=1), 4 workers: codes up to 8 -> 4 bits
+        assert_eq!(packed_sum_bits(1, 4), 4);
+        // 8-bit (s=127), 64 workers: codes up to 16256 -> 14 bits
+        assert_eq!(packed_sum_bits(127, 64), 14);
+        assert_eq!(codes_per_word_period(8), 8);
+        assert_eq!(codes_per_word_period(14), 32);
+        assert_eq!(codes_per_word_period(32), 2);
+        assert_eq!(codes_per_word_period(13), 64);
+        assert_eq!(wire_bytes_for(100, 3), 38);
+        assert_eq!(wire_bytes_for(0, 5), 0);
     }
 
     #[test]

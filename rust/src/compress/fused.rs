@@ -169,6 +169,292 @@ pub fn multiscale_step_int<T: LevelInt>(
     });
 }
 
+// ---------------------------------------------------------------------------
+// Packed-resident chunk-pipelined hot path
+// ---------------------------------------------------------------------------
+
+/// Cross-step scratch of the packed-resident pipelined path: per-worker
+/// resident packed word buffers plus per-chunk integer encode temporaries.
+/// Zero steady-state allocation once warm, like the int-path scratch.
+#[derive(Default)]
+pub struct PackedScratch {
+    words: Vec<Vec<u64>>,
+    chunk_tmp: Vec<Vec<i32>>,
+}
+
+impl PackedScratch {
+    pub fn new() -> PackedScratch {
+        PackedScratch::default()
+    }
+}
+
+/// Parallel per-worker uniform fill (`rng.derive([w])`, full length) as a
+/// pre-pass: the uniform stream per worker is one sequential draw exactly
+/// like the int path's, which is what makes the pipelined output invariant
+/// to the chunk plan (xoshiro has no cheap arbitrary jump-ahead).
+pub fn fill_uniforms_into(m: usize, n: usize, uniform: &mut Vec<Vec<f32>>, rng: &Rng) {
+    uniform.resize_with(m, Vec::new);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m);
+    for (w, uni) in uniform.iter_mut().enumerate() {
+        let mut wrng = rng.derive(&[w as u64]);
+        tasks.push(Box::new(move || {
+            uni.resize(n, 0.0);
+            wrng.fill_uniform_f32(uni);
+        }));
+    }
+    threads::pool().scope_run(tasks);
+}
+
+/// Chunk boundaries for the encode/reduce pipeline: roughly even, but every
+/// interior boundary is snapped down to a multiple of the word-alignment
+/// period so no two chunks share a `u64` word of the resident buffers —
+/// the disjointness that lets producer tasks pack concurrently.
+fn chunk_plan(n: usize, resident_bits: u32, chunks: Option<usize>) -> Vec<usize> {
+    if n == 0 {
+        return vec![0];
+    }
+    let period = bitpack::codes_per_word_period(resident_bits);
+    let want = chunks
+        .unwrap_or_else(|| 2 * (threads::pool().threads() + 1))
+        .max(1);
+    let mut bounds = Vec::with_capacity(want + 1);
+    bounds.push(0usize);
+    for c in 1..want {
+        let aligned = (c * n / want) / period * period;
+        if aligned > *bounds.last().unwrap() && aligned < n {
+            bounds.push(aligned);
+        }
+    }
+    bounds.push(n);
+    bounds
+}
+
+/// The engine behind both packed step functions: chunk-pipelined
+/// encode→pack→packed-ring→decode over the persistent pool.
+///
+/// For each chunk (word-aligned code range of the per-worker resident
+/// buffers), a producer task encodes every worker's slice into an integer
+/// temp and packs it as biased codes at the resident width; **as soon as a
+/// chunk is packed it enters the ring** on the consuming (calling) thread
+/// while later chunks are still encoding — chunks are independent
+/// sub-all-reduces, and integer sums are exact, so completion order cannot
+/// change the result. The consumer reduces the chunk with the in-place
+/// packed ring and immediately decodes it into `out`.
+///
+/// Timing attribution (see DESIGN.md §Performance): decode work is measured
+/// into `decode_s`; the rest of the overlapped produce/reduce wall time
+/// lands in `encode_s`; the simulated wire cost is charged separately and
+/// hop-accurately by the caller via `StepCtx::charge_ring_packed`.
+#[allow(clippy::too_many_arguments)]
+fn packed_pipeline(
+    m: usize,
+    n: usize,
+    resident_bits: u32,
+    chunks: Option<usize>,
+    scratch: &mut PackedScratch,
+    ctx: &mut StepCtx,
+    encode_chunk: impl Fn(usize, usize, usize, &mut Vec<i32>, &mut [u64]) + Send + Sync,
+    mut decode_chunk: impl FnMut(usize, usize, &[u64]),
+) -> collectives::RingTraffic {
+    let words_len = bitpack::words_for(n, resident_bits);
+    scratch.words.resize_with(m, Vec::new);
+    for wbuf in scratch.words.iter_mut() {
+        // no zero-fill pass: producers fully overwrite every covered word
+        // (interior chunk boundaries are word-aligned, and the tail word's
+        // slack bits above n*resident_bits are never read by unpack/add/
+        // copy) — only fresh capacity needs defined contents
+        wbuf.resize(words_len, 0);
+    }
+    let bounds = chunk_plan(n, resident_bits, chunks);
+    let nchunks = bounds.len().saturating_sub(1);
+    scratch.chunk_tmp.resize_with(nchunks, Vec::new);
+
+    let word_ptrs: Vec<threads::SendPtr<u64>> = scratch
+        .words
+        .iter_mut()
+        .map(|w| threads::SendPtr(w.as_mut_ptr()))
+        .collect();
+    let tmp_ptr = threads::SendPtr(scratch.chunk_tmp.as_mut_ptr());
+    let rb = resident_bits as usize;
+
+    let mut traffic = collectives::RingTraffic::default();
+    let mut decode_s = 0.0f64;
+    let t0 = std::time::Instant::now();
+    {
+        let bounds = &bounds;
+        let word_ptrs = &word_ptrs;
+        let encode_chunk = &encode_chunk;
+        let traffic = &mut traffic;
+        let decode_s = &mut decode_s;
+        threads::pool().pipeline_chunks(
+            nchunks,
+            move |c| {
+                let (lo, hi) = (bounds[c], bounds[c + 1]);
+                // chunk c covers words [lo*rb/64, ceil(hi*rb/64)); the start
+                // is word-exact because the plan aligns interior boundaries
+                let (w_lo, w_hi) = (lo * rb / 64, (hi * rb).div_ceil(64));
+                // SAFETY: chunk word ranges and chunk_tmp slots are disjoint
+                // across chunks (aligned boundaries), each touched by exactly
+                // one producer; the consumer touches a chunk only after its
+                // producer settled (happens-before via the ready queue).
+                let tmp = unsafe { &mut *tmp_ptr.0.add(c) };
+                for wk in 0..m {
+                    let wslice = unsafe {
+                        std::slice::from_raw_parts_mut(word_ptrs[wk].0.add(w_lo), w_hi - w_lo)
+                    };
+                    encode_chunk(wk, lo, hi, tmp, wslice);
+                }
+            },
+            |c| {
+                let (lo, hi) = (bounds[c], bounds[c + 1]);
+                let (w_lo, w_hi) = (lo * rb / 64, (hi * rb).div_ceil(64));
+                // SAFETY: as above — the producer for chunk c has settled.
+                let mut views: Vec<&mut [u64]> = word_ptrs
+                    .iter()
+                    .map(|p| unsafe {
+                        std::slice::from_raw_parts_mut(p.0.add(w_lo), w_hi - w_lo)
+                    })
+                    .collect();
+                collectives::packed::ring_allreduce_biased_range(
+                    &mut views,
+                    resident_bits,
+                    hi - lo,
+                    traffic,
+                );
+                let td = std::time::Instant::now();
+                decode_chunk(lo, hi, &*views[0]);
+                *decode_s += td.elapsed().as_secs_f64();
+            },
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ctx.clock.encode_s += (wall - decode_s).max(0.0);
+    ctx.clock.decode_s += decode_s;
+    traffic
+}
+
+/// One full packed-resident pipelined QSGD step: per-chunk pool-parallel
+/// encode into biased packed codes, chunk-pipelined in-place packed ring
+/// (the resident reduce operand is `Packed` words), per-chunk decode of the
+/// exact integer sum, hop-accurate wire charging. Bit-identical to
+/// [`qsgd_step_int`] (and hence to the legacy f32 path) for any chunk plan.
+/// `chunks` forces the chunk count (tests); `None` auto-sizes to the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn qsgd_step_packed(
+    grads: &[&[f32]],
+    wnorm: f32,
+    s: usize,
+    wire_bits: f64,
+    scratch: &mut PackedScratch,
+    uniform: &mut Vec<Vec<f32>>,
+    ctx: &mut StepCtx,
+    rng: &Rng,
+    chunks: Option<usize>,
+    out: &mut [f32],
+) -> collectives::RingTraffic {
+    let m = grads.len();
+    let n = grads[0].len();
+    assert!(
+        sum_fits::<i32>(s, m),
+        "widening rule: {m} workers x s={s} overflows i32"
+    );
+    let rbits = bitpack::packed_sum_bits(s.max(1), m);
+    ctx.time_encode(|| fill_uniforms_into(m, n, uniform, rng));
+    let uni: &Vec<Vec<f32>> = uniform;
+    let bias = s as i64;
+    let bias_total = (m as i64) * bias;
+    // same float expression as `kernels::qsgd_decode_sum_int`
+    let k = wnorm / (s as f32 * m as f32);
+    let traffic = packed_pipeline(
+        m,
+        n,
+        rbits,
+        chunks,
+        scratch,
+        ctx,
+        |wk, lo, hi, tmp, wslice| {
+            tmp.resize(hi - lo, 0);
+            kernels::qsgd_encode_int(&grads[wk][lo..hi], wnorm, &uni[wk][lo..hi], s, &mut tmp[..]);
+            bitpack::pack_biased_int_at(&tmp[..], bias, rbits, wslice, 0);
+        },
+        |lo, hi, sum_words| {
+            let dst = &mut out[lo..hi];
+            bitpack::unpack_codes_at_with(sum_words, rbits, 0, hi - lo, |i, code| {
+                // mirror of qsgd_decode_sum_int: exact integer sum -> f32 * k
+                let z = code as i64 - bias_total;
+                dst[i] = (z as f32) * k;
+            });
+        },
+    );
+    ctx.charge_ring_packed(n, rbits, wire_bits);
+    traffic
+}
+
+/// Multi-scale analogue of [`qsgd_step_packed`]: encode at the shared
+/// per-coordinate scales (levels bounded by `s_min + 1`, eq. 10), packed
+/// ring, per-chunk decode via the scale table. Bit-identical to
+/// [`multiscale_step_int`] for any chunk plan.
+#[allow(clippy::too_many_arguments)]
+pub fn multiscale_step_packed(
+    grads: &[&[f32]],
+    wnorm: f32,
+    table: &ScaleTable,
+    shared_idx: &[u8],
+    payload_bits: f64,
+    scratch: &mut PackedScratch,
+    uniform: &mut Vec<Vec<f32>>,
+    ctx: &mut StepCtx,
+    rng: &Rng,
+    chunks: Option<usize>,
+    out: &mut [f32],
+) -> collectives::RingTraffic {
+    let m = grads.len();
+    let n = grads[0].len();
+    let lmax = table.smin as usize + 1; // eq. (10): levels <= s_min + 1
+    assert!(
+        sum_fits::<i32>(lmax, m),
+        "widening rule: {m} workers x lmax={lmax} overflows i32"
+    );
+    let rbits = bitpack::packed_sum_bits(lmax, m);
+    ctx.time_encode(|| fill_uniforms_into(m, n, uniform, rng));
+    let uni: &Vec<Vec<f32>> = uniform;
+    let bias = lmax as i64;
+    let bias_total = (m as i64) * bias;
+    let mf = m as f32;
+    let traffic = packed_pipeline(
+        m,
+        n,
+        rbits,
+        chunks,
+        scratch,
+        ctx,
+        |wk, lo, hi, tmp, wslice| {
+            tmp.resize(hi - lo, 0);
+            kernels::multiscale_encode_int(
+                &grads[wk][lo..hi],
+                wnorm,
+                &uni[wk][lo..hi],
+                &shared_idx[lo..hi],
+                table,
+                &mut tmp[..],
+            );
+            bitpack::pack_biased_int_at(&tmp[..], bias, rbits, wslice, 0);
+        },
+        |lo, hi, sum_words| {
+            let dst = &mut out[lo..hi];
+            let idx = &shared_idx[lo..hi];
+            bitpack::unpack_codes_at_with(sum_words, rbits, 0, hi - lo, |i, code| {
+                // mirror of multiscale_decode_sum_int's float op order
+                let z = (code as i64 - bias_total) as f32;
+                let s_sel = table.select(idx[i] as u32);
+                dst[i] = z * wnorm / (s_sel * mf);
+            });
+        },
+    );
+    ctx.charge_ring_packed(n, rbits, payload_bits);
+    traffic
+}
+
 /// The legacy f32-level QSGD-MN aggregation (encode f32 → f32 ring
 /// all-reduce → in-place decode), preserved verbatim as the baseline the
 /// integer-domain path is property-tested bit-identical to and benchmarked
@@ -263,6 +549,94 @@ mod tests {
             }
             ensure(wire == (n * bits).div_ceil(8), "wire bytes must be byte-exact")
         });
+    }
+
+    #[test]
+    fn prop_packed_pipelined_step_bit_identical_for_any_chunk_plan() {
+        // the tentpole invariant at the step level: the chunk-pipelined
+        // packed-resident path == the int path == the legacy f32 reference,
+        // for chunk counts including 1 and far beyond the pool width.
+        use crate::netsim::{NetConfig, SimClock};
+        check("packed pipelined == int == f32 reference", 40, |g| {
+            let m = g.usize_in(1, 8);
+            let bits = *g.pick(&[2usize, 4, 6, 8, 12]);
+            let n = g.size_scaled(1, 3000);
+            let s = kernels::s_for_bits(bits);
+            let grads: Vec<Vec<f32>> = (0..m).map(|_| g.vec_normal(n, 1.0)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let wnorm = refs.iter().map(|v| l2_norm(v)).fold(0.0f32, f32::max);
+            let seed = g.rng().next_u64();
+            let want = reference_qsgd_aggregate(&refs, wnorm, s, &Rng::new(seed));
+
+            let nchunks = *g.pick(&[1usize, 2, 3, 7, 64]);
+            let net = NetConfig::flat(m, 10.0);
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            let mut scratch = PackedScratch::new();
+            let mut uniform = Vec::new();
+            let mut got = vec![0.0f32; n];
+            qsgd_step_packed(
+                &refs,
+                wnorm,
+                s,
+                bits as f64,
+                &mut scratch,
+                &mut uniform,
+                &mut ctx,
+                &Rng::new(seed),
+                Some(nchunks),
+                &mut got,
+            );
+            if got != want {
+                let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                return Err(format!(
+                    "bits={bits} m={m} n={n} chunks={nchunks}: diff at {bad}: {} vs {}",
+                    got[bad], want[bad]
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_step_ledger_matches_int_step_ledger() {
+        // the paper's nominal bits ledger must be identical across data
+        // planes; only the hop-accurate books may differ.
+        use crate::netsim::{NetConfig, SimClock};
+        let m = 4;
+        let n = 997; // odd on purpose: byte-exact rounding must agree
+        let bits = 4usize;
+        let s = kernels::s_for_bits(bits);
+        let grads: Vec<Vec<f32>> = (0..m).map(|w| vec![0.1 * (w as f32 + 1.0); n]).collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let wnorm = refs.iter().map(|v| l2_norm(v)).fold(0.0f32, f32::max);
+        let net = NetConfig::flat(m, 10.0);
+
+        let mut clock_int = SimClock::default();
+        {
+            let mut ctx = StepCtx::new(&net, &mut clock_int);
+            let mut scratch: Vec<Vec<i16>> = Vec::new();
+            let mut uniform = Vec::new();
+            let mut out = vec![0.0f32; n];
+            qsgd_step_int(
+                &refs, wnorm, s, bits as f64, &mut scratch, &mut uniform, &mut ctx,
+                &Rng::new(9), &mut out,
+            );
+        }
+        let mut clock_packed = SimClock::default();
+        {
+            let mut ctx = StepCtx::new(&net, &mut clock_packed);
+            let mut scratch = PackedScratch::new();
+            let mut uniform = Vec::new();
+            let mut out = vec![0.0f32; n];
+            qsgd_step_packed(
+                &refs, wnorm, s, bits as f64, &mut scratch, &mut uniform, &mut ctx,
+                &Rng::new(9), None, &mut out,
+            );
+        }
+        assert_eq!(clock_int.bits_per_worker, clock_packed.bits_per_worker);
+        assert_eq!(clock_int.hop_bits_per_worker, 0.0);
+        assert!(clock_packed.hop_bits_per_worker > clock_packed.bits_per_worker);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! ceil(log2 N) bits/coord overhead) makes the scheme all-reduce compatible.
 
 use crate::collectives::StepCtx;
+use crate::netsim::Algo;
 use crate::util::rng::Rng;
 
 use super::fused;
@@ -22,6 +23,7 @@ pub struct QsgdMultiScale {
     table: ScaleTable,
     scratch16: Vec<Vec<i16>>,
     scratch32: Vec<Vec<i32>>,
+    packed: fused::PackedScratch,
     idx_scratch: Vec<Vec<u8>>,
     uniform: Vec<Vec<f32>>,
 }
@@ -51,6 +53,7 @@ impl QsgdMultiScale {
             table,
             scratch16: Vec::new(),
             scratch32: Vec::new(),
+            packed: fused::PackedScratch::new(),
             idx_scratch: Vec::new(),
             uniform: Vec::new(),
         })
@@ -104,9 +107,25 @@ impl Aggregator for QsgdMultiScale {
         //    the exact integer sum (line 10).
         let payload_bits = self.payload_bits();
         // the per-coordinate level bound is s_min + 1, so the narrow
-        // accumulator fits iff M * (s_min + 1) does
+        // accumulator fits iff M * (s_min + 1) does; on the ring the
+        // resident operand is packed biased codes and encode is
+        // chunk-pipelined with the reduce
         let mut out = vec![0.0f32; n];
-        if fused::narrow_fits(self.scales[0] + 1, m) {
+        if ctx.net.algo == Algo::Ring {
+            fused::multiscale_step_packed(
+                grads,
+                wnorm,
+                &table,
+                &shared_idx,
+                payload_bits,
+                &mut self.packed,
+                &mut self.uniform,
+                ctx,
+                rng,
+                None,
+                &mut out,
+            );
+        } else if fused::narrow_fits(self.scales[0] + 1, m) {
             fused::multiscale_step_int(
                 grads,
                 wnorm,

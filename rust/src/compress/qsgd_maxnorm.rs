@@ -13,6 +13,7 @@
 //!    compatibility property: decode commutes with the sum.
 
 use crate::collectives::StepCtx;
+use crate::netsim::Algo;
 use crate::util::rng::Rng;
 
 use super::fused;
@@ -23,9 +24,10 @@ pub struct QsgdMaxNorm {
     pub bits: usize,
     pub s: usize,
     /// reused per-step scratch (integer levels per worker, both widths) —
-    /// zero steady-state alloc
+    /// zero steady-state alloc; the int widths serve the non-ring fallback
     scratch16: Vec<Vec<i16>>,
     scratch32: Vec<Vec<i32>>,
+    packed: fused::PackedScratch,
     uniform: Vec<Vec<f32>>,
 }
 
@@ -40,6 +42,7 @@ impl QsgdMaxNorm {
             s,
             scratch16: Vec::new(),
             scratch32: Vec::new(),
+            packed: fused::PackedScratch::new(),
             uniform: Vec::new(),
         })
     }
@@ -67,14 +70,30 @@ impl Aggregator for QsgdMaxNorm {
         let norms: Vec<f32> = grads.iter().map(|g| kernels::l2_norm(g)).collect();
         let wnorm = ctx.allreduce_max_scalar(&norms);
 
-        // 2–4. per-worker stochastic quantization (line 6) into the widened
-        // integer buffers, compressed-domain sum all-reduce (line 7) in
-        // place, single reconstruct from the exact integer sum (line 8) —
-        // accumulator width chosen per step by the widening rule.
+        // 2–4. per-worker stochastic quantization (line 6), compressed-
+        // domain sum all-reduce (line 7), single reconstruct from the exact
+        // integer sum (line 8). On the ring (the production schedule) the
+        // resident reduce operand is the packed biased codes, encode is
+        // chunk-pipelined with the reduce, and the wire is charged
+        // hop-accurately; the tree/naive schedules keep the widened-integer
+        // data plane (width chosen per step by the widening rule).
         let s = self.s;
         let wire_bits = kernels::bits_for_s(s);
         let mut out = vec![0.0f32; n];
-        if fused::narrow_fits(s, m) {
+        if ctx.net.algo == Algo::Ring {
+            fused::qsgd_step_packed(
+                grads,
+                wnorm,
+                s,
+                wire_bits,
+                &mut self.packed,
+                &mut self.uniform,
+                ctx,
+                rng,
+                None,
+                &mut out,
+            );
+        } else if fused::narrow_fits(s, m) {
             fused::qsgd_step_int(
                 grads,
                 wnorm,

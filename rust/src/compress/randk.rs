@@ -15,6 +15,7 @@
 //! (see DESIGN.md §2).
 
 use crate::collectives::StepCtx;
+use crate::netsim::Algo;
 use crate::util::rng::Rng;
 use crate::util::threads;
 
@@ -54,6 +55,7 @@ pub struct GlobalRandK {
     dense: Vec<Vec<f32>>,
     levels16: Vec<Vec<i16>>,
     levels32: Vec<Vec<i32>>,
+    packed: fused::PackedScratch,
     uniform: Vec<Vec<f32>>,
 }
 
@@ -71,6 +73,7 @@ impl GlobalRandK {
             dense: Vec::new(),
             levels16: Vec::new(),
             levels32: Vec::new(),
+            packed: fused::PackedScratch::new(),
             uniform: Vec::new(),
         })
     }
@@ -111,7 +114,21 @@ impl Aggregator for GlobalRandK {
         let dense_refs: Vec<&[f32]> = self.dense.iter().map(|d| d.as_slice()).collect();
         let rescale = if self.rescale { n as f32 / self.k as f32 } else { 1.0 };
         let mut sub = vec![0.0f32; self.k];
-        if fused::narrow_fits(s, m) {
+        if ctx.net.algo == Algo::Ring {
+            // packed-resident pipelined path on the gathered K-vector
+            fused::qsgd_step_packed(
+                &dense_refs,
+                wnorm,
+                s,
+                wire_bits,
+                &mut self.packed,
+                &mut self.uniform,
+                ctx,
+                rng,
+                None,
+                &mut sub,
+            );
+        } else if fused::narrow_fits(s, m) {
             fused::qsgd_step_int(
                 &dense_refs,
                 wnorm,
@@ -159,6 +176,7 @@ pub struct GlobalRandKMultiScale {
     dense: Vec<Vec<f32>>,
     levels16: Vec<Vec<i16>>,
     levels32: Vec<Vec<i32>>,
+    packed: fused::PackedScratch,
     idx_scratch: Vec<Vec<u8>>,
     uniform: Vec<Vec<f32>>,
 }
@@ -187,6 +205,7 @@ impl GlobalRandKMultiScale {
             dense: Vec::new(),
             levels16: Vec::new(),
             levels32: Vec::new(),
+            packed: fused::PackedScratch::new(),
             idx_scratch: Vec::new(),
             uniform: Vec::new(),
         })
@@ -237,7 +256,21 @@ impl Aggregator for GlobalRandKMultiScale {
         let payload_bits = kernels::bits_for_s(self.scales[0]);
         let rescale = if self.rescale { n as f32 / self.k as f32 } else { 1.0 };
         let mut sub = vec![0.0f32; self.k];
-        if fused::narrow_fits(self.scales[0] + 1, m) {
+        if ctx.net.algo == Algo::Ring {
+            fused::multiscale_step_packed(
+                &dense_refs,
+                wnorm,
+                &table,
+                &shared_scale_idx,
+                payload_bits,
+                &mut self.packed,
+                &mut self.uniform,
+                ctx,
+                rng,
+                None,
+                &mut sub,
+            );
+        } else if fused::narrow_fits(self.scales[0] + 1, m) {
             fused::multiscale_step_int(
                 &dense_refs,
                 wnorm,
@@ -365,7 +398,9 @@ mod tests {
         assert_eq!(bits, 32.0 + (k as f64) * 8.0);
         let mut agg_ts = GlobalRandKMultiScale::new(&[8, 12], k, n).unwrap();
         let (_, bits_ts) = run(&mut agg_ts, &grads, 1);
-        assert_eq!(bits_ts, 32.0 + (k as f64) * 8.0 + (k as f64) * 1.0);
+        // scale-index share is byte-exact: 100 coords at 1 bit -> 13 bytes
+        let idx_bits = (8 * crate::compress::bitpack::wire_bytes_for(k, 1)) as f64;
+        assert_eq!(bits_ts, 32.0 + (k as f64) * 8.0 + idx_bits);
     }
 
     #[test]

@@ -41,14 +41,15 @@ impl Aggregator for SignSgdMajority {
 
     fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, _rng: &mut Rng) -> Vec<f32> {
         let n = grads[0].len();
-        // encode: sign vectors (conceptually bit-packed; wire charged 1 b/coord)
+        // encode: sign vectors (conceptually bit-packed; wire charged
+        // byte-exactly as the packed payload, ceil(n*1/8) bytes per rank)
         let signs: Vec<Vec<f32>> = ctx.time_encode(|| {
             grads
                 .iter()
                 .map(|g| g.iter().map(|&v| sign(v)).collect())
                 .collect()
         });
-        ctx.charge_allgather(n as f64);
+        ctx.charge_allgather(n as f64, 1.0);
         // majority vote, decoded once per worker
         ctx.time_decode(|| {
             let mut out = vec![0.0f32; n];
@@ -88,7 +89,19 @@ mod tests {
         ];
         let (out, bits) = run(&grads);
         assert_eq!(out, vec![1.0, -1.0, 1.0, 0.0]);
-        assert_eq!(bits, 4.0);
+        // byte-exact packed wire: 4 sign bits -> 1 byte -> 8 ledger bits
+        assert_eq!(bits, 8.0);
+    }
+
+    #[test]
+    fn wire_bytes_are_byte_exact() {
+        // ceil(n/8) bytes per rank, not fractional bits (satellite fix)
+        for n in [1usize, 7, 8, 9, 1000, 1001] {
+            let grads: Vec<Vec<f32>> = (0..3).map(|_| vec![1.0f32; n]).collect();
+            let (_, bits) = run(&grads);
+            let want = (8 * crate::compress::bitpack::wire_bytes_for(n, 1)) as f64;
+            assert_eq!(bits, want, "n={n}");
+        }
     }
 
     #[test]

@@ -64,8 +64,9 @@ impl Aggregator for TopK {
                 .collect()
         });
 
-        // all-gather: each worker ships K (idx, val) pairs
-        ctx.charge_allgather(64.0 * self.k as f64);
+        // all-gather: each worker ships K (idx, val) pairs — byte-exact
+        // through the shared packed-wire rule (ceil(k*64/8) bytes)
+        ctx.charge_allgather(self.k as f64, 64.0);
 
         // decode: average the M sparse vectors
         ctx.time_decode(|| {

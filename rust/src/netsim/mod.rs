@@ -177,6 +177,21 @@ impl NetConfig {
     pub fn scalar_allreduce_s(&self) -> f64 {
         self.allreduce_s(4.0)
     }
+
+    /// Hop-accurate ring time: `steps` synchronous ring steps, each moving
+    /// `bytes_per_step` per rank over the bottleneck link (inter-node when
+    /// the cluster spans nodes, NVLink otherwise). Used by the
+    /// packed-resident ring, whose per-hop segments are *wider* than the
+    /// nominal payload (partial sums need headroom) — the deployment gap the
+    /// uniform [`NetConfig::allreduce_s`] model hides (ScaleCom, Chen et
+    /// al., 2020).
+    pub fn ring_steps_s(&self, steps: usize, bytes_per_step: f64) -> f64 {
+        if self.workers <= 1 || steps == 0 {
+            return 0.0;
+        }
+        let link = if self.nodes() > 1 { &self.inter } else { &self.intra };
+        steps as f64 * link.xfer_s(bytes_per_step)
+    }
 }
 
 /// Accumulating simulated clock + wire ledger for one training run.
@@ -188,6 +203,11 @@ pub struct SimClock {
     pub decode_s: f64,
     /// payload bits sent per worker (the paper's 32 + d·r accounting)
     pub bits_per_worker: f64,
+    /// hop-accurate bits sent per worker by the packed-resident ring: the
+    /// sum over ring steps of the *actual* packed segment widths (partial
+    /// sums ride wider codes than the nominal payload). Zero for paths that
+    /// charge only the uniform model.
+    pub hop_bits_per_worker: f64,
 }
 
 impl SimClock {

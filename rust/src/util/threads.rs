@@ -183,6 +183,142 @@ impl ThreadPool {
     }
 }
 
+/// Chunk-ready handoff between pipeline producers (pool tasks) and the
+/// consuming caller: a tiny SPSC queue of completed chunk indices plus the
+/// settle/panic bookkeeping that makes the scope safe to unwind.
+struct ChunkReady {
+    state: Mutex<ChunkReadyState>,
+    cv: Condvar,
+}
+
+struct ChunkReadyState {
+    ready: VecDeque<usize>,
+    /// producer tasks that have finished (successfully or by panicking)
+    settled: usize,
+    panicked: bool,
+}
+
+impl ThreadPool {
+    /// Chunk-pipelined producer/consumer scope — the async step the
+    /// caller-helps pool design was built for.
+    ///
+    /// Spawns one `produce(c)` task per chunk on the pool; the calling
+    /// thread runs `consume(c)` for each chunk **as soon as it is
+    /// produced**, in completion order (consumers must therefore be
+    /// order-independent — the integer-domain reductions are, exactly
+    /// because their sums are exact). While no chunk is ready the caller
+    /// helps drain the pool queue, so the pipeline cannot deadlock even on
+    /// a single-thread pool or under nested submissions.
+    ///
+    /// Blocks until every producer has settled and every produced chunk is
+    /// consumed — that blocking is what makes the internal lifetime
+    /// transmute sound (same contract as [`ThreadPool::scope_run`]).
+    /// Panic-safe: a panicking producer marks the scope, the remaining
+    /// chunks still settle, and the panic is re-raised here (no deadlock,
+    /// no dangling borrows); a panicking consumer likewise waits for all
+    /// producers before unwinding.
+    pub fn pipeline_chunks<'scope, P, C>(&self, nchunks: usize, produce: P, mut consume: C)
+    where
+        P: Fn(usize) + Send + Sync + 'scope,
+        C: FnMut(usize) + 'scope,
+    {
+        if nchunks == 0 {
+            return;
+        }
+        let ready = Arc::new(ChunkReady {
+            state: Mutex::new(ChunkReadyState {
+                ready: VecDeque::new(),
+                settled: 0,
+                panicked: false,
+            }),
+            cv: Condvar::new(),
+        });
+
+        let pref = &produce;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..nchunks)
+            .map(|c| {
+                let ready = ready.clone();
+                Box::new(move || {
+                    let ok = catch_unwind(AssertUnwindSafe(|| pref(c))).is_ok();
+                    let mut st = ready.state.lock().unwrap();
+                    st.settled += 1;
+                    if ok {
+                        st.ready.push_back(c);
+                    } else {
+                        st.panicked = true;
+                    }
+                    ready.cv.notify_all();
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+
+        // enqueue without waiting (scope_run would serialize the pipeline);
+        // completion is tracked through `settled`, not the batch latch.
+        let batch = Batch::new(tasks.len());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                // SAFETY: this function does not return (or unwind) until
+                // `settled == nchunks`, i.e. every closure has run to
+                // completion, so the 'scope borrows stay live throughout.
+                let run: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + '_>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(t)
+                };
+                q.jobs.push_back(Job { run, batch: batch.clone() });
+            }
+        }
+        self.shared.work.notify_all();
+
+        let mut consumer_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        loop {
+            // drain every chunk that is already ready
+            loop {
+                let next = {
+                    let mut st = ready.state.lock().unwrap();
+                    st.ready.pop_front()
+                };
+                match next {
+                    Some(c) if consumer_panic.is_none() => {
+                        if let Err(e) = catch_unwind(AssertUnwindSafe(|| consume(c))) {
+                            consumer_panic = Some(e);
+                        }
+                    }
+                    Some(_) => {} // consumer already failed: discard
+                    None => break,
+                }
+            }
+            {
+                let st = ready.state.lock().unwrap();
+                if st.settled == nchunks && st.ready.is_empty() {
+                    break;
+                }
+            }
+            // nothing ready: help the pool (our producers may be queued
+            // behind other work), else park until a producer settles.
+            let job = self.shared.queue.lock().unwrap().jobs.pop_front();
+            match job {
+                Some(j) => run_job(j),
+                None => {
+                    let st = ready.state.lock().unwrap();
+                    if !(st.settled == nchunks || !st.ready.is_empty()) {
+                        let _unused = ready.cv.wait(st).unwrap();
+                    }
+                }
+            }
+        }
+
+        if let Some(e) = consumer_panic {
+            std::panic::resume_unwind(e);
+        }
+        if ready.state.lock().unwrap().panicked {
+            panic!("pipeline producer panicked");
+        }
+    }
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         self.shared.queue.lock().unwrap().shutdown = true;
@@ -202,7 +338,10 @@ pub fn pool() -> &'static ThreadPool {
 }
 
 /// Raw-pointer wrapper for handing disjoint slots/slices to pool tasks.
-struct SendPtr<P>(*mut P);
+/// `pub(crate)` so the fused pipelined hot path can hand per-chunk word
+/// ranges of shared packed buffers to producer tasks (same disjointness
+/// contract as the uses below).
+pub(crate) struct SendPtr<P>(pub(crate) *mut P);
 impl<P> Clone for SendPtr<P> {
     fn clone(&self) -> Self {
         *self
@@ -210,8 +349,11 @@ impl<P> Clone for SendPtr<P> {
 }
 impl<P> Copy for SendPtr<P> {}
 // SAFETY: every use partitions the pointee by index so no two tasks touch
-// the same element; completion is ordered by the batch latch.
+// the same element; completion is ordered by the batch latch (scope_run)
+// or the chunk-ready queue (pipeline_chunks). Sync is needed because a
+// pipeline's single producer closure is shared by reference across tasks.
 unsafe impl<P> Send for SendPtr<P> {}
+unsafe impl<P> Sync for SendPtr<P> {}
 
 /// Parallel map over `items`, at most `max_threads` concurrent workers.
 /// Preserves input order in the output. Work is claimed FIFO through an
@@ -401,5 +543,92 @@ mod tests {
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
             vec![Box::new(|| panic!("boom")), Box::new(|| {})];
         pool().scope_run(tasks);
+    }
+
+    #[test]
+    fn prop_pipeline_equals_sequential_for_any_chunk_count() {
+        // the pipelining contract: for arbitrary chunk counts — including 1
+        // and counts far beyond the pool width — produce-then-consume over
+        // the pipeline touches every chunk exactly once and computes the
+        // same result as the sequential loop (consumption order is
+        // completion order, so we compare order-independent state).
+        use crate::util::quickcheck::check;
+        check("pipeline == sequential", 40, |g| {
+            let nchunks = *g.pick(&[0usize, 1, 2, 3, 7, 16, 61, 4 * pool().threads() + 5]);
+            let produced: Vec<AtomicUsize> = (0..nchunks).map(|_| AtomicUsize::new(0)).collect();
+            let mut consumed = vec![0usize; nchunks];
+            pool().pipeline_chunks(
+                nchunks,
+                |c| {
+                    produced[c].fetch_add(1, Ordering::Relaxed);
+                },
+                |c| {
+                    consumed[c] += c * c + 1;
+                },
+            );
+            let want: Vec<usize> = (0..nchunks).map(|c| c * c + 1).collect();
+            if consumed != want {
+                return Err(format!("consumed {consumed:?} != {want:?}"));
+            }
+            for (c, p) in produced.iter().enumerate() {
+                if p.load(Ordering::Relaxed) != 1 {
+                    return Err(format!("chunk {c} produced {} times", p.load(Ordering::Relaxed)));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pipeline_consumer_sees_producer_writes() {
+        // happens-before: the consumer must observe the producer's writes
+        // to the chunk's slot (the fused path relies on this for the packed
+        // words the producers fill).
+        let n = 64;
+        let mut slots = vec![0u64; n];
+        let ptr = SendPtr(slots.as_mut_ptr());
+        let mut sum = 0u64;
+        pool().pipeline_chunks(
+            n,
+            |c| unsafe {
+                *ptr.0.add(c) = (c as u64 + 1) * 3;
+            },
+            |c| {
+                sum += slots_read(&ptr, c);
+            },
+        );
+        fn slots_read(p: &SendPtr<u64>, c: usize) -> u64 {
+            unsafe { *p.0.add(c) }
+        }
+        let want: u64 = (1..=n as u64).map(|x| x * 3).sum();
+        assert_eq!(sum, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline producer panicked")]
+    fn pipeline_producer_panic_does_not_deadlock() {
+        // a panicking producer must not hang the scope: remaining chunks
+        // settle, surviving chunks are consumed, and the panic re-raises.
+        let hits = AtomicUsize::new(0);
+        pool().pipeline_chunks(
+            8,
+            |c| {
+                if c == 3 {
+                    panic!("producer boom");
+                }
+            },
+            |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+    }
+
+    #[test]
+    fn pipeline_zero_and_one_chunks() {
+        let mut seen = Vec::new();
+        pool().pipeline_chunks(0, |_| {}, |c| seen.push(c));
+        assert!(seen.is_empty());
+        pool().pipeline_chunks(1, |_| {}, |c| seen.push(c));
+        assert_eq!(seen, vec![0]);
     }
 }

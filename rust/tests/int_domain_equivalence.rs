@@ -259,6 +259,157 @@ fn prop_fused_wire_path_bit_identical_and_byte_exact() {
 }
 
 #[test]
+fn prop_packed_pipelined_qsgd_bit_identical_across_chunk_counts() {
+    // the PR 2 tentpole invariant: the packed-resident chunk-pipelined ring
+    // (resident reduce operand = biased Packed words, encode overlapped
+    // with the reduce) == the widened-int path == the legacy f32 pipeline,
+    // bit for bit, for any chunk plan — including 1 chunk and chunk counts
+    // far beyond the pool width.
+    check("packed pipelined qsgd == int == f32", 50, |g| {
+        let m = g.usize_in(1, 8);
+        let bits = *g.pick(&[2usize, 3, 4, 6, 8, 12]);
+        let n = g.size_scaled(1, 2500);
+        let chunks = *g.pick(&[1usize, 2, 3, 5, 16, 96]);
+        let s = kernels::s_for_bits(bits);
+        let grads = random_grads(g, m, n);
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let wnorm = max_norm(&refs);
+        let seed = g.rng().next_u64();
+
+        let want = reference_qsgd(&refs, bits, seed, Algo::Ring);
+
+        // int path
+        let net = NetConfig::flat(m, 10.0);
+        let mut clock_int = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock_int);
+        let mut s32: Vec<Vec<i32>> = Vec::new();
+        let mut uni = Vec::new();
+        let mut got_int = vec![0.0f32; n];
+        fused::qsgd_step_int(
+            &refs, wnorm, s, bits as f64, &mut s32, &mut uni, &mut ctx,
+            &Rng::new(seed), &mut got_int,
+        );
+
+        // packed-resident pipelined path at a forced chunk count
+        let mut clock_packed = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock_packed);
+        let mut scratch = fused::PackedScratch::new();
+        let mut uni2 = Vec::new();
+        let mut got_packed = vec![0.0f32; n];
+        fused::qsgd_step_packed(
+            &refs, wnorm, s, bits as f64, &mut scratch, &mut uni2, &mut ctx,
+            &Rng::new(seed), Some(chunks), &mut got_packed,
+        );
+
+        ensure(got_int == want, "int path differs from f32 reference")?;
+        if got_packed != want {
+            let bad = got_packed.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "bits={bits} m={m} n={n} chunks={chunks}: packed diff at {bad}: {} vs {}",
+                got_packed[bad], want[bad]
+            ));
+        }
+        // nominal ledgers agree across data planes (byte-exact)
+        ensure(
+            clock_int.bits_per_worker == clock_packed.bits_per_worker,
+            "nominal bits ledger must not depend on the data plane",
+        )
+    });
+}
+
+#[test]
+fn prop_packed_pipelined_multiscale_bit_identical_across_chunk_counts() {
+    check("packed pipelined multiscale == f32", 40, |g| {
+        let m = g.usize_in(1, 6);
+        let bit_sets: [&[usize]; 3] = [&[2, 6], &[4, 8], &[2, 6, 10]];
+        let bits: &[usize] = bit_sets[g.usize_in(0, 2)];
+        let n = g.size_scaled(1, 2000);
+        let chunks = *g.pick(&[1usize, 3, 8, 64]);
+        let scales: Vec<usize> = bits.iter().map(|&b| kernels::s_for_bits(b)).collect();
+        let grads = random_grads(g, m, n);
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let wnorm = max_norm(&refs);
+        let seed = g.rng().next_u64();
+
+        let want = reference_multiscale(&refs, &scales, seed, Algo::Ring);
+
+        // shared scale indices exactly as the aggregator derives them
+        let table = kernels::ScaleTable::new(&scales);
+        let mut proposals: Vec<Vec<u8>> = Vec::with_capacity(m);
+        for g2 in &refs {
+            let mut idx = vec![0u8; n];
+            kernels::multiscale_scale_index_t(g2, wnorm, &table, &mut idx);
+            proposals.push(idx);
+        }
+        let shared = collectives::min_allreduce_u8(&proposals);
+
+        let net = NetConfig::flat(m, 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut scratch = fused::PackedScratch::new();
+        let mut uni = Vec::new();
+        let mut got = vec![0.0f32; n];
+        fused::multiscale_step_packed(
+            &refs,
+            wnorm,
+            &table,
+            &shared,
+            kernels::bits_for_s(scales[0]),
+            &mut scratch,
+            &mut uni,
+            &mut ctx,
+            &Rng::new(seed),
+            Some(chunks),
+            &mut got,
+        );
+        if got != want {
+            let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "bits={bits:?} m={m} n={n} chunks={chunks}: diff at {bad}: {} vs {}",
+                got[bad], want[bad]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_resident_ring_in_aggregators_across_schemes() {
+    // aggregator-level: with the ring schedule (the production default) the
+    // aggregators now run the packed-resident pipelined plane — they must
+    // stay bit-identical to the legacy f32 references. Covers QSGD-MN,
+    // QSGD-MN-TS, and GRandK-MN in one sweep.
+    check("aggregators on packed plane == f32 references", 40, |g| {
+        let m = g.usize_in(1, 6);
+        let n = g.size_scaled(32, 2000);
+        let seed = g.rng().next_u64();
+        let grads = random_grads(g, m, n);
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+
+        let bits = *g.pick(&[2usize, 4, 8]);
+        let got = run_aggregator(&format!("qsgd-mn-{bits}"), n, &grads, seed, Algo::Ring);
+        ensure(
+            got == reference_qsgd(&refs, bits, seed, Algo::Ring),
+            "qsgd-mn packed plane differs",
+        )?;
+
+        let scales: Vec<usize> = [2usize, 6].iter().map(|&b| kernels::s_for_bits(b)).collect();
+        let got = run_aggregator("qsgd-mn-ts-2-6", n, &grads, seed, Algo::Ring);
+        ensure(
+            got == reference_multiscale(&refs, &scales, seed, Algo::Ring),
+            "qsgd-mn-ts packed plane differs",
+        )?;
+
+        let k = g.usize_in(1, n / 2);
+        let got = run_aggregator(&format!("grandk-mn-{bits}-k{k}"), n, &grads, seed, Algo::Ring);
+        ensure(
+            got == reference_grandk(&refs, bits, k, seed, Algo::Ring),
+            "grandk packed plane differs",
+        )
+    });
+}
+
+#[test]
 fn int_reducers_agree_exactly_on_quantizer_output() {
     // ring/tree/naive integer reducers on real quantizer levels: exact
     // agreement, every rank, both widths.
