@@ -9,8 +9,9 @@
 mod common;
 
 use repro::collectives::{
-    naive_allreduce_sum_t, ring_allreduce_sum_packed, ring_allreduce_sum_t,
-    ring_allreduce_sum_t_counted, tree_allreduce_sum_t, RingTraffic,
+    allreduce_sum_packed_sched, naive_allreduce_sum_t, ring_allreduce_sum_packed,
+    ring_allreduce_sum_t, ring_allreduce_sum_t_counted, tree_allreduce_sum_t, PlaneTraffic,
+    RingFixed, RingGrowing, RingTraffic,
 };
 use repro::compress::bitpack::{pack_biased_int, packed_sum_bits, Packed};
 use repro::compress::kernels::s_for_bits;
@@ -224,6 +225,103 @@ fn main() {
                     ("ms", num(t * 1e3)),
                     ("bytes_moved", num(bytes)),
                     ("traffic_ratio_vs_i16", num(ratio)),
+                ]));
+            }
+        }
+    }
+
+    // ---- growing-width vs fixed-width packed ring (the PR 3 tentpole) --
+    // The acceptance gate: the width-growing pack-per-hop ring may NEVER
+    // ship more wire bits than the fixed-width ring (each reduce-scatter
+    // hop rides bitlen(2k*lmax) <= bitlen(2M*lmax)). The bench also records
+    // where the analytic time selector flips (see DESIGN.md §Performance:
+    // growing wins on slow wires, fixed when the link outruns the
+    // re-packer).
+    let ng = 16_384usize.min(n);
+    println!("\n=== growing-width vs fixed-width packed ring, n={ng} ===");
+    println!(
+        "{:>5} {:>8} {:>6} {:>10} {:>10} {:>12} {:>12} {:>7} {:>10}",
+        "bits", "workers", "rbits", "fixed ms", "grow ms", "fixed Mb", "grow Mb", "ratio", "sel@10G"
+    );
+    for bits in [2usize, 4] {
+        let s = s_for_bits(bits);
+        for m in [64usize, 256, 1024] {
+            let rbits = packed_sum_bits(s, m);
+            let mut rng = Rng::new((7000 * bits + m) as u64);
+            let levels: Vec<Vec<i32>> = (0..m)
+                .map(|_| {
+                    (0..ng)
+                        .map(|_| rng.next_below(2 * s as u64 + 1) as i32 - s as i32)
+                        .collect()
+                })
+                .collect();
+            let base: Vec<Packed> = levels
+                .iter()
+                .map(|l| pack_biased_int(l, s as i64, rbits))
+                .collect();
+
+            let mut t_fixed_traffic = PlaneTraffic::default();
+            {
+                let mut b = base.clone();
+                allreduce_sum_packed_sched(&RingFixed, &mut b, &mut t_fixed_traffic);
+            }
+            let t_fixed = common::time_median(3, || {
+                let mut b = base.clone();
+                let mut t = PlaneTraffic::default();
+                allreduce_sum_packed_sched(&RingFixed, &mut b, &mut t);
+                std::hint::black_box(&b);
+            });
+
+            let grow = RingGrowing { lmax: s };
+            let mut t_grow_traffic = PlaneTraffic::default();
+            {
+                let mut b = base.clone();
+                allreduce_sum_packed_sched(&grow, &mut b, &mut t_grow_traffic);
+            }
+            let t_grow = common::time_median(3, || {
+                let mut b = base.clone();
+                let mut t = PlaneTraffic::default();
+                allreduce_sum_packed_sched(&grow, &mut b, &mut t);
+                std::hint::black_box(&b);
+            });
+
+            let ratio = t_grow_traffic.wire_bits / t_fixed_traffic.wire_bits;
+            let sel = NetConfig::flat(m, 10.0).growing_ring_wins(s, m, ng);
+            println!(
+                "{:>5} {:>8} {:>6} {:>10.1} {:>10.1} {:>12.2} {:>12.2} {:>7.3} {:>10}",
+                bits,
+                m,
+                rbits,
+                t_fixed * 1e3,
+                t_grow * 1e3,
+                t_fixed_traffic.wire_bits / 1e6,
+                t_grow_traffic.wire_bits / 1e6,
+                ratio,
+                if sel { "growing" } else { "fixed" }
+            );
+            assert!(
+                t_grow_traffic.wire_bits <= t_fixed_traffic.wire_bits,
+                "growing ring shipped MORE wire bits than fixed \
+                 ({} vs {}, bits={bits}, m={m})",
+                t_grow_traffic.wire_bits,
+                t_fixed_traffic.wire_bits
+            );
+            for (sched, t, traffic) in [
+                ("ring-fixed", t_fixed, t_fixed_traffic),
+                ("ring-growing", t_grow, t_grow_traffic),
+            ] {
+                entries.push(obj(vec![
+                    ("width", js("packed")),
+                    ("schedule", js(sched)),
+                    ("payload_bits", num(bits as f64)),
+                    ("resident_bits", num(rbits as f64)),
+                    ("workers", num(m as f64)),
+                    ("ms", num(t * 1e3)),
+                    ("wire_bits", num(traffic.wire_bits)),
+                    (
+                        "wire_ratio_vs_fixed",
+                        num(traffic.wire_bits / t_fixed_traffic.wire_bits),
+                    ),
                 ]));
             }
         }

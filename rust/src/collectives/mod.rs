@@ -8,18 +8,22 @@
 //! for real. Simulated wire time is charged separately through
 //! [`crate::netsim::NetConfig`] by [`StepCtx`].
 //!
-//! The compressed hot path's production schedule lives in [`packed`]: a
-//! ring whose *resident* reduce operand is packed biased codes, reduced by
-//! in-place field-wise adds and charged hop-accurately at the resident
-//! segment width ([`StepCtx::charge_ring_packed`]).
+//! The compressed hot path's production data plane lives in [`packed`]:
+//! every schedule (ring — fixed or width-growing wire — tree, naive)
+//! reduces a *resident* operand of packed biased codes through the
+//! [`packed::PackedReduce`] trait, charged hop-accurately at the widths the
+//! schedule actually ships ([`StepCtx::charge_packed`]).
 
 pub mod packed;
 
 use crate::compress::bitpack::{self, Packed};
-use crate::netsim::{NetConfig, SimClock};
+use crate::netsim::{NetConfig, RingWidth, SimClock};
 use crate::tensor::LevelInt;
 
-pub use packed::{ring_allreduce_sum_packed, RingTraffic};
+pub use packed::{
+    allreduce_sum_packed_sched, ring_allreduce_sum_packed, NaiveReduce, PackedReduce,
+    PackedSchedule, PlaneTraffic, RingFixed, RingGrowing, RingTraffic, TreeReduce,
+};
 
 /// Elementwise sum all-reduce via the ring schedule, generic over the
 /// element type — the same schedule reduces `f32` gradients and the widened
@@ -210,11 +214,26 @@ pub struct StepCtx<'a> {
     /// Wire floor (paper §6: frameworks only ship >=8-bit tensors). When
     /// set, payload bits per coordinate are rounded up to this.
     pub wire_floor_bits: Option<f64>,
+    /// Wire-width policy for the packed ring schedule; `Auto` defers to the
+    /// per-step analytic selector [`NetConfig::growing_ring_wins`].
+    pub ring_width: RingWidth,
 }
 
 impl<'a> StepCtx<'a> {
     pub fn new(net: &'a NetConfig, clock: &'a mut SimClock) -> StepCtx<'a> {
-        StepCtx { net, clock, wire_floor_bits: None }
+        StepCtx { net, clock, wire_floor_bits: None, ring_width: RingWidth::Auto }
+    }
+
+    /// The packed reduction schedule for this step: the configured algo,
+    /// with the ring's wire width resolved through the policy + analytic
+    /// selector. `lmax` is the per-contribution level bound of the scheme.
+    pub fn packed_schedule(&self, lmax: usize, m: usize, elems: usize) -> PackedSchedule {
+        let growing = match self.ring_width {
+            RingWidth::Fixed => false,
+            RingWidth::Growing => true,
+            RingWidth::Auto => self.net.growing_ring_wins(lmax, m, elems),
+        };
+        packed::schedule_for(self.net.algo, growing, lmax)
     }
 
     /// Byte-exact payload bits for `elems` coordinates at `bits_per_elem`:
@@ -307,19 +326,24 @@ impl<'a> StepCtx<'a> {
         self.clock.bits_per_worker += bits_per_rank;
     }
 
-    /// Ledger + simulated-time charge for a packed-resident ring all-reduce
-    /// of `elems` coordinates whose hops shipped `resident_bits`-wide
-    /// segments. Two books are kept:
+    /// Ledger + simulated-time charge for one packed-resident collective of
+    /// `elems` coordinates reduced by `sched` at `resident_bits`. Two books
+    /// are kept:
     ///
     /// * `bits_per_worker` — the paper's nominal accounting (byte-exact
-    ///   `elems * payload_bits_per_elem`), unchanged vs the int path so the
-    ///   ledgers stay comparable across data planes;
-    /// * `comm_s` / `hop_bits_per_worker` — **hop-accurate**: `2(m-1)` ring
-    ///   steps each moving a `ceil(elems/m)`-code segment at the *resident*
-    ///   width (partial sums need headroom beyond the nominal payload) —
-    ///   the deployment overhead the uniform model hides.
-    pub fn charge_ring_packed(
+    ///   `elems * payload_bits_per_elem`), identical for every data plane
+    ///   and schedule so the ledgers stay comparable;
+    /// * `comm_s` / `hop_bits_per_worker` — **hop-accurate**: the bits
+    ///   ledger sums the schedule's synchronous hops at the bytes each
+    ///   actually ships ([`PackedReduce::hop_wire_bytes`] — resident-width
+    ///   ring segments, growing-width partials, full tree/naive buffers),
+    ///   and the time charge is the schedule's own wire model
+    ///   ([`PackedReduce::comm_s`]: hop-sum over the bottleneck link for
+    ///   the ring, the hierarchical α–β model at the resident width for
+    ///   tree/naive) — the deployment overhead the uniform model hides.
+    pub fn charge_packed(
         &mut self,
+        sched: &dyn PackedReduce,
         elems: usize,
         resident_bits: u32,
         payload_bits_per_elem: f64,
@@ -329,28 +353,50 @@ impl<'a> StepCtx<'a> {
         if m <= 1 || elems == 0 {
             return;
         }
-        let steps = 2 * (m - 1);
-        let seg_bytes = bitpack::wire_bytes_for(elems.div_ceil(m), resident_bits) as f64;
-        self.clock.comm_s += self.net.ring_steps_s(steps, seg_bytes);
-        self.clock.hop_bits_per_worker += steps as f64 * seg_bytes * 8.0;
+        self.clock.comm_s += sched.comm_s(self.net, elems, resident_bits);
+        for h in 0..sched.hops(m) {
+            self.clock.hop_bits_per_worker +=
+                sched.hop_wire_bytes(h, elems, resident_bits, m) * 8.0;
+        }
+    }
+
+    /// [`StepCtx::charge_packed`] at the fixed-width ring (the historical
+    /// entry point; kept for the benches and wire-ledger tests).
+    pub fn charge_ring_packed(
+        &mut self,
+        elems: usize,
+        resident_bits: u32,
+        payload_bits_per_elem: f64,
+    ) {
+        self.charge_packed(&RingFixed, elems, resident_bits, payload_bits_per_elem)
     }
 
     /// Packed-resident sum all-reduce over per-worker biased [`Packed`]
-    /// buffers (see [`packed::ring_allreduce_sum_packed`]), with
-    /// hop-accurate wire charging. `payload_bits_per_elem` is the nominal
-    /// wire payload for the paper ledger. Returns the data-plane traffic.
+    /// buffers through `sched`, with hop-accurate wire charging.
+    /// `payload_bits_per_elem` is the nominal wire payload for the paper
+    /// ledger. Returns the data-plane traffic.
+    pub fn allreduce_sum_packed_sched(
+        &mut self,
+        sched: &dyn PackedReduce,
+        bufs: &mut [Packed],
+        payload_bits_per_elem: f64,
+    ) -> PlaneTraffic {
+        let mut traffic = PlaneTraffic::default();
+        if let Some(first) = bufs.first() {
+            let (elems, bits) = (first.len, first.bits);
+            packed::allreduce_sum_packed_sched(sched, bufs, &mut traffic);
+            self.charge_packed(sched, elems, bits, payload_bits_per_elem);
+        }
+        traffic
+    }
+
+    /// [`StepCtx::allreduce_sum_packed_sched`] at the fixed-width ring.
     pub fn allreduce_sum_packed(
         &mut self,
         bufs: &mut [Packed],
         payload_bits_per_elem: f64,
-    ) -> RingTraffic {
-        let mut traffic = RingTraffic::default();
-        if let Some(first) = bufs.first() {
-            let (elems, bits) = (first.len, first.bits);
-            packed::ring_allreduce_sum_packed(bufs, &mut traffic);
-            self.charge_ring_packed(elems, bits, payload_bits_per_elem);
-        }
-        traffic
+    ) -> PlaneTraffic {
+        self.allreduce_sum_packed_sched(&RingFixed, bufs, payload_bits_per_elem)
     }
 
     /// Time a closure into the encode bucket.
@@ -556,6 +602,90 @@ mod tests {
         ctx.wire_floor_bits = Some(8.0);
         ctx.charge_ring_packed(13, 8, 1.0);
         assert_eq!(clock.bits_per_worker, (8 * bitpack::wire_bytes_for(13, 8)) as f64);
+    }
+
+    #[test]
+    fn charge_packed_is_hop_accurate_per_schedule() {
+        // every schedule books its own hop shape: ring 2(m-1) segments,
+        // growing ring narrower reduce-scatter hops, tree 2*log2(m) full
+        // buffers, naive m-1 full buffers — and comm_s equals the analytic
+        // formula the trait exposes.
+        let m = 4;
+        let elems = 1000usize;
+        let lmax = 7usize; // 4-bit payload
+        let bits = bitpack::packed_sum_bits(lmax, m); // bitlen(56) = 6
+        let net = NetConfig::flat(m, 10.0);
+        let seg = bitpack::wire_bytes_for(elems.div_ceil(m), bits) as f64;
+        let full = bitpack::wire_bytes_for(elems, bits) as f64;
+        let cases: [(PackedSchedule, f64); 4] = [
+            (PackedSchedule::RingFixed(RingFixed), 6.0 * seg),
+            (
+                PackedSchedule::RingGrowing(RingGrowing { lmax }),
+                (1..m)
+                    .map(|k| {
+                        bitpack::wire_bytes_for(
+                            elems.div_ceil(m),
+                            bitpack::packed_sum_bits(lmax, k),
+                        ) as f64
+                    })
+                    .sum::<f64>()
+                    + 3.0 * seg,
+            ),
+            (PackedSchedule::Tree(TreeReduce), 4.0 * full),
+            (PackedSchedule::Naive(NaiveReduce), 3.0 * full),
+        ];
+        for (sched, want_bytes) in cases {
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.charge_packed(sched.as_dyn(), elems, bits, 4.0);
+            assert_eq!(
+                clock.hop_bits_per_worker,
+                want_bytes * 8.0,
+                "{} hop bits",
+                sched.as_dyn().name()
+            );
+            assert_eq!(
+                clock.bits_per_worker,
+                (8 * bitpack::wire_bytes_for(elems, 4)) as f64,
+                "{} nominal ledger",
+                sched.as_dyn().name()
+            );
+            assert_eq!(
+                clock.comm_s,
+                packed::analytic_comm_s(sched.as_dyn(), &net, elems, bits),
+                "{} comm_s",
+                sched.as_dyn().name()
+            );
+        }
+        // growing never charges more hop bits than fixed
+        let hop_bits = |sched: &dyn PackedReduce| {
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.charge_packed(sched, elems, bits, 4.0);
+            clock.hop_bits_per_worker
+        };
+        assert!(hop_bits(&RingGrowing { lmax }) < hop_bits(&RingFixed));
+    }
+
+    #[test]
+    fn packed_schedule_resolution_follows_policy_and_algo() {
+        let mut net = NetConfig::flat(8, 0.5); // slow wire: Auto picks growing
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        assert!(matches!(
+            ctx.packed_schedule(1, 8, 1 << 20),
+            PackedSchedule::RingGrowing(_)
+        ));
+        ctx.ring_width = crate::netsim::RingWidth::Fixed;
+        assert!(matches!(ctx.packed_schedule(1, 8, 1 << 20), PackedSchedule::RingFixed(_)));
+        net.algo = crate::netsim::Algo::Tree;
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        assert!(matches!(ctx.packed_schedule(1, 8, 1 << 20), PackedSchedule::Tree(_)));
+        net.algo = crate::netsim::Algo::Naive;
+        let mut clock = SimClock::default();
+        let ctx = StepCtx::new(&net, &mut clock);
+        assert!(matches!(ctx.packed_schedule(1, 8, 1 << 20), PackedSchedule::Naive(_)));
     }
 
     #[test]

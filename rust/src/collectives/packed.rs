@@ -1,48 +1,124 @@
-//! Packed-resident ring all-reduce: the compressed collective whose
-//! *resident* reduce operand is [`Packed`] words, not widened `i16`/`i32`
-//! level buffers.
+//! Schedule-generic packed data plane: every reduction schedule (ring, tree,
+//! naive) reduces a *resident* operand of [`Packed`] biased codes through the
+//! one [`PackedReduce`] trait — no widened `i16`/`i32` buffers anywhere on
+//! the compressed hot path.
 //!
 //! The PR 1 data plane reduced widened integer buffers and only measured the
-//! packed wire format on the side — the memory it moved did not match the
-//! wire bytes it charged (the paper-vs-deployed gap ScaleCom documents).
-//! Here every hop of the ring schedule ships a segment of packed codes:
+//! packed wire format on the side; PR 2 made the ring packed-resident but
+//! left tree/naive on the widened plane (the paper-vs-deployed gap ScaleCom
+//! documents). This module closes both gaps:
 //!
 //! * codes are **biased** (`code = level + lmax`, all non-negative), so a
-//!   hop's reduce is a field-wise *add* of two packed segments and biases
+//!   reduce hop is a field-wise *add* of two packed segments and biases
 //!   accumulate linearly with the contribution count;
 //! * the resident width ([`bitpack::packed_sum_bits`]) gives every field
 //!   headroom for the full `m`-worker sum — the **carry-safety condition**:
 //!   no per-field sum can overflow its field, so one big-integer
 //!   add-with-carry per segment ([`bitpack::add_packed_codes`]) is exact
-//!   field-wise addition, with zero unpack/repack work per hop;
+//!   field-wise addition, with zero unpack/repack work per hop. Tree and
+//!   naive partial sums carry at most `m` contributions, so the same width
+//!   is carry-safe for every schedule;
+//! * [`RingGrowing`] additionally ships each reduce-scatter hop at the
+//!   *minimal* width for the partial sum it carries — `bitlen(2*k*lmax)`
+//!   for `k` accumulated contributions — re-packing between widths through
+//!   the bit-offset kernels. Strictly never more wire bits than the fixed
+//!   ring; extra pack compute (see `NetConfig::growing_ring_wins` for the
+//!   analytic selector and DESIGN.md for the crossover);
 //! * a pack-per-hop **reference** schedule (unpack → add → repack through
 //!   the offset kernels) pins the fast path bit-identical.
 //!
-//! Memory traffic per hop is `segment_codes * resident_bits / 8` bytes —
-//! tracked by [`RingTraffic`] so the bench can verify the packed-resident
-//! plane moves ~`bits/16` of the i16 plane's bytes.
+//! [`PlaneTraffic`] is the data-plane ledger every schedule reports through:
+//! packed-buffer bytes read/written (`bytes_moved`) and total wire bits
+//! shipped across the cluster (`wire_bits`), so the bench can gate the
+//! packed plane against the i16 plane and growing against fixed.
 
 use crate::compress::bitpack::{self, Packed};
+use crate::netsim::NetConfig;
 
-/// Bytes-moved ledger for a data-plane collective: counts the packed-buffer
-/// bytes read and written by reduce/copy segments (field bits, not word
-/// slack), plus the per-step wire payload for hop-accurate charging.
+/// Data-plane ledger for a packed collective, generic over the schedule:
+/// counts the packed-buffer bytes read and written by reduce/copy/repack
+/// segments (field bits, not word slack) plus the wire payload every
+/// transfer ships, byte-exact per segment.
+///
+/// Both books are **cluster totals** (summed over every rank's transfers);
+/// the per-worker simulated ledgers live on [`crate::netsim::SimClock`] and
+/// are charged analytically by [`super::StepCtx::charge_packed`].
 #[derive(Clone, Copy, Debug, Default)]
-pub struct RingTraffic {
+pub struct PlaneTraffic {
     /// total packed bytes read + written by the data plane
     pub bytes_moved: f64,
-    /// ring steps executed (reduce-scatter + all-gather)
+    /// total wire bits shipped across the cluster (byte-exact per segment)
+    pub wire_bits: f64,
+    /// transfers executed (segment hops for the ring, pair transfers for
+    /// tree/naive)
     pub steps: usize,
 }
 
-impl RingTraffic {
+/// The pre-PR-3 name, kept so external readers of the bench JSON and older
+/// call sites keep compiling; the ledger is schedule-generic now.
+pub type RingTraffic = PlaneTraffic;
+
+impl PlaneTraffic {
     #[inline]
     fn seg(&mut self, codes: usize, bits: u32, accesses: f64) {
         self.bytes_moved += accesses * (codes * bits as usize) as f64 / 8.0;
     }
+
+    #[inline]
+    fn wire(&mut self, codes: usize, bits: u32) {
+        self.wire_bits += (8 * bitpack::wire_bytes_for(codes, bits)) as f64;
+    }
 }
 
-/// Two disjoint `&mut` elements of one slice (the ring's send/recv pair).
+/// One reduction schedule over packed-resident biased-code operands — the
+/// schedule-generic seam of the compressed data plane. Implementations
+/// really move the packed words (the integer sums are exact, so every
+/// schedule is bit-identical to every other and to the unpacked integer
+/// reduction), and expose the analytic per-hop wire shape the simulated
+/// clock charges through [`super::StepCtx::charge_packed`].
+pub trait PackedReduce: Sync {
+    /// Schedule name for ledgers and benches.
+    fn name(&self) -> &'static str;
+
+    /// In-place sum all-reduce of per-worker packed **biased** code buffers
+    /// covering codes `[0, n_codes)` at resident width `bits`. On return
+    /// every worker's buffer holds the biased sum of all `m` contributions
+    /// (bias = `m * per_contribution_bias`). Data-plane traffic accumulates
+    /// into `traffic`.
+    fn reduce(
+        &self,
+        bufs: &mut [&mut [u64]],
+        bits: u32,
+        n_codes: usize,
+        traffic: &mut PlaneTraffic,
+    );
+
+    /// Synchronous per-worker hop count of the schedule across `m` ranks.
+    fn hops(&self, m: usize) -> usize;
+
+    /// Wire bytes one worker ships on hop `h` (`h < self.hops(m)`) for
+    /// `elems` codes at resident width `bits` — the hop-accurate shape the
+    /// uniform α–β model hides. Ring hops move one `ceil(elems/m)`-code
+    /// segment; tree/naive hops move the full buffer.
+    fn hop_wire_bytes(&self, h: usize, elems: usize, bits: u32, m: usize) -> f64;
+
+    /// Simulated wire seconds of one full pass at resident width `bits`.
+    /// Default: the sum of the schedule's hops over the bottleneck link —
+    /// right for the ring, whose synchronous pipeline of segment hops spans
+    /// nodes (this is what PR 2's `ring_steps_s` charged). Tree/naive
+    /// override it with the **hierarchical** α–β model at the resident
+    /// width, so multi-GPU-per-node clusters keep their NVLink advantage
+    /// (the pre-PR-3 behaviour, now at the width actually shipped).
+    fn comm_s(&self, net: &NetConfig, elems: usize, bits: u32) -> f64 {
+        let m = net.workers.max(1);
+        if m <= 1 || elems == 0 {
+            return 0.0;
+        }
+        (0..self.hops(m)).map(|h| net.hop_s(self.hop_wire_bytes(h, elems, bits, m))).sum()
+    }
+}
+
+/// Two disjoint `&mut` elements of one slice (a schedule's send/recv pair).
 fn pair_mut<'a, T>(s: &'a mut [T], i: usize, j: usize) -> (&'a mut T, &'a mut T) {
     assert_ne!(i, j);
     if i < j {
@@ -60,6 +136,41 @@ fn chunk_starts(n: usize, m: usize) -> Vec<usize> {
     (0..=m).map(|c| c * n / m).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Fixed-width ring (the PR 2 fast path)
+// ---------------------------------------------------------------------------
+
+/// Ring schedule at the fixed (final-sum) resident width: every hop is an
+/// in-place big-integer add-with-carry over a packed segment — zero
+/// unpack/repack work, but every hop ships the full resident width even
+/// when the partial sum it carries is narrow.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RingFixed;
+
+impl PackedReduce for RingFixed {
+    fn name(&self) -> &'static str {
+        "ring-fixed"
+    }
+
+    fn reduce(
+        &self,
+        bufs: &mut [&mut [u64]],
+        bits: u32,
+        n_codes: usize,
+        traffic: &mut PlaneTraffic,
+    ) {
+        ring_allreduce_biased_range(bufs, bits, n_codes, traffic)
+    }
+
+    fn hops(&self, m: usize) -> usize {
+        2 * m.saturating_sub(1)
+    }
+
+    fn hop_wire_bytes(&self, _h: usize, elems: usize, bits: u32, m: usize) -> f64 {
+        bitpack::wire_bytes_for(elems.div_ceil(m), bits) as f64
+    }
+}
+
 /// Ring all-reduce over per-worker packed **biased** code buffers covering
 /// codes `[0, n_codes)` at width `bits`. Same schedule (and therefore the
 /// same per-element reduction order) as [`super::ring_allreduce_sum_t`];
@@ -70,7 +181,7 @@ pub fn ring_allreduce_biased_range(
     bufs: &mut [&mut [u64]],
     bits: u32,
     n_codes: usize,
-    traffic: &mut RingTraffic,
+    traffic: &mut PlaneTraffic,
 ) {
     let m = bufs.len();
     if m <= 1 || n_codes == 0 {
@@ -89,6 +200,7 @@ pub fn ring_allreduce_biased_range(
             bitpack::add_packed_codes(&mut **dst_words, &**src_words, bits, lo, hi);
             // read src + read dst + write dst
             traffic.seg(hi - lo, bits, 3.0);
+            traffic.wire(hi - lo, bits);
             traffic.steps += 1;
         }
     }
@@ -103,17 +215,342 @@ pub fn ring_allreduce_biased_range(
             bitpack::copy_packed_codes(&mut **dst_words, &**src_words, bits, lo, hi);
             // read src + write dst
             traffic.seg(hi - lo, bits, 2.0);
+            traffic.wire(hi - lo, bits);
             traffic.steps += 1;
         }
     }
 }
 
+// ---------------------------------------------------------------------------
+// Width-growing pack-per-hop ring
+// ---------------------------------------------------------------------------
+
+/// Wire width of a partial sum carrying `k` contributions bounded by
+/// `lmax`: biased codes live in `[0, 2*k*lmax]`, so `bitlen(2*k*lmax)` —
+/// the same formula as the resident width at `k = m`.
+#[inline]
+pub fn growing_hop_bits(lmax: usize, k: usize) -> u32 {
+    bitpack::packed_sum_bits(lmax, k)
+}
+
+/// Ring schedule that ships every reduce-scatter hop at the **minimal**
+/// width for the partial sum it carries: hop `step` moves segments holding
+/// `k = step + 1` contributions, re-packed to [`growing_hop_bits`] codes on
+/// the wire, then unpacked and accumulated into the receiver's resident
+/// fields. All-gather hops carry completed `m`-contribution sums, which
+/// already need the full resident width — no savings there.
+///
+/// Wire bits are never more than [`RingFixed`]'s (each hop's width is
+/// `<= bits`, and [`bitpack::wire_bytes_for`] is monotone in the width);
+/// the price is pack compute per hop instead of one add-with-carry pass.
+/// Bit-identical to every other schedule: re-packing is lossless and the
+/// integer sums are exact.
+#[derive(Clone, Copy, Debug)]
+pub struct RingGrowing {
+    /// per-contribution level bound (= the per-contribution bias)
+    pub lmax: usize,
+}
+
+impl PackedReduce for RingGrowing {
+    fn name(&self) -> &'static str {
+        "ring-growing"
+    }
+
+    fn reduce(
+        &self,
+        bufs: &mut [&mut [u64]],
+        bits: u32,
+        n_codes: usize,
+        traffic: &mut PlaneTraffic,
+    ) {
+        let m = bufs.len();
+        if m <= 1 || n_codes == 0 {
+            return;
+        }
+        let starts = chunk_starts(n_codes, m);
+        let max_chunk = (1..=m).map(|c| starts[c] - starts[c - 1]).max().unwrap_or(0);
+        // pack-per-hop staging, reused across calls (the fused pipeline
+        // calls reduce once per chunk per step — per-call Vecs here would
+        // reintroduce exactly the steady-state allocation churn
+        // PackedScratch exists to avoid). Thread-local is sound: reduce
+        // runs on the pipeline's single consumer thread, and the contents
+        // are fully overwritten before every read.
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<(Vec<u64>, Vec<u64>, Vec<u64>)> =
+                const { std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
+        }
+        SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let (src_codes, dst_codes, wire) = &mut *guard;
+            let wire_words = bitpack::words_for(max_chunk, bits);
+            if src_codes.len() < max_chunk {
+                src_codes.resize(max_chunk, 0);
+                dst_codes.resize(max_chunk, 0);
+            }
+            if wire.len() < wire_words {
+                wire.resize(wire_words, 0);
+            }
+            self.reduce_with_scratch(
+                bufs, bits, &starts, src_codes, dst_codes, wire, traffic,
+            );
+        });
+    }
+
+    fn hops(&self, m: usize) -> usize {
+        2 * m.saturating_sub(1)
+    }
+
+    fn hop_wire_bytes(&self, h: usize, elems: usize, bits: u32, m: usize) -> f64 {
+        let seg = elems.div_ceil(m);
+        // hops [0, m-1) are reduce-scatter at the growing width; the rest
+        // are all-gather at the resident width
+        let w = if h + 1 < m { growing_hop_bits(self.lmax, h + 1).min(bits) } else { bits };
+        bitpack::wire_bytes_for(seg, w) as f64
+    }
+}
+
+impl RingGrowing {
+    #[allow(clippy::too_many_arguments)]
+    fn reduce_with_scratch(
+        &self,
+        bufs: &mut [&mut [u64]],
+        bits: u32,
+        starts: &[usize],
+        src_codes: &mut [u64],
+        dst_codes: &mut [u64],
+        wire: &mut [u64],
+        traffic: &mut PlaneTraffic,
+    ) {
+        let m = bufs.len();
+        // reduce-scatter: the shipped partial holds k = step + 1
+        // contributions, so the wire segment is bitlen(2*k*lmax) wide.
+        for step in 0..m - 1 {
+            let wbits = growing_hop_bits(self.lmax, step + 1);
+            debug_assert!(wbits <= bits, "growing hop wider than resident");
+            for r in 0..m {
+                let c = (r + m - step) % m;
+                let dst = (r + 1) % m;
+                let (lo, hi) = (starts[c], starts[c + 1]);
+                let len = hi - lo;
+                let (dst_words, src_words) = pair_mut(bufs, dst, r);
+                // sender: re-pack its resident segment to the hop width
+                bitpack::unpack_codes_at(&**src_words, bits, lo, &mut src_codes[..len]);
+                bitpack::pack_codes_at(&src_codes[..len], wbits, &mut wire, 0);
+                // receiver: unpack the wire segment, accumulate into its
+                // resident fields at the full width
+                bitpack::unpack_codes_at(&wire, wbits, 0, &mut src_codes[..len]);
+                bitpack::unpack_codes_at(&**dst_words, bits, lo, &mut dst_codes[..len]);
+                for (d, s) in dst_codes[..len].iter_mut().zip(&src_codes[..len]) {
+                    *d += *s;
+                }
+                bitpack::pack_codes_at(&dst_codes[..len], bits, &mut **dst_words, lo);
+                // resident read src + read dst + write dst, plus the wire
+                // staging written once and read once at the hop width
+                traffic.seg(len, bits, 3.0);
+                traffic.seg(len, wbits, 2.0);
+                traffic.wire(len, wbits);
+                traffic.steps += 1;
+            }
+        }
+
+        // all-gather at the full width: completed sums cannot ship narrower.
+        for step in 0..m - 1 {
+            for r in 0..m {
+                let c = (r + 1 + m - step) % m;
+                let dst = (r + 1) % m;
+                let (lo, hi) = (starts[c], starts[c + 1]);
+                let (dst_words, src_words) = pair_mut(bufs, dst, r);
+                bitpack::copy_packed_codes(&mut **dst_words, &**src_words, bits, lo, hi);
+                traffic.seg(hi - lo, bits, 2.0);
+                traffic.wire(hi - lo, bits);
+                traffic.steps += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tree and naive schedules, packed-resident
+// ---------------------------------------------------------------------------
+
+/// Binary-tree schedule over packed operands: gap-doubling pair adds up to
+/// rank 0 (each a whole-range add-with-carry — partial sums hold at most
+/// `m` contributions, so the resident width is carry-safe), then a packed
+/// broadcast down. Mirrors [`super::tree_allreduce_sum_t`]'s reduction
+/// order exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TreeReduce;
+
+impl PackedReduce for TreeReduce {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn reduce(
+        &self,
+        bufs: &mut [&mut [u64]],
+        bits: u32,
+        n_codes: usize,
+        traffic: &mut PlaneTraffic,
+    ) {
+        let m = bufs.len();
+        if m <= 1 || n_codes == 0 {
+            return;
+        }
+        let mut gap = 1;
+        while gap < m {
+            let mut r = 0;
+            while r + gap < m {
+                let (dst_words, src_words) = pair_mut(bufs, r, r + gap);
+                bitpack::add_packed_codes(&mut **dst_words, &**src_words, bits, 0, n_codes);
+                traffic.seg(n_codes, bits, 3.0);
+                traffic.wire(n_codes, bits);
+                traffic.steps += 1;
+                r += gap * 2;
+            }
+            gap *= 2;
+        }
+        for r in 1..m {
+            let (dst_words, src_words) = pair_mut(bufs, r, 0);
+            bitpack::copy_packed_codes(&mut **dst_words, &**src_words, bits, 0, n_codes);
+            traffic.seg(n_codes, bits, 2.0);
+            traffic.wire(n_codes, bits);
+            traffic.steps += 1;
+        }
+    }
+
+    fn hops(&self, m: usize) -> usize {
+        if m <= 1 {
+            0
+        } else {
+            // ceil(log2 m) reduce rounds up + the same broadcast down,
+            // each moving the full buffer (the latency-optimal shape
+            // `NetConfig::tree_s` models)
+            2 * (usize::BITS - (m - 1).leading_zeros()) as usize
+        }
+    }
+
+    fn hop_wire_bytes(&self, _h: usize, elems: usize, bits: u32, _m: usize) -> f64 {
+        bitpack::wire_bytes_for(elems, bits) as f64
+    }
+
+    fn comm_s(&self, net: &NetConfig, elems: usize, bits: u32) -> f64 {
+        // hierarchical model (intra-node rounds on NVLink, inter-node on
+        // Ethernet) at the resident width; `net.algo` is Tree whenever this
+        // schedule is resolved from a step context
+        if net.workers <= 1 || elems == 0 {
+            return 0.0;
+        }
+        net.allreduce_s(bitpack::wire_bytes_for(elems, bits) as f64)
+    }
+}
+
+/// Naive schedule over packed operands: accumulate every rank's buffer into
+/// rank 0 with whole-range adds, then broadcast the packed sum. The wire
+/// model matches [`crate::netsim::NetConfig`]'s naive cost: `m - 1`
+/// full-buffer transfers per worker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NaiveReduce;
+
+impl PackedReduce for NaiveReduce {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn reduce(
+        &self,
+        bufs: &mut [&mut [u64]],
+        bits: u32,
+        n_codes: usize,
+        traffic: &mut PlaneTraffic,
+    ) {
+        let m = bufs.len();
+        if m <= 1 || n_codes == 0 {
+            return;
+        }
+        for r in 1..m {
+            let (dst_words, src_words) = pair_mut(bufs, 0, r);
+            bitpack::add_packed_codes(&mut **dst_words, &**src_words, bits, 0, n_codes);
+            traffic.seg(n_codes, bits, 3.0);
+            traffic.wire(n_codes, bits);
+            traffic.steps += 1;
+        }
+        for r in 1..m {
+            let (dst_words, src_words) = pair_mut(bufs, r, 0);
+            bitpack::copy_packed_codes(&mut **dst_words, &**src_words, bits, 0, n_codes);
+            traffic.seg(n_codes, bits, 2.0);
+            traffic.wire(n_codes, bits);
+            traffic.steps += 1;
+        }
+    }
+
+    fn hops(&self, m: usize) -> usize {
+        m.saturating_sub(1)
+    }
+
+    fn hop_wire_bytes(&self, _h: usize, elems: usize, bits: u32, _m: usize) -> f64 {
+        bitpack::wire_bytes_for(elems, bits) as f64
+    }
+
+    fn comm_s(&self, net: &NetConfig, elems: usize, bits: u32) -> f64 {
+        // hierarchical model at the resident width (see TreeReduce::comm_s)
+        if net.workers <= 1 || elems == 0 {
+            return 0.0;
+        }
+        net.allreduce_s(bitpack::wire_bytes_for(elems, bits) as f64)
+    }
+}
+
+/// The schedule for a [`crate::netsim::Algo`] + ring-width choice.
+/// `lmax` is the per-contribution level bound (ignored off-ring and for the
+/// fixed ring); `growing` selects [`RingGrowing`] on the ring.
+pub fn schedule_for(algo: crate::netsim::Algo, growing: bool, lmax: usize) -> PackedSchedule {
+    match algo {
+        crate::netsim::Algo::Ring if growing => PackedSchedule::RingGrowing(RingGrowing { lmax }),
+        crate::netsim::Algo::Ring => PackedSchedule::RingFixed(RingFixed),
+        crate::netsim::Algo::Tree => PackedSchedule::Tree(TreeReduce),
+        crate::netsim::Algo::Naive => PackedSchedule::Naive(NaiveReduce),
+    }
+}
+
+/// Owned, allocation-free sum of the four schedules (so callers can select
+/// per step without boxing); derefs to the trait via [`PackedSchedule::as_dyn`].
+#[derive(Clone, Copy, Debug)]
+pub enum PackedSchedule {
+    RingFixed(RingFixed),
+    RingGrowing(RingGrowing),
+    Tree(TreeReduce),
+    Naive(NaiveReduce),
+}
+
+impl PackedSchedule {
+    pub fn as_dyn(&self) -> &dyn PackedReduce {
+        match self {
+            PackedSchedule::RingFixed(s) => s,
+            PackedSchedule::RingGrowing(s) => s,
+            PackedSchedule::Tree(s) => s,
+            PackedSchedule::Naive(s) => s,
+        }
+    }
+}
+
+/// Analytic wire seconds of one schedule pass for the given net — the
+/// comm_s [`super::StepCtx::charge_packed`] books ([`PackedReduce::comm_s`]),
+/// exposed as a free fn so tests can pin the charge against the formula.
+pub fn analytic_comm_s(
+    sched: &dyn PackedReduce,
+    net: &NetConfig,
+    elems: usize,
+    bits: u32,
+) -> f64 {
+    sched.comm_s(net, elems, bits)
+}
+
 /// Pack-per-hop reference schedule: identical ring, but every reduce hop
 /// unpacks both segments through the offset kernels, adds in the integer
-/// domain, and repacks. Kept as the baseline the property tests pin
-/// [`ring_allreduce_biased_range`] bit-identical to, and as the shape a
-/// width-growing (wire-minimal) variant would take — see DESIGN.md
-/// §Performance for the trade-off.
+/// domain, and repacks — all at the fixed resident width. Kept as the
+/// baseline the property tests pin [`ring_allreduce_biased_range`] and the
+/// width-growing schedule bit-identical to.
 pub fn ring_allreduce_biased_range_reference(
     bufs: &mut [&mut [u64]],
     bits: u32,
@@ -155,10 +592,14 @@ pub fn ring_allreduce_biased_range_reference(
 }
 
 /// Convenience wrapper over whole [`Packed`] buffers (all at the same
-/// resident width and length, biased codes). Used by the benches and tests;
-/// the fused pipelined hot path drives [`ring_allreduce_biased_range`]
-/// directly on per-chunk word views.
-pub fn ring_allreduce_sum_packed(bufs: &mut [Packed], traffic: &mut RingTraffic) {
+/// resident width and length, biased codes), reduced by `sched`. Used by
+/// the benches and tests; the fused pipelined hot path drives
+/// [`PackedReduce::reduce`] directly on per-chunk word views.
+pub fn allreduce_sum_packed_sched(
+    sched: &dyn PackedReduce,
+    bufs: &mut [Packed],
+    traffic: &mut PlaneTraffic,
+) {
     let m = bufs.len();
     if m <= 1 {
         return;
@@ -170,7 +611,13 @@ pub fn ring_allreduce_sum_packed(bufs: &mut [Packed], traffic: &mut RingTraffic)
         "ragged packed buffers"
     );
     let mut views: Vec<&mut [u64]> = bufs.iter_mut().map(|p| p.words.as_mut_slice()).collect();
-    ring_allreduce_biased_range(&mut views, bits, len, traffic);
+    sched.reduce(&mut views, bits, len, traffic);
+}
+
+/// [`allreduce_sum_packed_sched`] at the fixed-width ring (the historical
+/// entry point the benches and StepCtx wrapper use).
+pub fn ring_allreduce_sum_packed(bufs: &mut [Packed], traffic: &mut PlaneTraffic) {
+    allreduce_sum_packed_sched(&RingFixed, bufs, traffic)
 }
 
 #[cfg(test)]
@@ -194,35 +641,51 @@ mod tests {
             .collect()
     }
 
+    fn all_schedules(lmax: usize) -> Vec<PackedSchedule> {
+        vec![
+            PackedSchedule::RingFixed(RingFixed),
+            PackedSchedule::RingGrowing(RingGrowing { lmax }),
+            PackedSchedule::Tree(TreeReduce),
+            PackedSchedule::Naive(NaiveReduce),
+        ]
+    }
+
     #[test]
-    fn prop_packed_ring_equals_integer_naive() {
-        check("packed ring == naive integer sum", 120, |g| {
+    fn prop_every_schedule_equals_integer_naive() {
+        // the tentpole contract: ring (fixed + growing), tree, and naive
+        // packed reducers all produce the exact integer sum on every rank.
+        check("packed schedules == naive integer sum", 100, |g| {
             let m = g.usize_in(1, 9);
             let lmax = *g.pick(&[1usize, 7, 127, 2047]);
-            let n = g.size_scaled(0, 2500);
+            let n = g.size_scaled(0, 2000);
             let bits = packed_sum_bits(lmax, m);
             let levels = random_levels(g, lmax, m, n);
-            let mut bufs: Vec<Packed> =
-                levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
-            let mut traffic = RingTraffic::default();
-            ring_allreduce_sum_packed(&mut bufs, &mut traffic);
             let want: Vec<i64> = (0..n)
                 .map(|i| levels.iter().map(|l| l[i] as i64).sum::<i64>())
                 .collect();
             let bias_total = (m as i64) * lmax as i64;
-            let mut got = vec![0i64; n];
-            for (r, p) in bufs.iter().enumerate() {
-                unpack_biased_i64_at(&p.words, bits, 0, bias_total, &mut got);
-                if got != want {
-                    let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
-                    return Err(format!(
-                        "rank {r} field {bad}: {} vs {} (m={m} lmax={lmax} bits={bits})",
-                        got[bad], want[bad]
-                    ));
+            for sched in all_schedules(lmax) {
+                let mut bufs: Vec<Packed> =
+                    levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
+                let mut traffic = PlaneTraffic::default();
+                allreduce_sum_packed_sched(sched.as_dyn(), &mut bufs, &mut traffic);
+                let mut got = vec![0i64; n];
+                for (r, p) in bufs.iter().enumerate() {
+                    unpack_biased_i64_at(&p.words, bits, 0, bias_total, &mut got);
+                    if got != want {
+                        let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                        return Err(format!(
+                            "{} rank {r} field {bad}: {} vs {} (m={m} lmax={lmax} bits={bits})",
+                            sched.as_dyn().name(),
+                            got[bad],
+                            want[bad]
+                        ));
+                    }
                 }
-            }
-            if m > 1 && n > 0 {
-                ensure(traffic.bytes_moved > 0.0, "traffic counter must move")?;
+                if m > 1 && n > 0 {
+                    ensure(traffic.bytes_moved > 0.0, "traffic counter must move")?;
+                    ensure(traffic.wire_bits > 0.0, "wire counter must move")?;
+                }
             }
             Ok(())
         });
@@ -230,30 +693,159 @@ mod tests {
 
     #[test]
     fn prop_fast_add_path_bit_identical_to_pack_per_hop_reference() {
-        // the tentpole contract at the collective level: the in-place
-        // add-with-carry hops produce the exact same packed words as the
-        // unpack -> add -> repack reference schedule.
-        check("adc ring == pack-per-hop reference", 120, |g| {
+        // the in-place add-with-carry hops and the width-growing hops both
+        // produce the exact same packed words as the unpack -> add -> repack
+        // reference schedule.
+        check("adc + growing ring == pack-per-hop reference", 100, |g| {
             let m = g.usize_in(2, 9);
             let lmax = *g.pick(&[1usize, 7, 127]);
-            let n = g.size_scaled(1, 2000);
+            let n = g.size_scaled(1, 1500);
             let bits = packed_sum_bits(lmax, m);
             let levels = random_levels(g, lmax, m, n);
             let mut fast: Vec<Packed> =
                 levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
+            let mut grow = fast.clone();
             let mut slow = fast.clone();
-            let mut traffic = RingTraffic::default();
+            let mut traffic = PlaneTraffic::default();
             ring_allreduce_sum_packed(&mut fast, &mut traffic);
+            let mut gt = PlaneTraffic::default();
+            allreduce_sum_packed_sched(&RingGrowing { lmax }, &mut grow, &mut gt);
             let mut views: Vec<&mut [u64]> =
                 slow.iter_mut().map(|p| p.words.as_mut_slice()).collect();
             ring_allreduce_biased_range_reference(&mut views, bits, n);
             for r in 0..m {
                 if fast[r] != slow[r] {
-                    return Err(format!("rank {r} words differ (m={m} lmax={lmax} n={n})"));
+                    return Err(format!("rank {r} adc words differ (m={m} lmax={lmax} n={n})"));
+                }
+                if grow[r] != slow[r] {
+                    return Err(format!("rank {r} growing words differ (m={m} lmax={lmax} n={n})"));
                 }
             }
-            ensure(traffic.steps == 2 * m * (m - 1), "step count")
+            ensure(traffic.steps == 2 * m * (m - 1), "step count")?;
+            // the growing schedule may never ship more wire bits
+            ensure(
+                gt.wire_bits <= traffic.wire_bits,
+                &format!("growing wire {} > fixed wire {}", gt.wire_bits, traffic.wire_bits),
+            )
         });
+    }
+
+    #[test]
+    fn bytes_moved_matches_analytic_formula_per_schedule() {
+        // satellite regression: the data-plane ledger equals the closed-form
+        // per-schedule traffic. Adds touch 3 field passes, copies 2; chunks
+        // partition [0, n), so fixed ring, tree, and naive all move
+        // 5*(m-1)*n*bits/8 bytes; the growing ring adds 2 wire-staging
+        // passes per reduce-scatter segment at the hop width.
+        for &(m, lmax, n) in &[(2usize, 7usize, 257usize), (5, 1, 1000), (8, 127, 513)] {
+            let bits = packed_sum_bits(lmax, m);
+            let levels: Vec<Vec<i32>> =
+                (0..m).map(|r| vec![(r % 3) as i32 - 1; n]).collect();
+            let field_bytes = (n * bits as usize) as f64 / 8.0;
+            let flat = 5.0 * (m - 1) as f64 * field_bytes;
+            for sched in [
+                PackedSchedule::RingFixed(RingFixed),
+                PackedSchedule::Tree(TreeReduce),
+                PackedSchedule::Naive(NaiveReduce),
+            ] {
+                let mut bufs: Vec<Packed> =
+                    levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
+                let mut t = PlaneTraffic::default();
+                allreduce_sum_packed_sched(sched.as_dyn(), &mut bufs, &mut t);
+                assert!(
+                    (t.bytes_moved - flat).abs() < 1e-6,
+                    "{}: bytes_moved {} != analytic {flat} (m={m} bits={bits})",
+                    sched.as_dyn().name(),
+                    t.bytes_moved
+                );
+            }
+            // growing ring: flat resident traffic + 2 wire passes per
+            // reduce-scatter segment at that hop's width
+            let starts = chunk_starts(n, m);
+            let mut wire_extra = 0.0;
+            for step in 0..m - 1 {
+                let w = growing_hop_bits(lmax, step + 1) as usize;
+                for c in 0..m {
+                    wire_extra += 2.0 * ((starts[c + 1] - starts[c]) * w) as f64 / 8.0;
+                }
+            }
+            let mut bufs: Vec<Packed> =
+                levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
+            let mut t = PlaneTraffic::default();
+            allreduce_sum_packed_sched(&RingGrowing { lmax }, &mut bufs, &mut t);
+            assert!(
+                (t.bytes_moved - (flat + wire_extra)).abs() < 1e-6,
+                "growing: bytes_moved {} != analytic {} (m={m} bits={bits})",
+                t.bytes_moved,
+                flat + wire_extra
+            );
+        }
+    }
+
+    #[test]
+    fn hop_models_match_netsim_shapes() {
+        // per-worker hop counts and widths the clock charges: ring
+        // 2(m-1) segments, tree 2*ceil(log2 m) full buffers, naive m-1
+        // full buffers; growing reduce-scatter hops are narrow.
+        let (elems, bits, m) = (1000usize, 8u32, 6usize);
+        assert_eq!(RingFixed.hops(m), 10);
+        assert_eq!(TreeReduce.hops(m), 6); // ceil(log2 6) = 3, up + down
+        assert_eq!(NaiveReduce.hops(m), 5);
+        assert_eq!(
+            RingFixed.hop_wire_bytes(0, elems, bits, m),
+            bitpack::wire_bytes_for(167, bits) as f64
+        );
+        assert_eq!(
+            TreeReduce.hop_wire_bytes(0, elems, bits, m),
+            bitpack::wire_bytes_for(elems, bits) as f64
+        );
+        let grow = RingGrowing { lmax: 7 };
+        // first hop ships 1-contribution partials: bitlen(14) = 4 bits
+        assert_eq!(
+            grow.hop_wire_bytes(0, elems, bits, m),
+            bitpack::wire_bytes_for(167, 4) as f64
+        );
+        // all-gather hops ship the full resident width
+        assert_eq!(
+            grow.hop_wire_bytes(m - 1, elems, bits, m),
+            bitpack::wire_bytes_for(167, bits) as f64
+        );
+        // growing total never exceeds fixed total
+        let total = |s: &dyn PackedReduce| -> f64 {
+            (0..s.hops(m)).map(|h| s.hop_wire_bytes(h, elems, bits, m)).sum()
+        };
+        assert!(total(&grow) < total(&RingFixed));
+    }
+
+    #[test]
+    fn tree_and_naive_comm_keep_the_hierarchy() {
+        // regression: moving tree/naive onto the packed plane must not
+        // flatten their wire model — a 32x4 NVLink cluster stays cheaper
+        // than 128 flat-Ethernet workers (comm_s override), while the ring
+        // keeps the PR 2 bottleneck-link hop charging.
+        use crate::netsim::Algo;
+        let (elems, bits) = (1 << 20, 8u32);
+        for algo in [Algo::Tree, Algo::Naive] {
+            let mut hier = NetConfig::paper_cluster(10.0);
+            hier.algo = algo;
+            let mut flat = NetConfig::flat(128, 10.0);
+            flat.algo = algo;
+            let sched: &dyn PackedReduce =
+                if algo == Algo::Tree { &TreeReduce } else { &NaiveReduce };
+            assert!(
+                sched.comm_s(&hier, elems, bits) < sched.comm_s(&flat, elems, bits),
+                "{}: NVLink hierarchy must beat flat ethernet",
+                sched.name()
+            );
+        }
+        // on a flat cluster the tree override equals the hop-sum shape
+        let mut flat = NetConfig::flat(16, 10.0);
+        flat.algo = Algo::Tree;
+        let hop_sum: f64 = (0..TreeReduce.hops(16))
+            .map(|h| flat.hop_s(TreeReduce.hop_wire_bytes(h, elems, bits, 16)))
+            .sum();
+        let got = TreeReduce.comm_s(&flat, elems, bits);
+        assert!((got - hop_sum).abs() <= 1e-12 * hop_sum.max(1.0));
     }
 
     #[test]
@@ -265,7 +857,7 @@ mod tests {
         let run = |bits: u32| {
             let mut bufs: Vec<Packed> =
                 levels.iter().map(|l| pack_biased_int(l, 4, bits)).collect();
-            let mut t = RingTraffic::default();
+            let mut t = PlaneTraffic::default();
             ring_allreduce_sum_packed(&mut bufs, &mut t);
             t.bytes_moved
         };

@@ -728,6 +728,112 @@ mod tests {
     }
 
     #[test]
+    fn add_packed_codes_at_field_saturation() {
+        // every code at the field maximum 2*lmax, summed to the full
+        // m-contribution saturation 2*m*lmax — the exact carry-safety
+        // boundary of packed_sum_bits. No carry may escape any field.
+        for &(lmax, m) in &[(1usize, 2usize), (7, 9), (127, 64), (2047, 5)] {
+            let bits = packed_sum_bits(lmax, m);
+            let n = 131; // prime: fields straddle word boundaries for odd widths
+            let sat = vec![lmax as i32; n]; // biased code = 2*lmax, the max
+            let mut dst = pack_biased_int(&sat, lmax as i64, bits);
+            let src = dst.clone();
+            for _ in 1..m {
+                add_packed_codes(&mut dst.words, &src.words, bits, 0, n);
+            }
+            let mut got = vec![0i64; n];
+            unpack_biased_i64_at(&dst.words, bits, 0, 0, &mut got);
+            let want = 2 * (m as i64) * lmax as i64; // == 2^bits - 1 or below
+            assert!(got.iter().all(|&x| x == want), "lmax={lmax} m={m} bits={bits}");
+            assert!(want < (1i64 << bits), "saturated sum must fit its field");
+        }
+    }
+
+    #[test]
+    fn add_packed_codes_at_widening_rule_boundary() {
+        // M at the assert_widening_rule boundary (MAX_WORKERS=4096 at
+        // s=32767, the 16-bit quantizer): the resident width is 28 bits
+        // (64 % 28 != 0, so fields straddle words) and the saturated sum
+        // 2*M*s is the largest code the plane can ever hold. Simulate the
+        // last add of the reduction: a (M-1)-contribution saturated partial
+        // plus one saturated contribution.
+        let (lmax, m) = (32767usize, 4096usize);
+        let bits = packed_sum_bits(lmax, m);
+        assert_eq!(bits, 28);
+        let n = 67;
+        let partial = 2 * (m as u64 - 1) * lmax as u64;
+        let one = 2 * lmax as u64;
+        let mut dst = vec![0u64; words_for(n, bits)];
+        let mut src = vec![0u64; words_for(n, bits)];
+        pack_codes_at(&vec![partial; n], bits, &mut dst, 0);
+        pack_codes_at(&vec![one; n], bits, &mut src, 0);
+        add_packed_codes(&mut dst, &src, bits, 0, n);
+        let mut got = vec![0u64; n];
+        unpack_codes_at(&dst, bits, 0, &mut got);
+        let want = 2 * (m as u64) * lmax as u64;
+        assert!(got.iter().all(|&x| x == want));
+        assert!(want < 1u64 << bits);
+    }
+
+    #[test]
+    fn add_packed_codes_non_word_aligned_boundaries() {
+        // segment boundaries that are not word-aligned, at widths where a
+        // field straddles two words (the edges the growing schedule's
+        // narrow wire segments newly exercise): adds confined to [lo, hi)
+        // must carry correctly across the straddled words and leave the
+        // neighbors bit-exact.
+        for &bits in &[3u32, 5, 7, 11, 13, 28] {
+            let n = 200;
+            let mask = low_mask(bits);
+            // dst fields hold the max addend-safe value: sum stays in field
+            let a: Vec<u64> = (0..n).map(|i| (i as u64 * 0x9E37) & (mask >> 1)).collect();
+            let b: Vec<u64> = (0..n).map(|i| (i as u64 * 0x85EB) & (mask >> 1)).collect();
+            for &(lo, hi) in &[(1usize, 2usize), (5, 64), (63, 64), (7, 193), (0, 200)] {
+                let mut pa = vec![0u64; words_for(n, bits)];
+                let mut pb = vec![0u64; words_for(n, bits)];
+                pack_codes_at(&a, bits, &mut pa, 0);
+                pack_codes_at(&b, bits, &mut pb, 0);
+                add_packed_codes(&mut pa, &pb, bits, lo, hi);
+                let mut got = vec![0u64; n];
+                unpack_codes_at(&pa, bits, 0, &mut got);
+                for i in 0..n {
+                    let want = if i >= lo && i < hi { a[i] + b[i] } else { a[i] };
+                    assert_eq!(got[i], want, "bits={bits} lo={lo} hi={hi} field {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn width_transition_repack_roundtrip() {
+        // the growing ring's between-hop width transition: codes packed at
+        // a narrow hop width w1, unpacked, and repacked at a wider width w2
+        // (and at a non-zero, non-word-aligned offset) must survive
+        // bit-exactly, without disturbing resident neighbors.
+        for &(w1, w2) in &[(2u32, 3u32), (3, 4), (4, 6), (5, 12), (7, 28), (12, 13)] {
+            let n = 150;
+            let codes: Vec<u64> = (0..n).map(|i| (i as u64 * 0xC2B2) & low_mask(w1)).collect();
+            let mut narrow = vec![0u64; words_for(n, w1)];
+            pack_codes_at(&codes, w1, &mut narrow, 0);
+            // resident buffer at w2 with a live background, repack at offset
+            let total = n + 77;
+            let off = 31; // 31 * w2 is word-misaligned for every w2 here
+            let bg: Vec<u64> = (0..total).map(|i| (i as u64 * 0x1B87) & low_mask(w2)).collect();
+            let mut resident = vec![0u64; words_for(total, w2)];
+            pack_codes_at(&bg, w2, &mut resident, 0);
+            let mut tmp = vec![0u64; n];
+            unpack_codes_at(&narrow, w1, 0, &mut tmp);
+            pack_codes_at(&tmp, w2, &mut resident, off);
+            let mut got = vec![0u64; total];
+            unpack_codes_at(&resident, w2, 0, &mut got);
+            for i in 0..total {
+                let want = if i >= off && i < off + n { codes[i - off] } else { bg[i] };
+                assert_eq!(got[i], want, "w1={w1} w2={w2} field {i}");
+            }
+        }
+    }
+
+    #[test]
     fn sum_width_and_alignment_helpers() {
         // 4-bit quantizer (s=7), 16 workers: codes up to 224 -> 8 bits
         assert_eq!(packed_sum_bits(7, 16), 8);

@@ -4,13 +4,19 @@
 //! The pre-integer pipeline carried quantizer levels as `f32`: 32 bits per
 //! coordinate through encode, the ring all-reduce, and decode — for a
 //! nominally 2–16-bit wire format. Exactly the gap ScaleCom (Chen et al.,
-//! 2020) identifies between paper speedups and deployed speedups. Here the
-//! levels are written straight into widened integer buffers
+//! 2020) identifies between paper speedups and deployed speedups. The
+//! production path ([`qsgd_step_packed`] / [`multiscale_step_packed`]) now
+//! encodes biased codes straight into a **packed resident operand** and
+//! reduces it through the schedule-generic packed data plane
+//! ([`crate::collectives::PackedReduce`]: fixed- or growing-width ring,
+//! tree, naive — resolved per step from the net config and width policy),
+//! decoding once from the exact integer sum. The widened-integer plane
 //! ([`LevelInt`]: `i16` when `workers * s` fits, `i32` otherwise — the
-//! overflow-safe widening rule), reduced in the integer domain, and decoded
-//! once from the exact integer sum. Encode fan-out runs on the persistent
-//! [`threads::pool`] instead of spawning OS threads per step, and every
-//! buffer lives in the aggregator across steps.
+//! overflow-safe widening rule; [`qsgd_step_int`] / [`multiscale_step_int`])
+//! is kept as the property-pinned reference the packed plane must match bit
+//! for bit. Encode fan-out runs on the persistent [`threads::pool`] instead
+//! of spawning OS threads per step, and every buffer lives in the
+//! aggregator across steps.
 //!
 //! [`wire_roundtrip_qsgd`] additionally pushes each worker's levels through
 //! the packed wire format (`bitpack`) before reducing — the property tests
@@ -230,32 +236,35 @@ fn chunk_plan(n: usize, resident_bits: u32, chunks: Option<usize>) -> Vec<usize>
 }
 
 /// The engine behind both packed step functions: chunk-pipelined
-/// encode→pack→packed-ring→decode over the persistent pool.
+/// encode→pack→packed-reduce→decode over the persistent pool, generic over
+/// the reduction schedule ([`collectives::PackedReduce`]).
 ///
 /// For each chunk (word-aligned code range of the per-worker resident
 /// buffers), a producer task encodes every worker's slice into an integer
 /// temp and packs it as biased codes at the resident width; **as soon as a
-/// chunk is packed it enters the ring** on the consuming (calling) thread
+/// chunk is packed it enters the reduce** on the consuming (calling) thread
 /// while later chunks are still encoding — chunks are independent
 /// sub-all-reduces, and integer sums are exact, so completion order cannot
-/// change the result. The consumer reduces the chunk with the in-place
-/// packed ring and immediately decodes it into `out`.
+/// change the result. The consumer reduces the chunk through the schedule
+/// (fixed/growing ring, tree, or naive — all packed-resident) and
+/// immediately decodes it into `out`.
 ///
 /// Timing attribution (see DESIGN.md §Performance): decode work is measured
 /// into `decode_s`; the rest of the overlapped produce/reduce wall time
 /// lands in `encode_s`; the simulated wire cost is charged separately and
-/// hop-accurately by the caller via `StepCtx::charge_ring_packed`.
+/// hop-accurately by the caller via `StepCtx::charge_packed`.
 #[allow(clippy::too_many_arguments)]
 fn packed_pipeline(
     m: usize,
     n: usize,
     resident_bits: u32,
     chunks: Option<usize>,
+    sched: &dyn collectives::PackedReduce,
     scratch: &mut PackedScratch,
     ctx: &mut StepCtx,
     encode_chunk: impl Fn(usize, usize, usize, &mut Vec<i32>, &mut [u64]) + Send + Sync,
     mut decode_chunk: impl FnMut(usize, usize, &[u64]),
-) -> collectives::RingTraffic {
+) -> collectives::PlaneTraffic {
     let words_len = bitpack::words_for(n, resident_bits);
     scratch.words.resize_with(m, Vec::new);
     for wbuf in scratch.words.iter_mut() {
@@ -277,7 +286,7 @@ fn packed_pipeline(
     let tmp_ptr = threads::SendPtr(scratch.chunk_tmp.as_mut_ptr());
     let rb = resident_bits as usize;
 
-    let mut traffic = collectives::RingTraffic::default();
+    let mut traffic = collectives::PlaneTraffic::default();
     let mut decode_s = 0.0f64;
     let t0 = std::time::Instant::now();
     {
@@ -315,12 +324,7 @@ fn packed_pipeline(
                         std::slice::from_raw_parts_mut(p.0.add(w_lo), w_hi - w_lo)
                     })
                     .collect();
-                collectives::packed::ring_allreduce_biased_range(
-                    &mut views,
-                    resident_bits,
-                    hi - lo,
-                    traffic,
-                );
+                sched.reduce(&mut views, resident_bits, hi - lo, traffic);
                 let td = std::time::Instant::now();
                 decode_chunk(lo, hi, &*views[0]);
                 *decode_s += td.elapsed().as_secs_f64();
@@ -334,11 +338,13 @@ fn packed_pipeline(
 }
 
 /// One full packed-resident pipelined QSGD step: per-chunk pool-parallel
-/// encode into biased packed codes, chunk-pipelined in-place packed ring
-/// (the resident reduce operand is `Packed` words), per-chunk decode of the
-/// exact integer sum, hop-accurate wire charging. Bit-identical to
-/// [`qsgd_step_int`] (and hence to the legacy f32 path) for any chunk plan.
-/// `chunks` forces the chunk count (tests); `None` auto-sizes to the pool.
+/// encode into biased packed codes, chunk-pipelined packed reduce through
+/// the schedule resolved from the step context (fixed/growing ring, tree,
+/// naive — the resident reduce operand is `Packed` words for all of them),
+/// per-chunk decode of the exact integer sum, hop-accurate wire charging.
+/// Bit-identical to [`qsgd_step_int`] (and hence to the legacy f32 path)
+/// for any schedule and chunk plan. `chunks` forces the chunk count
+/// (tests); `None` auto-sizes to the pool.
 #[allow(clippy::too_many_arguments)]
 pub fn qsgd_step_packed(
     grads: &[&[f32]],
@@ -351,7 +357,7 @@ pub fn qsgd_step_packed(
     rng: &Rng,
     chunks: Option<usize>,
     out: &mut [f32],
-) -> collectives::RingTraffic {
+) -> collectives::PlaneTraffic {
     let m = grads.len();
     let n = grads[0].len();
     assert!(
@@ -359,6 +365,7 @@ pub fn qsgd_step_packed(
         "widening rule: {m} workers x s={s} overflows i32"
     );
     let rbits = bitpack::packed_sum_bits(s.max(1), m);
+    let sched = ctx.packed_schedule(s.max(1), m, n);
     ctx.time_encode(|| fill_uniforms_into(m, n, uniform, rng));
     let uni: &Vec<Vec<f32>> = uniform;
     let bias = s as i64;
@@ -370,6 +377,7 @@ pub fn qsgd_step_packed(
         n,
         rbits,
         chunks,
+        sched.as_dyn(),
         scratch,
         ctx,
         |wk, lo, hi, tmp, wslice| {
@@ -386,14 +394,15 @@ pub fn qsgd_step_packed(
             });
         },
     );
-    ctx.charge_ring_packed(n, rbits, wire_bits);
+    ctx.charge_packed(sched.as_dyn(), n, rbits, wire_bits);
     traffic
 }
 
 /// Multi-scale analogue of [`qsgd_step_packed`]: encode at the shared
 /// per-coordinate scales (levels bounded by `s_min + 1`, eq. 10), packed
-/// ring, per-chunk decode via the scale table. Bit-identical to
-/// [`multiscale_step_int`] for any chunk plan.
+/// reduce through the resolved schedule, per-chunk decode via the scale
+/// table. Bit-identical to [`multiscale_step_int`] for any schedule and
+/// chunk plan.
 #[allow(clippy::too_many_arguments)]
 pub fn multiscale_step_packed(
     grads: &[&[f32]],
@@ -407,7 +416,7 @@ pub fn multiscale_step_packed(
     rng: &Rng,
     chunks: Option<usize>,
     out: &mut [f32],
-) -> collectives::RingTraffic {
+) -> collectives::PlaneTraffic {
     let m = grads.len();
     let n = grads[0].len();
     let lmax = table.smin as usize + 1; // eq. (10): levels <= s_min + 1
@@ -416,6 +425,7 @@ pub fn multiscale_step_packed(
         "widening rule: {m} workers x lmax={lmax} overflows i32"
     );
     let rbits = bitpack::packed_sum_bits(lmax, m);
+    let sched = ctx.packed_schedule(lmax, m, n);
     ctx.time_encode(|| fill_uniforms_into(m, n, uniform, rng));
     let uni: &Vec<Vec<f32>> = uniform;
     let bias = lmax as i64;
@@ -426,6 +436,7 @@ pub fn multiscale_step_packed(
         n,
         rbits,
         chunks,
+        sched.as_dyn(),
         scratch,
         ctx,
         |wk, lo, hi, tmp, wslice| {
@@ -451,7 +462,7 @@ pub fn multiscale_step_packed(
             });
         },
     );
-    ctx.charge_ring_packed(n, rbits, payload_bits);
+    ctx.charge_packed(sched.as_dyn(), n, rbits, payload_bits);
     traffic
 }
 

@@ -8,7 +8,6 @@
 //! ceil(log2 N) bits/coord overhead) makes the scheme all-reduce compatible.
 
 use crate::collectives::StepCtx;
-use crate::netsim::Algo;
 use crate::util::rng::Rng;
 
 use super::fused;
@@ -21,8 +20,6 @@ pub struct QsgdMultiScale {
     pub scales: Vec<usize>,
     /// precomputed padded scale tables (no per-call Vec<f32> builds)
     table: ScaleTable,
-    scratch16: Vec<Vec<i16>>,
-    scratch32: Vec<Vec<i32>>,
     packed: fused::PackedScratch,
     idx_scratch: Vec<Vec<u8>>,
     uniform: Vec<Vec<f32>>,
@@ -51,8 +48,6 @@ impl QsgdMultiScale {
             bits: bits.to_vec(),
             scales,
             table,
-            scratch16: Vec::new(),
-            scratch32: Vec::new(),
             packed: fused::PackedScratch::new(),
             idx_scratch: Vec::new(),
             uniform: Vec::new(),
@@ -101,57 +96,26 @@ impl Aggregator for QsgdMultiScale {
         //    ceil(log2 N) bits per coordinate of overhead
         let shared_idx = ctx.allreduce_min_u8(&self.idx_scratch, self.index_bits());
 
-        // 4. quantize at the shared scales (line 8) into widened integer
-        //    buffers (levels bounded by s_min + 1, eq. 10); 5. integer-domain
-        //    sum all-reduce (line 9), zero-copy; 6. single reconstruct from
-        //    the exact integer sum (line 10).
+        // 4. quantize at the shared scales (line 8) into packed biased
+        //    codes (levels bounded by s_min + 1, eq. 10); 5. packed-resident
+        //    sum all-reduce (line 9) through the schedule-generic data
+        //    plane, chunk-pipelined with the encode; 6. single reconstruct
+        //    from the exact integer sum (line 10).
         let payload_bits = self.payload_bits();
-        // the per-coordinate level bound is s_min + 1, so the narrow
-        // accumulator fits iff M * (s_min + 1) does; on the ring the
-        // resident operand is packed biased codes and encode is
-        // chunk-pipelined with the reduce
         let mut out = vec![0.0f32; n];
-        if ctx.net.algo == Algo::Ring {
-            fused::multiscale_step_packed(
-                grads,
-                wnorm,
-                &table,
-                &shared_idx,
-                payload_bits,
-                &mut self.packed,
-                &mut self.uniform,
-                ctx,
-                rng,
-                None,
-                &mut out,
-            );
-        } else if fused::narrow_fits(self.scales[0] + 1, m) {
-            fused::multiscale_step_int(
-                grads,
-                wnorm,
-                &table,
-                &shared_idx,
-                payload_bits,
-                &mut self.scratch16,
-                &mut self.uniform,
-                ctx,
-                rng,
-                &mut out,
-            );
-        } else {
-            fused::multiscale_step_int(
-                grads,
-                wnorm,
-                &table,
-                &shared_idx,
-                payload_bits,
-                &mut self.scratch32,
-                &mut self.uniform,
-                ctx,
-                rng,
-                &mut out,
-            );
-        }
+        fused::multiscale_step_packed(
+            grads,
+            wnorm,
+            &table,
+            &shared_idx,
+            payload_bits,
+            &mut self.packed,
+            &mut self.uniform,
+            ctx,
+            rng,
+            None,
+            &mut out,
+        );
         out
     }
 }

@@ -3,17 +3,16 @@
 //! Protocol per step:
 //! 1. max-all-reduce the per-worker L2 norms -> shared scale `||w||_2`;
 //! 2. each worker stochastically quantizes against `||w||_2` at s levels,
-//!    writing levels straight into widened integer buffers (i16 when
-//!    `M * s` fits, i32 otherwise — the overflow-safe widening rule,
-//!    asserted at construction) on the persistent thread pool;
-//! 3. one sum-all-reduce of the signed integer levels (r = b bits/coord on
-//!    the wire; i16/i32 in memory instead of the old f32 — half/same the
-//!    traffic for a bit-identical result);
+//!    packing biased codes straight into the packed-resident operand on the
+//!    persistent thread pool (chunk-pipelined with the reduce);
+//! 3. one sum-all-reduce of the packed codes through the schedule-generic
+//!    packed data plane (`collectives::PackedReduce`: fixed- or
+//!    growing-width ring, tree, or naive — r = b bits/coord on the paper
+//!    ledger, hop-accurate resident widths on the deployment ledger);
 //! 4. a single decode of the reduced integer sum (eq. 8) — the all-reduce
 //!    compatibility property: decode commutes with the sum.
 
 use crate::collectives::StepCtx;
-use crate::netsim::Algo;
 use crate::util::rng::Rng;
 
 use super::fused;
@@ -23,10 +22,7 @@ use super::Aggregator;
 pub struct QsgdMaxNorm {
     pub bits: usize,
     pub s: usize,
-    /// reused per-step scratch (integer levels per worker, both widths) —
-    /// zero steady-state alloc; the int widths serve the non-ring fallback
-    scratch16: Vec<Vec<i16>>,
-    scratch32: Vec<Vec<i32>>,
+    /// reused per-step packed-plane scratch — zero steady-state alloc
     packed: fused::PackedScratch,
     uniform: Vec<Vec<f32>>,
 }
@@ -40,8 +36,6 @@ impl QsgdMaxNorm {
         Ok(QsgdMaxNorm {
             bits,
             s,
-            scratch16: Vec::new(),
-            scratch32: Vec::new(),
             packed: fused::PackedScratch::new(),
             uniform: Vec::new(),
         })
@@ -72,52 +66,26 @@ impl Aggregator for QsgdMaxNorm {
 
         // 2–4. per-worker stochastic quantization (line 6), compressed-
         // domain sum all-reduce (line 7), single reconstruct from the exact
-        // integer sum (line 8). On the ring (the production schedule) the
-        // resident reduce operand is the packed biased codes, encode is
-        // chunk-pipelined with the reduce, and the wire is charged
-        // hop-accurately; the tree/naive schedules keep the widened-integer
-        // data plane (width chosen per step by the widening rule).
+        // integer sum (line 8). The resident reduce operand is the packed
+        // biased codes for *every* schedule (ring fixed/growing, tree,
+        // naive — resolved per step from the net config + width policy),
+        // encode is chunk-pipelined with the reduce, and the wire is
+        // charged hop-accurately at the widths the schedule ships.
         let s = self.s;
         let wire_bits = kernels::bits_for_s(s);
         let mut out = vec![0.0f32; n];
-        if ctx.net.algo == Algo::Ring {
-            fused::qsgd_step_packed(
-                grads,
-                wnorm,
-                s,
-                wire_bits,
-                &mut self.packed,
-                &mut self.uniform,
-                ctx,
-                rng,
-                None,
-                &mut out,
-            );
-        } else if fused::narrow_fits(s, m) {
-            fused::qsgd_step_int(
-                grads,
-                wnorm,
-                s,
-                wire_bits,
-                &mut self.scratch16,
-                &mut self.uniform,
-                ctx,
-                rng,
-                &mut out,
-            );
-        } else {
-            fused::qsgd_step_int(
-                grads,
-                wnorm,
-                s,
-                wire_bits,
-                &mut self.scratch32,
-                &mut self.uniform,
-                ctx,
-                rng,
-                &mut out,
-            );
-        }
+        fused::qsgd_step_packed(
+            grads,
+            wnorm,
+            s,
+            wire_bits,
+            &mut self.packed,
+            &mut self.uniform,
+            ctx,
+            rng,
+            None,
+            &mut out,
+        );
         out
     }
 }

@@ -15,7 +15,6 @@
 //! (see DESIGN.md §2).
 
 use crate::collectives::StepCtx;
-use crate::netsim::Algo;
 use crate::util::rng::Rng;
 use crate::util::threads;
 
@@ -53,8 +52,6 @@ pub struct GlobalRandK {
     pub n: usize,
     pub rescale: bool,
     dense: Vec<Vec<f32>>,
-    levels16: Vec<Vec<i16>>,
-    levels32: Vec<Vec<i32>>,
     packed: fused::PackedScratch,
     uniform: Vec<Vec<f32>>,
 }
@@ -71,8 +68,6 @@ impl GlobalRandK {
             n,
             rescale: false,
             dense: Vec::new(),
-            levels16: Vec::new(),
-            levels32: Vec::new(),
             packed: fused::PackedScratch::new(),
             uniform: Vec::new(),
         })
@@ -108,51 +103,25 @@ impl Aggregator for GlobalRandK {
         let norms: Vec<f32> = self.dense.iter().map(|d| kernels::l2_norm(d)).collect();
         let wnorm = ctx.allreduce_max_scalar(&norms);
 
-        // QSGDMaxNorm on the K-vector: integer-domain encode + all-reduce
+        // QSGDMaxNorm on the K-vector: packed-resident pipelined path on
+        // the gathered sub-vector, whatever the schedule
         let s = self.s;
         let wire_bits = kernels::bits_for_s(s);
         let dense_refs: Vec<&[f32]> = self.dense.iter().map(|d| d.as_slice()).collect();
         let rescale = if self.rescale { n as f32 / self.k as f32 } else { 1.0 };
         let mut sub = vec![0.0f32; self.k];
-        if ctx.net.algo == Algo::Ring {
-            // packed-resident pipelined path on the gathered K-vector
-            fused::qsgd_step_packed(
-                &dense_refs,
-                wnorm,
-                s,
-                wire_bits,
-                &mut self.packed,
-                &mut self.uniform,
-                ctx,
-                rng,
-                None,
-                &mut sub,
-            );
-        } else if fused::narrow_fits(s, m) {
-            fused::qsgd_step_int(
-                &dense_refs,
-                wnorm,
-                s,
-                wire_bits,
-                &mut self.levels16,
-                &mut self.uniform,
-                ctx,
-                rng,
-                &mut sub,
-            );
-        } else {
-            fused::qsgd_step_int(
-                &dense_refs,
-                wnorm,
-                s,
-                wire_bits,
-                &mut self.levels32,
-                &mut self.uniform,
-                ctx,
-                rng,
-                &mut sub,
-            );
-        }
+        fused::qsgd_step_packed(
+            &dense_refs,
+            wnorm,
+            s,
+            wire_bits,
+            &mut self.packed,
+            &mut self.uniform,
+            ctx,
+            rng,
+            None,
+            &mut sub,
+        );
 
         // scatter back (+ n/K unbiasedness rescale)
         let mut out = vec![0.0f32; n];
@@ -174,8 +143,6 @@ pub struct GlobalRandKMultiScale {
     pub rescale: bool,
     table: ScaleTable,
     dense: Vec<Vec<f32>>,
-    levels16: Vec<Vec<i16>>,
-    levels32: Vec<Vec<i32>>,
     packed: fused::PackedScratch,
     idx_scratch: Vec<Vec<u8>>,
     uniform: Vec<Vec<f32>>,
@@ -203,8 +170,6 @@ impl GlobalRandKMultiScale {
             n,
             rescale: false,
             dense: Vec::new(),
-            levels16: Vec::new(),
-            levels32: Vec::new(),
             packed: fused::PackedScratch::new(),
             idx_scratch: Vec::new(),
             uniform: Vec::new(),
@@ -251,52 +216,24 @@ impl Aggregator for GlobalRandKMultiScale {
         ctx.time_encode(|| fused::scale_index_into(&dense_refs, wnorm, &table, idx_scratch));
         let shared_scale_idx = ctx.allreduce_min_u8(&self.idx_scratch, self.index_bits());
 
-        // multi-scale encode into widened integer buffers + integer-domain
-        // sum all-reduce (levels bounded by s_min + 1)
+        // multi-scale encode into packed biased codes + packed-resident sum
+        // all-reduce (levels bounded by s_min + 1), schedule-generic
         let payload_bits = kernels::bits_for_s(self.scales[0]);
         let rescale = if self.rescale { n as f32 / self.k as f32 } else { 1.0 };
         let mut sub = vec![0.0f32; self.k];
-        if ctx.net.algo == Algo::Ring {
-            fused::multiscale_step_packed(
-                &dense_refs,
-                wnorm,
-                &table,
-                &shared_scale_idx,
-                payload_bits,
-                &mut self.packed,
-                &mut self.uniform,
-                ctx,
-                rng,
-                None,
-                &mut sub,
-            );
-        } else if fused::narrow_fits(self.scales[0] + 1, m) {
-            fused::multiscale_step_int(
-                &dense_refs,
-                wnorm,
-                &table,
-                &shared_scale_idx,
-                payload_bits,
-                &mut self.levels16,
-                &mut self.uniform,
-                ctx,
-                rng,
-                &mut sub,
-            );
-        } else {
-            fused::multiscale_step_int(
-                &dense_refs,
-                wnorm,
-                &table,
-                &shared_scale_idx,
-                payload_bits,
-                &mut self.levels32,
-                &mut self.uniform,
-                ctx,
-                rng,
-                &mut sub,
-            );
-        }
+        fused::multiscale_step_packed(
+            &dense_refs,
+            wnorm,
+            &table,
+            &shared_scale_idx,
+            payload_bits,
+            &mut self.packed,
+            &mut self.uniform,
+            ctx,
+            rng,
+            None,
+            &mut sub,
+        );
 
         let mut out = vec![0.0f32; n];
         ctx.time_decode(|| {

@@ -34,6 +34,30 @@ impl Link {
     }
 }
 
+/// Wire-width policy for the packed ring schedule: ship every hop at the
+/// fixed final-sum width (in-place add-with-carry hops, no repack), grow the
+/// width hop-by-hop with the partial-sum contribution count (minimal wire,
+/// pack-per-hop compute), or let [`NetConfig::growing_ring_wins`] decide
+/// per step from the analytic cost model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RingWidth {
+    Fixed,
+    Growing,
+    #[default]
+    Auto,
+}
+
+/// Modeled CPU cost of one byte of pack-per-hop re-pack work (unpack the
+/// resident segment, repack at the hop width, unpack on receive, repack the
+/// accumulated fields): ~2.5 GB/s of effective bit-twiddling throughput per
+/// pass, on top of the add-with-carry pass the fixed ring already pays.
+pub const REPACK_S_PER_BYTE: f64 = 4e-10;
+
+/// Extra segment passes a width-growing reduce-scatter hop costs over the
+/// fixed ring's single add-with-carry pass (sender repack + receiver
+/// unpack/accumulate/repack, net of the adc pass).
+const GROWING_EXTRA_PASSES: f64 = 2.0;
+
 /// All-reduce algorithm the cost model assumes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
@@ -178,19 +202,67 @@ impl NetConfig {
         self.allreduce_s(4.0)
     }
 
+    /// The link a synchronous collective step bottlenecks on: inter-node
+    /// when the cluster spans nodes, NVLink otherwise.
+    fn bottleneck(&self) -> &Link {
+        if self.nodes() > 1 {
+            &self.inter
+        } else {
+            &self.intra
+        }
+    }
+
+    /// One synchronous hop moving `bytes` per rank over the bottleneck link
+    /// — the unit every hop-accurate packed-schedule charge is built from.
+    pub fn hop_s(&self, bytes: f64) -> f64 {
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        self.bottleneck().xfer_s(bytes)
+    }
+
     /// Hop-accurate ring time: `steps` synchronous ring steps, each moving
-    /// `bytes_per_step` per rank over the bottleneck link (inter-node when
-    /// the cluster spans nodes, NVLink otherwise). Used by the
+    /// `bytes_per_step` per rank over the bottleneck link. Used by the
     /// packed-resident ring, whose per-hop segments are *wider* than the
     /// nominal payload (partial sums need headroom) — the deployment gap the
     /// uniform [`NetConfig::allreduce_s`] model hides (ScaleCom, Chen et
     /// al., 2020).
     pub fn ring_steps_s(&self, steps: usize, bytes_per_step: f64) -> f64 {
-        if self.workers <= 1 || steps == 0 {
+        if steps == 0 {
             return 0.0;
         }
-        let link = if self.nodes() > 1 { &self.inter } else { &self.intra };
-        steps as f64 * link.xfer_s(bytes_per_step)
+        steps as f64 * self.hop_s(bytes_per_step)
+    }
+
+    /// Per-step analytic selector for the packed ring's wire width
+    /// ([`RingWidth::Auto`]): does the width-growing pack-per-hop ring beat
+    /// the fixed-width add-with-carry ring *in time* for this step?
+    ///
+    /// Wire seconds saved: each reduce-scatter hop `k` (of `m - 1`) ships
+    /// its `ceil(elems/m)`-code segment at `bitlen(2*k*lmax)` instead of the
+    /// fixed `bitlen(2*m*lmax)` (all-gather hops ship completed sums — no
+    /// savings). Compute seconds added: [`GROWING_EXTRA_PASSES`] re-pack
+    /// passes over the resident segment per reduce-scatter hop at
+    /// [`REPACK_S_PER_BYTE`]. Growing wins on slow wires (the saved bytes
+    /// buy more than the repack tax — low bits × high M over commodity
+    /// Ethernet); fixed wins when the link outruns the re-packer. The
+    /// observed data-plane crossover is recorded in DESIGN.md.
+    pub fn growing_ring_wins(&self, lmax: usize, m: usize, elems: usize) -> bool {
+        use crate::compress::bitpack::{packed_sum_bits, wire_bytes_for};
+        if m <= 1 || elems == 0 {
+            return false;
+        }
+        let seg = elems.div_ceil(m);
+        let wfix = packed_sum_bits(lmax, m);
+        let seg_fixed_bytes = wire_bytes_for(seg, wfix) as f64;
+        let mut saved_bytes = 0.0;
+        for k in 1..m {
+            saved_bytes += seg_fixed_bytes - wire_bytes_for(seg, packed_sum_bits(lmax, k)) as f64;
+        }
+        let saved_s = saved_bytes / self.bottleneck().bytes_per_s;
+        let extra_s =
+            (m - 1) as f64 * GROWING_EXTRA_PASSES * seg_fixed_bytes * REPACK_S_PER_BYTE;
+        saved_s > extra_s
     }
 }
 
@@ -265,6 +337,28 @@ mod tests {
         let net = NetConfig::flat(1, 10.0);
         assert_eq!(net.allreduce_s(1e9), 0.0);
         assert_eq!(net.allgather_s(1e9), 0.0);
+    }
+
+    #[test]
+    fn growing_selector_prefers_slow_wires() {
+        // 2-bit quantizer (lmax=1), 8 workers: at 0.5 Gbps the saved
+        // reduce-scatter bytes dominate the repack tax; on NVLink the link
+        // outruns the re-packer. (The analytic crossover for this shape is
+        // ~3 Gbps — see DESIGN.md.)
+        let slow = NetConfig::flat(8, 0.5);
+        let fast = NetConfig::single_node(8);
+        assert!(slow.growing_ring_wins(1, 8, 1 << 20));
+        assert!(!fast.growing_ring_wins(1, 8, 1 << 20));
+        // degenerate shapes never pick growing
+        assert!(!slow.growing_ring_wins(1, 1, 1 << 20));
+        assert!(!slow.growing_ring_wins(1, 8, 0));
+    }
+
+    #[test]
+    fn hop_s_matches_ring_steps() {
+        let net = NetConfig::flat(4, 10.0);
+        assert_eq!(net.ring_steps_s(6, 100.0), 6.0 * net.hop_s(100.0));
+        assert_eq!(NetConfig::flat(1, 10.0).hop_s(100.0), 0.0);
     }
 
     #[test]

@@ -410,6 +410,208 @@ fn prop_packed_resident_ring_in_aggregators_across_schemes() {
 }
 
 #[test]
+fn packed_plane_schedule_matrix_bit_identical_with_ledger_parity() {
+    // PR 3 acceptance matrix: the schedule-generic packed plane — fixed
+    // ring, width-growing ring, tree, naive — is bit-identical to the int
+    // plane and the legacy f32 plane across bits (2/4/8) x workers
+    // (2/4/16/64) x chunk plans, with (a) the nominal bits ledger identical
+    // across every plane and schedule, (b) comm_s equal to the analytic
+    // per-schedule hop formula, and (c) the growing ring never charging
+    // more hop bits than the fixed ring.
+    use repro::collectives::{packed, PackedSchedule, RingFixed, RingGrowing};
+    use repro::compress::bitpack;
+    use repro::netsim::RingWidth;
+    let n = 97usize;
+    for &bits in &[2usize, 4, 8] {
+        for &m in &[2usize, 4, 16, 64] {
+            let s = kernels::s_for_bits(bits);
+            let rbits = bitpack::packed_sum_bits(s, m);
+            let seed = (bits * 1000 + m) as u64;
+            let mut grng = Rng::new(seed);
+            let grads: Vec<Vec<f32>> = (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    grng.fill_normal_f32(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let wnorm = max_norm(&refs);
+            let net = NetConfig::flat(m, 10.0);
+
+            // int plane: the ledger baseline
+            let mut clock_int = SimClock::default();
+            let mut got_int = vec![0.0f32; n];
+            {
+                let mut ctx = StepCtx::new(&net, &mut clock_int);
+                let mut s32: Vec<Vec<i32>> = Vec::new();
+                let mut uni = Vec::new();
+                fused::qsgd_step_int(
+                    &refs, wnorm, s, bits as f64, &mut s32, &mut uni, &mut ctx,
+                    &Rng::new(seed), &mut got_int,
+                );
+            }
+
+            let mut hop_bits_fixed = None;
+            for algo in [Algo::Ring, Algo::Tree, Algo::Naive] {
+                let want = reference_qsgd(&refs, bits, seed, algo);
+                assert_eq!(got_int, want, "int plane vs f32 (bits={bits} m={m} algo={algo:?})");
+                let widths: &[RingWidth] = if algo == Algo::Ring {
+                    &[RingWidth::Fixed, RingWidth::Growing]
+                } else {
+                    &[RingWidth::Auto]
+                };
+                for &width in widths {
+                    for &chunks in &[1usize, 3, 16] {
+                        let mut net_a = net.clone();
+                        net_a.algo = algo;
+                        let mut clock = SimClock::default();
+                        let mut ctx = StepCtx::new(&net_a, &mut clock);
+                        ctx.ring_width = width;
+                        let mut scratch = fused::PackedScratch::new();
+                        let mut uni = Vec::new();
+                        let mut got = vec![0.0f32; n];
+                        fused::qsgd_step_packed(
+                            &refs, wnorm, s, bits as f64, &mut scratch, &mut uni, &mut ctx,
+                            &Rng::new(seed), Some(chunks), &mut got,
+                        );
+                        assert_eq!(
+                            got, want,
+                            "packed {algo:?}/{width:?} differs (bits={bits} m={m} chunks={chunks})"
+                        );
+                        // (a) nominal ledger identical across planes/schedules
+                        assert_eq!(
+                            clock.bits_per_worker, clock_int.bits_per_worker,
+                            "nominal ledger (bits={bits} m={m} algo={algo:?})"
+                        );
+                        // (b) comm_s equals the analytic per-schedule formula
+                        let sched = match (algo, width) {
+                            (Algo::Ring, RingWidth::Growing) => {
+                                PackedSchedule::RingGrowing(RingGrowing { lmax: s })
+                            }
+                            (Algo::Ring, _) => PackedSchedule::RingFixed(RingFixed),
+                            (Algo::Tree, _) => PackedSchedule::Tree(packed::TreeReduce),
+                            (Algo::Naive, _) => PackedSchedule::Naive(packed::NaiveReduce),
+                        };
+                        assert_eq!(
+                            clock.comm_s,
+                            packed::analytic_comm_s(sched.as_dyn(), &net_a, n, rbits),
+                            "comm_s analytic (bits={bits} m={m} algo={algo:?} {width:?})"
+                        );
+                        if algo == Algo::Ring && chunks == 1 {
+                            match width {
+                                RingWidth::Fixed => hop_bits_fixed = Some(clock.hop_bits_per_worker),
+                                RingWidth::Growing => {
+                                    // (c) growing never ships more hop bits
+                                    let fixed = hop_bits_fixed.expect("fixed ran first");
+                                    assert!(
+                                        clock.hop_bits_per_worker <= fixed,
+                                        "growing hop bits {} > fixed {} (bits={bits} m={m})",
+                                        clock.hop_bits_per_worker,
+                                        fixed
+                                    );
+                                }
+                                RingWidth::Auto => {}
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn aggregators_bit_identical_across_schedules_up_to_64_workers() {
+    // all three schemes through the schedule-generic packed plane at the
+    // worker counts the acceptance matrix names, pinned to the f32
+    // references per schedule.
+    let n = 160usize;
+    let k = 40usize;
+    for &m in &[2usize, 4, 16, 64] {
+        let seed = 7_000 + m as u64;
+        let mut grng = Rng::new(seed);
+        let grads: Vec<Vec<f32>> = (0..m)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                grng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        for algo in [Algo::Ring, Algo::Tree, Algo::Naive] {
+            let got = run_aggregator("qsgd-mn-4", n, &grads, seed, algo);
+            assert_eq!(
+                got,
+                reference_qsgd(&refs, 4, seed, algo),
+                "qsgd-mn-4 m={m} algo={algo:?}"
+            );
+            let scales: Vec<usize> = [2usize, 6].iter().map(|&b| kernels::s_for_bits(b)).collect();
+            let got = run_aggregator("qsgd-mn-ts-2-6", n, &grads, seed, algo);
+            assert_eq!(
+                got,
+                reference_multiscale(&refs, &scales, seed, algo),
+                "qsgd-mn-ts m={m} algo={algo:?}"
+            );
+            let got = run_aggregator(&format!("grandk-mn-4-k{k}"), n, &grads, seed, algo);
+            assert_eq!(
+                got,
+                reference_grandk(&refs, 4, k, seed, algo),
+                "grandk-mn m={m} algo={algo:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_growing_ring_multiscale_bit_identical() {
+    // the width-growing wire also pins bit-identical on the multi-scale
+    // scheme (levels bounded by s_min + 1, a different lmax than qsgd's s).
+    check("growing ring multiscale == f32", 30, |g| {
+        let m = g.usize_in(2, 8);
+        let n = g.size_scaled(1, 1500);
+        let chunks = *g.pick(&[1usize, 4, 32]);
+        let scales: Vec<usize> = [2usize, 6].iter().map(|&b| kernels::s_for_bits(b)).collect();
+        let grads = random_grads(g, m, n);
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let wnorm = max_norm(&refs);
+        let seed = g.rng().next_u64();
+        let want = reference_multiscale(&refs, &scales, seed, Algo::Ring);
+
+        let table = kernels::ScaleTable::new(&scales);
+        let mut proposals: Vec<Vec<u8>> = Vec::with_capacity(m);
+        for g2 in &refs {
+            let mut idx = vec![0u8; n];
+            kernels::multiscale_scale_index_t(g2, wnorm, &table, &mut idx);
+            proposals.push(idx);
+        }
+        let shared = collectives::min_allreduce_u8(&proposals);
+
+        let net = NetConfig::flat(m, 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.ring_width = repro::netsim::RingWidth::Growing;
+        let mut scratch = fused::PackedScratch::new();
+        let mut uni = Vec::new();
+        let mut got = vec![0.0f32; n];
+        fused::multiscale_step_packed(
+            &refs,
+            wnorm,
+            &table,
+            &shared,
+            kernels::bits_for_s(scales[0]),
+            &mut scratch,
+            &mut uni,
+            &mut ctx,
+            &Rng::new(seed),
+            Some(chunks),
+            &mut got,
+        );
+        ensure(got == want, "growing multiscale differs from f32 reference")
+    });
+}
+
+#[test]
 fn int_reducers_agree_exactly_on_quantizer_output() {
     // ring/tree/naive integer reducers on real quantizer levels: exact
     // agreement, every rank, both widths.

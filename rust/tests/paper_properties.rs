@@ -1,0 +1,296 @@
+//! Paper-property tier (deterministic CI gate): the statistical contracts
+//! that make naive summation of quantized gradients sound — unbiasedness
+//! (E[Q(x)] = x, the paper's Lemma 5 first moment) and the Lemma-5 variance
+//! bound — checked **end-to-end through the packed aggregate path** (encode
+//! → biased pack → schedule-generic packed all-reduce → decode), not just
+//! the scalar kernels, for QSGD-MN, QSGD-MN-TS (multi-scale), GRandK-MN,
+//! and GRandK-MN-TS.
+//!
+//! Every test uses fixed seeds and CLT-derived tolerances (>= 4 standard
+//! errors), so pass/fail is deterministic: a failure means a real contract
+//! regression, not sampling noise. Horváth et al. (2019) motivate gating
+//! exactly these moments — a biased or variance-inflated compressor still
+//! "trains" but silently loses the convergence guarantees.
+
+use repro::collectives::StepCtx;
+use repro::compress::multiscale::QsgdMultiScale;
+use repro::compress::qsgd_maxnorm::QsgdMaxNorm;
+use repro::compress::randk::{GlobalRandK, GlobalRandKMultiScale};
+use repro::compress::{kernels, Aggregator};
+use repro::netsim::{Algo, NetConfig, RingWidth, SimClock};
+use repro::util::rng::Rng;
+
+/// One aggregate step on the packed plane with the given schedule + width.
+fn run_step(
+    agg: &mut dyn Aggregator,
+    grads: &[Vec<f32>],
+    seed: u64,
+    algo: Algo,
+    width: RingWidth,
+) -> Vec<f32> {
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let mut net = NetConfig::flat(grads.len(), 10.0);
+    net.algo = algo;
+    let mut clock = SimClock::default();
+    let mut ctx = StepCtx::new(&net, &mut clock);
+    ctx.ring_width = width;
+    let mut rng = Rng::new(seed);
+    agg.aggregate(&refs, &mut ctx, &mut rng)
+}
+
+fn fixed_grads(seed: u64, m: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+fn mean_of(grads: &[Vec<f32>]) -> Vec<f32> {
+    let n = grads[0].len();
+    let m = grads.len() as f64;
+    (0..n)
+        .map(|i| (grads.iter().map(|g| g[i] as f64).sum::<f64>() / m) as f32)
+        .collect()
+}
+
+fn max_norm(grads: &[Vec<f32>]) -> f32 {
+    grads.iter().map(|g| kernels::l2_norm(g)).fold(0.0f32, f32::max)
+}
+
+/// Monte-Carlo mean of the aggregate over `trials` fixed-seed steps, checked
+/// coordinate-wise against `want` within 5 standard errors of the per-step
+/// estimator spread bound `per_step_sd`.
+#[allow(clippy::too_many_arguments)]
+fn assert_unbiased(
+    agg: &mut dyn Aggregator,
+    grads: &[Vec<f32>],
+    want: &[f32],
+    per_step_sd: f64,
+    trials: usize,
+    seed0: u64,
+    algo: Algo,
+    width: RingWidth,
+    label: &str,
+) {
+    let n = want.len();
+    let mut acc = vec![0.0f64; n];
+    for t in 0..trials {
+        let out = run_step(agg, grads, seed0 + t as u64, algo, width);
+        for i in 0..n {
+            acc[i] += out[i] as f64;
+        }
+    }
+    let tol = (5.0 * per_step_sd / (trials as f64).sqrt()).max(1e-6);
+    for i in 0..n {
+        let est = acc[i] / trials as f64;
+        assert!(
+            (est - want[i] as f64).abs() <= tol,
+            "{label}: E[out[{i}]] = {est} vs {} (tol {tol}, algo {algo:?})",
+            want[i]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unbiasedness: E[aggregate] = mean gradient, through the packed plane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn qsgd_mn_unbiased_through_packed_plane_all_schedules() {
+    let (m, n) = (3usize, 96usize);
+    let grads = fixed_grads(0xA11CE, m, n);
+    let want = mean_of(&grads);
+    let wmax = max_norm(&grads) as f64;
+    let s = kernels::s_for_bits(4) as f64;
+    // per-coordinate estimator sd bound: quantization grid w/s, averaged
+    // over m independent workers
+    let sd = wmax / (s * (m as f64).sqrt());
+    // the contract must hold on every schedule of the packed plane — the
+    // schedule only changes reduction order of an exact integer sum
+    for (algo, width, seed) in [
+        (Algo::Ring, RingWidth::Fixed, 10_000u64),
+        (Algo::Ring, RingWidth::Growing, 20_000),
+        (Algo::Tree, RingWidth::Auto, 30_000),
+        (Algo::Naive, RingWidth::Auto, 40_000),
+    ] {
+        let mut agg = QsgdMaxNorm::new(4).unwrap();
+        assert_unbiased(
+            &mut agg, &grads, &want, sd, 1200, seed, algo, width, "QSGD-MN-4",
+        );
+    }
+}
+
+#[test]
+fn qsgd_mn_ts_unbiased_through_packed_plane() {
+    let (m, n) = (3usize, 96usize);
+    let grads = fixed_grads(0xB0B, m, n);
+    let want = mean_of(&grads);
+    let wmax = max_norm(&grads) as f64;
+    // worst case: every coordinate at the small scale s_min = s(2 bits) = 1
+    let sd = wmax / (1.0 * (m as f64).sqrt());
+    let mut agg = QsgdMultiScale::new(&[2, 6]).unwrap();
+    assert_unbiased(
+        &mut agg,
+        &grads,
+        &want,
+        sd,
+        2500,
+        50_000,
+        Algo::Ring,
+        RingWidth::Auto,
+        "QSGD-MN-TS-(2,6)",
+    );
+}
+
+#[test]
+fn grandk_unbiased_through_packed_plane() {
+    // the n/K-rescaled estimator is the unbiased variant (DESIGN.md §2)
+    let (m, n, k) = (2usize, 64usize, 16usize);
+    let grads = fixed_grads(0xCAFE, m, n);
+    let want = mean_of(&grads);
+    let gmax = grads
+        .iter()
+        .flat_map(|v| v.iter())
+        .fold(0.0f32, |a, b| a.max(b.abs())) as f64;
+    // dominant spread: the n/K-rescaled Bernoulli coordinate selection
+    let sd = gmax * n as f64 / k as f64;
+    let mut agg = GlobalRandK::new(8, k, n).unwrap();
+    agg.rescale = true;
+    assert_unbiased(
+        &mut agg,
+        &grads,
+        &want,
+        sd,
+        8000,
+        70_000,
+        Algo::Ring,
+        RingWidth::Auto,
+        "GRandK-MN-8 (rescaled)",
+    );
+}
+
+#[test]
+fn grandk_ts_unbiased_through_packed_plane() {
+    let (m, n, k) = (2usize, 64usize, 16usize);
+    let grads = fixed_grads(0xD00D, m, n);
+    let want = mean_of(&grads);
+    let gmax = grads
+        .iter()
+        .flat_map(|v| v.iter())
+        .fold(0.0f32, |a, b| a.max(b.abs())) as f64;
+    let sd = gmax * n as f64 / k as f64;
+    let mut agg = GlobalRandKMultiScale::new(&[4, 8], k, n).unwrap();
+    agg.rescale = true;
+    assert_unbiased(
+        &mut agg,
+        &grads,
+        &want,
+        sd,
+        8000,
+        90_000,
+        Algo::Ring,
+        RingWidth::Auto,
+        "GRandK-MN-TS-(4,8) (rescaled)",
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Lemma-5 variance bound: E||aggregate - v||^2 <= min(n/s^2, sqrt(n)/s)
+//                         * ||w||^2 / M, through the packed plane
+// ---------------------------------------------------------------------------
+
+/// Mean squared aggregate error over fixed-seed trials with identical
+/// per-worker gradients `v` (so wnorm = ||v|| and E[out] = v exactly).
+fn mean_sq_error(
+    agg: &mut dyn Aggregator,
+    v: &[f32],
+    m: usize,
+    trials: usize,
+    seed0: u64,
+) -> f64 {
+    let grads: Vec<Vec<f32>> = (0..m).map(|_| v.to_vec()).collect();
+    let mut acc = 0.0f64;
+    for t in 0..trials {
+        let out = run_step(agg, &grads, seed0 + t as u64, Algo::Ring, RingWidth::Auto);
+        acc += out
+            .iter()
+            .zip(v)
+            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+            .sum::<f64>();
+    }
+    acc / trials as f64
+}
+
+#[test]
+fn qsgd_mn_variance_bound_lemma5_through_packed_plane() {
+    let n = 256usize;
+    let mut rng = Rng::new(0x5EED);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v, 1.0);
+    let w = kernels::l2_norm(&v) as f64;
+    for (bits, m, seed) in [(2usize, 2usize, 1000u64), (4, 4, 2000), (8, 2, 3000)] {
+        let s = kernels::s_for_bits(bits) as f64;
+        let nn = n as f64;
+        // Lemma 5 over the m-way average of independent quantizations,
+        // with 10% slack over the CLT spread of the 400-trial estimate
+        let bound = (nn / (s * s)).min(nn.sqrt() / s) * w * w / m as f64;
+        let mut agg = QsgdMaxNorm::new(bits).unwrap();
+        let got = mean_sq_error(&mut agg, &v, m, 400, seed);
+        assert!(
+            got <= bound * 1.1,
+            "QSGD-MN-{bits} x{m}: E||err||^2 = {got} exceeds Lemma-5 bound {bound}"
+        );
+    }
+}
+
+#[test]
+fn qsgd_mn_ts_variance_no_worse_than_smin_bound_through_packed_plane() {
+    // the multi-scale scheme refines coordinates *below* the small scale's
+    // grid, so its end-to-end variance obeys the single-scale Lemma-5 bound
+    // at s_min — at the same wire bits (the scheme's raison d'être).
+    let n = 256usize;
+    let mut rng = Rng::new(0xFEED);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v, 1.0);
+    let w = kernels::l2_norm(&v) as f64;
+    let m = 2usize;
+    let smin = kernels::s_for_bits(2) as f64; // scale set (2, 6) -> s_min = 1
+    let nn = n as f64;
+    let bound = (nn / (smin * smin)).min(nn.sqrt() / smin) * w * w / m as f64;
+    let mut agg = QsgdMultiScale::new(&[2, 6]).unwrap();
+    let got = mean_sq_error(&mut agg, &v, m, 400, 4000);
+    assert!(
+        got <= bound * 1.1,
+        "QSGD-MN-TS-(2,6): E||err||^2 = {got} exceeds s_min Lemma-5 bound {bound}"
+    );
+}
+
+#[test]
+fn grandk_variance_bound_through_packed_plane() {
+    // GRandK without rescale is the K/n-shrunk estimator: its error against
+    // the *full* gradient decomposes into the dropped mass (deterministic
+    // given the draw) plus quantization noise on the kept coordinates; the
+    // quantization part obeys Lemma 5 on the K-subvector. Gate the total
+    // against ||v||^2 + the K-subvector Lemma-5 bound — a regression here
+    // means the packed path corrupted either part.
+    let (n, k, m) = (256usize, 64usize, 2usize);
+    let mut rng = Rng::new(0xF00D);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v, 1.0);
+    let vnorm2 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>();
+    let s = kernels::s_for_bits(4) as f64;
+    let kk = k as f64;
+    // kept-mass quantization bound at the subvector norm <= ||v||
+    let qbound = (kk / (s * s)).min(kk.sqrt() / s) * vnorm2 / m as f64;
+    let mut agg = GlobalRandK::new(4, k, n).unwrap();
+    let got = mean_sq_error(&mut agg, &v, m, 300, 5000);
+    assert!(
+        got <= vnorm2 + qbound * 1.1,
+        "GRandK-MN-4: E||err||^2 = {got} exceeds dropped-mass + Lemma-5 bound {}",
+        vnorm2 + qbound * 1.1
+    );
+}
