@@ -6,13 +6,20 @@
 //!
 //!     cargo run --release --example distributed_cifar -- \
 //!         [--model resnet_lite] [--method qsgd-mn-4] [--steps 150] \
-//!         [--workers 4] [--lr 0.05] [--compare]
+//!         [--workers 4] [--lr 0.05] [--compare] [--buckets 8]
 //!
 //! `--compare` runs the method against the AllReduce-SGD baseline and
 //! PowerSGD rank-2 and prints the head-to-head table.
+//!
+//! For qsgd-mn-* methods the example then re-runs the same training through
+//! the bucketed gradient control plane (`--buckets`, default 8, with
+//! variance-adaptive bit-widths and error feedback) and prints the
+//! monolithic-vs-bucketed overlap_frac / wire-bits comparison.
 
 use repro::cli::Args;
 use repro::compress::Method;
+use repro::control::{BitsPolicy, ControlConfig};
+use repro::metrics::render_table;
 use repro::runtime::Artifacts;
 use repro::train::{summary_table, Experiment};
 
@@ -23,6 +30,7 @@ fn main() -> anyhow::Result<()> {
     let steps: usize = args.parse_or("steps", 150)?;
     let workers: usize = args.parse_or("workers", 4)?;
     let lr: f64 = args.parse_or("lr", 0.05)?;
+    let buckets: usize = args.parse_or("buckets", 8)?;
     let compare = args.flag("compare");
     args.reject_unknown()?;
 
@@ -45,6 +53,56 @@ fn main() -> anyhow::Result<()> {
     let results = exp.run(&arts)?;
     let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
     println!("\n{}", summary_table(&summaries));
+
+    // bucketed control plane head-to-head: same method, same seed/schedule,
+    // but DDP-style layer buckets + variance-adaptive bits + error feedback
+    // + backward/comm overlap.
+    if matches!(Method::parse(&method)?, Method::Qsgd { .. }) {
+        let mut cfg = ControlConfig::new(buckets);
+        cfg.bits = BitsPolicy::Auto;
+        cfg.error_feedback = true;
+        let mut bexp = Experiment::new("distributed_cifar_bucketed", &model, vec![
+            Method::parse(&method)?,
+        ]);
+        bexp.steps = steps;
+        bexp.workers = workers;
+        bexp.lr0 = lr;
+        bexp.control = Some(cfg);
+        let bresults = bexp.run(&arts)?;
+        let mono_label = Method::parse(&method)?.label();
+        let mono = summaries
+            .iter()
+            .find(|s| s.label == mono_label)
+            .expect("monolithic summary");
+        let bucketed = &bresults[0].1;
+        println!("\n=== monolithic vs bucketed control plane ({model}, M={workers}) ===");
+        let rows = vec![
+            vec![
+                "monolithic".into(),
+                mono.label.clone(),
+                format!("{:.2}", mono.overlap_frac),
+                format!("{:.1}", mono.mean_bits_per_step / 1e3),
+                format!("{:.3}", mono.sim_time_s),
+                format!("{:.4}", mono.final_loss),
+            ],
+            vec![
+                format!("bucketed x{buckets} (auto+EF)"),
+                bucketed.label.clone(),
+                format!("{:.2}", bucketed.overlap_frac),
+                format!("{:.1}", bucketed.mean_bits_per_step / 1e3),
+                format!("{:.3}", bucketed.sim_time_s),
+                format!("{:.4}", bucketed.final_loss),
+            ],
+        ];
+        println!(
+            "{}",
+            render_table(
+                &["plane", "method", "overlap_frac", "kbits/step", "sim_s", "train_loss"],
+                &rows
+            )
+        );
+    }
+
     println!("loss curves written to results/distributed_cifar_*.csv");
     Ok(())
 }

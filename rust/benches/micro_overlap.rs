@@ -1,0 +1,132 @@
+//! Overlap smoke bench (PR 4, CI-gated): bucketed-vs-monolithic *simulated*
+//! step time at 4/16/64 workers, 4-bit QSGD-MN over 10 Gbps flat Ethernet,
+//! with the backward window of the §6.6 ResNet50 profile.
+//!
+//! The monolithic path starts its single collective after the full backward
+//! and exposes every comm second; the bucketed control plane releases
+//! buckets in backward order and hides all but the final bucket's tail.
+//! Hard gate: `bucketed-with-overlap step time <= monolithic step time` at
+//! every worker count (the times are analytic — the α–β model — so the
+//! gate is deterministic, not noise-sensitive).
+//!
+//! Set `REPRO_BENCH_JSON=<path>` to emit the numbers as JSON (consumed by
+//! `tools/bench_compress.py` -> `BENCH_overlap.json`).
+
+use repro::collectives::StepCtx;
+use repro::compress::qsgd_maxnorm::QsgdMaxNorm;
+use repro::compress::Aggregator;
+use repro::control::{ControlConfig, GradientControlPlane};
+use repro::netsim::{NetConfig, SimClock};
+use repro::perfmodel::{self, ModelProfile};
+use repro::runtime::Segment;
+use repro::util::json::{arr, num, obj, s as js, Json};
+use repro::util::rng::Rng;
+
+fn make_segments(n: usize, count: usize) -> Vec<Segment> {
+    let lens: Vec<usize> = (0..count).map(|i| (i + 1) * n / count - i * n / count).collect();
+    repro::runtime::contiguous_segments(&lens)
+}
+
+fn run_once(
+    agg: &mut dyn Aggregator,
+    grads: &[Vec<f32>],
+    backward_s: f64,
+    gbps: f64,
+) -> SimClock {
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let net = NetConfig::flat(grads.len(), gbps);
+    let mut clock = SimClock::default();
+    {
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.backward_s = Some(backward_s);
+        let mut rng = Rng::new(0x0E7A);
+        let out = agg.aggregate(&refs, &mut ctx, &mut rng);
+        std::hint::black_box(&out);
+    }
+    clock
+}
+
+fn main() {
+    let n: usize = std::env::var("REPRO_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 20);
+    let bits = 4usize;
+    let buckets = 8usize;
+    let gbps = 10.0;
+    let backward_s = ModelProfile::resnet50().compute_s * perfmodel::BACKWARD_FRAC;
+    let segments = make_segments(n, 16);
+
+    println!(
+        "=== bucketed-vs-monolithic simulated step (n={n}, {bits}-bit, {buckets} buckets, \
+         {gbps} Gbps, backward {backward_s:.3}s) ==="
+    );
+    println!(
+        "{:>8} {:>14} {:>14} {:>12} {:>10} {:>8}",
+        "workers", "mono step (s)", "bucket step (s)", "hidden (ms)", "ovl frac", "gate"
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut all_pass = true;
+    for m in [4usize, 16, 64] {
+        let mut rng = Rng::new(m as u64);
+        let grads: Vec<Vec<f32>> = (0..m)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+
+        let mut mono = QsgdMaxNorm::new(bits).expect("mono aggregator");
+        let clock_mono = run_once(&mut mono, &grads, backward_s, gbps);
+        // the monolithic path hides nothing: full backward, then the wire
+        assert_eq!(clock_mono.hidden_comm_s, 0.0);
+        let mono_step = backward_s + clock_mono.comm_s;
+
+        let cfg = ControlConfig::new(buckets);
+        let mut plane =
+            GradientControlPlane::new(cfg, bits, n, &segments).expect("control plane");
+        let clock_b = run_once(&mut plane, &grads, backward_s, gbps);
+        let buck_step = backward_s + clock_b.comm_s - clock_b.hidden_comm_s;
+        let report = plane.last_overlap();
+
+        let pass = buck_step <= mono_step && report.overlap_frac > 0.0;
+        all_pass &= pass;
+        println!(
+            "{:>8} {:>14.6} {:>14.6} {:>12.3} {:>10.3} {:>8}",
+            m,
+            mono_step,
+            buck_step,
+            clock_b.hidden_comm_s * 1e3,
+            report.overlap_frac,
+            if pass { "ok" } else { "FAIL" }
+        );
+        entries.push(obj(vec![
+            ("workers", num(m as f64)),
+            ("mono_step_s", num(mono_step)),
+            ("bucketed_step_s", num(buck_step)),
+            ("hidden_comm_s", num(clock_b.hidden_comm_s)),
+            ("overlap_frac", num(report.overlap_frac)),
+            ("gate_pass", num(pass as u8 as f64)),
+        ]));
+    }
+
+    if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
+        let json = obj(vec![
+            ("schema", js("repro-micro-overlap-v1")),
+            ("n", num(n as f64)),
+            ("bits", num(bits as f64)),
+            ("buckets", num(buckets as f64)),
+            ("net_gbps", num(gbps)),
+            ("backward_s", num(backward_s)),
+            ("entries", arr(entries)),
+        ]);
+        std::fs::write(&path, json.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+
+    // the CI gate: bucketed-with-overlap never slower than monolithic
+    assert!(all_pass, "overlap gate failed: bucketed step slower than monolithic");
+    println!("\noverlap gate: bucketed-with-overlap <= monolithic at every worker count");
+}

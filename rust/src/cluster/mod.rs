@@ -16,6 +16,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::collectives::StepCtx;
 use crate::compress::{Aggregator, Method};
+use crate::control::{self, ControlConfig};
 use crate::data::{CifarLike, MarkovCorpus};
 use crate::metrics::StepRecord;
 use crate::netsim::{NetConfig, SimClock};
@@ -41,6 +42,9 @@ pub struct ClusterConfig {
     /// per-GPU compute time override for the sim clock (s/step); when None,
     /// measured PJRT wall time is used
     pub sim_compute_s: Option<f64>,
+    /// bucketed gradient control plane (CLI `--buckets`/`--bits`/
+    /// `--error-feedback`); `None` runs the monolithic aggregator
+    pub control: Option<ControlConfig>,
 }
 
 impl ClusterConfig {
@@ -57,6 +61,7 @@ impl ClusterConfig {
             net_gbps: 10.0,
             wire_floor_bits: None,
             sim_compute_s: None,
+            control: None,
         }
     }
 }
@@ -99,7 +104,15 @@ impl Cluster {
         let step_fn = StepFn::load(&rt, arts, &model, cfg.workers)?;
         let eval_fn = EvalFn::load(&rt, arts, &model)?;
         let params = arts.load_params(&model)?;
-        let agg = cfg.method.build(model.param_count, &model.segments)?;
+        let agg: Box<dyn Aggregator> = match &cfg.control {
+            Some(cc) => Box::new(control::build_plane(
+                &cfg.method,
+                cc,
+                model.param_count,
+                &model.segments,
+            )?),
+            None => cfg.method.build(model.param_count, &model.segments)?,
+        };
         let opt = Sgd::new(model.param_count, cfg.momentum, cfg.weight_decay);
         let sched = LrSchedule::paper(cfg.lr0, cfg.total_steps);
         let net = NetConfig::flat(cfg.workers, cfg.net_gbps);
@@ -192,6 +205,9 @@ impl Cluster {
         let mut step_clock = SimClock::default();
         let mut ctx = StepCtx::new(&self.net, &mut step_clock);
         ctx.wire_floor_bits = self.cfg.wire_floor_bits;
+        // the backward window of this step — the compute the bucketed
+        // control plane's overlap scheduler may hide communication behind
+        ctx.backward_s = Some(sim_compute * crate::perfmodel::BACKWARD_FRAC);
         let mut step_rng = self.root_rng.derive(&[0x5354, step as u64]);
         let agg_grad = self.agg.aggregate(&grads, &mut ctx, &mut step_rng);
 
@@ -204,6 +220,7 @@ impl Cluster {
         self.clock.decode_s += step_clock.decode_s;
         self.clock.bits_per_worker += step_clock.bits_per_worker;
         self.clock.hop_bits_per_worker += step_clock.hop_bits_per_worker;
+        self.clock.hidden_comm_s += step_clock.hidden_comm_s;
 
         let loss = out.losses.iter().map(|l| *l as f64).sum::<f64>() / m as f64;
         Ok(StepRecord {
@@ -215,6 +232,7 @@ impl Cluster {
             t_decode: step_clock.decode_s,
             t_comm_sim: step_clock.comm_s,
             bits_per_worker: step_clock.bits_per_worker,
+            overlap_frac: step_clock.overlap_frac(),
         })
     }
 
@@ -283,6 +301,7 @@ pub fn run_training(
         final_eval_loss: eval_loss,
         final_eval_acc: eval_acc,
         mean_bits_per_step: clock.bits_per_worker / total.max(1) as f64,
+        overlap_frac: clock.overlap_frac(),
         sim_time_s: clock.total_s(),
         wall_time_s: wall.elapsed().as_secs_f64(),
         t_compute: clock.compute_s,

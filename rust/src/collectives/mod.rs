@@ -217,11 +217,25 @@ pub struct StepCtx<'a> {
     /// Wire-width policy for the packed ring schedule; `Auto` defers to the
     /// per-step analytic selector [`NetConfig::growing_ring_wins`].
     pub ring_width: RingWidth,
+    /// Simulated backward-pass seconds of this step (the window gradient
+    /// buckets stream out of, [`crate::perfmodel::BACKWARD_FRAC`] of the
+    /// step compute). `Some` enables the bucketed control plane's overlap
+    /// scheduler to hide bucket communication behind the remaining compute
+    /// ([`SimClock::hidden_comm_s`]); `None` (the default) means no overlap
+    /// information — every aggregator charges fully exposed comm, exactly
+    /// the pre-PR-4 behaviour.
+    pub backward_s: Option<f64>,
 }
 
 impl<'a> StepCtx<'a> {
     pub fn new(net: &'a NetConfig, clock: &'a mut SimClock) -> StepCtx<'a> {
-        StepCtx { net, clock, wire_floor_bits: None, ring_width: RingWidth::Auto }
+        StepCtx {
+            net,
+            clock,
+            wire_floor_bits: None,
+            ring_width: RingWidth::Auto,
+            backward_s: None,
+        }
     }
 
     /// The packed reduction schedule for this step: the configured algo,

@@ -360,14 +360,42 @@ pub fn qsgd_step_packed(
 ) -> collectives::PlaneTraffic {
     let m = grads.len();
     let n = grads[0].len();
+    ctx.time_encode(|| fill_uniforms_into(m, n, uniform, rng));
+    let uni: Vec<&[f32]> = uniform.iter().map(|u| u.as_slice()).collect();
+    qsgd_step_packed_with_uniforms(grads, &uni, wnorm, s, wire_bits, scratch, ctx, chunks, out)
+}
+
+/// [`qsgd_step_packed`] with caller-provided per-worker uniform slices.
+///
+/// This is the seam the bucketed control plane ([`crate::control`]) drives:
+/// it draws ONE full-length uniform stream per worker (exactly the
+/// monolithic step's `rng.derive([w])` draw) and hands each bucket its
+/// slice, so — when every bucket also shares the monolithic global norm
+/// (the control plane's non-overlapped mode) — the bucketed output is
+/// bit-identical to the monolithic packed step for any bucket plan. The
+/// wire is charged per call — per bucket — at byte-exact
+/// `ceil(len * wire_bits / 8)` through [`StepCtx::charge_packed`].
+#[allow(clippy::too_many_arguments)]
+pub fn qsgd_step_packed_with_uniforms(
+    grads: &[&[f32]],
+    uni: &[&[f32]],
+    wnorm: f32,
+    s: usize,
+    wire_bits: f64,
+    scratch: &mut PackedScratch,
+    ctx: &mut StepCtx,
+    chunks: Option<usize>,
+    out: &mut [f32],
+) -> collectives::PlaneTraffic {
+    let m = grads.len();
+    let n = grads[0].len();
     assert!(
         sum_fits::<i32>(s, m),
         "widening rule: {m} workers x s={s} overflows i32"
     );
+    debug_assert!(uni.len() == m && uni.iter().all(|u| u.len() >= n));
     let rbits = bitpack::packed_sum_bits(s.max(1), m);
     let sched = ctx.packed_schedule(s.max(1), m, n);
-    ctx.time_encode(|| fill_uniforms_into(m, n, uniform, rng));
-    let uni: &Vec<Vec<f32>> = uniform;
     let bias = s as i64;
     let bias_total = (m as i64) * bias;
     // same float expression as `kernels::qsgd_decode_sum_int`

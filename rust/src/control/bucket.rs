@@ -1,0 +1,209 @@
+//! Bucket partitioner: DDP-style grouping of the flat gradient into
+//! contiguous buckets along the model's [`Segment`] (layer) boundaries.
+//!
+//! Buckets are the unit the control plane compresses, reduces, charges, and
+//! schedules independently: each flows through the packed pipeline with its
+//! own bit-width and its own byte-exact wire payload, and is released to
+//! the (simulated) wire as soon as its layers' backward pass completes.
+//! Grouping whole layers keeps the partition aligned with where gradients
+//! actually become available — exactly PyTorch DDP's bucketing rule —
+//! while a capacity target bounds per-bucket latency overhead.
+
+use crate::runtime::Segment;
+
+/// One contiguous bucket of the flat gradient.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// coordinate range `[lo, hi)` of the flat gradient
+    pub lo: usize,
+    pub hi: usize,
+    /// atom (segment) index range `[seg_lo, seg_hi)` the bucket covers
+    pub seg_lo: usize,
+    pub seg_hi: usize,
+}
+
+impl Bucket {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// Coordinate alignment of synthetic atom boundaries when the model carries
+/// no segment metadata (mirrors DDP's byte alignment of bucket views).
+const SYNTH_ALIGN: usize = 16;
+
+/// A partition of `[0, n)` into contiguous buckets whose interior
+/// boundaries all lie on atom (layer) boundaries.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    pub n: usize,
+    pub buckets: Vec<Bucket>,
+    /// atom lengths the plan was built over (segment lengths, or synthetic
+    /// aligned splits when the model has no segment metadata)
+    pub atom_lens: Vec<usize>,
+}
+
+impl BucketPlan {
+    /// Partition `n` coordinates into at most `target` buckets.
+    ///
+    /// When `segments` is non-empty and tiles `[0, n)` contiguously, whole
+    /// segments are greedily grouped until each bucket reaches the
+    /// `ceil(n/target)` capacity — so bucket boundaries always coincide
+    /// with layer boundaries and the last bucket may be ragged. Without
+    /// segment metadata the plan falls back to `target` near-even splits
+    /// aligned down to [`SYNTH_ALIGN`] coordinates.
+    pub fn new(n: usize, segments: &[Segment], target: usize) -> BucketPlan {
+        let target = target.max(1);
+        let atom_lens = if segments_tile(n, segments) {
+            segments.iter().map(|s| s.len).collect()
+        } else {
+            synthetic_atoms(n, target)
+        };
+        let capacity = n.div_ceil(target).max(1);
+
+        let mut buckets = Vec::new();
+        let (mut lo, mut seg_lo, mut filled) = (0usize, 0usize, 0usize);
+        for (i, &len) in atom_lens.iter().enumerate() {
+            filled += len;
+            if filled >= capacity || i + 1 == atom_lens.len() {
+                let hi = lo + filled;
+                buckets.push(Bucket { lo, hi, seg_lo, seg_hi: i + 1 });
+                lo = hi;
+                seg_lo = i + 1;
+                filled = 0;
+            }
+        }
+        if buckets.is_empty() {
+            buckets.push(Bucket { lo: 0, hi: n, seg_lo: 0, seg_hi: atom_lens.len().max(1) });
+        }
+        debug_assert_eq!(buckets.last().unwrap().hi, n);
+        let atom_lens = if atom_lens.is_empty() { vec![n] } else { atom_lens };
+        BucketPlan { n, buckets, atom_lens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Simulated time each bucket's gradient becomes available inside a
+    /// backward window of `backward_s` seconds: a bucket is ready when its
+    /// *earliest* atom finishes backward (backward runs last layer first,
+    /// so that atom completes last among the bucket's).
+    pub fn ready_times(&self, backward_s: f64) -> Vec<f64> {
+        let seg_ready = crate::perfmodel::backward_ready_times(&self.atom_lens, backward_s);
+        self.buckets
+            .iter()
+            .map(|b| if self.atom_lens.is_empty() { backward_s } else { seg_ready[b.seg_lo] })
+            .collect()
+    }
+}
+
+/// Do the segments contiguously tile `[0, n)`?
+fn segments_tile(n: usize, segments: &[Segment]) -> bool {
+    if segments.is_empty() {
+        return false;
+    }
+    let mut off = 0usize;
+    for s in segments {
+        if s.offset != off {
+            return false;
+        }
+        off += s.len;
+    }
+    off == n
+}
+
+/// Near-even aligned splits for models without segment metadata.
+fn synthetic_atoms(n: usize, target: usize) -> Vec<usize> {
+    if n == 0 {
+        return vec![0];
+    }
+    let mut bounds = vec![0usize];
+    for b in 1..target {
+        let cut = (b * n / target) / SYNTH_ALIGN * SYNTH_ALIGN;
+        if cut > *bounds.last().unwrap() && cut < n {
+            bounds.push(cut);
+        }
+    }
+    bounds.push(n);
+    bounds.windows(2).map(|w| w[1] - w[0]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn seg(offset: usize, len: usize) -> Segment {
+        Segment { name: format!("seg@{offset}"), shape: vec![len], offset, len }
+    }
+
+    use crate::runtime::contiguous_segments as segs;
+
+    #[test]
+    fn plan_covers_exactly_and_respects_segment_boundaries() {
+        let lens = [256usize, 512, 128, 107];
+        let n: usize = lens.iter().sum();
+        let segments = segs(&lens);
+        for target in [1usize, 2, 3, 4, 9] {
+            let plan = BucketPlan::new(n, &segments, target);
+            assert!(plan.len() <= target.max(1));
+            // exact contiguous cover
+            let mut off = 0;
+            for b in &plan.buckets {
+                assert_eq!(b.lo, off);
+                off = b.hi;
+                // interior boundaries are segment boundaries
+                let seg_offsets: Vec<usize> = segments.iter().map(|s| s.offset).collect();
+                if b.hi != n {
+                    assert!(seg_offsets.contains(&b.hi), "boundary {} off-segment", b.hi);
+                }
+            }
+            assert_eq!(off, n);
+        }
+        // target >= #segments: one bucket per segment, last ragged
+        let plan = BucketPlan::new(n, &segments, 9);
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.buckets[3].len(), 107);
+    }
+
+    #[test]
+    fn single_bucket_plan_is_whole_gradient() {
+        let plan = BucketPlan::new(1000, &segs(&[400, 600]), 1);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.buckets[0], Bucket { lo: 0, hi: 1000, seg_lo: 0, seg_hi: 2 });
+    }
+
+    #[test]
+    fn no_segments_falls_back_to_aligned_splits() {
+        let plan = BucketPlan::new(1003, &[], 3);
+        assert_eq!(plan.buckets.last().unwrap().hi, 1003);
+        for b in &plan.buckets {
+            if b.hi != 1003 {
+                assert_eq!(b.hi % SYNTH_ALIGN, 0, "unaligned synthetic boundary");
+            }
+        }
+        // non-tiling segments (gap) also fall back
+        let gappy = vec![seg(0, 100), seg(200, 100)];
+        let plan = BucketPlan::new(300, &gappy, 2);
+        assert_eq!(plan.buckets.last().unwrap().hi, 300);
+    }
+
+    #[test]
+    fn ready_times_follow_backward_order() {
+        let plan = BucketPlan::new(1000, &segs(&[250, 250, 250, 250]), 4);
+        let ready = plan.ready_times(1.0);
+        assert_eq!(ready.len(), 4);
+        // later buckets (later layers) become ready earlier
+        assert!(ready.windows(2).all(|w| w[0] >= w[1]));
+        assert_eq!(ready[0], 1.0); // first bucket needs the full backward
+        assert!((ready[3] - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,516 @@
+//! Bucketed gradient control plane (PR 4): the layer between the cluster
+//! step and the packed collectives.
+//!
+//! The monolithic path compresses the whole flattened gradient as one blob
+//! at one global bit-width and only starts communicating after the entire
+//! backward pass — the serialization Parallel-SGD analyses identify as the
+//! scaling bottleneck. This subsystem splits the gradient into DDP-style
+//! buckets along layer boundaries ([`bucket::BucketPlan`]), runs every
+//! bucket through the packed pipeline independently at a per-bucket
+//! bit-width ([`precision::PrecisionController`]: fixed, per-layer, or
+//! variance-adaptive), optionally folds the quantization residual back in
+//! via per-worker error feedback ([`feedback::ErrorFeedback`]), and hides
+//! bucket communication behind the remaining backward compute
+//! ([`overlap::schedule`]), reporting the hidden fraction through
+//! [`crate::netsim::SimClock::hidden_comm_s`].
+//!
+//! Correctness pins (tests): with [`precision::FixedBits`] **and a global
+//! norm** — i.e. whenever the overlap scheduler is inactive (no backward
+//! window on the step context, or `overlap` off), or with a single bucket
+//! — the bucketed path is **bit-identical** to the monolithic packed path
+//! for *any* bucket plan: the control plane draws one full-length uniform
+//! stream per worker (the monolithic `rng.derive([w])` draw) and shares
+//! the global max norm, so per-bucket encode/reduce/decode reproduces the
+//! monolithic numbers coordinate for coordinate. When overlap *is* active
+//! with more than one bucket, norms are per-bucket (see [`NormScope`]) and
+//! multi-bucket outputs legitimately diverge from the monolithic path —
+//! pass `--no-overlap` to a cluster run to recover exact parity.
+//! Per-bucket wire charging is byte-exact either way: the ledger over `N`
+//! buckets is the sum of per-bucket `ceil(len_b * bits_b / 8)` payloads,
+//! never a re-derivation from the whole-gradient length.
+
+pub mod bucket;
+pub mod feedback;
+pub mod overlap;
+pub mod precision;
+
+use anyhow::{bail, Result};
+
+use crate::collectives::StepCtx;
+use crate::compress::{fused, kernels, Aggregator, Method};
+use crate::runtime::Segment;
+use crate::tensor;
+use crate::util::rng::Rng;
+
+pub use bucket::{Bucket, BucketPlan};
+pub use feedback::ErrorFeedback;
+pub use overlap::OverlapReport;
+pub use precision::{BitsPolicy, BucketStats, FixedBits, PerLayerBits, PrecisionController, VarianceAdaptive};
+
+/// How the shared quantizer norm is scoped.
+///
+/// `Global` (default) shares one max norm across all buckets — one 32-bit
+/// scalar all-reduce, and the bucketed path stays bit-identical to the
+/// monolithic one under fixed bits. `PerBucket` shares one norm per bucket
+/// (32 bits each): the heterogeneous-scale variant a deployment would run
+/// (each bucket's norm is available as soon as its backward completes),
+/// at the cost of monolithic bit-parity.
+///
+/// A global norm needs the *full* gradient, which only exists after the
+/// entire backward pass — so whenever the overlap scheduler is active
+/// (`overlap` on and the step carries a backward window), the plane
+/// switches to per-bucket norms regardless of this setting: crediting
+/// hidden comm under a global norm would model a schedule no deployment
+/// can realize. With a single bucket the two scopes coincide, so the
+/// single-bucket bit-identity pin holds with or without overlap.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum NormScope {
+    #[default]
+    Global,
+    PerBucket,
+}
+
+/// Configuration of the bucketed control plane (CLI `--buckets`,
+/// `--bits`, `--error-feedback`, `--no-overlap`).
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    /// target bucket count (>= 1; the plan may merge small layers)
+    pub buckets: usize,
+    pub bits: BitsPolicy,
+    pub error_feedback: bool,
+    /// hide bucket comm behind backward compute when the step context
+    /// carries a backward window
+    pub overlap: bool,
+    pub norm_scope: NormScope,
+}
+
+impl ControlConfig {
+    pub fn new(buckets: usize) -> ControlConfig {
+        ControlConfig {
+            buckets,
+            bits: BitsPolicy::Fixed(None),
+            error_feedback: false,
+            overlap: true,
+            norm_scope: NormScope::Global,
+        }
+    }
+}
+
+/// Build the control plane for a parsed method. Only the single-scale
+/// QSGD-MN family routes through the bucketed plane today; other methods
+/// fail loudly rather than silently ignoring the bucket options.
+pub fn build_plane(
+    method: &Method,
+    cfg: &ControlConfig,
+    n: usize,
+    segments: &[Segment],
+) -> Result<GradientControlPlane> {
+    match method {
+        Method::Qsgd { bits } => GradientControlPlane::new(cfg.clone(), *bits, n, segments),
+        other => bail!(
+            "--buckets currently supports qsgd-mn-* methods only (got {})",
+            other.label()
+        ),
+    }
+}
+
+/// The bucketed aggregator: partition -> per-bucket precision -> packed
+/// pipeline per bucket -> optional error feedback -> overlap accounting.
+pub struct GradientControlPlane {
+    pub cfg: ControlConfig,
+    pub plan: BucketPlan,
+    /// the method's bit-width (the fixed default and the table label)
+    base_bits: usize,
+    ctrl: Box<dyn PrecisionController>,
+    ef: Option<ErrorFeedback>,
+    // ---- cross-step scratch (zero steady-state allocation once warm)
+    packed: fused::PackedScratch,
+    uniform: Vec<Vec<f32>>,
+    corrected: Vec<Vec<f32>>,
+    bucket_comm: Vec<f64>,
+    // ---- last-step telemetry
+    last_bits: Vec<usize>,
+    last_payload_bits: f64,
+    last_overlap: OverlapReport,
+}
+
+impl GradientControlPlane {
+    pub fn new(
+        cfg: ControlConfig,
+        base_bits: usize,
+        n: usize,
+        segments: &[Segment],
+    ) -> Result<GradientControlPlane> {
+        anyhow::ensure!(cfg.buckets >= 1, "--buckets must be >= 1");
+        anyhow::ensure!((2..=16).contains(&base_bits), "qsgd bits must be in 2..=16");
+        fused::assert_widening_rule(kernels::s_for_bits(base_bits))?;
+        let plan = BucketPlan::new(n, segments, cfg.buckets);
+        let ctrl: Box<dyn PrecisionController> = match &cfg.bits {
+            BitsPolicy::Fixed(explicit) => {
+                let b = explicit.unwrap_or(base_bits);
+                anyhow::ensure!((2..=16).contains(&b), "--bits fixed:{b} out of 2..=16");
+                Box::new(FixedBits(b))
+            }
+            BitsPolicy::Auto => Box::new(VarianceAdaptive::default_policy()),
+            BitsPolicy::PerLayer(per_layer) => Box::new(PerLayerBits::new(per_layer, &plan)?),
+        };
+        let ef = cfg.error_feedback.then(ErrorFeedback::new);
+        Ok(GradientControlPlane {
+            cfg,
+            plan,
+            base_bits,
+            ctrl,
+            ef,
+            packed: fused::PackedScratch::new(),
+            uniform: Vec::new(),
+            corrected: Vec::new(),
+            bucket_comm: Vec::new(),
+            last_bits: Vec::new(),
+            last_payload_bits: 0.0,
+            last_overlap: OverlapReport::default(),
+        })
+    }
+
+    /// Per-bucket bit-widths the last step used.
+    pub fn last_bits(&self) -> &[usize] {
+        &self.last_bits
+    }
+
+    /// Byte-exact payload bits per worker of the last step: the closed-form
+    /// sum of per-bucket `8 * ceil(len_b * bits_b / 8)` terms.
+    pub fn last_payload_bits(&self) -> f64 {
+        self.last_payload_bits
+    }
+
+    /// Last step's overlap outcome.
+    pub fn last_overlap(&self) -> OverlapReport {
+        self.last_overlap
+    }
+
+    /// Largest per-worker error-feedback residual norm (0 with EF off).
+    pub fn max_residual_norm(&self) -> f64 {
+        self.ef.as_ref().map(|e| e.max_residual_norm()).unwrap_or(0.0)
+    }
+}
+
+impl Aggregator for GradientControlPlane {
+    fn name(&self) -> String {
+        let mut name = format!(
+            "QSGD-MN-{}-B{}[{}]",
+            self.base_bits,
+            self.plan.len(),
+            self.ctrl.label()
+        );
+        if self.ef.is_some() {
+            name.push_str("+EF");
+        }
+        name
+    }
+
+    fn allreduce_compatible(&self) -> bool {
+        true
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        // length-weighted mean of the last step's widths (the method's
+        // bit-width before the first step)
+        if self.last_bits.len() == self.plan.len() && self.plan.n > 0 {
+            self.plan
+                .buckets
+                .iter()
+                .zip(&self.last_bits)
+                .map(|(b, &bits)| (b.len() * bits) as f64)
+                .sum::<f64>()
+                / self.plan.n as f64
+        } else {
+            self.base_bits as f64
+        }
+    }
+
+    fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32> {
+        let m = grads.len();
+        let n = grads[0].len();
+        assert!(m <= fused::MAX_WORKERS, "M={m} exceeds MAX_WORKERS");
+        assert_eq!(n, self.plan.n, "gradient length does not match the bucket plan");
+
+        // error feedback: fold the residual into this step's inputs
+        let inputs: Vec<&[f32]> = match self.ef.as_mut() {
+            Some(ef) => {
+                let corrected = &mut self.corrected;
+                ctx.time_encode(|| ef.apply(grads, corrected));
+                self.corrected.iter().map(|v| v.as_slice()).collect()
+            }
+            None => grads.to_vec(),
+        };
+
+        // ONE full-length uniform stream per worker — the monolithic step's
+        // exact draw (`rng.derive([w])`), sliced per bucket below. Together
+        // with a globally shared norm this makes the bucketed output
+        // bit-identical to the monolithic packed path for any bucket plan.
+        let uniform = &mut self.uniform;
+        ctx.time_encode(|| fused::fill_uniforms_into(m, n, uniform, rng));
+
+        // shared norm (Algorithm 1 line 5). A GLOBAL norm needs the full
+        // gradient — it only exists after the entire backward — so a step
+        // that overlaps bucket comm with backward compute cannot use it:
+        // when the overlap scheduler is active, norms are per-bucket (one
+        // 32-bit share per bucket, available at the bucket's release and
+        // charged inside its comm window), the deployment-realizable model.
+        // Without overlap, Global shares one scalar like the monolithic
+        // path — the FixedBits bit-identity pin.
+        let overlap_active = self.cfg.overlap && ctx.backward_s.is_some();
+        let per_bucket_norms =
+            overlap_active || self.cfg.norm_scope == NormScope::PerBucket;
+        let global_wnorm = if per_bucket_norms {
+            None
+        } else {
+            let norms: Vec<f32> = inputs.iter().map(|g| kernels::l2_norm(g)).collect();
+            Some(ctx.allreduce_max_scalar(&norms))
+        };
+
+        let nb = self.plan.len();
+        self.bucket_comm.clear();
+        self.bucket_comm.resize(nb, 0.0);
+        self.last_bits.clear();
+        self.last_payload_bits = 0.0;
+        let mut out = vec![0.0f32; n];
+
+        for b in 0..nb {
+            let bk = self.plan.buckets[b];
+            let (lo, hi) = (bk.lo, bk.hi);
+            let g_slices: Vec<&[f32]> = inputs.iter().map(|g| &g[lo..hi]).collect();
+            let u_slices: Vec<&[f32]> = self.uniform.iter().map(|u| &u[lo..hi]).collect();
+
+            // everything charged from here on belongs to this bucket's comm
+            // window — including its norm share, so the overlap scheduler
+            // releases norm + payload together at the bucket's ready time
+            let comm_before = ctx.clock.comm_s;
+
+            let wnorm = match global_wnorm {
+                Some(w) => w,
+                None => {
+                    let norms: Vec<f32> =
+                        g_slices.iter().map(|g| kernels::l2_norm(g)).collect();
+                    ctx.allreduce_max_scalar(&norms)
+                }
+            };
+
+            // per-bucket precision; the O(m·n_b) moment pass runs only for
+            // policies that read it, and is timed as encode work
+            let grad_ms = if self.ctrl.needs_stats() {
+                ctx.time_encode(|| {
+                    g_slices.iter().map(|g| tensor::norm2_sq(g)).sum::<f64>() / m.max(1) as f64
+                })
+            } else {
+                0.0
+            };
+            let stats = BucketStats { len: hi - lo, wnorm, grad_ms, workers: m };
+            let bits = self.ctrl.bits_for(b, &stats);
+            let s = kernels::s_for_bits(bits);
+            let wire_bits = kernels::bits_for_s(s);
+
+            fused::qsgd_step_packed_with_uniforms(
+                &g_slices,
+                &u_slices,
+                wnorm,
+                s,
+                wire_bits,
+                &mut self.packed,
+                ctx,
+                None,
+                &mut out[lo..hi],
+            );
+            self.bucket_comm[b] = ctx.clock.comm_s - comm_before;
+            self.last_bits.push(bits);
+            self.last_payload_bits +=
+                (8 * crate::compress::bitpack::wire_bytes_for(hi - lo, bits as u32)) as f64;
+
+            if let Some(ef) = self.ef.as_mut() {
+                let (corrected, uni) = (&self.corrected, &self.uniform);
+                ctx.time_encode(|| ef.absorb_bucket(corrected, uni, lo, hi, wnorm, s));
+            }
+        }
+
+        // overlap accounting: hide bucket comm inside the backward window
+        self.last_overlap = match (self.cfg.overlap, ctx.backward_s) {
+            (true, Some(backward_s)) => {
+                let ready = self.plan.ready_times(backward_s);
+                let report = overlap::schedule(&ready, &self.bucket_comm, backward_s);
+                ctx.clock.hidden_comm_s += report.hidden_s;
+                report
+            }
+            _ => OverlapReport::default(),
+        };
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::bitpack;
+    use crate::compress::qsgd_maxnorm::QsgdMaxNorm;
+    use crate::netsim::{NetConfig, SimClock};
+
+    use crate::runtime::contiguous_segments as segs;
+
+    fn fixed_grads(seed: u64, m: usize, n: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn run(
+        agg: &mut dyn Aggregator,
+        grads: &[Vec<f32>],
+        seed: u64,
+        backward_s: Option<f64>,
+    ) -> (Vec<f32>, SimClock) {
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let net = NetConfig::flat(grads.len(), 10.0);
+        let mut clock = SimClock::default();
+        let out = {
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.backward_s = backward_s;
+            let mut rng = Rng::new(seed);
+            agg.aggregate(&refs, &mut ctx, &mut rng)
+        };
+        (out, clock)
+    }
+
+    #[test]
+    fn single_bucket_fixed_bits_reproduces_monolithic_ledger_and_output() {
+        let (m, n) = (4usize, 997usize);
+        let grads = fixed_grads(0xC0FFEE, m, n);
+        let segments = segs(&[400, 400, 197]);
+
+        let mut mono = QsgdMaxNorm::new(4).unwrap();
+        let (want, clock_mono) = run(&mut mono, &grads, 77, None);
+
+        let cfg = ControlConfig::new(1);
+        let mut plane = GradientControlPlane::new(cfg, 4, n, &segments).unwrap();
+        let (got, clock_b) = run(&mut plane, &grads, 77, None);
+
+        assert_eq!(got, want);
+        assert_eq!(clock_b.bits_per_worker, clock_mono.bits_per_worker);
+        assert_eq!(clock_b.hop_bits_per_worker, clock_mono.hop_bits_per_worker);
+        assert_eq!(clock_b.comm_s, clock_mono.comm_s);
+        assert_eq!(plane.last_bits(), &[4]);
+    }
+
+    #[test]
+    fn per_bucket_charging_is_byte_exact_never_rederived_from_whole_length() {
+        // satellite bugfix pin: 3 ragged buckets at 2 bits — the per-bucket
+        // byte ceilings sum to MORE than one whole-gradient ceiling, and the
+        // ledger must show the per-bucket sum (a whole-length re-derivation
+        // or a double byte-ceiling would both fail the equality).
+        let (m, n) = (4usize, 97usize);
+        let grads = fixed_grads(0xBEEF, m, n);
+        let segments = segs(&[33, 33, 31]);
+        let mut cfg = ControlConfig::new(3);
+        cfg.bits = BitsPolicy::Fixed(Some(2));
+        cfg.overlap = false;
+        let mut plane = GradientControlPlane::new(cfg, 4, n, &segments).unwrap();
+        assert_eq!(plane.plan.len(), 3);
+        let (_, clock) = run(&mut plane, &grads, 5, None);
+
+        let closed_form: f64 = [33usize, 33, 31]
+            .iter()
+            .map(|&l| (8 * bitpack::wire_bytes_for(l, 2)) as f64)
+            .sum();
+        assert_eq!(plane.last_payload_bits(), closed_form);
+        // 32 norm bits + per-bucket byte-exact payloads
+        assert_eq!(clock.bits_per_worker, 32.0 + closed_form);
+        // and that differs from the whole-gradient ceiling (the bug shape)
+        let whole = (8 * bitpack::wire_bytes_for(n, 2)) as f64;
+        assert_ne!(closed_form, whole);
+        assert_eq!(closed_form, 208.0);
+        assert_eq!(whole, 200.0);
+    }
+
+    #[test]
+    fn overlap_hides_comm_and_reports_positive_fraction() {
+        // 1M coords keeps the per-hop cost bandwidth-dominated, so the
+        // bucketed exposed tail (one bucket's hops) clears the monolithic
+        // comm with a deterministic analytic margin
+        let (m, n) = (16usize, 1 << 20);
+        let grads = fixed_grads(0xABCD, m, n);
+        let segments = segs(&[n / 4; 4]);
+
+        let mut mono = QsgdMaxNorm::new(4).unwrap();
+        let (_, clock_mono) = run(&mut mono, &grads, 3, Some(0.14));
+
+        let cfg = ControlConfig::new(4);
+        let mut plane = GradientControlPlane::new(cfg, 4, n, &segments).unwrap();
+        let (_, clock_b) = run(&mut plane, &grads, 3, Some(0.14));
+
+        // monolithic hides nothing
+        assert_eq!(clock_mono.hidden_comm_s, 0.0);
+        // bucketed hides a positive fraction and beats the monolithic
+        // simulated step time (compute + exposed comm)
+        assert!(clock_b.hidden_comm_s > 0.0);
+        assert!(plane.last_overlap().overlap_frac > 0.0);
+        let mono_step = 0.14 + clock_mono.comm_s;
+        let buck_step = 0.14 + clock_b.comm_s - clock_b.hidden_comm_s;
+        assert!(
+            buck_step < mono_step,
+            "bucketed-with-overlap {buck_step} must beat monolithic {mono_step}"
+        );
+        assert!(clock_b.hidden_comm_s <= clock_b.comm_s);
+        assert!(clock_b.overlap_frac() > 0.0);
+    }
+
+    #[test]
+    fn per_bucket_norm_scope_charges_one_scalar_per_bucket() {
+        let (m, n) = (4usize, 512usize);
+        let grads = fixed_grads(0x99, m, n);
+        let segments = segs(&[128; 4]);
+        let mut cfg = ControlConfig::new(4);
+        cfg.norm_scope = NormScope::PerBucket;
+        cfg.overlap = false;
+        let mut plane = GradientControlPlane::new(cfg, 4, n, &segments).unwrap();
+        let (out, clock) = run(&mut plane, &grads, 9, None);
+        assert_eq!(out.len(), n);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // 4 norm scalars instead of 1
+        assert_eq!(
+            clock.bits_per_worker,
+            4.0 * 32.0 + plane.last_payload_bits()
+        );
+    }
+
+    #[test]
+    fn build_plane_rejects_incompatible_methods() {
+        let cfg = ControlConfig::new(4);
+        assert!(build_plane(&Method::SignSgd, &cfg, 100, &[]).is_err());
+        assert!(build_plane(&Method::Qsgd { bits: 4 }, &cfg, 100, &[]).is_ok());
+    }
+
+    #[test]
+    fn error_feedback_changes_the_step_but_stays_finite() {
+        let (m, n) = (3usize, 300usize);
+        let grads = fixed_grads(0x5A5A, m, n);
+        let segments = segs(&[100; 3]);
+        let mut cfg = ControlConfig::new(3);
+        cfg.error_feedback = true;
+        cfg.bits = BitsPolicy::Fixed(Some(8));
+        let mut plane = GradientControlPlane::new(cfg, 8, n, &segments).unwrap();
+        // first step: residual starts at zero, so outputs match the EF-less
+        // plane; afterwards the residual is non-zero and folded in
+        let mut plain =
+            GradientControlPlane::new(ControlConfig::new(3), 8, n, &segments).unwrap();
+        let (a, _) = run(&mut plane, &grads, 21, None);
+        let (b, _) = run(&mut plain, &grads, 21, None);
+        assert_eq!(a, b, "step 1 has zero residual");
+        assert!(plane.max_residual_norm() > 0.0);
+        let (c, _) = run(&mut plane, &grads, 22, None);
+        let (d, _) = run(&mut plain, &grads, 22, None);
+        assert_ne!(c, d, "step 2 folds the residual in");
+        assert!(c.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,104 @@
+//! Backward/communication overlap scheduler.
+//!
+//! Buckets become available in backward order (last layers first,
+//! [`crate::perfmodel::backward_ready_times`]); the wire is a single
+//! serialized resource, so bucket `b`'s collective starts at
+//! `max(ready_b, previous finish)` and runs for its charged `comm_s`.
+//! Communication that lands inside the backward window `[0, backward_s]`
+//! is **hidden** — it does not extend the step's critical path — and is
+//! credited to [`crate::netsim::SimClock::hidden_comm_s`]. The monolithic
+//! path by contrast starts its single collective at `backward_s` and
+//! exposes all of it: exactly the serialization Parallel-SGD identifies as
+//! the scaling bottleneck.
+
+/// One step's overlap outcome.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverlapReport {
+    /// total bucket communication seconds charged this step
+    pub total_comm_s: f64,
+    /// comm seconds hidden inside the backward window
+    pub hidden_s: f64,
+    /// comm seconds extending the critical path past the backward window
+    pub exposed_s: f64,
+    /// `hidden_s / total_comm_s` (0 when nothing was communicated)
+    pub overlap_frac: f64,
+}
+
+/// Schedule bucket collectives against the backward window.
+///
+/// `ready[b]` is bucket `b`'s gradient-available time (ascending bucket =
+/// earlier layer = ready *later*; all `ready <= backward_s`), `comm[b]` its
+/// charged wire seconds. Buckets are issued in backward order (descending
+/// index), serialized on the wire.
+pub fn schedule(ready: &[f64], comm: &[f64], backward_s: f64) -> OverlapReport {
+    debug_assert_eq!(ready.len(), comm.len());
+    let total_comm_s: f64 = comm.iter().sum();
+    if total_comm_s <= 0.0 {
+        return OverlapReport::default();
+    }
+    let mut t = 0.0f64;
+    for b in (0..comm.len()).rev() {
+        t = t.max(ready[b]) + comm[b];
+    }
+    // every ready time is <= backward_s, so once the clock passes the
+    // backward window the wire stays busy: the exposed tail is contiguous
+    let exposed_s = (t - backward_s).clamp(0.0, total_comm_s);
+    let hidden_s = total_comm_s - exposed_s;
+    OverlapReport {
+        total_comm_s,
+        hidden_s,
+        exposed_s,
+        overlap_frac: hidden_s / total_comm_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_hidden_when_comm_fits_the_gaps() {
+        // 4 buckets ready at .25/.5/.75/1.0 of a 1 s backward, 0.01 s each:
+        // everything but the last bucket's tail past 1.0 s is hidden
+        let ready = [1.0, 0.75, 0.5, 0.25];
+        let comm = [0.01; 4];
+        let r = schedule(&ready, &comm, 1.0);
+        assert!((r.total_comm_s - 0.04).abs() < 1e-12);
+        // last-issued bucket (index 0) starts at 1.0 -> 0.01 exposed
+        assert!((r.exposed_s - 0.01).abs() < 1e-12);
+        assert!((r.overlap_frac - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serialization_pushes_comm_past_the_window() {
+        // comm much longer than the window: almost everything exposed
+        let ready = [1.0, 0.5];
+        let comm = [2.0, 2.0];
+        let r = schedule(&ready, &comm, 1.0);
+        // issue order: bucket 1 at 0.5 -> 2.5, bucket 0 at 2.5 -> 4.5
+        assert!((r.exposed_s - 3.5).abs() < 1e-12);
+        assert!((r.hidden_s - 0.5).abs() < 1e-12);
+        assert!(r.overlap_frac > 0.0 && r.overlap_frac < 1.0);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert_eq!(schedule(&[], &[], 1.0), OverlapReport::default());
+        assert_eq!(schedule(&[1.0], &[0.0], 1.0), OverlapReport::default());
+        // single bucket ready only at the window end: nothing hidden —
+        // exactly the monolithic exposure
+        let r = schedule(&[1.0], &[0.3], 1.0);
+        assert_eq!(r.hidden_s, 0.0);
+        assert!((r.exposed_s - 0.3).abs() < 1e-12);
+        assert_eq!(r.overlap_frac, 0.0);
+    }
+
+    #[test]
+    fn hidden_never_exceeds_total_and_zero_window_exposes_all() {
+        let ready = [0.0, 0.0, 0.0];
+        let comm = [0.1, 0.2, 0.3];
+        let r = schedule(&ready, &comm, 0.0);
+        assert_eq!(r.hidden_s, 0.0);
+        assert!((r.exposed_s - 0.6).abs() < 1e-12);
+    }
+}

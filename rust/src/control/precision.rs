@@ -1,0 +1,308 @@
+//! Per-bucket bit-width policies.
+//!
+//! The controller picks each bucket's quantizer bit-width per step. The
+//! interesting policy is [`VarianceAdaptive`]: it tracks a running estimate
+//! of every bucket's gradient second moment and picks the *cheapest* width
+//! whose Lemma-5 quantization variance stays under a target fraction of it
+//! — variance-based compression in the spirit of Tsuzuku et al. (2018) and
+//! ScaleCom's per-chunk scaling, on top of the paper's QSGDMaxNorm
+//! quantizer. [`FixedBits`] reproduces the monolithic path exactly (the
+//! bit-identity pin); [`PerLayerBits`] opens heterogeneous per-layer
+//! precision from an explicit spec.
+
+use anyhow::{bail, Result};
+
+use crate::compress::kernels;
+
+use super::bucket::BucketPlan;
+
+/// Per-step bucket statistics the controller decides from.
+#[derive(Clone, Copy, Debug)]
+pub struct BucketStats {
+    /// coordinates in the bucket
+    pub len: usize,
+    /// the norm the bucket will be encoded against this step
+    pub wnorm: f32,
+    /// current mean over workers of `||g_bucket||^2`
+    pub grad_ms: f64,
+    /// worker count (the m-way average divides the quantizer variance)
+    pub workers: usize,
+}
+
+/// A per-bucket bit-width policy. Stateful: `bits_for` is called once per
+/// bucket per step, in bucket order, so adaptive policies can maintain
+/// running statistics.
+pub trait PrecisionController: Send {
+    /// Short label for run tables ("fixed:4", "auto", "perlayer").
+    fn label(&self) -> String;
+
+    /// Does this policy read `BucketStats::grad_ms`? Static policies return
+    /// false so the control plane skips the O(m·n) per-bucket moment pass.
+    fn needs_stats(&self) -> bool {
+        true
+    }
+
+    /// Bit-width (in `2..=16`) for bucket `b` this step.
+    fn bits_for(&mut self, b: usize, stats: &BucketStats) -> usize;
+}
+
+/// Every bucket at one width — with a single bucket this reproduces the
+/// monolithic packed path bit for bit.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedBits(pub usize);
+
+impl PrecisionController for FixedBits {
+    fn label(&self) -> String {
+        format!("fixed:{}", self.0)
+    }
+
+    fn needs_stats(&self) -> bool {
+        false
+    }
+
+    fn bits_for(&mut self, _b: usize, _stats: &BucketStats) -> usize {
+        self.0
+    }
+}
+
+/// Explicit per-bucket widths, resolved at construction from a per-layer
+/// spec: a bucket spanning several layers takes the widest of them.
+#[derive(Clone, Debug)]
+pub struct PerLayerBits {
+    per_bucket: Vec<usize>,
+}
+
+impl PerLayerBits {
+    /// `per_layer[i]` is the width of atom (layer) `i` of `plan`; the spec
+    /// must cover every atom.
+    pub fn new(per_layer: &[usize], plan: &BucketPlan) -> Result<PerLayerBits> {
+        anyhow::ensure!(
+            per_layer.len() == plan.atom_lens.len(),
+            "per-layer bits spec has {} entries for {} layers",
+            per_layer.len(),
+            plan.atom_lens.len()
+        );
+        for &b in per_layer {
+            anyhow::ensure!((2..=16).contains(&b), "per-layer bits {b} not in 2..=16");
+        }
+        let per_bucket = plan
+            .buckets
+            .iter()
+            .map(|bk| per_layer[bk.seg_lo..bk.seg_hi].iter().copied().max().unwrap_or(2))
+            .collect();
+        Ok(PerLayerBits { per_bucket })
+    }
+}
+
+impl PrecisionController for PerLayerBits {
+    fn label(&self) -> String {
+        "perlayer".into()
+    }
+
+    fn needs_stats(&self) -> bool {
+        false
+    }
+
+    fn bits_for(&mut self, b: usize, _stats: &BucketStats) -> usize {
+        self.per_bucket[b]
+    }
+}
+
+/// Variance-targeting adaptive widths.
+///
+/// Per bucket it keeps an EMA of the gradient second moment `E||g_b||^2`
+/// and each step picks the smallest `bits` whose Lemma-5 bound on the
+/// m-averaged quantization variance,
+/// `min(n_b/s^2, sqrt(n_b)/s) * wnorm^2 / m` with `s = 2^(bits-1) - 1`,
+/// stays `<= target_frac * E||g_b||^2`. Falls back to `max_bits` (best
+/// effort) when no width in range meets the target. With error feedback the
+/// inputs (and hence `wnorm`) include the residual, so a growing residual
+/// automatically buys more precision — the stabilizing loop.
+#[derive(Clone, Debug)]
+pub struct VarianceAdaptive {
+    pub target_frac: f64,
+    pub min_bits: usize,
+    pub max_bits: usize,
+    /// EMA decay of the per-bucket gradient second moment
+    pub beta: f64,
+    ema_ms: Vec<f64>,
+    seen: Vec<bool>,
+}
+
+impl VarianceAdaptive {
+    pub fn new(target_frac: f64, min_bits: usize, max_bits: usize) -> Result<VarianceAdaptive> {
+        anyhow::ensure!(target_frac > 0.0, "target fraction must be positive");
+        if !(2..=16).contains(&min_bits) || !(2..=16).contains(&max_bits) || min_bits > max_bits {
+            bail!("adaptive bits range {min_bits}..={max_bits} invalid (need 2..=16)");
+        }
+        Ok(VarianceAdaptive {
+            target_frac,
+            min_bits,
+            max_bits,
+            beta: 0.9,
+            ema_ms: Vec::new(),
+            seen: Vec::new(),
+        })
+    }
+
+    /// The defaults the `--bits auto` CLI spec resolves to: quantization
+    /// variance within 10% of the gradient's, widths free in 2..=12.
+    pub fn default_policy() -> VarianceAdaptive {
+        VarianceAdaptive::new(0.1, 2, 12).unwrap()
+    }
+
+    /// Lemma-5 bound on the m-averaged quantization variance at `bits`.
+    pub fn lemma5_var(len: usize, wnorm: f32, bits: usize, workers: usize) -> f64 {
+        let s = kernels::s_for_bits(bits) as f64;
+        let n = len as f64;
+        let w2 = (wnorm as f64) * (wnorm as f64);
+        (n / (s * s)).min(n.sqrt() / s) * w2 / workers.max(1) as f64
+    }
+}
+
+impl PrecisionController for VarianceAdaptive {
+    fn label(&self) -> String {
+        "auto".into()
+    }
+
+    fn bits_for(&mut self, b: usize, stats: &BucketStats) -> usize {
+        if self.ema_ms.len() <= b {
+            self.ema_ms.resize(b + 1, 0.0);
+            self.seen.resize(b + 1, false);
+        }
+        self.ema_ms[b] = if self.seen[b] {
+            self.beta * self.ema_ms[b] + (1.0 - self.beta) * stats.grad_ms
+        } else {
+            self.seen[b] = true;
+            stats.grad_ms
+        };
+        let target = self.target_frac * self.ema_ms[b];
+        for bits in self.min_bits..=self.max_bits {
+            if Self::lemma5_var(stats.len, stats.wnorm, bits, stats.workers) <= target {
+                return bits;
+            }
+        }
+        self.max_bits
+    }
+}
+
+/// Parsed `--bits` CLI spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BitsPolicy {
+    /// `auto` — [`VarianceAdaptive::default_policy`]
+    Auto,
+    /// `fixed:<b>`; `None` inherits the method's bit-width
+    Fixed(Option<usize>),
+    /// `perlayer:<b1>,<b2>,...` — one width per model segment
+    PerLayer(Vec<usize>),
+}
+
+impl BitsPolicy {
+    pub fn parse(spec: &str) -> Result<BitsPolicy> {
+        let s = spec.trim().to_ascii_lowercase();
+        if s == "auto" {
+            return Ok(BitsPolicy::Auto);
+        }
+        if s == "fixed" {
+            return Ok(BitsPolicy::Fixed(None));
+        }
+        if let Some(b) = s.strip_prefix("fixed:") {
+            return Ok(BitsPolicy::Fixed(Some(b.parse().map_err(|e| {
+                anyhow::anyhow!("bad --bits spec '{spec}': {e}")
+            })?)));
+        }
+        if let Some(list) = s.strip_prefix("perlayer:") {
+            let bits: Result<Vec<usize>> = list
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad --bits entry '{p}': {e}"))
+                })
+                .collect();
+            return Ok(BitsPolicy::PerLayer(bits?));
+        }
+        bail!("unknown --bits spec '{spec}' (expected auto | fixed[:N] | perlayer:a,b,...)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::bucket::BucketPlan;
+
+    #[test]
+    fn bits_policy_parses() {
+        assert_eq!(BitsPolicy::parse("auto").unwrap(), BitsPolicy::Auto);
+        assert_eq!(BitsPolicy::parse("fixed").unwrap(), BitsPolicy::Fixed(None));
+        assert_eq!(BitsPolicy::parse("fixed:6").unwrap(), BitsPolicy::Fixed(Some(6)));
+        assert_eq!(
+            BitsPolicy::parse("perlayer:2,4,8").unwrap(),
+            BitsPolicy::PerLayer(vec![2, 4, 8])
+        );
+        assert!(BitsPolicy::parse("nonsense").is_err());
+        assert!(BitsPolicy::parse("fixed:x").is_err());
+    }
+
+    #[test]
+    fn adaptive_spends_more_bits_when_variance_budget_is_tight() {
+        let mut ctrl = VarianceAdaptive::new(0.1, 2, 12).unwrap();
+        // big norm relative to the gradient moment -> needs a fine grid
+        let fine = ctrl.bits_for(
+            0,
+            &BucketStats { len: 1024, wnorm: 10.0, grad_ms: 1.0, workers: 4 },
+        );
+        // same shape, generous budget -> coarse grid suffices
+        let mut ctrl2 = VarianceAdaptive::new(0.1, 2, 12).unwrap();
+        let coarse = ctrl2.bits_for(
+            0,
+            &BucketStats { len: 1024, wnorm: 10.0, grad_ms: 1e6, workers: 4 },
+        );
+        assert!(fine > coarse, "fine {fine} vs coarse {coarse}");
+        assert!((2..=12).contains(&fine) && (2..=12).contains(&coarse));
+        // the picked width actually meets the target (when not saturated)
+        let target = 0.1 * 1.0;
+        assert!(VarianceAdaptive::lemma5_var(1024, 10.0, fine, 4) <= target || fine == 12);
+    }
+
+    #[test]
+    fn adaptive_ema_smooths_spikes() {
+        let mut ctrl = VarianceAdaptive::new(0.1, 2, 12).unwrap();
+        let calm = BucketStats { len: 256, wnorm: 1.0, grad_ms: 4.0, workers: 4 };
+        let b0 = ctrl.bits_for(0, &calm);
+        // one zero-moment spike must not instantly slam the width to max
+        let spike = BucketStats { len: 256, wnorm: 1.0, grad_ms: 1e-12, workers: 4 };
+        let b1 = ctrl.bits_for(0, &spike);
+        assert!(b1 <= 12 && b1 >= b0, "ema keeps the width sane: {b0} -> {b1}");
+    }
+
+    #[test]
+    fn per_layer_bits_take_bucket_max() {
+        use crate::runtime::Segment;
+        let segs: Vec<Segment> = [(0usize, 100usize), (100, 100), (200, 100)]
+            .iter()
+            .map(|&(offset, len)| Segment {
+                name: format!("s{offset}"),
+                shape: vec![len],
+                offset,
+                len,
+            })
+            .collect();
+        let plan = BucketPlan::new(300, &segs, 2); // capacity 150: {[0,200), [200,300)}
+        let mut ctrl = PerLayerBits::new(&[2, 8, 4], &plan).unwrap();
+        let stats = BucketStats { len: 1, wnorm: 1.0, grad_ms: 1.0, workers: 1 };
+        assert_eq!(ctrl.bits_for(0, &stats), 8); // max(2, 8)
+        assert_eq!(ctrl.bits_for(1, &stats), 4);
+        assert!(PerLayerBits::new(&[2, 8], &plan).is_err()); // wrong arity
+        assert!(PerLayerBits::new(&[2, 8, 99], &plan).is_err()); // out of range
+    }
+
+    #[test]
+    fn fixed_bits_is_constant() {
+        let mut ctrl = FixedBits(4);
+        let stats = BucketStats { len: 10, wnorm: 5.0, grad_ms: 0.001, workers: 2 };
+        assert_eq!(ctrl.bits_for(0, &stats), 4);
+        assert_eq!(ctrl.bits_for(7, &stats), 4);
+        assert_eq!(ctrl.label(), "fixed:4");
+    }
+}

@@ -10,6 +10,8 @@
 //! Layer map:
 //! * [`runtime`] — PJRT bridge to the build-time-lowered HLO artifacts
 //! * [`compress`] — the paper's contribution + every baseline
+//! * [`control`] — bucketed gradient control plane (per-layer buckets,
+//!   adaptive precision, error feedback, backward/comm overlap)
 //! * [`collectives`] / [`netsim`] / [`cluster`] — the distributed substrate
 //! * [`optim`] / [`data`] / [`train`] — the training framework around it
 //! * [`perfmodel`] — the §6.6 analytical throughput model
@@ -19,6 +21,7 @@ pub mod cli;
 pub mod cluster;
 pub mod collectives;
 pub mod compress;
+pub mod control;
 pub mod data;
 pub mod figures;
 pub mod metrics;

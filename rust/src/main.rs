@@ -8,6 +8,7 @@
 //!
 //! Examples:
 //!   repro train --model resnet_lite --method qsgd-mn-4 --steps 200 --workers 4
+//!   repro train --model resnet_lite --method qsgd-mn-4 --buckets 8 --bits auto --error-feedback
 //!   repro figures --fig 3 --steps 150
 //!   repro perfmodel --floor-bits 8
 
@@ -15,6 +16,7 @@ use anyhow::{bail, Result};
 
 use repro::cli::Args;
 use repro::compress::Method;
+use repro::control::{BitsPolicy, ControlConfig};
 use repro::figures::{self, FigureOpts};
 use repro::runtime::Artifacts;
 use repro::train::{summary_table, Experiment};
@@ -49,6 +51,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let lr0: f64 = args.parse_or("lr", 0.05)?;
     let seed: u64 = args.parse_or("seed", 42)?;
     let out_dir = args.get_or("out-dir", "results").to_string();
+    let control = parse_control(args)?;
     args.reject_unknown()?;
 
     let arts = Artifacts::load_default()?;
@@ -58,10 +61,36 @@ fn cmd_train(args: &Args) -> Result<()> {
     exp.lr0 = lr0;
     exp.seed = seed;
     exp.out_dir = out_dir.into();
+    exp.control = control;
     let results = exp.run(&arts)?;
     let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
     println!("{}", summary_table(&summaries));
     Ok(())
+}
+
+/// Bucketed control-plane options: `--buckets N` enables the plane,
+/// `--bits auto|fixed[:N]|perlayer:a,b,...` picks the precision policy,
+/// `--error-feedback` turns on per-worker residual memory, `--no-overlap`
+/// disables hiding bucket comm behind backward compute.
+fn parse_control(args: &Args) -> Result<Option<ControlConfig>> {
+    let buckets: usize = args.parse_or("buckets", 0)?;
+    let bits_spec = args.get("bits").map(str::to_string);
+    let ef = args.flag("error-feedback");
+    let no_overlap = args.flag("no-overlap");
+    if buckets == 0 {
+        anyhow::ensure!(
+            bits_spec.is_none() && !ef && !no_overlap,
+            "--bits/--error-feedback/--no-overlap need --buckets N"
+        );
+        return Ok(None);
+    }
+    let mut cfg = ControlConfig::new(buckets);
+    if let Some(spec) = bits_spec {
+        cfg.bits = BitsPolicy::parse(&spec)?;
+    }
+    cfg.error_feedback = ef;
+    cfg.overlap = !no_overlap;
+    Ok(Some(cfg))
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {

@@ -55,6 +55,9 @@ pub struct StepRecord {
     /// *simulated* communication seconds (netsim)
     pub t_comm_sim: f64,
     pub bits_per_worker: f64,
+    /// fraction of `t_comm_sim` the bucketed control plane hid behind
+    /// backward compute (0 on the monolithic path)
+    pub overlap_frac: f64,
 }
 
 /// Whole-run summary, serializable for EXPERIMENTS.md extraction.
@@ -68,6 +71,8 @@ pub struct RunSummary {
     pub final_eval_loss: f64,
     pub final_eval_acc: f64,
     pub mean_bits_per_step: f64,
+    /// run-level fraction of simulated comm hidden behind compute
+    pub overlap_frac: f64,
     pub sim_time_s: f64,
     pub wall_time_s: f64,
     pub t_compute: f64,
@@ -87,6 +92,7 @@ impl RunSummary {
             ("final_eval_loss", num(self.final_eval_loss)),
             ("final_eval_acc", num(self.final_eval_acc)),
             ("mean_bits_per_step", num(self.mean_bits_per_step)),
+            ("overlap_frac", num(self.overlap_frac)),
             ("sim_time_s", num(self.sim_time_s)),
             ("wall_time_s", num(self.wall_time_s)),
             (

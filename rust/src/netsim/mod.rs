@@ -280,11 +280,29 @@ pub struct SimClock {
     /// sums ride wider codes than the nominal payload). Zero for paths that
     /// charge only the uniform model.
     pub hop_bits_per_worker: f64,
+    /// communication seconds hidden behind backward compute by the bucketed
+    /// control plane's overlap scheduler ([`crate::control`]): this much of
+    /// `comm_s` ran concurrently with `compute_s` and does not extend the
+    /// step's critical path. Zero for the monolithic (non-overlapped) path.
+    /// Invariant: `hidden_comm_s <= comm_s`.
+    pub hidden_comm_s: f64,
 }
 
 impl SimClock {
+    /// Critical-path seconds of the run: comm hidden behind compute by the
+    /// overlap scheduler is subtracted — it ran during `compute_s`.
     pub fn total_s(&self) -> f64 {
-        self.comm_s + self.compute_s + self.encode_s + self.decode_s
+        self.comm_s + self.compute_s + self.encode_s + self.decode_s - self.hidden_comm_s
+    }
+
+    /// Fraction of the communication time the overlap scheduler hid behind
+    /// compute (0 when nothing was charged or nothing overlapped).
+    pub fn overlap_frac(&self) -> f64 {
+        if self.comm_s > 0.0 {
+            self.hidden_comm_s / self.comm_s
+        } else {
+            0.0
+        }
     }
 }
 

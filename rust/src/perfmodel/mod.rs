@@ -143,6 +143,35 @@ struct WireCost {
     rounds: usize,
 }
 
+/// Fraction of a fwd+bwd step spent in the backward pass — the window layer
+/// gradients stream out of and bucket communication can hide behind. The
+/// standard ~1:2 forward:backward FLOP ratio (each backward layer computes
+/// both input and weight gradients) that DDP-style overlap analyses assume.
+pub const BACKWARD_FRAC: f64 = 2.0 / 3.0;
+
+/// Completion time of each segment's backward pass inside a backward window
+/// of `backward_s` seconds, apportioned by parameter count.
+///
+/// Backward runs **last layer first**, so segment `i`'s gradient is ready
+/// once every segment `j >= i` has been processed:
+/// `ready[i] = backward_s * sum(len[i..]) / sum(len)`. The first segment's
+/// gradient is therefore ready exactly at `backward_s` (the full backward),
+/// the last segment's earliest — the release order the bucketed control
+/// plane's overlap scheduler consumes ([`crate::control`]).
+pub fn backward_ready_times(seg_lens: &[usize], backward_s: f64) -> Vec<f64> {
+    let total: f64 = seg_lens.iter().map(|&l| l as f64).sum();
+    if total <= 0.0 {
+        return vec![backward_s; seg_lens.len()];
+    }
+    let mut suffix = 0.0f64;
+    let mut ready = vec![0.0f64; seg_lens.len()];
+    for i in (0..seg_lens.len()).rev() {
+        suffix += seg_lens[i] as f64;
+        ready[i] = backward_s * suffix / total;
+    }
+    ready
+}
+
 /// Throughput in images/s for `model` on `net` with `scheme`.
 pub fn throughput(model: &ModelProfile, net: &NetConfig, scheme: &Scheme, floor_bits: Option<f64>) -> f64 {
     let wire = scheme.wire(model.params, floor_bits);
@@ -236,6 +265,19 @@ mod tests {
             gain_1g > gain_10g,
             "compression gain must shrink with bandwidth: {gain_1g} vs {gain_10g}"
         );
+    }
+
+    #[test]
+    fn backward_ready_times_release_last_layer_first() {
+        let lens = [100usize, 300, 600];
+        let ready = backward_ready_times(&lens, 1.0);
+        // last segment ready first (0.6), first segment last (exactly 1.0)
+        assert!((ready[2] - 0.6).abs() < 1e-12);
+        assert!((ready[1] - 0.9).abs() < 1e-12);
+        assert_eq!(ready[0], 1.0);
+        assert!(ready.windows(2).all(|w| w[0] >= w[1]));
+        // degenerate: zero-length segments all release at the window end
+        assert_eq!(backward_ready_times(&[0, 0], 0.5), vec![0.5, 0.5]);
     }
 
     #[test]

@@ -20,6 +20,21 @@ pub struct Segment {
     pub len: usize,
 }
 
+/// Build a contiguous segment list from per-layer lengths (offsets are the
+/// running sum). Used by tests/benches to synthesize layer metadata and by
+/// callers driving the bucketed control plane without lowered artifacts.
+pub fn contiguous_segments(lens: &[usize]) -> Vec<Segment> {
+    let mut off = 0usize;
+    lens.iter()
+        .enumerate()
+        .map(|(i, &len)| {
+            let s = Segment { name: format!("layer{i}"), shape: vec![len], offset: off, len };
+            off += len;
+            s
+        })
+        .collect()
+}
+
 /// Dtype carried on the wire between L3 and PJRT.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {

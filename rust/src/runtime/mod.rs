@@ -19,7 +19,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-pub use artifacts::{Artifacts, Dtype, ModelArtifacts, Segment, StepSpec, TensorSpec};
+pub use artifacts::{
+    contiguous_segments, Artifacts, Dtype, ModelArtifacts, Segment, StepSpec, TensorSpec,
+};
 
 /// An input tensor for one execution.
 pub enum Input<'a> {

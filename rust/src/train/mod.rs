@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::cluster::{run_training, ClusterConfig};
 use crate::compress::Method;
+use crate::control::ControlConfig;
 use crate::metrics::{render_table, CsvWriter, RunSummary, StepRecord};
 use crate::runtime::Artifacts;
 
@@ -26,6 +27,8 @@ pub struct Experiment {
     pub eval_every: usize,
     pub out_dir: PathBuf,
     pub quiet: bool,
+    /// bucketed control-plane options applied to every method of the sweep
+    pub control: Option<ControlConfig>,
 }
 
 impl Experiment {
@@ -42,6 +45,7 @@ impl Experiment {
             eval_every: 0,
             out_dir: PathBuf::from("results"),
             quiet: false,
+            control: None,
         }
     }
 
@@ -62,6 +66,7 @@ impl Experiment {
             cfg.lr0 = self.lr0;
             cfg.total_steps = self.steps;
             cfg.net_gbps = self.net_gbps;
+            cfg.control = self.control.clone();
 
             let label = method.label();
             if !self.quiet {
@@ -69,7 +74,7 @@ impl Experiment {
             }
             let mut csv = CsvWriter::create(
                 &self.csv_path(&label),
-                &["step", "loss", "lr", "t_compute", "t_encode", "t_decode", "t_comm_sim", "bits_per_worker"],
+                &["step", "loss", "lr", "t_compute", "t_encode", "t_decode", "t_comm_sim", "bits_per_worker", "overlap_frac"],
             )?;
             let quiet = self.quiet;
             let steps = self.steps;
@@ -83,6 +88,7 @@ impl Experiment {
                     rec.t_decode,
                     rec.t_comm_sim,
                     rec.bits_per_worker,
+                    rec.overlap_frac,
                 ]);
                 if !quiet && (rec.step % 20 == 0 || rec.step + 1 == steps) {
                     eprintln!("  step {:>5}  loss {:.4}  lr {:.4}", rec.step, rec.loss, rec.lr);
@@ -111,13 +117,14 @@ pub fn summary_table(summaries: &[RunSummary]) -> String {
                 format!("{:.4}", r.final_eval_loss),
                 format!("{:.3}", r.final_eval_acc),
                 format!("{:.1}", r.mean_bits_per_step / 1e3),
+                format!("{:.2}", r.overlap_frac),
                 format!("{:.3}", r.sim_time_s),
                 format!("{:.1}", r.wall_time_s),
             ]
         })
         .collect();
     render_table(
-        &["method", "train_loss", "eval_loss", "eval_acc", "kbits/step", "sim_s", "wall_s"],
+        &["method", "train_loss", "eval_loss", "eval_acc", "kbits/step", "ovl", "sim_s", "wall_s"],
         &rows,
     )
 }

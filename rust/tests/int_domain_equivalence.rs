@@ -611,6 +611,156 @@ fn prop_growing_ring_multiscale_bit_identical() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// PR 4: bucketed control plane
+// ---------------------------------------------------------------------------
+
+use repro::runtime::contiguous_segments;
+
+#[test]
+fn bucketed_fixed_bits_bit_identical_to_monolithic_packed_matrix() {
+    // PR 4 acceptance matrix: the bucketed control plane with FixedBits is
+    // bit-identical to the monolithic packed path — which is itself pinned
+    // to the f32 reference — for bucket plans {1, 3, segments, ragged-last}
+    // x schedules {ring fixed, ring growing, tree} x workers {4, 16}. The
+    // plane draws the monolithic uniform stream per worker and shares the
+    // global max norm, so every bucket reproduces the monolithic numbers.
+    use repro::control::{ControlConfig, GradientControlPlane};
+    use repro::netsim::RingWidth;
+
+    // intentionally odd length; the targets below yield plans of
+    // {1, 3 (ragged-last 68), 4, 6 (= one per segment)} buckets
+    let n = 1003usize;
+    let seg_lens = [334usize, 167, 167, 167, 100, 68];
+    let segments = contiguous_segments(&seg_lens);
+    let bits = 4usize;
+
+    for &m in &[4usize, 16] {
+        let seed = 0xB0CE + m as u64;
+        let mut grng = Rng::new(seed);
+        let grads: Vec<Vec<f32>> = (0..m)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                grng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+
+        for (algo, width) in [
+            (Algo::Ring, RingWidth::Fixed),
+            (Algo::Ring, RingWidth::Growing),
+            (Algo::Tree, RingWidth::Auto),
+        ] {
+            // monolithic packed path (the PR 3 pinned path)
+            let want = {
+                let mut agg = Method::parse(&format!("qsgd-mn-{bits}"))
+                    .unwrap()
+                    .build(n, &segments)
+                    .unwrap();
+                let mut net = NetConfig::flat(m, 10.0);
+                net.algo = algo;
+                let mut clock = SimClock::default();
+                let mut ctx = StepCtx::new(&net, &mut clock);
+                ctx.ring_width = width;
+                let mut rng = Rng::new(seed);
+                (agg.aggregate(&refs, &mut ctx, &mut rng), clock.bits_per_worker)
+            };
+            // targets resolve to {1, 3, 4, 6}-bucket plans (greedy grouping
+            // can merge below the target; 15 forces one bucket per segment)
+            let mut seen = Vec::new();
+            for &target in &[1usize, 3, 6, 15] {
+                let cfg = ControlConfig::new(target);
+                let mut plane =
+                    GradientControlPlane::new(cfg, bits, n, &segments).unwrap();
+                let nb = plane.plan.len();
+                seen.push(nb);
+                let mut net = NetConfig::flat(m, 10.0);
+                net.algo = algo;
+                let mut clock = SimClock::default();
+                let got = {
+                    let mut ctx = StepCtx::new(&net, &mut clock);
+                    ctx.ring_width = width;
+                    let mut rng = Rng::new(seed);
+                    plane.aggregate(&refs, &mut ctx, &mut rng)
+                };
+                assert_eq!(
+                    got.len(),
+                    want.0.len(),
+                    "m={m} algo={algo:?} buckets={nb}"
+                );
+                if got != want.0 {
+                    let bad = got.iter().zip(&want.0).position(|(a, b)| a != b).unwrap();
+                    panic!(
+                        "m={m} algo={algo:?} {width:?} buckets={nb}: first diff at {bad}: {} vs {}",
+                        got[bad], want.0[bad]
+                    );
+                }
+                // byte-exact ledger: 32 norm bits + per-bucket byte ceilings
+                let payload: f64 = plane
+                    .plan
+                    .buckets
+                    .iter()
+                    .map(|b| (8 * repro::compress::bitpack::wire_bytes_for(b.len(), bits as u32)) as f64)
+                    .sum();
+                assert_eq!(clock.bits_per_worker, 32.0 + payload);
+                assert_eq!(plane.last_payload_bits(), payload);
+                // the single-bucket plan is ledger-identical to monolithic
+                if nb == 1 {
+                    assert_eq!(clock.bits_per_worker, want.1);
+                }
+            }
+            assert_eq!(seen, vec![1, 3, 4, 6], "bucket-plan matrix shape");
+        }
+    }
+}
+
+#[test]
+fn bucketed_charging_regression_no_double_byte_ceiling() {
+    // satellite bugfix pin: with ragged buckets at 2 bits the sum of
+    // per-bucket byte ceilings (the correct charge) differs from both the
+    // whole-gradient ceiling (a re-derivation) and from ceil-of-sum applied
+    // twice; the ledger must equal the closed form exactly.
+    use repro::compress::bitpack;
+    use repro::control::{BitsPolicy, ControlConfig, GradientControlPlane};
+
+    let seg_lens = [33usize, 33, 31];
+    let n: usize = seg_lens.iter().sum();
+    let segments = contiguous_segments(&seg_lens);
+    let m = 4usize;
+    let mut grng = Rng::new(0xD1CE);
+    let grads: Vec<Vec<f32>> = (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            grng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+
+    let mut cfg = ControlConfig::new(3);
+    cfg.bits = BitsPolicy::Fixed(Some(2));
+    let mut plane = GradientControlPlane::new(cfg, 4, n, &segments).unwrap();
+    assert_eq!(plane.plan.len(), 3);
+
+    let net = NetConfig::flat(m, 10.0);
+    let mut clock = SimClock::default();
+    {
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut rng = Rng::new(1);
+        plane.aggregate(&refs, &mut ctx, &mut rng);
+    }
+    let closed: f64 = seg_lens
+        .iter()
+        .map(|&l| (8 * bitpack::wire_bytes_for(l, 2)) as f64)
+        .sum();
+    assert_eq!(closed, 208.0); // 9 + 9 + 8 bytes
+    let whole = (8 * bitpack::wire_bytes_for(n, 2)) as f64;
+    assert_eq!(whole, 200.0); // ceil(194/8) = 25 bytes — NOT what we charge
+    assert_eq!(clock.bits_per_worker, 32.0 + closed);
+    assert_ne!(clock.bits_per_worker, 32.0 + whole);
+}
+
 #[test]
 fn int_reducers_agree_exactly_on_quantizer_output() {
     // ring/tree/naive integer reducers on real quantizer levels: exact

@@ -269,6 +269,80 @@ fn qsgd_mn_ts_variance_no_worse_than_smin_bound_through_packed_plane() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// PR 4: bucketed control plane — per-bucket unbiasedness and EF boundedness
+// ---------------------------------------------------------------------------
+
+use repro::runtime::contiguous_segments;
+
+#[test]
+fn bucketed_variance_adaptive_unbiased_per_bucket() {
+    // unbiasedness survives the bucketed plane with VarianceAdaptive
+    // precision (EF off): every bucket is an independent QSGD-MN quantizer
+    // against the shared norm, and E[Q_s(x)] = x holds for ANY s — so the
+    // adaptive width choice (which varies per bucket and warms an EMA
+    // across trials) cannot bias the aggregate.
+    use repro::control::{BitsPolicy, ControlConfig, GradientControlPlane};
+
+    let (m, n) = (3usize, 96usize);
+    let seg_lens = [32usize, 32, 32];
+    let grads = fixed_grads(0xB0C4E7, m, n);
+    let want = mean_of(&grads);
+    let wmax = max_norm(&grads) as f64;
+    // worst-case estimator sd: the adaptive floor is 2 bits (s = 1)
+    let sd = wmax / (1.0 * (m as f64).sqrt());
+    let mut cfg = ControlConfig::new(3);
+    cfg.bits = BitsPolicy::Auto;
+    let mut plane = GradientControlPlane::new(cfg, 4, n, &contiguous_segments(&seg_lens)).unwrap();
+    assert_unbiased(
+        &mut plane,
+        &grads,
+        &want,
+        sd,
+        2500,
+        110_000,
+        Algo::Ring,
+        RingWidth::Auto,
+        "bucketed QSGD-MN auto",
+    );
+}
+
+#[test]
+fn bucketed_error_feedback_residual_stays_bounded_200_steps() {
+    // with EF on, the per-worker residual e <- x - Q(x) must stay bounded
+    // across 200 fixed-seed steps: the adaptive controller keeps the
+    // quantization variance under 10% of the (residual-inflated) gradient
+    // moment, so the EF recursion contracts instead of accumulating.
+    use repro::control::{BitsPolicy, ControlConfig, GradientControlPlane};
+
+    let (m, n) = (3usize, 192usize);
+    let seg_lens = [64usize, 64, 64];
+    let mut cfg = ControlConfig::new(3);
+    cfg.bits = BitsPolicy::Auto;
+    cfg.error_feedback = true;
+    let mut plane = GradientControlPlane::new(cfg, 8, n, &contiguous_segments(&seg_lens)).unwrap();
+
+    let mut max_grad_norm = 0.0f64;
+    let mut max_resid = 0.0f64;
+    for step in 0..200u64 {
+        let grads = fixed_grads(0xEF00 + step, m, n);
+        max_grad_norm = max_grad_norm
+            .max(grads.iter().map(|g| kernels::l2_norm(g) as f64).fold(0.0, f64::max));
+        let out = run_step(&mut plane, &grads, 0x5EED0 + step, Algo::Ring, RingWidth::Auto);
+        assert!(out.iter().all(|x| x.is_finite()), "step {step} non-finite");
+        max_resid = max_resid.max(plane.max_residual_norm());
+        // the live bound: the residual never exceeds a small multiple of
+        // the largest gradient seen — no drift, no blow-up
+        assert!(
+            plane.max_residual_norm() <= 2.0 * max_grad_norm,
+            "step {step}: residual {} exceeds 2x max grad norm {}",
+            plane.max_residual_norm(),
+            max_grad_norm
+        );
+    }
+    assert!(max_resid > 0.0, "EF must actually accumulate a residual");
+}
+
 #[test]
 fn grandk_variance_bound_through_packed_plane() {
     // GRandK without rescale is the K/n-shrunk estimator: its error against
