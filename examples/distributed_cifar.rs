@@ -11,10 +11,12 @@
 //! `--compare` runs the method against the AllReduce-SGD baseline and
 //! PowerSGD rank-2 and prints the head-to-head table.
 //!
-//! For qsgd-mn-* methods the example then re-runs the same training through
-//! the bucketed gradient control plane (`--buckets`, default 8, with
-//! variance-adaptive bit-widths and error feedback) and prints the
-//! monolithic-vs-bucketed overlap_frac / wire-bits comparison.
+//! For every all-reduce-compatible quantizer (qsgd-mn-*, qsgd-mn-ts-*,
+//! grandk-mn-*, grandk-mn-ts-*) the example then re-runs the same training
+//! through the bucketed gradient control plane (`--buckets`, default 8,
+//! with variance-adaptive precision, plus error feedback on the dense
+//! methods) and prints the monolithic-vs-bucketed overlap_frac / wire-bits
+//! comparison.
 
 use repro::cli::Args;
 use repro::compress::Method;
@@ -55,21 +57,31 @@ fn main() -> anyhow::Result<()> {
     println!("\n{}", summary_table(&summaries));
 
     // bucketed control plane head-to-head: same method, same seed/schedule,
-    // but DDP-style layer buckets + variance-adaptive bits + error feedback
-    // + backward/comm overlap.
-    if matches!(Method::parse(&method)?, Method::Qsgd { .. }) {
+    // but DDP-style layer buckets + variance-adaptive precision + backward/
+    // comm overlap (+ error feedback where the domain is dense — a GlobalK
+    // residual would live on coordinates the wire never carries).
+    let parsed = Method::parse(&method)?;
+    let bucketable = matches!(
+        parsed,
+        Method::Qsgd { .. } | Method::QsgdTs { .. } | Method::RandK { .. } | Method::RandKTs { .. }
+    );
+    if bucketable {
+        let dense = matches!(parsed, Method::Qsgd { .. } | Method::QsgdTs { .. });
         let mut cfg = ControlConfig::new(buckets);
-        cfg.bits = BitsPolicy::Auto;
-        cfg.error_feedback = true;
-        let mut bexp = Experiment::new("distributed_cifar_bucketed", &model, vec![
-            Method::parse(&method)?,
-        ]);
+        // auto precision where it can actually adapt; a maximal-span TS set
+        // pins the small scale, so fall back to the method's fixed widths
+        // (build_plane rejects a headroom-less auto loudly)
+        let auto = repro::control::auto_can_adapt(&parsed);
+        cfg.bits = if auto { BitsPolicy::Auto } else { BitsPolicy::Fixed(None) };
+        cfg.error_feedback = dense;
+        let mono_label = parsed.label();
+        let mut bexp =
+            Experiment::new("distributed_cifar_bucketed", &model, vec![parsed.clone()]);
         bexp.steps = steps;
         bexp.workers = workers;
         bexp.lr0 = lr;
         bexp.control = Some(cfg);
         let bresults = bexp.run(&arts)?;
-        let mono_label = Method::parse(&method)?.label();
         let mono = summaries
             .iter()
             .find(|s| s.label == mono_label)
@@ -86,7 +98,11 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.4}", mono.final_loss),
             ],
             vec![
-                format!("bucketed x{buckets} (auto+EF)"),
+                format!(
+                    "bucketed x{buckets} ({}{})",
+                    if auto { "auto" } else { "fixed" },
+                    if dense { "+EF" } else { "" }
+                ),
                 bucketed.label.clone(),
                 format!("{:.2}", bucketed.overlap_frac),
                 format!("{:.1}", bucketed.mean_bits_per_step / 1e3),

@@ -193,17 +193,26 @@ pub fn max_allreduce_scalar(vals: &[f32]) -> f32 {
 
 /// Elementwise min all-reduce over per-worker u8 vectors (scale sharing).
 pub fn min_allreduce_u8(vecs: &[Vec<u8>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    min_allreduce_u8_into(vecs, &mut out);
+    out
+}
+
+/// [`min_allreduce_u8`] into a caller-provided buffer — the bucketed
+/// control plane reduces one scale share per bucket per step, so it reuses
+/// a single scratch vector instead of allocating per call.
+pub fn min_allreduce_u8_into(vecs: &[Vec<u8>], out: &mut Vec<u8>) {
     let m = vecs.len();
     assert!(m > 0);
     let n = vecs[0].len();
-    let mut out = vecs[0].clone();
+    out.clear();
+    out.extend_from_slice(&vecs[0]);
     for v in &vecs[1..] {
         assert_eq!(v.len(), n, "ragged scale vectors");
         for (o, x) in out.iter_mut().zip(v) {
             *o = (*o).min(*x);
         }
     }
-    out
 }
 
 /// Per-step context handed to aggregators: charges the simulated wire and
@@ -319,11 +328,24 @@ impl<'a> StepCtx<'a> {
     /// Elementwise min all-reduce of scale-index vectors, `bits_per_elem` =
     /// ceil(log2 N) per the paper's scale-sharing overhead.
     pub fn allreduce_min_u8(&mut self, vecs: &[Vec<u8>], bits_per_elem: f64) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.allreduce_min_u8_into(vecs, bits_per_elem, &mut out);
+        out
+    }
+
+    /// [`StepCtx::allreduce_min_u8`] into a caller-provided buffer (the
+    /// bucketed control plane's per-bucket shares reuse one scratch).
+    pub fn allreduce_min_u8_into(
+        &mut self,
+        vecs: &[Vec<u8>],
+        bits_per_elem: f64,
+        out: &mut Vec<u8>,
+    ) {
         let elems = vecs.first().map(|v| v.len()).unwrap_or(0) as f64;
         let bits = self.effective_bits(elems, bits_per_elem);
         self.clock.comm_s += self.net.allreduce_s(bits / 8.0);
         self.clock.bits_per_worker += bits;
-        min_allreduce_u8(vecs)
+        min_allreduce_u8_into(vecs, out);
     }
 
     /// Charge an all-gather where each rank contributes `elems` coordinates

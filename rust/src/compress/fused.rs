@@ -447,15 +447,51 @@ pub fn multiscale_step_packed(
 ) -> collectives::PlaneTraffic {
     let m = grads.len();
     let n = grads[0].len();
+    ctx.time_encode(|| fill_uniforms_into(m, n, uniform, rng));
+    let uni: Vec<&[f32]> = uniform.iter().map(|u| u.as_slice()).collect();
+    multiscale_step_packed_with_uniforms(
+        grads, &uni, wnorm, table, shared_idx, payload_bits, scratch, ctx, chunks, out,
+    )
+}
+
+/// [`multiscale_step_packed`] with caller-provided per-worker uniform
+/// slices AND the caller's per-coordinate scale share.
+///
+/// This is the multi-scale arm of the bucketed control plane's seam
+/// ([`crate::control`]), mirroring [`qsgd_step_packed_with_uniforms`]: the
+/// plane draws ONE full-length uniform stream per worker (the monolithic
+/// `rng.derive([w])` draw) and hands each bucket its slice of the stream
+/// and its slice of the scale share. Because the scale share is an
+/// *elementwise* min all-reduce, a per-bucket share derived from the
+/// bucket's own proposals equals the slice of the global share whenever
+/// the proposals were made against the same norm — so a bucketed FixedBits
+/// multi-scale step with a global norm is bit-identical to the monolithic
+/// packed step for any bucket plan and schedule. The wire is charged per
+/// call — per bucket — byte-exactly through [`StepCtx::charge_packed`].
+#[allow(clippy::too_many_arguments)]
+pub fn multiscale_step_packed_with_uniforms(
+    grads: &[&[f32]],
+    uni: &[&[f32]],
+    wnorm: f32,
+    table: &ScaleTable,
+    shared_idx: &[u8],
+    payload_bits: f64,
+    scratch: &mut PackedScratch,
+    ctx: &mut StepCtx,
+    chunks: Option<usize>,
+    out: &mut [f32],
+) -> collectives::PlaneTraffic {
+    let m = grads.len();
+    let n = grads[0].len();
     let lmax = table.smin as usize + 1; // eq. (10): levels <= s_min + 1
     assert!(
         sum_fits::<i32>(lmax, m),
         "widening rule: {m} workers x lmax={lmax} overflows i32"
     );
+    debug_assert!(uni.len() == m && uni.iter().all(|u| u.len() >= n));
+    debug_assert!(shared_idx.len() >= n);
     let rbits = bitpack::packed_sum_bits(lmax, m);
     let sched = ctx.packed_schedule(lmax, m, n);
-    ctx.time_encode(|| fill_uniforms_into(m, n, uniform, rng));
-    let uni: &Vec<Vec<f32>> = uniform;
     let bias = lmax as i64;
     let bias_total = (m as i64) * bias;
     let mf = m as f32;

@@ -116,6 +116,40 @@ pub fn qsgd_decode_sum_int<T: LevelInt>(
     }
 }
 
+/// Validate a multi-scale bit set and return it sorted ascending: at
+/// least 2 scales, at most [`MAX_SCALES`], every width in 2..=16, all
+/// distinct. Shared by the monolithic TS aggregators and the bucketed
+/// control plane so the two paths can never drift on what a legal set is
+/// (their bit-identity is test-pinned). Distinctness is checked on the
+/// widths, which is equivalent to distinctness of the s-values
+/// ([`s_for_bits`] is strictly monotonic).
+pub fn sorted_scale_bits(bits: &[usize]) -> anyhow::Result<Vec<usize>> {
+    anyhow::ensure!(bits.len() >= 2, "multi-scale needs >= 2 scales");
+    anyhow::ensure!(
+        bits.len() <= MAX_SCALES,
+        "multi-scale supports at most {MAX_SCALES} scales"
+    );
+    let mut sorted = bits.to_vec();
+    sorted.sort_unstable();
+    anyhow::ensure!(
+        sorted.iter().all(|b| (2..=16).contains(b)),
+        "multi-scale bits must be in 2..=16"
+    );
+    anyhow::ensure!(
+        sorted.windows(2).all(|w| w[0] < w[1]),
+        "scales must be distinct"
+    );
+    Ok(sorted)
+}
+
+/// Scale-share overhead per coordinate for an `num_scales`-scale set:
+/// `ceil(log2 N)`, floored at 1 bit (the paper's r includes the share even
+/// for the two-scale set). Shared by the multi-scale aggregators and the
+/// bucketed control plane so every path charges the same overhead.
+pub fn index_bits_for(num_scales: usize) -> f64 {
+    (num_scales as f64).log2().ceil().max(1.0)
+}
+
 /// Cap on the number of scales in a multi-scale set. The paper uses 2–3;
 /// eight covers any plausible sweep while keeping the per-coordinate select
 /// a fixed-trip-count (fully unrollable) loop.

@@ -27,18 +27,8 @@ pub struct QsgdMultiScale {
 
 impl QsgdMultiScale {
     pub fn new(bits: &[usize]) -> anyhow::Result<QsgdMultiScale> {
-        anyhow::ensure!(bits.len() >= 2, "multi-scale needs >= 2 scales");
-        anyhow::ensure!(
-            bits.len() <= kernels::MAX_SCALES,
-            "multi-scale supports at most {} scales",
-            kernels::MAX_SCALES
-        );
-        let mut scales: Vec<usize> = bits.iter().map(|&b| kernels::s_for_bits(b)).collect();
-        scales.sort_unstable();
-        anyhow::ensure!(
-            scales.windows(2).all(|w| w[0] < w[1]),
-            "scales must be distinct"
-        );
+        let sorted = kernels::sorted_scale_bits(bits)?;
+        let scales: Vec<usize> = sorted.iter().map(|&b| kernels::s_for_bits(b)).collect();
         // levels are bounded by s_min + 1 (eq. 10), but the decode divides
         // by the *selected* scale; the sum bound that matters for widening
         // is M * (s_min + 1). Prove i32 safety at the largest scale anyway.
@@ -61,7 +51,7 @@ impl QsgdMultiScale {
     }
 
     fn index_bits(&self) -> f64 {
-        (self.scales.len() as f64).log2().ceil().max(1.0)
+        kernels::index_bits_for(self.scales.len())
     }
 }
 

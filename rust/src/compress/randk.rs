@@ -23,7 +23,12 @@ use super::kernels::{self, ScaleTable};
 use super::Aggregator;
 
 /// Shared-seed coordinate draw: every worker derives the same stream.
-fn shared_indices(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+/// Returned indices are **sorted ascending** (`sample_distinct` sorts) —
+/// the property the bucketed control plane relies on to route the drawn
+/// coordinates to contiguous per-bucket slices of the gathered K-vector.
+/// `pub(crate)`: [`crate::control`] must reproduce this exact draw for its
+/// monolithic bit-identity pin.
+pub(crate) fn shared_indices(rng: &Rng, n: usize, k: usize) -> Vec<usize> {
     let mut idx_rng = rng.derive(&[0x6B6579]); // "key"
     idx_rng.sample_distinct(n, k)
 }
@@ -35,7 +40,9 @@ fn gather(v: &[f32], idx: &[usize], out: &mut Vec<f32>) {
 
 /// Parallel per-worker gather of the shared K coordinates into reusable
 /// dense scratch (persistent pool — gathers are random-access bound).
-fn gather_all(grads: &[&[f32]], idx: &[usize], dense: &mut Vec<Vec<f32>>) {
+/// `pub(crate)`: the bucketed control plane ([`crate::control`]) gathers
+/// the same global K-set before routing coordinates to their buckets.
+pub(crate) fn gather_all(grads: &[&[f32]], idx: &[usize], dense: &mut Vec<Vec<f32>>) {
     let m = grads.len();
     dense.resize_with(m, Vec::new);
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m);
@@ -151,15 +158,8 @@ pub struct GlobalRandKMultiScale {
 impl GlobalRandKMultiScale {
     pub fn new(bits: &[usize], k: usize, n: usize) -> anyhow::Result<GlobalRandKMultiScale> {
         anyhow::ensure!(k >= 1 && k <= n, "K must be in 1..=n (K={k}, n={n})");
-        anyhow::ensure!(bits.len() >= 2, "multi-scale needs >= 2 scales");
-        anyhow::ensure!(
-            bits.len() <= kernels::MAX_SCALES,
-            "multi-scale supports at most {} scales",
-            kernels::MAX_SCALES
-        );
-        let mut scales: Vec<usize> = bits.iter().map(|&b| kernels::s_for_bits(b)).collect();
-        scales.sort_unstable();
-        anyhow::ensure!(scales.windows(2).all(|w| w[0] < w[1]), "scales must be distinct");
+        let sorted = kernels::sorted_scale_bits(bits)?;
+        let scales: Vec<usize> = sorted.iter().map(|&b| kernels::s_for_bits(b)).collect();
         fused::assert_widening_rule(scales[scales.len() - 1])?;
         let table = ScaleTable::new(&scales);
         Ok(GlobalRandKMultiScale {
@@ -177,7 +177,7 @@ impl GlobalRandKMultiScale {
     }
 
     fn index_bits(&self) -> f64 {
-        (self.scales.len() as f64).log2().ceil().max(1.0)
+        kernels::index_bits_for(self.scales.len())
     }
 }
 

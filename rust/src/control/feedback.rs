@@ -86,6 +86,50 @@ impl ErrorFeedback {
         threads::pool().scope_run(tasks);
     }
 
+    /// Multi-scale analogue of [`ErrorFeedback::absorb_bucket`]: the bucket
+    /// `[lo, hi)` was quantized at the shared per-coordinate scales
+    /// (`shared_idx` is the bucket-local share, `hi - lo` entries) against
+    /// `wnorm`; the residual uses the per-coordinate `m = 1` decode
+    /// `level * wnorm / s*` — recomputed from the same uniform stream the
+    /// data plane consumed, so it is exactly what the wire dropped.
+    #[allow(clippy::too_many_arguments)]
+    pub fn absorb_bucket_multiscale(
+        &mut self,
+        corrected: &[Vec<f32>],
+        uni: &[Vec<f32>],
+        lo: usize,
+        hi: usize,
+        wnorm: f32,
+        table: &kernels::ScaleTable,
+        shared_idx: &[u8],
+    ) {
+        let m = corrected.len();
+        debug_assert_eq!(self.mem.len(), m);
+        let len = hi - lo;
+        debug_assert_eq!(shared_idx.len(), len);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m);
+        for ((e, lvl), (x, u)) in
+            self.mem.iter_mut().zip(self.lvl.iter_mut()).zip(corrected.iter().zip(uni))
+        {
+            tasks.push(Box::new(move || {
+                lvl.resize(len, 0.0);
+                kernels::multiscale_encode_t(
+                    &x[lo..hi],
+                    wnorm,
+                    &u[lo..hi],
+                    shared_idx,
+                    table,
+                    &mut lvl[..],
+                );
+                for i in 0..len {
+                    let s_sel = table.select(shared_idx[i] as u32);
+                    e[lo + i] = x[lo + i] - lvl[i] * (wnorm / s_sel);
+                }
+            }));
+        }
+        threads::pool().scope_run(tasks);
+    }
+
     /// Largest per-worker residual L2 norm (test/diagnostic hook).
     pub fn max_residual_norm(&self) -> f64 {
         self.mem.iter().map(|e| crate::tensor::norm2(e)).fold(0.0, f64::max)
@@ -142,6 +186,50 @@ mod tests {
                 assert_eq!(corrected2[w][i], grads[w][i] + ef.mem[w][i]);
             }
         }
+    }
+
+    #[test]
+    fn multiscale_residual_is_exactly_what_the_quantizer_dropped() {
+        let n = 129;
+        let m = 2;
+        let scales = [7usize, 127];
+        let table = kernels::ScaleTable::new(&scales);
+        let mut rng = Rng::new(23);
+        let grads: Vec<Vec<f32>> = (0..m)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let wnorm = refs.iter().map(|v| kernels::l2_norm(v)).fold(0.0f32, f32::max);
+        let mut uni: Vec<Vec<f32>> = Vec::new();
+        crate::compress::fused::fill_uniforms_into(m, n, &mut uni, &Rng::new(9));
+        // the shared per-coordinate scales the data plane would have used
+        let mut proposals: Vec<Vec<u8>> = Vec::new();
+        for g in &grads {
+            let mut prop = vec![0u8; n];
+            kernels::multiscale_scale_index_t(g, wnorm, &table, &mut prop);
+            proposals.push(prop);
+        }
+        let shared = crate::collectives::min_allreduce_u8(&proposals);
+
+        let mut ef = ErrorFeedback::new();
+        let mut corrected = Vec::new();
+        ef.apply(&refs, &mut corrected);
+        ef.absorb_bucket_multiscale(&corrected, &uni, 0, n, wnorm, &table, &shared);
+
+        for w in 0..m {
+            let mut lvl = vec![0.0f32; n];
+            kernels::multiscale_encode_t(&grads[w], wnorm, &uni[w], &shared, &table, &mut lvl);
+            for i in 0..n {
+                let s_sel = table.select(shared[i] as u32);
+                let want = grads[w][i] - lvl[i] * (wnorm / s_sel);
+                assert_eq!(ef.mem[w][i], want, "worker {w} coord {i}");
+            }
+        }
+        assert!(ef.max_residual_norm() > 0.0);
     }
 
     #[test]

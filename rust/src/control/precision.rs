@@ -29,9 +29,28 @@ pub struct BucketStats {
     pub workers: usize,
 }
 
-/// A per-bucket bit-width policy. Stateful: `bits_for` is called once per
-/// bucket per step, in bucket order, so adaptive policies can maintain
-/// running statistics.
+/// Shift a sorted-ascending multi-scale bit set so its smallest scale
+/// sits at `small` bits, preserving the gaps between scales (which keeps
+/// the set distinct); the whole set is clamped into `2..=16`. This is how
+/// every controller maps its per-bucket width decision onto a TS method's
+/// scale *pair*: the small scale carries the wire budget (the payload is
+/// `bits_for_s(s_min)` wide, eq. 10), so the small scale is the knob the
+/// variance target turns, and the large scale rides along at the
+/// configured refinement gap. The clamp exists for the *adaptive*
+/// best-effort path only — explicitly requested widths (`fixed:N`,
+/// `perlayer:`) are validated against the span at plane construction and
+/// rejected rather than silently clamped.
+pub fn shift_scale_bits(base: &[usize], small: usize) -> Vec<usize> {
+    debug_assert!(!base.is_empty() && base.windows(2).all(|w| w[0] < w[1]));
+    let span = base[base.len() - 1] - base[0];
+    let lo = small.clamp(2, 16 - span);
+    base.iter().map(|&b| b - base[0] + lo).collect()
+}
+
+/// A per-bucket bit-width policy. Stateful: exactly one of `bits_for`
+/// (single-scale schemes) or `scale_bits_for` (multi-scale schemes) is
+/// called once per bucket per step, in bucket order, so adaptive policies
+/// can maintain running statistics.
 pub trait PrecisionController: Send {
     /// Short label for run tables ("fixed:4", "auto", "perlayer").
     fn label(&self) -> String;
@@ -44,6 +63,18 @@ pub trait PrecisionController: Send {
 
     /// Bit-width (in `2..=16`) for bucket `b` this step.
     fn bits_for(&mut self, b: usize, stats: &BucketStats) -> usize;
+
+    /// Scale set (bit-widths, sorted ascending) for bucket `b` of a
+    /// multi-scale (TS) method whose configured set is `base`. The default
+    /// keeps the method's set — the static choice `FixedBits` relies on for
+    /// the monolithic bit-identity pin. Adaptive policies shift the set
+    /// ([`shift_scale_bits`]) so the small scale meets their variance
+    /// target: Lemma 6 bounds the multi-scale variance by the single-scale
+    /// Lemma-5 bound at `s_min`, so targeting the small scale is sound.
+    fn scale_bits_for(&mut self, b: usize, stats: &BucketStats, base: &[usize]) -> Vec<usize> {
+        let _ = (b, stats);
+        base.to_vec()
+    }
 }
 
 /// Every bucket at one width — with a single bucket this reproduces the
@@ -105,6 +136,12 @@ impl PrecisionController for PerLayerBits {
 
     fn bits_for(&mut self, b: usize, _stats: &BucketStats) -> usize {
         self.per_bucket[b]
+    }
+
+    fn scale_bits_for(&mut self, b: usize, _stats: &BucketStats, base: &[usize]) -> Vec<usize> {
+        // per-layer spec names the bucket's small-scale width; the rest of
+        // the set keeps the configured refinement gaps
+        shift_scale_bits(base, self.per_bucket[b])
     }
 }
 
@@ -183,6 +220,15 @@ impl PrecisionController for VarianceAdaptive {
             }
         }
         self.max_bits
+    }
+
+    fn scale_bits_for(&mut self, b: usize, stats: &BucketStats, base: &[usize]) -> Vec<usize> {
+        // Lemma 6: the multi-scale variance is bounded by the single-scale
+        // Lemma-5 bound at s_min, so the small-scale width is picked against
+        // exactly the same per-bucket variance target as `bits_for` (one EMA
+        // update per bucket per step either way), and the set shifts with it.
+        let small = self.bits_for(b, stats);
+        shift_scale_bits(base, small)
     }
 }
 
@@ -295,6 +341,47 @@ mod tests {
         assert_eq!(ctrl.bits_for(1, &stats), 4);
         assert!(PerLayerBits::new(&[2, 8], &plan).is_err()); // wrong arity
         assert!(PerLayerBits::new(&[2, 8, 99], &plan).is_err()); // out of range
+    }
+
+    #[test]
+    fn shift_scale_bits_preserves_gaps_and_clamps() {
+        assert_eq!(shift_scale_bits(&[2, 6], 4), vec![4, 8]);
+        assert_eq!(shift_scale_bits(&[2, 6], 2), vec![2, 6]); // identity
+        assert_eq!(shift_scale_bits(&[2, 6, 10], 3), vec![3, 7, 11]);
+        // clamp: the large scale may not exceed 16 bits
+        assert_eq!(shift_scale_bits(&[2, 6], 14), vec![12, 16]);
+        // floor: the small scale may not drop below 2
+        assert_eq!(shift_scale_bits(&[4, 8], 1), vec![2, 6]);
+    }
+
+    #[test]
+    fn static_policies_keep_or_anchor_the_scale_set() {
+        let stats = BucketStats { len: 64, wnorm: 1.0, grad_ms: 1.0, workers: 2 };
+        // FixedBits keeps the resolved base set untouched (the plane
+        // re-anchors once at construction): the bit-identity pin
+        let mut fixed = FixedBits(2);
+        assert_eq!(fixed.scale_bits_for(0, &stats, &[2, 6]), vec![2, 6]);
+        // PerLayerBits anchors per bucket at its small-scale width
+        use crate::runtime::contiguous_segments as segs;
+        let plan = BucketPlan::new(200, &segs(&[100, 100]), 2);
+        let mut pl = PerLayerBits::new(&[4, 8], &plan).unwrap();
+        assert_eq!(pl.scale_bits_for(0, &stats, &[2, 6]), vec![4, 8]);
+        assert_eq!(pl.scale_bits_for(1, &stats, &[2, 6]), vec![8, 12]);
+    }
+
+    #[test]
+    fn adaptive_scale_set_shifts_with_the_variance_budget() {
+        // tight budget -> finer small scale than the generous budget's;
+        // the gap between the scales is preserved either way
+        let tight = VarianceAdaptive::new(0.1, 2, 12)
+            .unwrap()
+            .scale_bits_for(0, &BucketStats { len: 1024, wnorm: 10.0, grad_ms: 1.0, workers: 4 }, &[2, 6]);
+        let loose = VarianceAdaptive::new(0.1, 2, 12)
+            .unwrap()
+            .scale_bits_for(0, &BucketStats { len: 1024, wnorm: 10.0, grad_ms: 1e6, workers: 4 }, &[2, 6]);
+        assert!(tight[0] > loose[0], "tight {tight:?} vs loose {loose:?}");
+        assert_eq!(tight[1] - tight[0], 4);
+        assert_eq!(loose[1] - loose[0], 4);
     }
 
     #[test]

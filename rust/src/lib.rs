@@ -10,8 +10,9 @@
 //! Layer map:
 //! * [`runtime`] — PJRT bridge to the build-time-lowered HLO artifacts
 //! * [`compress`] — the paper's contribution + every baseline
-//! * [`control`] — bucketed gradient control plane (per-layer buckets,
-//!   adaptive precision, error feedback, backward/comm overlap)
+//! * [`control`] — bucketed gradient control plane, generic over the whole
+//!   all-reduce-compatible quantizer family (per-layer buckets, adaptive
+//!   precision, error feedback, backward/comm overlap)
 //! * [`collectives`] / [`netsim`] / [`cluster`] — the distributed substrate
 //! * [`optim`] / [`data`] / [`train`] — the training framework around it
 //! * [`perfmodel`] — the §6.6 analytical throughput model

@@ -9,6 +9,8 @@
 //! Examples:
 //!   repro train --model resnet_lite --method qsgd-mn-4 --steps 200 --workers 4
 //!   repro train --model resnet_lite --method qsgd-mn-4 --buckets 8 --bits auto --error-feedback
+//!   repro train --model resnet_lite --method qsgd-mn-ts-2-6 --buckets 8 --bits auto
+//!   repro train --model vgg_lite --method grandk-mn-ts-4-8 --buckets 8
 //!   repro figures --fig 3 --steps 150
 //!   repro perfmodel --floor-bits 8
 
@@ -68,9 +70,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Bucketed control-plane options: `--buckets N` enables the plane,
-/// `--bits auto|fixed[:N]|perlayer:a,b,...` picks the precision policy,
-/// `--error-feedback` turns on per-worker residual memory, `--no-overlap`
+/// Bucketed control-plane options: `--buckets N` enables the plane for any
+/// all-reduce-compatible quantizer (qsgd-mn-*, qsgd-mn-ts-*, grandk-mn-*,
+/// grandk-mn-ts-*; other methods are rejected loudly by
+/// `control::build_plane`), `--bits auto|fixed[:N]|perlayer:a,b,...` picks
+/// the precision policy (for -ts- methods the chosen width re-anchors the
+/// scale set's small scale, gaps preserved), `--error-feedback` turns on
+/// per-worker residual memory (dense methods only), `--no-overlap`
 /// disables hiding bucket comm behind backward compute.
 fn parse_control(args: &Args) -> Result<Option<ControlConfig>> {
     let buckets: usize = args.parse_or("buckets", 0)?;

@@ -761,6 +761,172 @@ fn bucketed_charging_regression_no_double_byte_ceiling() {
     assert_ne!(clock.bits_per_worker, 32.0 + whole);
 }
 
+// ---------------------------------------------------------------------------
+// PR 5: bucket-generic control plane — multi-scale and GRandK parity matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bucketed_multiscale_and_grandk_bit_identical_to_monolithic_matrix() {
+    // PR 5 acceptance matrix: the aggregator-generic control plane is
+    // bit-identical to the monolithic packed path — itself pinned to the
+    // f32 references above — for methods {qsgd-mn-ts, grandk-mn,
+    // grandk-mn-ts} x bucket plans {1, 3, ragged 4, segment-derived 6} x
+    // schedules {ring fixed, ring growing, tree} x workers {4, 16}, with
+    // byte-exact per-bucket ledgers: per bucket the wire carries
+    // 8*ceil(len_b*payload/8) level bits plus (multi-scale only)
+    // 8*ceil(len_b*index/8) scale-share bits, where len_b is the bucket
+    // length for dense methods and the ragged K_b split of the sorted
+    // global draw for GRandK — summed, plus the 32-bit global norm share.
+    use repro::compress::bitpack;
+    use repro::control::{build_plane, ControlConfig};
+    use repro::netsim::RingWidth;
+
+    let n = 1003usize;
+    let seg_lens = [334usize, 167, 167, 167, 100, 68];
+    let segments = contiguous_segments(&seg_lens);
+    let k = 256usize;
+
+    struct Case {
+        spec: String,
+        payload_bits: u32,
+        /// scale-share bits per coordinate (0 = single-scale: no share)
+        index_bits: u32,
+        grandk: bool,
+    }
+    let cases = [
+        Case { spec: "qsgd-mn-ts-2-6".into(), payload_bits: 2, index_bits: 1, grandk: false },
+        Case { spec: format!("grandk-mn-4-k{k}"), payload_bits: 4, index_bits: 0, grandk: true },
+        Case {
+            spec: format!("grandk-mn-ts-4-8-k{k}"),
+            payload_bits: 4,
+            index_bits: 1,
+            grandk: true,
+        },
+    ];
+
+    for case in &cases {
+        let method = Method::parse(&case.spec).unwrap();
+        for &m in &[4usize, 16] {
+            let seed = 0xB0CE5 + m as u64;
+            let mut grng = Rng::new(seed);
+            let grads: Vec<Vec<f32>> = (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    grng.fill_normal_f32(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+
+            // the per-bucket encoded lengths the ledger must be charged at:
+            // bucket lengths (dense), or the ragged split of the sorted
+            // global K-draw (re-derived here exactly as the plane draws it)
+            let drawn: Option<Vec<usize>> = case.grandk.then(|| {
+                Rng::new(seed ^ 0x51EED)
+                    .derive(&[0x6B6579])
+                    .sample_distinct(n, k)
+            });
+
+            for (algo, width) in [
+                (Algo::Ring, RingWidth::Fixed),
+                (Algo::Ring, RingWidth::Growing),
+                (Algo::Tree, RingWidth::Auto),
+            ] {
+                // monolithic packed path (the pinned reference plane)
+                let (want, want_bits) = {
+                    let mut agg = method.build(n, &segments).unwrap();
+                    let mut net = NetConfig::flat(m, 10.0);
+                    net.algo = algo;
+                    let mut clock = SimClock::default();
+                    let mut ctx = StepCtx::new(&net, &mut clock);
+                    ctx.ring_width = width;
+                    let mut rng = Rng::new(seed ^ 0x51EED);
+                    (agg.aggregate(&refs, &mut ctx, &mut rng), clock.bits_per_worker)
+                };
+
+                let mut seen = Vec::new();
+                for &target in &[1usize, 3, 6, 15] {
+                    let cfg = ControlConfig::new(target);
+                    let mut plane = build_plane(&method, &cfg, n, &segments).unwrap();
+                    let nb = plane.plan.len();
+                    seen.push(nb);
+                    let mut net = NetConfig::flat(m, 10.0);
+                    net.algo = algo;
+                    let mut clock = SimClock::default();
+                    let got = {
+                        let mut ctx = StepCtx::new(&net, &mut clock);
+                        ctx.ring_width = width;
+                        let mut rng = Rng::new(seed ^ 0x51EED);
+                        plane.aggregate(&refs, &mut ctx, &mut rng)
+                    };
+                    if got != want {
+                        let bad =
+                            got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                        panic!(
+                            "{} m={m} algo={algo:?} {width:?} buckets={nb}: first diff \
+                             at {bad}: {} vs {}",
+                            case.spec, got[bad], want[bad]
+                        );
+                    }
+
+                    // per-bucket encoded lengths: independent re-derivation
+                    let lens: Vec<usize> = match &drawn {
+                        None => plane.plan.buckets.iter().map(|b| b.len()).collect(),
+                        Some(idx) => plane
+                            .plan
+                            .buckets
+                            .iter()
+                            .map(|b| {
+                                idx.partition_point(|&i| i < b.hi)
+                                    - idx.partition_point(|&i| i < b.lo)
+                            })
+                            .collect(),
+                    };
+                    assert_eq!(
+                        plane.last_bucket_lens(),
+                        &lens[..],
+                        "{} m={m} buckets={nb}: routed lens",
+                        case.spec
+                    );
+                    if case.grandk {
+                        assert_eq!(lens.iter().sum::<usize>(), k, "ragged split covers K");
+                    }
+
+                    // byte-exact per-bucket ledger: levels + scale share,
+                    // each byte-ceiled per bucket, plus the 32-bit norm
+                    let payload: f64 = lens
+                        .iter()
+                        .map(|&l| {
+                            let mut bytes = bitpack::wire_bytes_for(l, case.payload_bits);
+                            if case.index_bits > 0 {
+                                bytes += bitpack::wire_bytes_for(l, case.index_bits);
+                            }
+                            (8 * bytes) as f64
+                        })
+                        .sum();
+                    assert_eq!(
+                        plane.last_payload_bits(),
+                        payload,
+                        "{} m={m} algo={algo:?} buckets={nb}: payload ledger",
+                        case.spec
+                    );
+                    assert_eq!(
+                        clock.bits_per_worker,
+                        32.0 + payload,
+                        "{} m={m} algo={algo:?} buckets={nb}: bits ledger",
+                        case.spec
+                    );
+                    // a single bucket reproduces the monolithic ledger too
+                    if nb == 1 {
+                        assert_eq!(clock.bits_per_worker, want_bits, "{}", case.spec);
+                    }
+                }
+                assert_eq!(seen, vec![1, 3, 4, 6], "bucket-plan matrix shape");
+            }
+        }
+    }
+}
+
 #[test]
 fn int_reducers_agree_exactly_on_quantizer_output() {
     // ring/tree/naive integer reducers on real quantizer levels: exact

@@ -343,6 +343,129 @@ fn bucketed_error_feedback_residual_stays_bounded_200_steps() {
     assert!(max_resid > 0.0, "EF must actually accumulate a residual");
 }
 
+// ---------------------------------------------------------------------------
+// PR 5: bucket-generic control plane — multi-scale and GRandK moments
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bucketed_multiscale_variance_adaptive_unbiased_per_bucket() {
+    // the multi-scale plane under VarianceAdaptive (per-bucket scale pairs
+    // shifted against the Lemma-5/6 target at s_min, EF off) must stay
+    // unbiased: every bucket is an independent multi-scale quantizer
+    // against the shared norm with its own elementwise-min scale share,
+    // and E[Q_s*(x)] = x holds for ANY shared scale choice — so neither
+    // the adaptive pair choice (which warms an EMA across trials) nor the
+    // per-bucket share derivation can bias the aggregate.
+    use repro::control::{BitsPolicy, ControlConfig, GradientControlPlane};
+
+    let (m, n) = (3usize, 96usize);
+    let seg_lens = [32usize, 32, 32];
+    let grads = fixed_grads(0xB0C4E8, m, n);
+    let want = mean_of(&grads);
+    let wmax = max_norm(&grads) as f64;
+    // worst-case estimator sd: the adaptive floor is 2 bits -> s_min = 1
+    let sd = wmax / (1.0 * (m as f64).sqrt());
+    let mut cfg = ControlConfig::new(3);
+    cfg.bits = BitsPolicy::Auto;
+    let mut plane = GradientControlPlane::new_multiscale(
+        cfg,
+        &[2, 6],
+        n,
+        &contiguous_segments(&seg_lens),
+    )
+    .unwrap();
+    assert_unbiased(
+        &mut plane,
+        &grads,
+        &want,
+        sd,
+        2500,
+        130_000,
+        Algo::Ring,
+        RingWidth::Auto,
+        "bucketed QSGD-MN-TS-(2,6) auto",
+    );
+}
+
+#[test]
+fn bucketed_grandk_variance_adaptive_unbiased_per_bucket() {
+    // the n/K-rescaled GRandK estimator stays unbiased through the bucketed
+    // plane: the ragged routing of the sorted global draw is deterministic
+    // given the draw, each bucket quantizes its gathered slice unbiasedly
+    // at whatever width the controller picks, and the scatter applies the
+    // same n/K rescale as the monolithic estimator.
+    use repro::control::{BitsPolicy, ControlConfig, GradientControlPlane};
+
+    let (m, n, k) = (2usize, 64usize, 16usize);
+    let seg_lens = [16usize, 16, 16, 16];
+    let grads = fixed_grads(0xBADC0DE, m, n);
+    let want = mean_of(&grads);
+    let gmax = grads
+        .iter()
+        .flat_map(|v| v.iter())
+        .fold(0.0f32, |a, b| a.max(b.abs())) as f64;
+    // dominant spread: the n/K-rescaled Bernoulli coordinate selection
+    let sd = gmax * n as f64 / k as f64;
+    let mut cfg = ControlConfig::new(4);
+    cfg.bits = BitsPolicy::Auto;
+    let mut plane =
+        GradientControlPlane::new_randk(cfg, 8, k, n, &contiguous_segments(&seg_lens)).unwrap();
+    plane.set_rescale(true);
+    assert_unbiased(
+        &mut plane,
+        &grads,
+        &want,
+        sd,
+        8000,
+        150_000,
+        Algo::Ring,
+        RingWidth::Auto,
+        "bucketed GRandK-MN-8 auto (rescaled)",
+    );
+}
+
+#[test]
+fn bucketed_multiscale_error_feedback_residual_stays_bounded_200_steps() {
+    // EF on the multi-scale path: the residual recompute runs the same
+    // multi-scale encode (per-coordinate shared scales) the data plane
+    // consumed, so e is exactly what the wire dropped; with the adaptive
+    // controller targeting the Lemma-5/6 budget at s_min, the recursion
+    // contracts instead of accumulating — bounded over 200 fixed-seed
+    // steps, same live bound as the single-scale PR 4 pin.
+    use repro::control::{BitsPolicy, ControlConfig, GradientControlPlane};
+
+    let (m, n) = (3usize, 192usize);
+    let seg_lens = [64usize, 64, 64];
+    let mut cfg = ControlConfig::new(3);
+    cfg.bits = BitsPolicy::Auto;
+    cfg.error_feedback = true;
+    let mut plane = GradientControlPlane::new_multiscale(
+        cfg,
+        &[2, 6],
+        n,
+        &contiguous_segments(&seg_lens),
+    )
+    .unwrap();
+
+    let mut max_grad_norm = 0.0f64;
+    let mut max_resid = 0.0f64;
+    for step in 0..200u64 {
+        let grads = fixed_grads(0xEF05 + step, m, n);
+        max_grad_norm = max_grad_norm
+            .max(grads.iter().map(|g| kernels::l2_norm(g) as f64).fold(0.0, f64::max));
+        let out = run_step(&mut plane, &grads, 0x5EED5 + step, Algo::Ring, RingWidth::Auto);
+        assert!(out.iter().all(|x| x.is_finite()), "step {step} non-finite");
+        max_resid = max_resid.max(plane.max_residual_norm());
+        assert!(
+            plane.max_residual_norm() <= 2.0 * max_grad_norm,
+            "step {step}: residual {} exceeds 2x max grad norm {}",
+            plane.max_residual_norm(),
+            max_grad_norm
+        );
+    }
+    assert!(max_resid > 0.0, "EF must actually accumulate a residual");
+}
+
 #[test]
 fn grandk_variance_bound_through_packed_plane() {
     // GRandK without rescale is the K/n-shrunk estimator: its error against
