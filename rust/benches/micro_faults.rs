@@ -1,0 +1,173 @@
+//! Straggler smoke bench (PR 6, CI-gated): strict-sync vs timeout-into-
+//! partial *simulated* step time under seeded per-worker jitter, 4-bit
+//! QSGD-MN through the bucketed plane at 8 workers over 10 Gbps flat
+//! Ethernet, §6.6 ResNet50 compute profile.
+//!
+//! Strict sync waits for the slowest worker every step; the timeout policy
+//! cuts stragglers off at `base · (1 + frac)` and renormalizes the partial
+//! all-reduce for the live cohort. Hard gates, all deterministic (the step
+//! times are analytic — α–β wire model plus the seeded jitter stream):
+//!   * jitter 0:      partial == strict bit-for-bit (the deadline never
+//!                    fires, both run the identity cohort)
+//!   * jitter >= 10%: partial < strict on total simulated time
+//!
+//! Set `REPRO_BENCH_JSON=<path>` to emit the numbers as JSON (consumed by
+//! `tools/bench_compress.py` -> `BENCH_faults.json`).
+
+use repro::collectives::StepCtx;
+use repro::compress::Aggregator;
+use repro::control::{CohortPolicy, ControlConfig, ElasticCohort, ElasticConfig, GradientControlPlane};
+use repro::netsim::{FaultPlan, NetConfig, SimClock};
+use repro::perfmodel::{self, ModelProfile};
+use repro::util::json::{arr, num, obj, s as js, Json};
+use repro::util::rng::Rng;
+
+struct PolicyRun {
+    /// Sum over steps of `compute_window + comm - hidden` (analytic).
+    total_sim_s: f64,
+    total_wait_s: f64,
+    min_live: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_policy(
+    policy: CohortPolicy,
+    jitter: f64,
+    grads: &[Vec<f32>],
+    n: usize,
+    buckets: usize,
+    bits: usize,
+    gbps: f64,
+    steps: usize,
+) -> PolicyRun {
+    let m = grads.len();
+    let segments = {
+        let lens: Vec<usize> =
+            (0..16).map(|i| (i + 1) * n / 16 - i * n / 16).collect();
+        repro::runtime::contiguous_segments(&lens)
+    };
+    let cfg = ElasticConfig {
+        policy,
+        quorum: 1,
+        faults: FaultPlan::jittered(0xFA57, jitter),
+    };
+    let mut cohort = ElasticCohort::new(cfg, m).expect("cohort");
+    let mut plane = GradientControlPlane::new(ControlConfig::new(buckets), bits, n, &segments)
+        .expect("control plane");
+    let base = ModelProfile::resnet50().compute_s;
+    let net = NetConfig::flat(m, gbps);
+    let root = Rng::new(0xBE7C);
+
+    let mut run = PolicyRun { total_sim_s: 0.0, total_wait_s: 0.0, min_live: m };
+    for step in 0..steps {
+        let plan = cohort.plan_step(step, base);
+        run.min_live = run.min_live.min(plan.live.len());
+        run.total_wait_s += plan.straggler_wait_s;
+        if plan.sync {
+            let step_net = cohort.faults().net_for_step(&net, step, plan.live.len());
+            let mut clock = SimClock::default();
+            {
+                let mut ctx = StepCtx::new(&step_net, &mut clock);
+                ctx.backward_s = Some(plan.compute_window_s * perfmodel::BACKWARD_FRAC);
+                let slices: Vec<&[f32]> =
+                    plan.live.iter().map(|&w| grads[w].as_slice()).collect();
+                let mut rng = root.derive(&[step as u64]);
+                let out = plane.aggregate_cohort(&slices, &plan.live, &mut ctx, &mut rng);
+                std::hint::black_box(&out);
+            }
+            run.total_sim_s += plan.compute_window_s + clock.comm_s - clock.hidden_comm_s;
+        } else {
+            // quorum failure: a local accumulation step, compute only
+            run.total_sim_s += plan.compute_window_s;
+        }
+        cohort.commit(&plan);
+    }
+    run
+}
+
+fn main() {
+    let n: usize = std::env::var("REPRO_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 18);
+    let (m, bits, buckets, gbps, steps) = (8usize, 4usize, 8usize, 10.0, 40usize);
+    let timeout_frac = 0.1;
+
+    let mut rng = Rng::new(0x57A6);
+    let grads: Vec<Vec<f32>> = (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    println!(
+        "=== strict vs timeout-partial simulated step time (n={n}, M={m}, {bits}-bit, \
+         {buckets} buckets, {gbps} Gbps, {steps} steps, timeout {timeout_frac}) ==="
+    );
+    println!(
+        "{:>8} {:>14} {:>14} {:>12} {:>12} {:>9} {:>8}",
+        "jitter", "strict (s)", "partial (s)", "s wait (s)", "p wait (s)", "min live", "gate"
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut all_pass = true;
+    for jitter in [0.0f64, 0.1, 0.5] {
+        let strict = run_policy(
+            CohortPolicy::StrictSync, jitter, &grads, n, buckets, bits, gbps, steps,
+        );
+        let partial = run_policy(
+            CohortPolicy::TimeoutPartial { timeout_frac },
+            jitter, &grads, n, buckets, bits, gbps, steps,
+        );
+        let pass = if jitter == 0.0 {
+            // the deadline never fires: identical cohorts, identical clocks
+            partial.total_sim_s == strict.total_sim_s && partial.min_live == m
+        } else {
+            partial.total_sim_s < strict.total_sim_s
+        };
+        all_pass &= pass;
+        println!(
+            "{:>8.2} {:>14.4} {:>14.4} {:>12.4} {:>12.4} {:>9} {:>8}",
+            jitter,
+            strict.total_sim_s,
+            partial.total_sim_s,
+            strict.total_wait_s,
+            partial.total_wait_s,
+            partial.min_live,
+            if pass { "ok" } else { "FAIL" }
+        );
+        entries.push(obj(vec![
+            ("jitter", num(jitter)),
+            ("strict_sim_s", num(strict.total_sim_s)),
+            ("partial_sim_s", num(partial.total_sim_s)),
+            ("strict_wait_s", num(strict.total_wait_s)),
+            ("partial_wait_s", num(partial.total_wait_s)),
+            ("partial_min_live", num(partial.min_live as f64)),
+            ("gate_pass", num(pass as u8 as f64)),
+        ]));
+    }
+
+    if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
+        let json = obj(vec![
+            ("schema", js("repro-micro-faults-v1")),
+            ("n", num(n as f64)),
+            ("workers", num(m as f64)),
+            ("bits", num(bits as f64)),
+            ("buckets", num(buckets as f64)),
+            ("net_gbps", num(gbps)),
+            ("steps", num(steps as f64)),
+            ("timeout_frac", num(timeout_frac)),
+            ("entries", arr(entries)),
+        ]);
+        std::fs::write(&path, json.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+
+    assert!(
+        all_pass,
+        "fault gate failed: partial must equal strict at zero jitter and beat it at >= 10%"
+    );
+    println!("\nfault gate: partial == strict at jitter 0, partial < strict at 10% and 50%");
+}

@@ -16,7 +16,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::collectives::StepCtx;
 use crate::compress::{Aggregator, Method};
-use crate::control::{self, ControlConfig};
+use crate::control::{self, CohortPolicy, ControlConfig, ElasticCohort, ElasticConfig};
 use crate::data::{CifarLike, MarkovCorpus};
 use crate::metrics::StepRecord;
 use crate::netsim::{NetConfig, SimClock};
@@ -45,6 +45,11 @@ pub struct ClusterConfig {
     /// bucketed gradient control plane (CLI `--buckets`/`--bits`/
     /// `--error-feedback`); `None` runs the monolithic aggregator
     pub control: Option<ControlConfig>,
+    /// elastic-cohort policy + fault schedule (CLI `--faults`/
+    /// `--cohort-policy`/`--quorum`); `None` runs the fixed synchronous
+    /// cohort of PRs 1-5. Requires the control plane (the monolithic
+    /// aggregators are not cohort-aware).
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl ClusterConfig {
@@ -62,6 +67,7 @@ impl ClusterConfig {
             wire_floor_bits: None,
             sim_compute_s: None,
             control: None,
+            elastic: None,
         }
     }
 }
@@ -87,6 +93,8 @@ pub struct Cluster {
     model_meta: ModelArtifacts,
     seq_len: usize,
     root_rng: Rng,
+    /// elastic membership/staleness state (None = fixed synchronous cohort)
+    elastic: Option<ElasticCohort>,
     /// scratch for eval batches
     eval_cache: Option<EvalBatch>,
 }
@@ -112,6 +120,30 @@ impl Cluster {
                 &model.segments,
             )?),
             None => cfg.method.build(model.param_count, &model.segments)?,
+        };
+        let elastic = match &cfg.elastic {
+            Some(ec) => {
+                if cfg.control.is_none() {
+                    bail!(
+                        "--cohort-policy/--faults need the bucketed control plane \
+                         (pass --buckets N; the monolithic aggregators are not \
+                         cohort-aware)"
+                    );
+                }
+                // error-feedback residual memory is positional: it is only
+                // sound while the cohort is full and stable
+                if cfg.control.as_ref().is_some_and(|cc| cc.error_feedback)
+                    && (ec.policy != CohortPolicy::StrictSync || !ec.faults.events.is_empty())
+                {
+                    bail!(
+                        "error feedback needs a stable full cohort: use \
+                         --cohort-policy strict and a fault plan without \
+                         join/leave events"
+                    );
+                }
+                Some(ElasticCohort::new(ec.clone(), cfg.workers)?)
+            }
+            None => None,
         };
         let opt = Sgd::new(model.param_count, cfg.momentum, cfg.weight_decay);
         let sched = LrSchedule::paper(cfg.lr0, cfg.total_steps);
@@ -143,6 +175,7 @@ impl Cluster {
             model_meta: model,
             seq_len,
             root_rng,
+            elastic,
             eval_cache: None,
         })
     }
@@ -203,17 +236,81 @@ impl Cluster {
         // ---- 2. aggregate
         let grads: Vec<&[f32]> = (0..m).map(|w| &out.grads[w * p..(w + 1) * p]).collect();
         let mut step_clock = SimClock::default();
-        let mut ctx = StepCtx::new(&self.net, &mut step_clock);
-        ctx.wire_floor_bits = self.cfg.wire_floor_bits;
-        // the backward window of this step — the compute the bucketed
-        // control plane's overlap scheduler may hide communication behind
-        ctx.backward_s = Some(sim_compute * crate::perfmodel::BACKWARD_FRAC);
         let mut step_rng = self.root_rng.derive(&[0x5354, step as u64]);
-        let agg_grad = self.agg.aggregate(&grads, &mut ctx, &mut step_rng);
+        let (agg_grad, live_workers, staleness, straggler_wait_s) = match self.elastic.as_mut()
+        {
+            None => {
+                let mut ctx = StepCtx::new(&self.net, &mut step_clock);
+                ctx.wire_floor_bits = self.cfg.wire_floor_bits;
+                // the backward window of this step — the compute the
+                // bucketed control plane's overlap scheduler may hide
+                // communication behind
+                ctx.backward_s = Some(sim_compute * crate::perfmodel::BACKWARD_FRAC);
+                (Some(self.agg.aggregate(&grads, &mut ctx, &mut step_rng)), m, 0, 0.0)
+            }
+            Some(cohort) => {
+                // the policy resolves membership events, times the cohort
+                // under the fault plan, and decides who synchronizes; the
+                // wire re-derives for the live cohort (ring/tree hops and
+                // the packed resident width follow net.workers)
+                let plan = cohort.plan_step(step, sim_compute);
+                let live_m = plan.live.len();
+                let step_net =
+                    cohort.faults().net_for_step(&self.net, step, live_m.max(1));
+                let mut ctx = StepCtx::new(&step_net, &mut step_clock);
+                ctx.wire_floor_bits = self.cfg.wire_floor_bits;
+                if !plan.rejoined.is_empty() {
+                    // one tree broadcast of the fp32 parameters serves
+                    // every rejoiner; time-only — the bits ledgers stay
+                    // gradient-payload accounting
+                    ctx.clock.comm_s += cohort.catch_up_s(&step_net, p);
+                }
+                let agg_grad = if plan.sync {
+                    // the overlap scheduler's cover is the SURVIVING
+                    // cohort's backward window — a dropped straggler's
+                    // compute is not schedulable cover (satellite-1 fix)
+                    ctx.backward_s =
+                        Some(plan.compute_window_s * crate::perfmodel::BACKWARD_FRAC);
+                    let full = live_m == m;
+                    match cohort.contributions(&plan, &grads) {
+                        Some(slices) => Some(self.agg.aggregate_cohort(
+                            &slices,
+                            &plan.live,
+                            &mut ctx,
+                            &mut step_rng,
+                        )),
+                        None if full => {
+                            // full identity cohort, nothing pending: the
+                            // pre-elastic call, bit for bit
+                            Some(self.agg.aggregate(&grads, &mut ctx, &mut step_rng))
+                        }
+                        None => {
+                            let slices: Vec<&[f32]> =
+                                plan.live.iter().map(|&w| grads[w]).collect();
+                            Some(self.agg.aggregate_cohort(
+                                &slices,
+                                &plan.live,
+                                &mut ctx,
+                                &mut step_rng,
+                            ))
+                        }
+                    }
+                } else {
+                    cohort.accumulate(&plan, &grads);
+                    None
+                };
+                let staleness = cohort.commit(&plan);
+                (agg_grad, live_m, staleness, plan.straggler_wait_s)
+            }
+        };
+        self.clock.straggler_wait_s += straggler_wait_s;
 
-        // ---- 3. update
+        // ---- 3. update (skipped on non-synchronizing elastic steps: those
+        // gradients are accumulating locally toward the next sync)
         let lr = self.sched.at(step);
-        self.opt.step(&mut self.params, &agg_grad, lr as f32);
+        if let Some(agg_grad) = &agg_grad {
+            self.opt.step(&mut self.params, agg_grad, lr as f32);
+        }
 
         self.clock.comm_s += step_clock.comm_s;
         self.clock.encode_s += step_clock.encode_s;
@@ -233,6 +330,9 @@ impl Cluster {
             t_comm_sim: step_clock.comm_s,
             bits_per_worker: step_clock.bits_per_worker,
             overlap_frac: step_clock.overlap_frac(),
+            live_workers,
+            straggler_wait_s,
+            staleness,
         })
     }
 
@@ -308,6 +408,7 @@ pub fn run_training(
         t_encode: clock.encode_s,
         t_decode: clock.decode_s,
         t_comm_sim: clock.comm_s,
+        t_straggler_wait: clock.straggler_wait_s,
     };
     Ok((records, summary))
 }

@@ -251,6 +251,16 @@ impl<'a> StepCtx<'a> {
     /// with the ring's wire width resolved through the policy + analytic
     /// selector. `lmax` is the per-contribution level bound of the scheme.
     pub fn packed_schedule(&self, lmax: usize, m: usize, elems: usize) -> PackedSchedule {
+        // the resident width bitlen(2*m*lmax) and the wire's hop counts
+        // must describe the same cohort: an elastic step builds its ctx
+        // over net_for_step(live), so a mismatch here means a caller mixed
+        // a partial cohort's levels with the full cohort's wire (or vice
+        // versa) — the sum would still fit only by accident
+        debug_assert_eq!(
+            m, self.net.workers,
+            "packed schedule for m={m} over a {}-worker wire",
+            self.net.workers
+        );
         let growing = match self.ring_width {
             RingWidth::Fixed => false,
             RingWidth::Growing => true,

@@ -651,6 +651,36 @@ mod tests {
     }
 
     #[test]
+    fn live_m_resident_width_rederives_and_stays_carry_safe() {
+        // the elastic layer re-derives bitlen(2*M_live*lmax) per step from
+        // the surviving cohort; the partial sum must stay carry-safe at
+        // the narrower width even with worst-case level magnitudes
+        let lmax = 7usize; // 4-bit levels
+        let n = 301usize;
+        for live in [2usize, 3, 4, 7] {
+            let bits = packed_sum_bits(lmax, live);
+            let levels: Vec<Vec<i32>> = (0..live)
+                .map(|r| vec![if r % 2 == 0 { lmax as i32 } else { -(lmax as i32) }; n])
+                .collect();
+            let want: i64 = levels.iter().map(|l| l[0] as i64).sum();
+            let mut bufs: Vec<Packed> =
+                levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
+            let mut t = PlaneTraffic::default();
+            allreduce_sum_packed_sched(&RingFixed, &mut bufs, &mut t);
+            let mut got = vec![0i64; n];
+            unpack_biased_i64_at(&bufs[0].words, bits, 0, (live as i64) * lmax as i64, &mut got);
+            assert!(got.iter().all(|&x| x == want), "live={live} bits={bits}");
+        }
+        // the narrower width is not cosmetic: a 4-survivor cohort of a
+        // 16-worker cluster ships strictly fewer wire bytes per segment
+        assert!(packed_sum_bits(lmax, 4) < packed_sum_bits(lmax, 16));
+        assert!(
+            bitpack::wire_bytes_for(1000, packed_sum_bits(lmax, 4))
+                < bitpack::wire_bytes_for(1000, packed_sum_bits(lmax, 16))
+        );
+    }
+
+    #[test]
     fn prop_every_schedule_equals_integer_naive() {
         // the tentpole contract: ring (fixed + growing), tree, and naive
         // packed reducers all produce the exact integer sum on every rank.

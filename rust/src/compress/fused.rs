@@ -211,6 +211,26 @@ pub fn fill_uniforms_into(m: usize, n: usize, uniform: &mut Vec<Vec<f32>>, rng: 
     threads::pool().scope_run(tasks);
 }
 
+/// [`fill_uniforms_into`] for a partial cohort: slot `i` draws the stream of
+/// ORIGINAL worker id `ids[i]` (`rng.derive([ids[i]])`), not of its position
+/// in the surviving slice. This is what keeps an elastic run replayable — a
+/// worker that drops and later rejoins resumes its own per-step stream, so a
+/// drop-then-rejoin schedule matches an independently constructed run over
+/// the same cohort (pinned in `tests/int_domain_equivalence.rs`). With
+/// `ids == [0, 1, .., m-1]` this IS `fill_uniforms_into(m, ..)` exactly.
+pub fn fill_uniforms_masked_into(ids: &[usize], n: usize, uniform: &mut Vec<Vec<f32>>, rng: &Rng) {
+    uniform.resize_with(ids.len(), Vec::new);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ids.len());
+    for (&w, uni) in ids.iter().zip(uniform.iter_mut()) {
+        let mut wrng = rng.derive(&[w as u64]);
+        tasks.push(Box::new(move || {
+            uni.resize(n, 0.0);
+            wrng.fill_uniform_f32(uni);
+        }));
+    }
+    threads::pool().scope_run(tasks);
+}
+
 /// Chunk boundaries for the encode/reduce pipeline: roughly even, but every
 /// interior boundary is snapped down to a multiple of the word-alignment
 /// period so no two chunks share a `u64` word of the resident buffers —
@@ -594,6 +614,29 @@ mod tests {
     use super::*;
     use crate::compress::kernels::l2_norm;
     use crate::util::quickcheck::{check, ensure};
+
+    #[test]
+    fn masked_uniform_fill_keys_streams_by_original_worker_id() {
+        let rng = Rng::new(0xE1A5);
+        let (m, n) = (5usize, 97usize);
+        let mut full = Vec::new();
+        fill_uniforms_into(m, n, &mut full, &rng);
+
+        // identity mask IS the plain fill
+        let ids: Vec<usize> = (0..m).collect();
+        let mut masked = Vec::new();
+        fill_uniforms_masked_into(&ids, n, &mut masked, &rng);
+        assert_eq!(masked, full);
+
+        // a partial cohort draws each survivor's ORIGINAL stream: slot i of
+        // the masked fill equals slot ids[i] of the full fill, bit for bit
+        let cohort = [0usize, 1, 3];
+        fill_uniforms_masked_into(&cohort, n, &mut masked, &rng);
+        assert_eq!(masked.len(), cohort.len());
+        for (i, &w) in cohort.iter().enumerate() {
+            assert_eq!(masked[i], full[w], "slot {i} must replay worker {w}'s stream");
+        }
+    }
 
     #[test]
     fn prop_wire_roundtrip_matches_reference_bit_exact() {

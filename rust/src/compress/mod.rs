@@ -56,6 +56,32 @@ pub trait Aggregator {
     /// step's shared randomness root; implementations derive worker/purpose
     /// sub-streams from it so runs are reproducible.
     fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32>;
+
+    /// Aggregate over a partial cohort: `grads[i]` belongs to ORIGINAL
+    /// worker `ids[i]` (strictly increasing subset of the full cohort).
+    /// Estimators keyed by worker position must draw `ids[i]`'s randomness
+    /// stream so an elastic run stays replayable; the live M is simply
+    /// `grads.len()` — unbiased mean estimators renormalize automatically.
+    ///
+    /// The default is only sound for the full identity cohort (the
+    /// strict-sync path) and asserts so; cohort-aware aggregators
+    /// (the bucketed control plane) override it.
+    fn aggregate_cohort(
+        &mut self,
+        grads: &[&[f32]],
+        ids: &[usize],
+        ctx: &mut StepCtx,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        assert_eq!(grads.len(), ids.len());
+        assert!(
+            ids.iter().enumerate().all(|(i, &w)| i == w),
+            "{} is not cohort-aware: partial cohort {ids:?} needs an \
+             aggregate_cohort override",
+            self.name()
+        );
+        self.aggregate(grads, ctx, rng)
+    }
 }
 
 /// Parsed method specification (CLI `--method`).

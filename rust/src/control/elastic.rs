@@ -1,0 +1,578 @@
+//! Elastic-cohort policy layer (PR 6): who participates in each step's
+//! collective, and what the coordination costs in simulated time.
+//!
+//! The data plane below this module is cohort-agnostic — the decode's
+//! `1/(s·m)` fold and the packed resident width `bitlen(2·M_live·lmax)`
+//! re-derive from however many gradient slices it is handed, so the
+//! unbiased mean estimator renormalizes for the live M automatically
+//! (pinned in `tests/paper_properties.rs`). What this module adds is the
+//! *decision*: a [`CohortPolicy`] turns the per-worker step times of a
+//! [`FaultPlan`] into a [`StepPlan`] — who is live, whether the step
+//! synchronizes, how long the window is, and how much of it is straggler
+//! wait — plus the local-accumulation state that carries non-synchronized
+//! gradients to the next sync.
+//!
+//! Modeling choices (documented in DESIGN.md "Elastic cohort & fault
+//! model"):
+//! * A non-synchronizing step charges the profile compute time and zero
+//!   wait — nobody coordinates, so nobody waits; per-worker jitter drift
+//!   between syncs surfaces as straggler wait at the next sync.
+//! * Periodic-sync is modeled as local gradient accumulation with a
+//!   quantized all-reduce of the averaged accumulator every `period`
+//!   steps (parameters stay replicated; the vmapped step function shares
+//!   one parameter vector, so true per-worker parameter drift is out of
+//!   scope until parameters shard).
+//! * A rejoining worker pays a tree broadcast of the fp32 parameter
+//!   vector ([`ElasticCohort::catch_up_s`]) and restarts with zero
+//!   staleness and an empty accumulator.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::netsim::{EventKind, FaultPlan, NetConfig};
+
+/// When a step's collective runs and over whom.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CohortPolicy {
+    /// Every member joins every step's collective; the window is the
+    /// slowest member's compute time. Under [`FaultPlan::none`] this is
+    /// bit-identical to the pre-elastic plane (the parity matrix's pin).
+    StrictSync,
+    /// Members that finish within `base · (1 + timeout_frac)` synchronize;
+    /// the rest are dropped from the step (not from the cluster) and the
+    /// partial all-reduce renormalizes for the survivors. Dropped workers'
+    /// gradients fold into their local accumulators for the next sync.
+    TimeoutPartial { timeout_frac: f64 },
+    /// Local accumulation with a synchronizing all-reduce every `period`
+    /// steps — the bounded-staleness degradation mode (staleness is at
+    /// most `period - 1`, pinned in `tests/training_convergence.rs`).
+    PeriodicSync { period: usize },
+}
+
+impl CohortPolicy {
+    /// Parse a CLI policy spec: `strict` | `partial[:FRAC]` |
+    /// `periodic[:PERIOD]` (defaults: FRAC 0.25, PERIOD 4).
+    pub fn parse(spec: &str) -> Result<CohortPolicy> {
+        let (head, arg) = match spec.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (spec, None),
+        };
+        Ok(match head {
+            "strict" => {
+                ensure!(arg.is_none(), "'strict' takes no argument");
+                CohortPolicy::StrictSync
+            }
+            "partial" => {
+                let timeout_frac = match arg {
+                    Some(a) => a
+                        .parse()
+                        .with_context(|| format!("bad timeout fraction '{a}'"))?,
+                    None => 0.25,
+                };
+                ensure!(timeout_frac >= 0.0, "timeout fraction must be >= 0");
+                CohortPolicy::TimeoutPartial { timeout_frac }
+            }
+            "periodic" => {
+                let period = match arg {
+                    Some(a) => a.parse().with_context(|| format!("bad period '{a}'"))?,
+                    None => 4,
+                };
+                ensure!(period >= 1, "sync period must be >= 1");
+                CohortPolicy::PeriodicSync { period }
+            }
+            other => bail!("unknown cohort policy '{other}' (strict|partial[:F]|periodic[:P])"),
+        })
+    }
+
+    /// Short label for run names and reports.
+    pub fn label(&self) -> String {
+        match self {
+            CohortPolicy::StrictSync => "strict".into(),
+            CohortPolicy::TimeoutPartial { timeout_frac } => format!("partial:{timeout_frac}"),
+            CohortPolicy::PeriodicSync { period } => format!("periodic:{period}"),
+        }
+    }
+}
+
+/// The elastic layer's configuration: policy, quorum, and fault schedule.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    pub policy: CohortPolicy,
+    /// Minimum cohort size for a synchronizing step; below it the step
+    /// degrades to local accumulation (sync deferred, staleness grows).
+    pub quorum: usize,
+    pub faults: FaultPlan,
+}
+
+impl ElasticConfig {
+    /// Strict sync under the identity fault plan — the configuration whose
+    /// training trace is bit-identical to a non-elastic run.
+    pub fn strict() -> ElasticConfig {
+        ElasticConfig { policy: CohortPolicy::StrictSync, quorum: 1, faults: FaultPlan::none() }
+    }
+}
+
+/// One step's coordination decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepPlan {
+    /// Original worker ids participating in this step's collective (the
+    /// surviving cohort), strictly increasing. On a non-sync step this is
+    /// the full membership (everyone computes locally).
+    pub live: Vec<usize>,
+    /// Whether the collective runs this step.
+    pub sync: bool,
+    /// Simulated compute window of the step: how long the cluster's step
+    /// takes before communication starts. At a sync this spans the
+    /// slowest *participating* worker; a dropped straggler's overrun is
+    /// not part of it.
+    pub compute_window_s: f64,
+    /// The coordination share of the window: `compute_window_s - base_s`.
+    /// Attributed to [`SimClock::straggler_wait_s`], never to compute
+    /// (the satellite-1 accounting fix).
+    ///
+    /// [`SimClock::straggler_wait_s`]: crate::netsim::SimClock
+    pub straggler_wait_s: f64,
+    /// Workers that rejoined at the start of this step (each owes a
+    /// parameter catch-up broadcast).
+    pub rejoined: Vec<usize>,
+}
+
+/// Membership, staleness, and local-accumulation state across steps.
+pub struct ElasticCohort {
+    cfg: ElasticConfig,
+    m: usize,
+    members: Vec<bool>,
+    /// Steps since each worker last contributed to a synchronized update.
+    staleness: Vec<usize>,
+    /// Locally accumulated gradient sums of steps that did not sync.
+    accum: Vec<Vec<f32>>,
+    /// How many gradients each accumulator holds.
+    count: Vec<usize>,
+    /// Scratch for the averaged contributions at a sync step.
+    contrib: Vec<Vec<f32>>,
+}
+
+impl ElasticCohort {
+    pub fn new(cfg: ElasticConfig, m: usize) -> Result<ElasticCohort> {
+        ensure!(m >= 1, "elastic cohort needs at least one worker");
+        ensure!(
+            (1..=m).contains(&cfg.quorum),
+            "quorum {} outside 1..={m}",
+            cfg.quorum
+        );
+        if let CohortPolicy::TimeoutPartial { timeout_frac } = cfg.policy {
+            ensure!(timeout_frac >= 0.0, "timeout fraction must be >= 0");
+        }
+        if let CohortPolicy::PeriodicSync { period } = cfg.policy {
+            ensure!(period >= 1, "sync period must be >= 1");
+        }
+        for e in &cfg.faults.events {
+            ensure!(e.worker < m, "fault event for worker {} of {m}", e.worker);
+        }
+        Ok(ElasticCohort {
+            cfg,
+            m,
+            members: vec![true; m],
+            staleness: vec![0; m],
+            accum: vec![Vec::new(); m],
+            count: vec![0; m],
+            contrib: vec![Vec::new(); m],
+        })
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> CohortPolicy {
+        self.cfg.policy
+    }
+
+    /// The fault schedule this cohort runs under.
+    pub fn faults(&self) -> &FaultPlan {
+        &self.cfg.faults
+    }
+
+    /// Current members (original worker ids).
+    pub fn members(&self) -> Vec<usize> {
+        (0..self.m).filter(|&w| self.members[w]).collect()
+    }
+
+    /// Decide step `step`: apply membership events, time the cohort under
+    /// the fault plan, and resolve the policy into a [`StepPlan`].
+    /// `base_s` is the profile (jitter-free) compute time of one step.
+    pub fn plan_step(&mut self, step: usize, base_s: f64) -> StepPlan {
+        let mut rejoined = Vec::new();
+        let events: Vec<_> = self.cfg.faults.events_at(step).copied().collect();
+        for e in events {
+            match e.kind {
+                EventKind::Leave => self.members[e.worker] = false,
+                EventKind::Join => {
+                    if !self.members[e.worker] {
+                        self.members[e.worker] = true;
+                        self.staleness[e.worker] = 0;
+                        self.accum[e.worker].clear();
+                        self.count[e.worker] = 0;
+                        rejoined.push(e.worker);
+                    }
+                }
+            }
+        }
+        let members = self.members();
+        let time_of =
+            |w: usize| self.cfg.faults.worker_compute_s(base_s, step, w);
+        let window_of = |ids: &[usize]| {
+            ids.iter().map(|&w| time_of(w)).fold(base_s, f64::max)
+        };
+
+        // a step that does not synchronize charges the profile compute and
+        // zero wait — nobody coordinates, so nobody waits
+        let local = |members: Vec<usize>, rejoined: Vec<usize>| StepPlan {
+            live: members,
+            sync: false,
+            compute_window_s: base_s,
+            straggler_wait_s: 0.0,
+            rejoined,
+        };
+
+        let (live, sync) = match self.cfg.policy {
+            CohortPolicy::StrictSync => (members, true),
+            CohortPolicy::TimeoutPartial { timeout_frac } => {
+                let deadline = base_s * (1.0 + timeout_frac);
+                let survivors: Vec<usize> =
+                    members.iter().copied().filter(|&w| time_of(w) <= deadline).collect();
+                if survivors.len() < members.len() {
+                    // someone missed the deadline: the cohort waited the
+                    // clock out to know, so the window IS the deadline
+                    if survivors.len() >= self.cfg.quorum {
+                        return StepPlan {
+                            live: survivors,
+                            sync: true,
+                            compute_window_s: deadline,
+                            straggler_wait_s: deadline - base_s,
+                            rejoined,
+                        };
+                    }
+                    return local(members, rejoined);
+                }
+                (survivors, true)
+            }
+            CohortPolicy::PeriodicSync { period } => {
+                if (step + 1) % period != 0 {
+                    return local(members, rejoined);
+                }
+                (members, true)
+            }
+        };
+        if live.len() < self.cfg.quorum {
+            return local(self.members(), rejoined);
+        }
+        let window = window_of(&live);
+        StepPlan {
+            live,
+            sync,
+            compute_window_s: window,
+            straggler_wait_s: window - base_s,
+            rejoined,
+        }
+    }
+
+    /// Fold a non-synchronized step into the live workers' accumulators.
+    /// `grads[w]` is ORIGINAL worker `w`'s gradient (full positional set).
+    pub fn accumulate(&mut self, plan: &StepPlan, grads: &[&[f32]]) {
+        debug_assert!(!plan.sync, "sync steps contribute, they don't accumulate");
+        for &w in &plan.live {
+            let acc = &mut self.accum[w];
+            if acc.is_empty() {
+                acc.extend_from_slice(grads[w]);
+            } else {
+                for (a, g) in acc.iter_mut().zip(grads[w]) {
+                    *a += g;
+                }
+            }
+            self.count[w] += 1;
+        }
+    }
+
+    /// The surviving cohort's contributions at a sync step: worker `w`
+    /// ships `(accum[w] + grads[w]) / (count[w] + 1)` — the mean of its
+    /// local steps since the last sync. Returns `None` when no live
+    /// worker holds pending accumulation, so the caller passes the raw
+    /// gradient slices through untouched (the strict-sync f32-parity fast
+    /// path: no scaling by 1.0 is ever applied).
+    pub fn contributions(
+        &mut self,
+        plan: &StepPlan,
+        grads: &[&[f32]],
+    ) -> Option<Vec<&[f32]>> {
+        debug_assert!(plan.sync);
+        if plan.live.iter().all(|&w| self.count[w] == 0) {
+            return None;
+        }
+        for (slot, &w) in plan.live.iter().enumerate() {
+            let dst = &mut self.contrib[slot];
+            dst.clear();
+            dst.extend_from_slice(grads[w]);
+            if self.count[w] > 0 {
+                let inv = 1.0f32 / (self.count[w] as f32 + 1.0);
+                let acc = &self.accum[w];
+                for (d, a) in dst.iter_mut().zip(acc) {
+                    *d = (*d + a) * inv;
+                }
+            }
+        }
+        Some(self.contrib[..plan.live.len()].iter().map(|v| v.as_slice()).collect())
+    }
+
+    /// Close the step's staleness and accumulator bookkeeping; returns the
+    /// staleness to record: the maximum staleness *entering* a sync among
+    /// its participants (how stale the oldest folded-in gradient was), or
+    /// the maximum member staleness after a local step.
+    pub fn commit(&mut self, plan: &StepPlan) -> usize {
+        if plan.sync {
+            let entering =
+                plan.live.iter().map(|&w| self.staleness[w]).max().unwrap_or(0);
+            for &w in &plan.live {
+                self.staleness[w] = 0;
+                self.accum[w].clear();
+                self.count[w] = 0;
+            }
+            // members dropped from this sync keep aging
+            for w in 0..self.m {
+                if self.members[w] && !plan.live.contains(&w) {
+                    self.staleness[w] += 1;
+                }
+            }
+            entering
+        } else {
+            for &w in &plan.live {
+                self.staleness[w] += 1;
+            }
+            plan.live.iter().map(|&w| self.staleness[w]).max().unwrap_or(0)
+        }
+    }
+
+    /// Simulated cost of a rejoining worker's parameter catch-up: a tree
+    /// broadcast of the fp32 parameter vector over the current wire,
+    /// `ceil(log2 m)` hops of `4n` bytes. Charged to comm time only — the
+    /// bits ledgers stay gradient-payload accounting (DESIGN.md).
+    pub fn catch_up_s(&self, net: &NetConfig, n: usize) -> f64 {
+        if self.m <= 1 {
+            return 0.0;
+        }
+        let hops = usize::BITS - (self.m - 1).leading_zeros();
+        hops as f64 * net.hop_s(4.0 * n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strict_cohort(m: usize) -> ElasticCohort {
+        ElasticCohort::new(ElasticConfig::strict(), m).unwrap()
+    }
+
+    #[test]
+    fn parse_covers_policies_and_rejects_junk() {
+        assert_eq!(CohortPolicy::parse("strict").unwrap(), CohortPolicy::StrictSync);
+        assert_eq!(
+            CohortPolicy::parse("partial:0.5").unwrap(),
+            CohortPolicy::TimeoutPartial { timeout_frac: 0.5 }
+        );
+        assert_eq!(
+            CohortPolicy::parse("partial").unwrap(),
+            CohortPolicy::TimeoutPartial { timeout_frac: 0.25 }
+        );
+        assert_eq!(
+            CohortPolicy::parse("periodic:8").unwrap(),
+            CohortPolicy::PeriodicSync { period: 8 }
+        );
+        assert_eq!(
+            CohortPolicy::parse("periodic").unwrap(),
+            CohortPolicy::PeriodicSync { period: 4 }
+        );
+        for bad in ["strict:1", "partial:-1", "periodic:0", "async", "partial:x"] {
+            assert!(CohortPolicy::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn strict_under_no_faults_is_the_identity_schedule() {
+        let mut c = strict_cohort(4);
+        for step in 0..5 {
+            let plan = c.plan_step(step, 0.2);
+            assert_eq!(plan.live, vec![0, 1, 2, 3]);
+            assert!(plan.sync);
+            assert_eq!(plan.compute_window_s, 0.2);
+            assert_eq!(plan.straggler_wait_s, 0.0);
+            assert!(plan.rejoined.is_empty());
+            assert_eq!(c.commit(&plan), 0);
+        }
+    }
+
+    #[test]
+    fn strict_waits_for_the_slowest_member() {
+        let cfg = ElasticConfig {
+            policy: CohortPolicy::StrictSync,
+            quorum: 1,
+            faults: FaultPlan::jittered(7, 0.5),
+        };
+        let mut c = ElasticCohort::new(cfg.clone(), 4).unwrap();
+        let plan = c.plan_step(0, 1.0);
+        let slowest = (0..4)
+            .map(|w| cfg.faults.worker_compute_s(1.0, 0, w))
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(plan.compute_window_s, slowest);
+        assert_eq!(plan.straggler_wait_s, slowest - 1.0);
+        assert!(plan.straggler_wait_s > 0.0);
+    }
+
+    #[test]
+    fn timeout_drops_stragglers_and_caps_the_window_at_the_deadline() {
+        // jitter 1.0 makes overruns likely; scan steps until one drops
+        let cfg = ElasticConfig {
+            policy: CohortPolicy::TimeoutPartial { timeout_frac: 0.2 },
+            quorum: 1,
+            faults: FaultPlan::jittered(3, 1.0),
+        };
+        let mut c = ElasticCohort::new(cfg.clone(), 8).unwrap();
+        let mut dropped_some = false;
+        for step in 0..50 {
+            let plan = c.plan_step(step, 1.0);
+            assert!(plan.compute_window_s <= 1.2 + 1e-12);
+            if plan.live.len() < 8 {
+                dropped_some = true;
+                assert!(plan.sync);
+                assert_eq!(plan.compute_window_s, 1.2);
+                for &w in &plan.live {
+                    assert!(cfg.faults.worker_compute_s(1.0, step, w) <= 1.2);
+                }
+            }
+            c.commit(&plan);
+        }
+        assert!(dropped_some, "jitter 1.0 over 50x8 draws must drop someone");
+    }
+
+    #[test]
+    fn quorum_failure_degrades_to_a_local_step() {
+        // timeout 0 with heavy jitter: nearly everyone misses; quorum 7 of
+        // 8 is all but unreachable, so steps degrade to local accumulation
+        let cfg = ElasticConfig {
+            policy: CohortPolicy::TimeoutPartial { timeout_frac: 0.0 },
+            quorum: 7,
+            faults: FaultPlan::jittered(11, 2.0),
+        };
+        let mut c = ElasticCohort::new(cfg, 8).unwrap();
+        let mut degraded = false;
+        for step in 0..20 {
+            let plan = c.plan_step(step, 1.0);
+            if !plan.sync {
+                degraded = true;
+                assert_eq!(plan.live, (0..8).collect::<Vec<_>>());
+                assert_eq!(plan.compute_window_s, 1.0);
+                assert_eq!(plan.straggler_wait_s, 0.0);
+            }
+            c.commit(&plan);
+        }
+        assert!(degraded, "quorum 7/8 at timeout 0 must degrade some step");
+    }
+
+    #[test]
+    fn periodic_syncs_on_schedule_with_bounded_staleness() {
+        let cfg = ElasticConfig {
+            policy: CohortPolicy::PeriodicSync { period: 3 },
+            quorum: 1,
+            faults: FaultPlan::none(),
+        };
+        let mut c = ElasticCohort::new(cfg, 2).unwrap();
+        for step in 0..9 {
+            let plan = c.plan_step(step, 0.5);
+            assert_eq!(plan.sync, (step + 1) % 3 == 0);
+            let staleness = c.commit(&plan);
+            assert!(staleness <= 2, "staleness {staleness} exceeds period-1 at {step}");
+            if plan.sync {
+                assert_eq!(staleness, 2, "sync folds in gradients 2 steps old");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulated_contributions_average_the_local_steps() {
+        let cfg = ElasticConfig {
+            policy: CohortPolicy::PeriodicSync { period: 2 },
+            quorum: 1,
+            faults: FaultPlan::none(),
+        };
+        let mut c = ElasticCohort::new(cfg, 2).unwrap();
+        let g0: Vec<Vec<f32>> = vec![vec![1.0, 3.0], vec![2.0, 4.0]];
+        let g1: Vec<Vec<f32>> = vec![vec![3.0, 5.0], vec![6.0, 0.0]];
+        let r0: Vec<&[f32]> = g0.iter().map(|v| v.as_slice()).collect();
+        let r1: Vec<&[f32]> = g1.iter().map(|v| v.as_slice()).collect();
+
+        let p0 = c.plan_step(0, 0.1);
+        assert!(!p0.sync);
+        c.accumulate(&p0, &r0);
+        c.commit(&p0);
+
+        let p1 = c.plan_step(1, 0.1);
+        assert!(p1.sync);
+        let contrib = c.contributions(&p1, &r1).expect("pending accumulation");
+        assert_eq!(contrib[0], &[2.0, 4.0][..]); // (1+3)/2, (3+5)/2
+        assert_eq!(contrib[1], &[4.0, 2.0][..]); // (2+6)/2, (4+0)/2
+        c.commit(&p1);
+
+        // after the sync the accumulators are drained: the next sync with
+        // no local steps pending takes the parity fast path
+        let p2 = c.plan_step(2, 0.1);
+        assert!(!p2.sync);
+        let p3_probe = StepPlan { sync: true, ..p2.clone() };
+        assert!(c.contributions(&p3_probe, &r1).is_none());
+    }
+
+    #[test]
+    fn leave_then_rejoin_resets_staleness_and_owes_catch_up() {
+        let cfg = ElasticConfig {
+            policy: CohortPolicy::StrictSync,
+            quorum: 1,
+            faults: FaultPlan::parse("leave=1@2,join=1@4").unwrap(),
+        };
+        let mut c = ElasticCohort::new(cfg, 4).unwrap();
+        for step in 0..2 {
+            let p = c.plan_step(step, 0.1);
+            assert_eq!(p.live, vec![0, 1, 2, 3]);
+            c.commit(&p);
+        }
+        let p2 = c.plan_step(2, 0.1);
+        assert_eq!(p2.live, vec![0, 2, 3], "worker 1 left at step 2");
+        assert!(p2.rejoined.is_empty());
+        c.commit(&p2);
+        let p3 = c.plan_step(3, 0.1);
+        c.commit(&p3);
+        let p4 = c.plan_step(4, 0.1);
+        assert_eq!(p4.live, vec![0, 1, 2, 3], "worker 1 rejoined at step 4");
+        assert_eq!(p4.rejoined, vec![1]);
+        assert_eq!(c.commit(&p4), 0, "a rejoined worker restarts fresh");
+
+        let net = NetConfig::flat(4, 10.0);
+        let catch_up = c.catch_up_s(&net, 1000);
+        assert!(catch_up > 0.0);
+        assert_eq!(catch_up, 2.0 * net.hop_s(4000.0), "ceil(log2 4) = 2 hops");
+    }
+
+    #[test]
+    fn construction_rejects_bad_quorum_and_out_of_range_events() {
+        assert!(ElasticCohort::new(
+            ElasticConfig { quorum: 0, ..ElasticConfig::strict() },
+            4
+        )
+        .is_err());
+        assert!(ElasticCohort::new(
+            ElasticConfig { quorum: 5, ..ElasticConfig::strict() },
+            4
+        )
+        .is_err());
+        let cfg = ElasticConfig {
+            policy: CohortPolicy::StrictSync,
+            quorum: 1,
+            faults: FaultPlan::parse("leave=4@1").unwrap(),
+        };
+        assert!(ElasticCohort::new(cfg, 4).is_err(), "event for worker 4 of 4");
+    }
+}

@@ -49,6 +49,7 @@
 //! quantizer), never a re-derivation from the whole-gradient length.
 
 pub mod bucket;
+pub mod elastic;
 pub mod feedback;
 pub mod overlap;
 pub mod precision;
@@ -62,6 +63,7 @@ use crate::tensor;
 use crate::util::rng::Rng;
 
 pub use bucket::{Bucket, BucketPlan};
+pub use elastic::{CohortPolicy, ElasticCohort, ElasticConfig, StepPlan};
 pub use feedback::ErrorFeedback;
 pub use overlap::OverlapReport;
 pub use precision::{
@@ -515,10 +517,55 @@ impl Aggregator for GradientControlPlane {
     }
 
     fn aggregate(&mut self, grads: &[&[f32]], ctx: &mut StepCtx, rng: &mut Rng) -> Vec<f32> {
+        self.aggregate_inner(grads, None, ctx, rng)
+    }
+
+    fn aggregate_cohort(
+        &mut self,
+        grads: &[&[f32]],
+        ids: &[usize],
+        ctx: &mut StepCtx,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        self.aggregate_inner(grads, Some(ids), ctx, rng)
+    }
+}
+
+impl GradientControlPlane {
+    /// The one aggregation body behind both [`Aggregator::aggregate`]
+    /// (`ids == None`: the full positional cohort) and
+    /// [`Aggregator::aggregate_cohort`] (`ids == Some(survivors)`: slice
+    /// `i` drawn against ORIGINAL worker `ids[i]`'s uniform stream). The
+    /// live M is `grads.len()` throughout — the decode's `1/(s*m)` fold
+    /// and the packed resident width `bitlen(2*M_live*lmax)` renormalize
+    /// for the surviving cohort with no further bookkeeping, which is
+    /// exactly the live-M renormalization the churn unbiasedness tier
+    /// pins in `tests/paper_properties.rs`.
+    fn aggregate_inner(
+        &mut self,
+        grads: &[&[f32]],
+        ids: Option<&[usize]>,
+        ctx: &mut StepCtx,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
         let m = grads.len();
         let n = grads[0].len();
         assert!(m <= fused::MAX_WORKERS, "M={m} exceeds MAX_WORKERS");
         assert_eq!(n, self.plan.n, "gradient length does not match the bucket plan");
+        if let Some(ids) = ids {
+            assert_eq!(ids.len(), m, "one gradient slice per cohort id");
+            debug_assert!(
+                ids.windows(2).all(|w| w[0] < w[1]),
+                "cohort ids must be strictly increasing, got {ids:?}"
+            );
+            // error-feedback residual memory is positional: folding a
+            // partial cohort into it would misattribute residuals, so the
+            // elastic layer only allows EF with a full, stable cohort
+            assert!(
+                self.ef.is_none() || ids.iter().enumerate().all(|(i, &w)| i == w),
+                "error feedback requires the full cohort (positional residual memory)"
+            );
+        }
 
         // error feedback: fold the residual into this step's inputs
         // (dense domains only — construction rejects EF + GlobalK)
@@ -555,9 +602,13 @@ impl Aggregator for GradientControlPlane {
         // length for dense, K for GlobalK), sliced per bucket below.
         // Together with a globally shared norm this makes the bucketed
         // output bit-identical to the monolithic packed path for any
-        // bucket plan.
+        // bucket plan. A partial cohort keys each slot by its ORIGINAL
+        // worker id so survivors replay their own streams.
         let uniform = &mut self.uniform;
-        ctx.time_encode(|| fused::fill_uniforms_into(m, enc_len, uniform, rng));
+        ctx.time_encode(|| match ids {
+            None => fused::fill_uniforms_into(m, enc_len, uniform, rng),
+            Some(ids) => fused::fill_uniforms_masked_into(ids, enc_len, uniform, rng),
+        });
 
         // shared norm (Algorithm 1/2 line 5). A GLOBAL norm needs the full
         // (gathered) gradient — it only exists after the entire backward —
@@ -813,6 +864,110 @@ mod tests {
         assert_eq!(clock_b.hop_bits_per_worker, clock_mono.hop_bits_per_worker);
         assert_eq!(clock_b.comm_s, clock_mono.comm_s);
         assert_eq!(plane.last_bits(), &[4]);
+    }
+
+    fn run_cohort(
+        plane: &mut GradientControlPlane,
+        grads: &[&[f32]],
+        ids: &[usize],
+        seed: u64,
+        backward_s: Option<f64>,
+    ) -> (Vec<f32>, SimClock) {
+        let net = NetConfig::flat(grads.len(), 10.0);
+        let mut clock = SimClock::default();
+        let out = {
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.backward_s = backward_s;
+            let mut rng = Rng::new(seed);
+            plane.aggregate_cohort(grads, ids, &mut ctx, &mut rng)
+        };
+        (out, clock)
+    }
+
+    #[test]
+    fn identity_cohort_is_bit_identical_to_aggregate() {
+        let (m, n) = (4usize, 501usize);
+        let grads = fixed_grads(0xE1A57, m, n);
+        let segments = segs(&[200, 200, 101]);
+        let ids: Vec<usize> = (0..m).collect();
+
+        let cfg = ControlConfig::new(2);
+        let mut a = GradientControlPlane::new(cfg.clone(), m, n, &segments).unwrap();
+        let (want, clock_a) = run(&mut a, &grads, 11, Some(0.05));
+
+        let mut b = GradientControlPlane::new(cfg, m, n, &segments).unwrap();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let (got, clock_b) = run_cohort(&mut b, &refs, &ids, 11, Some(0.05));
+
+        assert_eq!(got, want);
+        assert_eq!(clock_b.comm_s, clock_a.comm_s);
+        assert_eq!(clock_b.bits_per_worker, clock_a.bits_per_worker);
+        assert_eq!(clock_b.hidden_comm_s, clock_a.hidden_comm_s);
+    }
+
+    #[test]
+    fn prefix_cohort_matches_a_monolithic_run_over_the_survivors() {
+        // survivors {0, 1} of M=4: id-keyed streams coincide with
+        // positional ones, so the partial all-reduce must be bit-identical
+        // to a monolithic 2-worker run — live-M renormalization falls out
+        // of the decode's 1/(s·m) fold with no extra bookkeeping
+        let (m, n) = (4usize, 997usize);
+        let grads = fixed_grads(0xD00D, m, n);
+        let mut mono = QsgdMaxNorm::new(4).unwrap();
+        let (want, clock_mono) = run(&mut mono, &grads[..2], 21, None);
+
+        let segments = segs(&[n]);
+        let mut plane =
+            GradientControlPlane::new(ControlConfig::new(1), m, n, &segments).unwrap();
+        let survivors: Vec<&[f32]> = grads[..2].iter().map(|v| v.as_slice()).collect();
+        let (got, clock) = run_cohort(&mut plane, &survivors, &[0, 1], 21, None);
+
+        assert_eq!(got, want);
+        assert_eq!(clock.bits_per_worker, clock_mono.bits_per_worker);
+        assert!(clock.hidden_comm_s <= clock.comm_s);
+    }
+
+    #[test]
+    fn cohort_streams_are_keyed_by_original_worker_id() {
+        // same two gradient slices, different surviving ids: only the
+        // uniform streams differ, and the outputs must differ with them —
+        // positional keying (the pre-elastic fill) would make these equal
+        // and silently correlate a rejoined worker with its replacement
+        let (m, n) = (4usize, 997usize);
+        let grads = fixed_grads(0xF00D, m, n);
+        let pair: Vec<&[f32]> = vec![grads[0].as_slice(), grads[1].as_slice()];
+        let segments = segs(&[n]);
+
+        let mut a = GradientControlPlane::new(ControlConfig::new(1), m, n, &segments).unwrap();
+        let (low, _) = run_cohort(&mut a, &pair, &[0, 1], 9, None);
+        let mut b = GradientControlPlane::new(ControlConfig::new(1), m, n, &segments).unwrap();
+        let (high, _) = run_cohort(&mut b, &pair, &[0, 3], 9, None);
+        assert_ne!(low, high);
+    }
+
+    #[test]
+    fn default_aggregate_cohort_accepts_the_identity_and_rejects_subsets() {
+        let (m, n) = (3usize, 64usize);
+        let grads = fixed_grads(1, m, n);
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let mut mono = QsgdMaxNorm::new(4).unwrap();
+        let (want, _) = run(&mut mono, &grads, 2, None);
+
+        let net = NetConfig::flat(m, 10.0);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        let mut fresh = QsgdMaxNorm::new(4).unwrap();
+        let got = fresh.aggregate_cohort(&refs, &[0, 1, 2], &mut ctx, &mut Rng::new(2));
+        assert_eq!(got, want);
+
+        let partial = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let net = NetConfig::flat(2, 10.0);
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            let mut mono = QsgdMaxNorm::new(4).unwrap();
+            mono.aggregate_cohort(&refs[..2], &[0, 2], &mut ctx, &mut Rng::new(2));
+        }));
+        assert!(partial.is_err(), "cohort-unaware aggregators must refuse subsets");
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //!   repro train --model resnet_lite --method qsgd-mn-4 --buckets 8 --bits auto --error-feedback
 //!   repro train --model resnet_lite --method qsgd-mn-ts-2-6 --buckets 8 --bits auto
 //!   repro train --model vgg_lite --method grandk-mn-ts-4-8 --buckets 8
+//!   repro train --model mlp --method qsgd-mn-4 --faults jitter=0.1,seed=7 \
+//!       --cohort-policy partial:0.25 --quorum 2
 //!   repro figures --fig 3 --steps 150
 //!   repro perfmodel --floor-bits 8
 
@@ -18,7 +20,8 @@ use anyhow::{bail, Result};
 
 use repro::cli::Args;
 use repro::compress::Method;
-use repro::control::{BitsPolicy, ControlConfig};
+use repro::control::{BitsPolicy, CohortPolicy, ControlConfig, ElasticConfig};
+use repro::netsim::FaultPlan;
 use repro::figures::{self, FigureOpts};
 use repro::runtime::Artifacts;
 use repro::train::{summary_table, Experiment};
@@ -53,7 +56,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let lr0: f64 = args.parse_or("lr", 0.05)?;
     let seed: u64 = args.parse_or("seed", 42)?;
     let out_dir = args.get_or("out-dir", "results").to_string();
-    let control = parse_control(args)?;
+    let mut control = parse_control(args)?;
+    let elastic = parse_elastic(args, workers)?;
+    if elastic.is_some() && control.is_none() {
+        // the elastic layer runs on the bucketed control plane (the
+        // monolithic aggregators are not cohort-aware): default to one
+        // bucket, which is bit-identical to the monolithic path
+        control = Some(ControlConfig::new(1));
+    }
     args.reject_unknown()?;
 
     let arts = Artifacts::load_default()?;
@@ -64,6 +74,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     exp.seed = seed;
     exp.out_dir = out_dir.into();
     exp.control = control;
+    exp.elastic = elastic;
     let results = exp.run(&arts)?;
     let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
     println!("{}", summary_table(&summaries));
@@ -97,6 +108,40 @@ fn parse_control(args: &Args) -> Result<Option<ControlConfig>> {
     cfg.error_feedback = ef;
     cfg.overlap = !no_overlap;
     Ok(Some(cfg))
+}
+
+/// Elastic-cohort options: `--faults SPEC` injects a deterministic fault
+/// plan (`jitter=F,seed=N,leave=W@S,join=W@S,outage=A..B@F`, or `none`),
+/// `--cohort-policy strict|partial[:FRAC]|periodic[:PERIOD]` picks how the
+/// cohort synchronizes under it, `--quorum N` sets the minimum cohort for
+/// a synchronizing step (below it the step degrades to local
+/// accumulation). Any one of the three enables the elastic layer; the
+/// defaults are strict sync, quorum 1, no faults — bit-identical to a
+/// non-elastic run.
+fn parse_elastic(args: &Args, workers: usize) -> Result<Option<ElasticConfig>> {
+    let faults_spec = args.get("faults").map(str::to_string);
+    let policy_spec = args.get("cohort-policy").map(str::to_string);
+    let quorum_spec = args.get("quorum").map(str::to_string);
+    if faults_spec.is_none() && policy_spec.is_none() && quorum_spec.is_none() {
+        return Ok(None);
+    }
+    let faults = match faults_spec {
+        Some(spec) => FaultPlan::parse(&spec)?,
+        None => FaultPlan::none(),
+    };
+    let policy = match policy_spec {
+        Some(spec) => CohortPolicy::parse(&spec)?,
+        None => CohortPolicy::StrictSync,
+    };
+    let quorum: usize = match quorum_spec {
+        Some(q) => q.parse()?,
+        None => 1,
+    };
+    anyhow::ensure!(
+        (1..=workers).contains(&quorum),
+        "--quorum {quorum} outside 1..={workers}"
+    );
+    Ok(Some(ElasticConfig { policy, quorum, faults }))
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {

@@ -58,6 +58,17 @@ pub struct StepRecord {
     /// fraction of `t_comm_sim` the bucketed control plane hid behind
     /// backward compute (0 on the monolithic path)
     pub overlap_frac: f64,
+    /// workers participating in this step's collective (the full M on the
+    /// fixed synchronous path and on non-sync elastic steps, where it is
+    /// the membership computing locally)
+    pub live_workers: usize,
+    /// simulated seconds the synchronizing cohort waited on coordination
+    /// beyond the profile compute time (0 off the elastic path)
+    pub straggler_wait_s: f64,
+    /// age of the oldest gradient folded into this step's update (0 on
+    /// the fixed synchronous path; bounded by period-1 under periodic
+    /// sync)
+    pub staleness: usize,
 }
 
 /// Whole-run summary, serializable for EXPERIMENTS.md extraction.
@@ -79,6 +90,8 @@ pub struct RunSummary {
     pub t_encode: f64,
     pub t_decode: f64,
     pub t_comm_sim: f64,
+    /// run-level simulated straggler wait (0 off the elastic path)
+    pub t_straggler_wait: f64,
 }
 
 impl RunSummary {
@@ -102,6 +115,7 @@ impl RunSummary {
                     ("encode", num(self.t_encode)),
                     ("decode", num(self.t_decode)),
                     ("comm_sim", num(self.t_comm_sim)),
+                    ("straggler_wait", num(self.t_straggler_wait)),
                 ]),
             ),
         ])

@@ -1,0 +1,296 @@
+//! Deterministic fault & latency injection for the simulated cluster
+//! (PR 6): per-worker step-time jitter, worker join/leave schedules, and
+//! per-link degradation windows.
+//!
+//! Everything here is a pure function of `(plan seed, step, worker)` through
+//! [`crate::util::rng::Rng::derive`], so a faulted run is exactly as
+//! reproducible as a clean one — the determinism contract of DESIGN.md §5
+//! extends to chaos. [`FaultPlan::none`] is the identity plan: no jitter, no
+//! events, no outages, and [`FaultPlan::net_for_step`] returns the base
+//! topology untouched (bit-identity pinned by the fault-plane parity matrix
+//! in `tests/int_domain_equivalence.rs`).
+
+use anyhow::{bail, Context, Result};
+
+use super::NetConfig;
+use crate::util::rng::Rng;
+
+/// Label for the jitter stream derivation (`derive(&[FAULT_STREAM, step,
+/// worker])`) — disjoint from the cluster's `0x5354` step stream and the
+/// control plane's per-worker uniform streams.
+const FAULT_STREAM: u64 = 0xFA17;
+
+/// A membership change taking effect at the *start* of its step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// The worker leaves the cluster (crash, preemption, scale-down).
+    Leave,
+    /// The worker (re)joins and must catch up on the current parameters.
+    Join,
+}
+
+/// One scheduled membership event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CohortEvent {
+    pub step: usize,
+    pub worker: usize,
+    pub kind: EventKind,
+}
+
+/// An inter-node link degradation window: for steps in `[from, to)` the
+/// inter-node bandwidth is multiplied by `factor` (0 < factor <= 1; a
+/// near-zero factor models an outage the α–β model resolves to a stall).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outage {
+    pub from: usize,
+    pub to: usize,
+    pub factor: f64,
+}
+
+/// The deterministic fault schedule of one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the jitter stream (independent of the run seed so the same
+    /// fault schedule can be replayed against different data orders).
+    pub seed: u64,
+    /// Relative per-worker step-time jitter: worker compute is scaled by
+    /// `1 + jitter * |z|` with `z` standard normal (half-normal — a
+    /// straggler only ever *slows down* relative to the profile).
+    pub jitter: f64,
+    /// Join/leave schedule, applied at the start of each step.
+    pub events: Vec<CohortEvent>,
+    /// Inter-node link degradation windows.
+    pub outages: Vec<Outage>,
+}
+
+impl FaultPlan {
+    /// The identity plan: no faults. Strict-sync under this plan is
+    /// bit-identical to the pre-elastic data plane.
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, jitter: 0.0, events: Vec::new(), outages: Vec::new() }
+    }
+
+    /// Jitter-only plan (the straggler scenario of `benches/micro_faults`).
+    pub fn jittered(seed: u64, jitter: f64) -> FaultPlan {
+        FaultPlan { seed, jitter, events: Vec::new(), outages: Vec::new() }
+    }
+
+    /// True iff this plan injects nothing.
+    pub fn is_none(&self) -> bool {
+        self.jitter == 0.0 && self.events.is_empty() && self.outages.is_empty()
+    }
+
+    /// Simulated compute seconds of `worker` at `step`: `base_s` scaled by
+    /// the half-normal jitter multiplier of the derived `(seed, step,
+    /// worker)` stream. With zero jitter no stream is drawn and `base_s`
+    /// passes through exactly.
+    pub fn worker_compute_s(&self, base_s: f64, step: usize, worker: usize) -> f64 {
+        if self.jitter <= 0.0 {
+            return base_s;
+        }
+        let mut r = Rng::new(self.seed).derive(&[FAULT_STREAM, step as u64, worker as u64]);
+        base_s * (1.0 + self.jitter * r.next_normal().abs())
+    }
+
+    /// Membership events taking effect at the start of `step`.
+    pub fn events_at(&self, step: usize) -> impl Iterator<Item = &CohortEvent> {
+        self.events.iter().filter(move |e| e.step == step)
+    }
+
+    /// Bandwidth multiplier active on the inter-node link at `step`
+    /// (overlapping windows compound; 1.0 when no window covers the step).
+    pub fn link_factor(&self, step: usize) -> f64 {
+        self.outages
+            .iter()
+            .filter(|o| o.from <= step && step < o.to)
+            .map(|o| o.factor)
+            .product()
+    }
+
+    /// The wire the cohort's collectives run over at `step`: the base
+    /// topology with the *live* worker count substituted (so ring/tree hop
+    /// counts, the packed resident width `bitlen(2*M_live*lmax)`, and every
+    /// α–β charge re-derive from the surviving cohort) and any active
+    /// degradation window applied to the inter-node link. For
+    /// [`FaultPlan::none`] with a full cohort this is an exact clone of
+    /// `base` — the bit-identity condition of the parity matrix.
+    pub fn net_for_step(&self, base: &NetConfig, step: usize, live_workers: usize) -> NetConfig {
+        let mut net = base.clone();
+        net.workers = live_workers;
+        let f = self.link_factor(step);
+        // multiplying by the neutral 1.0 factor is exact in f64, so the
+        // no-outage path stays bit-identical without a branch
+        net.inter.bytes_per_s *= f;
+        net
+    }
+
+    /// Parse a CLI fault spec: comma-separated clauses of
+    /// `jitter=F` | `seed=N` | `leave=W@S` | `join=W@S` | `outage=A..B@F`,
+    /// or the literal `none`. Example:
+    /// `--faults jitter=0.1,seed=7,leave=3@10,join=3@20,outage=5..8@0.25`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        if spec.trim() == "none" {
+            return Ok(plan);
+        }
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            let (key, val) = clause
+                .split_once('=')
+                .with_context(|| format!("fault clause '{clause}' is not key=value"))?;
+            match key {
+                "jitter" => {
+                    plan.jitter = val
+                        .parse()
+                        .with_context(|| format!("bad jitter '{val}'"))?;
+                    anyhow::ensure!(plan.jitter >= 0.0, "jitter must be >= 0");
+                }
+                "seed" => {
+                    plan.seed = val.parse().with_context(|| format!("bad seed '{val}'"))?;
+                }
+                "leave" | "join" => {
+                    let (w, s) = val
+                        .split_once('@')
+                        .with_context(|| format!("'{key}={val}' wants W@STEP"))?;
+                    plan.events.push(CohortEvent {
+                        worker: w.parse().with_context(|| format!("bad worker '{w}'"))?,
+                        step: s.parse().with_context(|| format!("bad step '{s}'"))?,
+                        kind: if key == "leave" { EventKind::Leave } else { EventKind::Join },
+                    });
+                }
+                "outage" => {
+                    let (range, f) = val
+                        .split_once('@')
+                        .with_context(|| format!("'outage={val}' wants A..B@FACTOR"))?;
+                    let (a, b) = range
+                        .split_once("..")
+                        .with_context(|| format!("'outage={val}' wants A..B@FACTOR"))?;
+                    let outage = Outage {
+                        from: a.parse().with_context(|| format!("bad outage start '{a}'"))?,
+                        to: b.parse().with_context(|| format!("bad outage end '{b}'"))?,
+                        factor: f.parse().with_context(|| format!("bad outage factor '{f}'"))?,
+                    };
+                    anyhow::ensure!(
+                        outage.from < outage.to,
+                        "outage window {}..{} is empty",
+                        outage.from,
+                        outage.to
+                    );
+                    anyhow::ensure!(
+                        outage.factor > 0.0 && outage.factor <= 1.0,
+                        "outage factor must be in (0, 1], got {}",
+                        outage.factor
+                    );
+                    plan.outages.push(outage);
+                }
+                other => bail!(
+                    "unknown fault clause '{other}' \
+                     (expect jitter|seed|leave|join|outage, or 'none')"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_is_identity() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_none());
+        assert_eq!(plan.worker_compute_s(0.25, 7, 3), 0.25);
+        assert_eq!(plan.link_factor(0), 1.0);
+        let base = NetConfig::flat(8, 10.0);
+        let net = plan.net_for_step(&base, 5, 8);
+        assert_eq!(net.workers, 8);
+        assert_eq!(net.inter.bytes_per_s, base.inter.bytes_per_s);
+        assert_eq!(net.inter.alpha_s, base.inter.alpha_s);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_only_slows_down() {
+        let plan = FaultPlan::jittered(9, 0.5);
+        let a = plan.worker_compute_s(1.0, 3, 1);
+        let b = plan.worker_compute_s(1.0, 3, 1);
+        assert_eq!(a, b, "same (seed, step, worker) must replay exactly");
+        assert!(a >= 1.0, "half-normal jitter never speeds a worker up");
+        // different workers and steps draw independent streams
+        let c = plan.worker_compute_s(1.0, 3, 2);
+        let d = plan.worker_compute_s(1.0, 4, 1);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        // a different plan seed reshuffles the stragglers
+        let other = FaultPlan::jittered(10, 0.5);
+        assert_ne!(a, other.worker_compute_s(1.0, 3, 1));
+    }
+
+    #[test]
+    fn outage_windows_degrade_the_inter_link() {
+        let mut plan = FaultPlan::none();
+        plan.outages.push(Outage { from: 5, to: 8, factor: 0.25 });
+        plan.outages.push(Outage { from: 7, to: 9, factor: 0.5 });
+        assert_eq!(plan.link_factor(4), 1.0);
+        assert_eq!(plan.link_factor(5), 0.25);
+        assert_eq!(plan.link_factor(7), 0.125, "overlapping windows compound");
+        assert_eq!(plan.link_factor(8), 0.5);
+        assert_eq!(plan.link_factor(9), 1.0);
+        let base = NetConfig::flat(8, 10.0);
+        let net = plan.net_for_step(&base, 5, 8);
+        assert_eq!(net.inter.bytes_per_s, base.inter.bytes_per_s * 0.25);
+        // a degraded wire makes the same transfer strictly slower
+        assert!(net.allreduce_s(1e6) > base.allreduce_s(1e6));
+    }
+
+    #[test]
+    fn net_for_step_rederives_for_the_live_cohort() {
+        let plan = FaultPlan::none();
+        let base = NetConfig::flat(8, 10.0);
+        let partial = plan.net_for_step(&base, 0, 5);
+        assert_eq!(partial.workers, 5);
+        // fewer ring participants -> fewer hops -> faster collective
+        assert!(partial.allreduce_s(1e6) < base.allreduce_s(1e6));
+    }
+
+    #[test]
+    fn parse_roundtrips_the_full_grammar() {
+        let plan =
+            FaultPlan::parse("jitter=0.1,seed=7,leave=3@10,join=3@20,outage=5..8@0.25").unwrap();
+        assert_eq!(plan.jitter, 0.1);
+        assert_eq!(plan.seed, 7);
+        assert_eq!(
+            plan.events,
+            vec![
+                CohortEvent { step: 10, worker: 3, kind: EventKind::Leave },
+                CohortEvent { step: 20, worker: 3, kind: EventKind::Join },
+            ]
+        );
+        assert_eq!(plan.outages, vec![Outage { from: 5, to: 8, factor: 0.25 }]);
+        assert!(FaultPlan::parse("none").unwrap().is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "jitter",            // no value
+            "jitter=-0.5",       // negative
+            "leave=3",           // missing @step
+            "outage=5..5@0.5",   // empty window
+            "outage=5..8@0.0",   // zero factor
+            "outage=5..8@1.5",   // factor > 1
+            "wobble=1",          // unknown clause
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn events_at_filters_by_step() {
+        let plan = FaultPlan::parse("leave=1@3,leave=2@3,join=1@5").unwrap();
+        assert_eq!(plan.events_at(3).count(), 2);
+        assert_eq!(plan.events_at(5).count(), 1);
+        assert_eq!(plan.events_at(4).count(), 0);
+    }
+}

@@ -11,6 +11,10 @@
 //! happens in [`crate::collectives`] (real bytes through real encoders), so
 //! simulated time and real numerics are decoupled but consistent.
 
+pub mod fault;
+
+pub use fault::{CohortEvent, EventKind, FaultPlan, Outage};
+
 /// One link class: latency (s) + inverse bandwidth (s/byte).
 #[derive(Clone, Copy, Debug)]
 pub struct Link {
@@ -286,13 +290,28 @@ pub struct SimClock {
     /// step's critical path. Zero for the monolithic (non-overlapped) path.
     /// Invariant: `hidden_comm_s <= comm_s`.
     pub hidden_comm_s: f64,
+    /// barrier seconds spent waiting for the slowest *surviving* worker
+    /// beyond the nominal compute profile (straggler jitter under an
+    /// elastic cohort policy, [`crate::control::elastic`]). Attributed
+    /// separately from `comm_s` so the wire model stays honest, and from
+    /// `compute_s` so the profile stays the intrinsic work. The overlap
+    /// invariant extends across the new term: hidden comm is credited only
+    /// against the surviving cohort's backward window — never against a
+    /// dropped straggler's compute or the barrier wait — so
+    /// `hidden_comm_s <= comm_s` still holds and the wait is always fully
+    /// exposed on the critical path.
+    pub straggler_wait_s: f64,
 }
 
 impl SimClock {
     /// Critical-path seconds of the run: comm hidden behind compute by the
-    /// overlap scheduler is subtracted — it ran during `compute_s`.
+    /// overlap scheduler is subtracted — it ran during `compute_s` — while
+    /// straggler barrier wait is added in full (nothing true runs under it
+    /// that was not already charged: the overlap window is the *surviving*
+    /// cohort's backward, which ends before the barrier resolves).
     pub fn total_s(&self) -> f64 {
-        self.comm_s + self.compute_s + self.encode_s + self.decode_s - self.hidden_comm_s
+        self.comm_s + self.compute_s + self.encode_s + self.decode_s + self.straggler_wait_s
+            - self.hidden_comm_s
     }
 
     /// Fraction of the communication time the overlap scheduler hid behind
@@ -377,6 +396,25 @@ mod tests {
         let net = NetConfig::flat(4, 10.0);
         assert_eq!(net.ring_steps_s(6, 100.0), 6.0 * net.hop_s(100.0));
         assert_eq!(NetConfig::flat(1, 10.0).hop_s(100.0), 0.0);
+    }
+
+    #[test]
+    fn straggler_wait_extends_total_and_never_shrinks_it() {
+        // satellite regression (PR 6): barrier wait is a first-class
+        // critical-path term — added in full, never offset by hidden comm
+        // (hidden comm is bounded by comm_s, not by comm_s + wait).
+        let mut clock = SimClock::default();
+        clock.comm_s = 2.0;
+        clock.compute_s = 3.0;
+        clock.hidden_comm_s = 1.5;
+        let base = clock.total_s();
+        clock.straggler_wait_s = 0.7;
+        assert_eq!(clock.total_s(), base + 0.7);
+        // overlap_frac is about comm only: the wait does not dilute it
+        assert_eq!(clock.overlap_frac(), 1.5 / 2.0);
+        // the fully-hidden-comm extreme: total still includes the wait
+        clock.hidden_comm_s = clock.comm_s;
+        assert_eq!(clock.total_s(), 3.0 + 0.7);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::cluster::{run_training, ClusterConfig};
 use crate::compress::Method;
-use crate::control::ControlConfig;
+use crate::control::{ControlConfig, ElasticConfig};
 use crate::metrics::{render_table, CsvWriter, RunSummary, StepRecord};
 use crate::runtime::Artifacts;
 
@@ -29,6 +29,8 @@ pub struct Experiment {
     pub quiet: bool,
     /// bucketed control-plane options applied to every method of the sweep
     pub control: Option<ControlConfig>,
+    /// elastic-cohort policy + fault schedule applied to every method
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Experiment {
@@ -46,6 +48,7 @@ impl Experiment {
             out_dir: PathBuf::from("results"),
             quiet: false,
             control: None,
+            elastic: None,
         }
     }
 
@@ -67,6 +70,7 @@ impl Experiment {
             cfg.total_steps = self.steps;
             cfg.net_gbps = self.net_gbps;
             cfg.control = self.control.clone();
+            cfg.elastic = self.elastic.clone();
 
             let label = method.label();
             if !self.quiet {
@@ -74,7 +78,7 @@ impl Experiment {
             }
             let mut csv = CsvWriter::create(
                 &self.csv_path(&label),
-                &["step", "loss", "lr", "t_compute", "t_encode", "t_decode", "t_comm_sim", "bits_per_worker", "overlap_frac"],
+                &["step", "loss", "lr", "t_compute", "t_encode", "t_decode", "t_comm_sim", "bits_per_worker", "overlap_frac", "live_workers", "straggler_wait_s", "staleness"],
             )?;
             let quiet = self.quiet;
             let steps = self.steps;
@@ -89,6 +93,9 @@ impl Experiment {
                     rec.t_comm_sim,
                     rec.bits_per_worker,
                     rec.overlap_frac,
+                    rec.live_workers as f64,
+                    rec.straggler_wait_s,
+                    rec.staleness as f64,
                 ]);
                 if !quiet && (rec.step % 20 == 0 || rec.step + 1 == steps) {
                     eprintln!("  step {:>5}  loss {:.4}  lr {:.4}", rec.step, rec.loss, rec.lr);
@@ -118,13 +125,14 @@ pub fn summary_table(summaries: &[RunSummary]) -> String {
                 format!("{:.3}", r.final_eval_acc),
                 format!("{:.1}", r.mean_bits_per_step / 1e3),
                 format!("{:.2}", r.overlap_frac),
+                format!("{:.3}", r.t_straggler_wait),
                 format!("{:.3}", r.sim_time_s),
                 format!("{:.1}", r.wall_time_s),
             ]
         })
         .collect();
     render_table(
-        &["method", "train_loss", "eval_loss", "eval_acc", "kbits/step", "ovl", "sim_s", "wall_s"],
+        &["method", "train_loss", "eval_loss", "eval_acc", "kbits/step", "ovl", "wait_s", "sim_s", "wall_s"],
         &rows,
     )
 }

@@ -970,3 +970,252 @@ fn int_reducers_agree_exactly_on_quantizer_output() {
         }
     }
 }
+
+/// Id-keyed variant of [`reference_qsgd`]: slot `i` draws the uniform
+/// stream of ORIGINAL worker id `ids[i]`, the norm is taken over the given
+/// (surviving) gradients only, and the decode divides by the live count.
+/// With identity ids this is exactly `reference_qsgd`.
+fn reference_qsgd_ids(
+    grads: &[&[f32]],
+    ids: &[usize],
+    bits: usize,
+    seed: u64,
+    algo: Algo,
+) -> Vec<f32> {
+    let m = grads.len();
+    let n = grads[0].len();
+    let s = kernels::s_for_bits(bits);
+    let wnorm = max_norm(grads);
+    let rng = Rng::new(seed);
+    let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(m);
+    for (g, &w) in grads.iter().zip(ids) {
+        let mut wrng = rng.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; n];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut buf = vec![0.0f32; n];
+        kernels::qsgd_encode(g, wnorm, &uni, s, &mut buf);
+        bufs.push(buf);
+    }
+    f32_allreduce(&mut bufs, algo);
+    let mut sum = bufs.swap_remove(0);
+    kernels::qsgd_decode_sum(&mut sum, wnorm, s, m);
+    sum
+}
+
+/// Id-keyed variant of [`reference_multiscale`]: the scale-share min
+/// all-reduce runs over the survivors only; uniforms keyed by original id.
+fn reference_multiscale_ids(
+    grads: &[&[f32]],
+    ids: &[usize],
+    scales: &[usize],
+    seed: u64,
+    algo: Algo,
+) -> Vec<f32> {
+    let m = grads.len();
+    let n = grads[0].len();
+    let wnorm = max_norm(grads);
+    let rng = Rng::new(seed);
+
+    let mut proposals: Vec<Vec<u8>> = Vec::with_capacity(m);
+    for g in grads {
+        let mut idx = vec![0u8; n];
+        kernels::multiscale_scale_index(g, wnorm, scales, &mut idx);
+        proposals.push(idx);
+    }
+    let shared = collectives::min_allreduce_u8(&proposals);
+
+    let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(m);
+    for (g, &w) in grads.iter().zip(ids) {
+        let mut wrng = rng.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; n];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut buf = vec![0.0f32; n];
+        kernels::multiscale_encode(g, wnorm, &uni, &shared, scales, &mut buf);
+        bufs.push(buf);
+    }
+    f32_allreduce(&mut bufs, algo);
+    let mut sum = bufs.swap_remove(0);
+    kernels::multiscale_decode_sum(&mut sum, wnorm, &shared, scales, m);
+    sum
+}
+
+#[test]
+fn none_fault_plane_strict_cohort_is_bit_identical_across_the_matrix() {
+    // PR 6 acceptance, half 1: FaultPlan::none() + strict sync is a
+    // bit-level no-op. For every bucketable method x bucket plan x
+    // schedule x worker count, driving the control plane through the
+    // cohort seam — identity ids from the elastic planner, per-step wire
+    // from `net_for_step`, id-masked uniform fill — reproduces plain
+    // `aggregate` exactly: output, bits ledger, and simulated clocks.
+    use repro::control::{build_plane, ControlConfig, ElasticCohort, ElasticConfig};
+    use repro::netsim::{FaultPlan, RingWidth};
+
+    let n = 771usize;
+    let seg_lens = [257usize, 200, 150, 100, 64];
+    let segments = contiguous_segments(&seg_lens);
+    let specs =
+        ["qsgd-mn-4", "qsgd-mn-ts-2-6", "grandk-mn-4-k192", "grandk-mn-ts-4-8-k192"];
+
+    for spec in specs {
+        let method = Method::parse(spec).unwrap();
+        for &m in &[4usize, 16] {
+            let seed = 0xFA_0CE5 + m as u64;
+            let mut grng = Rng::new(seed);
+            let grads: Vec<Vec<f32>> = (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    grng.fill_normal_f32(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+
+            // the elastic planner under a none plan: full identity cohort,
+            // synchronizing, zero straggler wait, window == base
+            let faults = FaultPlan::none();
+            let mut cohort = ElasticCohort::new(ElasticConfig::strict(), m).unwrap();
+            let plan = cohort.plan_step(0, 1.0);
+            assert_eq!(plan.live, (0..m).collect::<Vec<_>>(), "{spec} m={m}: live");
+            assert!(plan.sync, "{spec} m={m}: strict step must sync");
+            assert_eq!(plan.straggler_wait_s, 0.0, "{spec} m={m}: no jitter, no wait");
+            assert_eq!(plan.compute_window_s, 1.0, "{spec} m={m}: window folds to base");
+
+            for (algo, width) in [
+                (Algo::Ring, RingWidth::Fixed),
+                (Algo::Ring, RingWidth::Growing),
+                (Algo::Tree, RingWidth::Auto),
+            ] {
+                for &target in &[1usize, 3, 6] {
+                    let cfg = ControlConfig::new(target);
+
+                    let mut want_clock = SimClock::default();
+                    let want = {
+                        let mut plane = build_plane(&method, &cfg, n, &segments).unwrap();
+                        let mut net = NetConfig::flat(m, 10.0);
+                        net.algo = algo;
+                        let mut ctx = StepCtx::new(&net, &mut want_clock);
+                        ctx.ring_width = width;
+                        let mut rng = Rng::new(seed ^ 0x51EED);
+                        plane.aggregate(&refs, &mut ctx, &mut rng)
+                    };
+
+                    let mut got_clock = SimClock::default();
+                    let got = {
+                        let mut plane = build_plane(&method, &cfg, n, &segments).unwrap();
+                        let mut base = NetConfig::flat(m, 10.0);
+                        base.algo = algo;
+                        let step_net = faults.net_for_step(&base, 0, plan.live.len());
+                        let mut ctx = StepCtx::new(&step_net, &mut got_clock);
+                        ctx.ring_width = width;
+                        let mut rng = Rng::new(seed ^ 0x51EED);
+                        plane.aggregate_cohort(&refs, &plan.live, &mut ctx, &mut rng)
+                    };
+
+                    if got != want {
+                        let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                        panic!(
+                            "{spec} m={m} algo={algo:?} {width:?} target={target}: \
+                             cohort seam diverged at {bad}: {} vs {}",
+                            got[bad], want[bad]
+                        );
+                    }
+                    assert_eq!(
+                        got_clock.bits_per_worker, want_clock.bits_per_worker,
+                        "{spec} m={m} algo={algo:?} target={target}: bits ledger"
+                    );
+                    assert_eq!(
+                        got_clock.comm_s, want_clock.comm_s,
+                        "{spec} m={m} algo={algo:?} target={target}: comm clock"
+                    );
+                    assert_eq!(
+                        got_clock.hidden_comm_s, want_clock.hidden_comm_s,
+                        "{spec} m={m} algo={algo:?} target={target}: hidden comm"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn drop_then_rejoin_cohort_matches_independent_fixed_m_references() {
+    // PR 6 acceptance, half 2: under `leave=2@1,join=2@4` at M=4 the
+    // plane's partial steps are bit-identical to an independently
+    // constructed fixed-M run over the survivors — the same f32 reference
+    // pipeline pinned above, with uniform streams keyed by ORIGINAL
+    // worker id, the shared norm taken over survivors only, and the
+    // decode renormalized by live M=3 — and the step after the rejoin
+    // matches the plain full-M reference again.
+    use repro::control::{build_plane, ControlConfig, ElasticCohort, ElasticConfig};
+    use repro::netsim::FaultPlan;
+
+    let n = 501usize;
+    let m = 4usize;
+
+    let ts_scales: Vec<usize> = [2usize, 6].iter().map(|&b| kernels::s_for_bits(b)).collect();
+    for (spec, scales) in [("qsgd-mn-4", None), ("qsgd-mn-ts-2-6", Some(ts_scales))] {
+        let method = Method::parse(spec).unwrap();
+        let mut plane = build_plane(&method, &ControlConfig::new(3), n, &[]).unwrap();
+
+        let mut ec = ElasticConfig::strict();
+        ec.faults = FaultPlan::parse("leave=2@1,join=2@4").unwrap();
+        let mut cohort = ElasticCohort::new(ec, m).unwrap();
+
+        let mut grng = Rng::new(0xE1A5).derive(&[0x67]);
+        for step in 0..6usize {
+            let grads: Vec<Vec<f32>> = (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    grng.fill_normal_f32(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+
+            let plan = cohort.plan_step(step, 1.0);
+            let expect_live: Vec<usize> =
+                if (1..4).contains(&step) { vec![0, 1, 3] } else { vec![0, 1, 2, 3] };
+            assert_eq!(plan.live, expect_live, "{spec} step {step}: cohort");
+            assert_eq!(
+                plan.rejoined,
+                if step == 4 { vec![2usize] } else { vec![] },
+                "{spec} step {step}: rejoin bookkeeping"
+            );
+
+            let sub: Vec<&[f32]> = plan.live.iter().map(|&w| refs[w]).collect();
+            let mut net = NetConfig::flat(plan.live.len(), 10.0);
+            net.algo = Algo::Ring;
+            let mut clock = SimClock::default();
+            let step_seed = 0xE1A5 ^ step as u64;
+            let got = {
+                let mut ctx = StepCtx::new(&net, &mut clock);
+                let mut rng = Rng::new(step_seed);
+                plane.aggregate_cohort(&sub, &plan.live, &mut ctx, &mut rng)
+            };
+
+            let want = match &scales {
+                None => reference_qsgd_ids(&sub, &plan.live, 4, step_seed, Algo::Ring),
+                Some(sc) => {
+                    reference_multiscale_ids(&sub, &plan.live, sc, step_seed, Algo::Ring)
+                }
+            };
+            if got != want {
+                let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                panic!(
+                    "{spec} step {step} (live {:?}): first diff at {bad}: {} vs {}",
+                    plan.live, got[bad], want[bad]
+                );
+            }
+            // the rejoined (and final) full-cohort steps equal the plain
+            // positional reference too — the id-keyed seam leaves no residue
+            if step >= 4 {
+                let full = match &scales {
+                    None => reference_qsgd(&refs, 4, step_seed, Algo::Ring),
+                    Some(sc) => reference_multiscale(&refs, sc, step_seed, Algo::Ring),
+                };
+                assert_eq!(got, full, "{spec} step {step}: full-M reference");
+            }
+            cohort.commit(&plan);
+        }
+    }
+}

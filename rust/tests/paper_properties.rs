@@ -491,3 +491,138 @@ fn grandk_variance_bound_through_packed_plane() {
         vnorm2 + qbound * 1.1
     );
 }
+
+// ---------------------------------------------------------------------------
+// PR 6: elastic cohort — churn-step unbiasedness over the LIVE mean
+// ---------------------------------------------------------------------------
+
+/// One partial-cohort step through the plane: survivors' slices over a wire
+/// sized to the live count, uniform streams keyed by ORIGINAL worker id.
+fn run_cohort_step(
+    agg: &mut dyn Aggregator,
+    grads: &[Vec<f32>],
+    live: &[usize],
+    seed: u64,
+) -> Vec<f32> {
+    let sub: Vec<&[f32]> = live.iter().map(|&w| grads[w].as_slice()).collect();
+    let mut net = NetConfig::flat(live.len(), 10.0);
+    net.algo = Algo::Ring;
+    let mut clock = SimClock::default();
+    let mut ctx = StepCtx::new(&net, &mut clock);
+    ctx.ring_width = RingWidth::Auto;
+    let mut rng = Rng::new(seed);
+    agg.aggregate_cohort(&sub, live, &mut ctx, &mut rng)
+}
+
+/// Monte-Carlo mean of the cohort aggregate against the LIVE workers' mean,
+/// same 5-standard-error gate as [`assert_unbiased`].
+#[allow(clippy::too_many_arguments)]
+fn assert_unbiased_cohort(
+    agg: &mut dyn Aggregator,
+    grads: &[Vec<f32>],
+    live: &[usize],
+    want: &[f32],
+    per_step_sd: f64,
+    trials: usize,
+    seed0: u64,
+    label: &str,
+) {
+    let n = want.len();
+    let mut acc = vec![0.0f64; n];
+    for t in 0..trials {
+        let out = run_cohort_step(agg, grads, live, seed0 + t as u64);
+        for i in 0..n {
+            acc[i] += out[i] as f64;
+        }
+    }
+    let tol = (5.0 * per_step_sd / (trials as f64).sqrt()).max(1e-6);
+    for i in 0..n {
+        let est = acc[i] / trials as f64;
+        assert!(
+            (est - want[i] as f64).abs() <= tol,
+            "{label}: E[out[{i}]] = {est} vs {} (tol {tol})",
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn elastic_partial_cohort_unbiased_over_the_live_mean_all_bucketable_methods() {
+    // PR 6: the renormalized partial all-reduce is an unbiased estimator of
+    // the LIVE workers' mean, for every bucketable method. With survivors
+    // {0, 1, 3} of M=4, the id-keyed uniform streams and the live-M decode
+    // fold must leave E[aggregate_cohort] = mean over the survivors — the
+    // dropped worker contributes neither mass nor norm.
+    use repro::control::{ControlConfig, GradientControlPlane};
+    use repro::runtime::contiguous_segments as segs_of;
+
+    let (m, n, k) = (4usize, 64usize, 16usize);
+    let live = [0usize, 1, 3];
+    let lm = live.len() as f64;
+    let grads = fixed_grads(0xC4A93, m, n);
+    let live_grads: Vec<Vec<f32>> = live.iter().map(|&w| grads[w].clone()).collect();
+    let want = mean_of(&live_grads);
+    let wmax = max_norm(&live_grads) as f64;
+    let gmax = live_grads
+        .iter()
+        .flat_map(|v| v.iter())
+        .fold(0.0f32, |a, b| a.max(b.abs())) as f64;
+    // dominant GRandK spread: the n/K-rescaled Bernoulli selection
+    let sparse_sd = gmax * n as f64 / k as f64;
+    let segs = segs_of(&[16usize, 16, 16, 16]);
+
+    let mut single = GradientControlPlane::new(ControlConfig::new(3), 4, n, &segs).unwrap();
+    let s4 = kernels::s_for_bits(4) as f64;
+    assert_unbiased_cohort(
+        &mut single,
+        &grads,
+        &live,
+        &want,
+        wmax / (s4 * lm.sqrt()),
+        1500,
+        210_000,
+        "cohort QSGD-MN-4",
+    );
+
+    let mut multi =
+        GradientControlPlane::new_multiscale(ControlConfig::new(3), &[2, 6], n, &segs).unwrap();
+    // worst case: every coordinate at the small scale s_min = s(2 bits) = 1
+    assert_unbiased_cohort(
+        &mut multi,
+        &grads,
+        &live,
+        &want,
+        wmax / (1.0 * lm.sqrt()),
+        2500,
+        230_000,
+        "cohort QSGD-MN-TS-(2,6)",
+    );
+
+    let mut sparse =
+        GradientControlPlane::new_randk(ControlConfig::new(3), 8, k, n, &segs).unwrap();
+    sparse.set_rescale(true);
+    assert_unbiased_cohort(
+        &mut sparse,
+        &grads,
+        &live,
+        &want,
+        sparse_sd,
+        8000,
+        250_000,
+        "cohort GRandK-MN-8 (rescaled)",
+    );
+
+    let mut sparse_ts =
+        GradientControlPlane::new_randk_ts(ControlConfig::new(3), &[4, 8], k, n, &segs).unwrap();
+    sparse_ts.set_rescale(true);
+    assert_unbiased_cohort(
+        &mut sparse_ts,
+        &grads,
+        &live,
+        &want,
+        sparse_sd,
+        8000,
+        270_000,
+        "cohort GRandK-MN-TS-(4,8) (rescaled)",
+    );
+}

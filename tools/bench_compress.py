@@ -5,11 +5,14 @@ Runs `cargo bench --bench micro_compressors` and `--bench micro_collectives`
 (release profile, custom harness) with REPRO_BENCH_JSON pointed at temp
 files, merges the two reports, and writes `BENCH_compress.json` at the repo
 root so the perf trajectory is tracked from this PR onward. Also runs
-`--bench micro_overlap` (the PR 4 bucketed control plane's overlap gate) and
-writes its report separately as `BENCH_overlap.json`.
+`--bench micro_overlap` (the PR 4 bucketed control plane's overlap gate,
+-> `BENCH_overlap.json`) and `--bench micro_faults` (the PR 6 straggler
+scenario: strict-sync vs timeout-into-partial under seeded jitter,
+-> `BENCH_faults.json`).
 
 Usage:
-    python3 tools/bench_compress.py [--n COORDS] [--out PATH] [--out-overlap PATH]
+    python3 tools/bench_compress.py [--n COORDS] [--out PATH]
+        [--out-overlap PATH] [--out-faults PATH]
 
 The acceptance gates this file evidences (ISSUE 1):
   * >= 4x throughput on pack/unpack vs the scalar reference;
@@ -78,6 +81,11 @@ def main() -> int:
         default=os.path.join(REPO_ROOT, "BENCH_overlap.json"),
         help="overlap report path (default: repo-root BENCH_overlap.json)",
     )
+    ap.add_argument(
+        "--out-faults",
+        default=os.path.join(REPO_ROOT, "BENCH_faults.json"),
+        help="straggler report path (default: repo-root BENCH_faults.json)",
+    )
     args = ap.parse_args()
 
     compressors, _ = run_bench("micro_compressors", args.n)
@@ -133,7 +141,30 @@ def main() -> int:
         f.write("\n")
     print(f"wrote {args.out_overlap}")
 
+    # Straggler bench, same non-required pattern: micro_faults asserts its
+    # hard gate after emitting JSON, so a regression shows up as a FAIL row.
+    faults, faults_rc = run_bench("micro_faults", args.n, required=False)
+
+    # fault gate: partial == strict at jitter 0, partial < strict at >= 10%
+    faults_gate = (
+        faults_rc == 0
+        and bool(faults.get("entries"))
+        and all(e.get("gate_pass", 0.0) == 1.0 for e in faults.get("entries", []))
+    )
+    faults_report = {
+        "schema": "repro-bench-faults-v1",
+        "generated_unix": report["generated_unix"],
+        "machine": report["machine"],
+        "gates": {"partial_beats_strict_under_jitter": faults_gate},
+        "micro_faults": faults,
+    }
+    with open(args.out_faults, "w") as f:
+        json.dump(faults_report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out_faults}")
+
     gates["bucketed_le_monolithic"] = overlap_gate
+    gates["partial_beats_strict_under_jitter"] = faults_gate
     for k, ok in gates.items():
         print(f"  {k}: {'PASS' if ok else 'FAIL'}")
     return 0 if all(gates.values()) else 1
