@@ -1,0 +1,145 @@
+//! Integrity smoke bench (PR 7, CI-gated): what hop-segment checksums and
+//! retransmit-based healing cost on the packed plane — 4-bit QSGD-MN, one
+//! bucket, 8 workers, 10 Gbps flat Ethernet, n = 2^20 coordinates.
+//!
+//! Hard gates, all deterministic (the wire model is analytic and the fault
+//! draws are pure functions of `(seed, step, worker, hop, attempt)`):
+//!   * checksum overhead: integrity ON over a clean wire adds <= 2% to the
+//!     wire ledger at 4 bits, with the aggregate bit-identical to OFF;
+//!   * recovery beats redo: healing a corrupted step (backoff + resent hop
+//!     segments) costs less simulated time than re-running the whole
+//!     collective — the naive alternative to hop-level retransmission.
+//!
+//! Set `REPRO_BENCH_JSON=<path>` to emit the numbers as JSON (consumed by
+//! `tools/bench_compress.py` -> `BENCH_integrity.json`).
+
+use repro::collectives::{packed, IntegrityConfig, StepCtx};
+use repro::compress::Aggregator;
+use repro::control::{ControlConfig, GradientControlPlane};
+use repro::netsim::{Algo, FaultPlan, HopFault, NetConfig, SimClock};
+use repro::util::json::{num, obj, s as js, Json};
+use repro::util::rng::Rng;
+
+fn run_once(
+    grads: &[Vec<f32>],
+    n: usize,
+    buckets: usize,
+    bits: usize,
+    gbps: f64,
+    integrity: Option<IntegrityConfig>,
+    faults: Option<(&FaultPlan, usize)>,
+) -> (Vec<f32>, SimClock) {
+    let m = grads.len();
+    let plane = GradientControlPlane::new(ControlConfig::new(buckets), bits, n, &[]);
+    let mut plane = plane.expect("control plane");
+    let net = NetConfig::flat(m, gbps);
+    let mut clock = SimClock::default();
+    let out = {
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.integrity = integrity;
+        ctx.wire_faults = faults;
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let mut rng = Rng::new(0x1D3A);
+        plane.aggregate(&refs, &mut ctx, &mut rng)
+    };
+    (out, clock)
+}
+
+fn main() {
+    let n: usize = std::env::var("REPRO_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 20);
+    let (m, bits, buckets, gbps) = (8usize, 4usize, 1usize, 10.0);
+    let icfg = IntegrityConfig::default();
+
+    let mut rng = Rng::new(0x16B1);
+    let grads: Vec<Vec<f32>> = (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    println!(
+        "=== hop-segment integrity overhead + recovery (n={n}, M={m}, {bits}-bit, \
+         {buckets} bucket, {gbps} Gbps, retries={}, backoff={}s) ===",
+        icfg.max_retries, icfg.backoff_base_s
+    );
+
+    // --- gate 1: checksum overhead over a clean wire
+    let (out_off, clk_off) = run_once(&grads, n, buckets, bits, gbps, None, None);
+    let (out_on, clk_on) = run_once(&grads, n, buckets, bits, gbps, Some(icfg), None);
+    let overhead = (clk_on.bits_per_worker - clk_off.bits_per_worker) / clk_off.bits_per_worker;
+    let parity = out_on == out_off;
+    let gate_overhead = parity && overhead <= 0.02 && clk_on.retrans_bits == 0.0;
+    println!(
+        "checksum: {:>12.0} -> {:>12.0} bits/worker  (+{:.4}%)  output {}  gate {}",
+        clk_off.bits_per_worker,
+        clk_on.bits_per_worker,
+        overhead * 100.0,
+        if parity { "bit-equal" } else { "DIVERGED" },
+        if gate_overhead { "ok" } else { "FAIL" }
+    );
+
+    // --- gate 2: healing a corrupted step vs redoing the whole collective
+    let plan = FaultPlan::wire(0x9E7A, 0.02, 0.02);
+    let hops = packed::schedule_for(Algo::Ring, false, 1).as_dyn().hops(m);
+    let step = (0..256)
+        .find(|&s| {
+            (0..m).any(|w| (0..hops).any(|h| plan.hop_fault(s, w, h, 0) != HopFault::None))
+        })
+        .expect("a 4% per-hop fault rate must fire within 256 steps");
+    let (out_faulty, clk_faulty) =
+        run_once(&grads, n, buckets, bits, gbps, Some(icfg), Some((&plan, step)));
+    let healed = out_faulty == out_on;
+    let recovery_s = clk_faulty.retrans_s;
+    let redo_s = clk_faulty.comm_s; // price of re-running the collective
+    let gate_recovery = healed && recovery_s > 0.0 && recovery_s < redo_s;
+    println!(
+        "recovery: step {step}: {:.6}s retransmit vs {:.6}s full redo  \
+         ({:.0} bits resent)  output {}  gate {}",
+        recovery_s,
+        redo_s,
+        clk_faulty.retrans_bits,
+        if healed { "healed" } else { "DIVERGED" },
+        if gate_recovery { "ok" } else { "FAIL" }
+    );
+
+    if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
+        let json = obj(vec![
+            ("schema", js("repro-micro-integrity-v1")),
+            ("n", num(n as f64)),
+            ("workers", num(m as f64)),
+            ("bits", num(bits as f64)),
+            ("buckets", num(buckets as f64)),
+            ("net_gbps", num(gbps)),
+            ("max_retries", num(icfg.max_retries as f64)),
+            ("backoff_base_s", num(icfg.backoff_base_s)),
+            ("bits_per_worker_off", num(clk_off.bits_per_worker)),
+            ("bits_per_worker_on", num(clk_on.bits_per_worker)),
+            ("checksum_overhead_frac", num(overhead)),
+            ("fault_step", num(step as f64)),
+            ("retrans_s", num(recovery_s)),
+            ("redo_comm_s", num(redo_s)),
+            ("retrans_bits", num(clk_faulty.retrans_bits)),
+            ("gate_overhead_pass", num(gate_overhead as u8 as f64)),
+            ("gate_recovery_pass", num(gate_recovery as u8 as f64)),
+        ]);
+        std::fs::write(&path, json.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+
+    assert!(
+        gate_overhead,
+        "integrity gate failed: checksums must cost <= 2% wire bits and keep the \
+         aggregate bit-identical"
+    );
+    assert!(
+        gate_recovery,
+        "integrity gate failed: hop-level retransmission must heal bit-identically \
+         and beat a full-step redo"
+    );
+    println!("\nintegrity gate: <= 2% checksum overhead, recovery < full redo, bit-equal output");
+}

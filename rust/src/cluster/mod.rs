@@ -14,9 +14,11 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::collectives::StepCtx;
+use crate::collectives::{IntegrityConfig, StepCtx};
 use crate::compress::{Aggregator, Method};
-use crate::control::{self, CohortPolicy, ControlConfig, ElasticCohort, ElasticConfig};
+use crate::control::{
+    self, guard, AnomalyPolicy, CohortPolicy, ControlConfig, ElasticCohort, ElasticConfig,
+};
 use crate::data::{CifarLike, MarkovCorpus};
 use crate::metrics::StepRecord;
 use crate::netsim::{NetConfig, SimClock};
@@ -50,6 +52,16 @@ pub struct ClusterConfig {
     /// cohort of PRs 1-5. Requires the control plane (the monolithic
     /// aggregators are not cohort-aware).
     pub elastic: Option<ElasticConfig>,
+    /// hop-segment integrity on the packed plane (CLI `--integrity`/
+    /// `--retries`/`--backoff-s`): checksum every hop segment, retransmit
+    /// corrupted/lost hops with bounded backoff, and escalate peers that
+    /// exhaust their retries into the elastic partial-cohort path. `None`
+    /// trusts the wire — every pre-PR 7 path stays bit-identical.
+    pub integrity: Option<IntegrityConfig>,
+    /// what a non-finite local gradient does to the step (CLI
+    /// `--on-anomaly skip|clip:C|abort`); the pre-encode scan itself runs
+    /// on every step and is a pure read on clean cohorts
+    pub on_anomaly: AnomalyPolicy,
 }
 
 impl ClusterConfig {
@@ -68,6 +80,8 @@ impl ClusterConfig {
             sim_compute_s: None,
             control: None,
             elastic: None,
+            integrity: None,
+            on_anomaly: AnomalyPolicy::Skip,
         }
     }
 }
@@ -218,7 +232,7 @@ impl Cluster {
 
         // ---- 1. compute (single vmapped PJRT call)
         let t0 = std::time::Instant::now();
-        let out = self.step_fn.run(
+        let mut out = self.step_fn.run(
             &self.rt,
             &self.params,
             x_f32.as_deref(),
@@ -233,6 +247,73 @@ impl Cluster {
         let sim_compute = self.cfg.sim_compute_s.unwrap_or(wall_compute);
         self.clock.compute_s += sim_compute;
 
+        // ---- 1b. deterministic gradient poison (`--faults poison=W@S`):
+        // applied to the raw local gradients before the pre-encode scan,
+        // exactly where a real fp16 overflow or DMA corruption would land
+        if let Some(ec) = &self.cfg.elastic {
+            for w in 0..m {
+                if ec.faults.poisoned(step, w) && p > 0 {
+                    let g = &mut out.grads[w * p..(w + 1) * p];
+                    g[0] = f32::NAN;
+                    if p > 1 {
+                        g[p / 2] = f32::INFINITY;
+                    }
+                }
+            }
+        }
+
+        // ---- 1c. pre-encode anomaly guard: a clean scan is a pure read
+        // (bit-identical on every existing path); a dirty one is gated by
+        // --on-anomaly before a single level is drawn or bit charged.
+        {
+            let view: Vec<&[f32]> = (0..m).map(|w| &out.grads[w * p..(w + 1) * p]).collect();
+            if let Some(hit) = guard::scan(&view) {
+                match self.cfg.on_anomaly {
+                    AnomalyPolicy::Abort => bail!(
+                        "non-finite gradient at step {step}: worker {} index {} = {}",
+                        hit.worker,
+                        hit.index,
+                        hit.value
+                    ),
+                    AnomalyPolicy::Skip => {
+                        // drop the whole round: compute happened (and stays
+                        // charged), but nothing reaches the encoder, the
+                        // wire, or the optimizer, and the elastic cohort is
+                        // not planned — the step simply never synchronized
+                        let loss =
+                            out.losses.iter().map(|l| *l as f64).sum::<f64>() / m as f64;
+                        return Ok(StepRecord {
+                            step,
+                            loss,
+                            lr: self.sched.at(step),
+                            t_compute: sim_compute,
+                            t_encode: 0.0,
+                            t_decode: 0.0,
+                            t_comm_sim: 0.0,
+                            bits_per_worker: 0.0,
+                            overlap_frac: 0.0,
+                            live_workers: m,
+                            straggler_wait_s: 0.0,
+                            staleness: 0,
+                            retrans_bits: 0.0,
+                            retrans_s: 0.0,
+                            skipped: true,
+                        });
+                    }
+                    AnomalyPolicy::Clip(c) => {
+                        // sanitize ONLY the offending workers: clean peers'
+                        // gradients must stay bit-identical
+                        for w in 0..m {
+                            let g = &mut out.grads[w * p..(w + 1) * p];
+                            if g.iter().any(|x| !x.is_finite()) {
+                                guard::sanitize_clip(g, c);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
         // ---- 2. aggregate
         let grads: Vec<&[f32]> = (0..m).map(|w| &out.grads[w * p..(w + 1) * p]).collect();
         let mut step_clock = SimClock::default();
@@ -242,6 +323,9 @@ impl Cluster {
             None => {
                 let mut ctx = StepCtx::new(&self.net, &mut step_clock);
                 ctx.wire_floor_bits = self.cfg.wire_floor_bits;
+                // checksum accounting works on the fixed cohort too; with
+                // no fault plan there is nothing to retransmit
+                ctx.integrity = self.cfg.integrity;
                 // the backward window of this step — the compute the
                 // bucketed control plane's overlap scheduler may hide
                 // communication behind
@@ -253,12 +337,41 @@ impl Cluster {
                 // under the fault plan, and decides who synchronizes; the
                 // wire re-derives for the live cohort (ring/tree hops and
                 // the packed resident width follow net.workers)
-                let plan = cohort.plan_step(step, sim_compute);
+                let mut plan = cohort.plan_step(step, sim_compute);
+                let faults = cohort.faults().clone();
+                // PR 7 escalation: a peer whose hop deliveries exhaust every
+                // integrity retry is unreachable THIS step. Decide that now,
+                // from the same pure draws the charging walk replays, drop
+                // the peer into the PR 6 partial-cohort path (live-M
+                // renormalization for free), and charge the full detection
+                // ladder — R+1 sends' worth of backoff — per dead peer.
+                let mut escalation_s = 0.0;
+                if let Some(icfg) = self.cfg.integrity {
+                    if plan.sync && (faults.loss > 0.0 || faults.flip > 0.0) {
+                        let hops = crate::collectives::packed::schedule_for(self.net.algo, false, 1)
+                            .as_dyn()
+                            .hops(plan.live.len().max(1));
+                        let dead = faults.unreachable_peers(
+                            step,
+                            &plan.live,
+                            hops,
+                            icfg.max_retries,
+                        );
+                        if !dead.is_empty() {
+                            cohort.drop_unreachable(&mut plan, &dead);
+                            escalation_s += dead.len() as f64
+                                * icfg.backoff_base_s
+                                * (2f64.powi(icfg.max_retries as i32 + 1) - 1.0);
+                        }
+                    }
+                }
                 let live_m = plan.live.len();
-                let step_net =
-                    cohort.faults().net_for_step(&self.net, step, live_m.max(1));
+                let step_net = faults.net_for_step(&self.net, step, live_m.max(1));
                 let mut ctx = StepCtx::new(&step_net, &mut step_clock);
                 ctx.wire_floor_bits = self.cfg.wire_floor_bits;
+                ctx.integrity = self.cfg.integrity;
+                ctx.wire_faults = Some((&faults, step));
+                ctx.clock.retrans_s += escalation_s;
                 if !plan.rejoined.is_empty() {
                     // one tree broadcast of the fp32 parameters serves
                     // every rejoiner; time-only — the bits ledgers stay
@@ -318,6 +431,8 @@ impl Cluster {
         self.clock.bits_per_worker += step_clock.bits_per_worker;
         self.clock.hop_bits_per_worker += step_clock.hop_bits_per_worker;
         self.clock.hidden_comm_s += step_clock.hidden_comm_s;
+        self.clock.retrans_s += step_clock.retrans_s;
+        self.clock.retrans_bits += step_clock.retrans_bits;
 
         let loss = out.losses.iter().map(|l| *l as f64).sum::<f64>() / m as f64;
         Ok(StepRecord {
@@ -333,6 +448,9 @@ impl Cluster {
             live_workers,
             straggler_wait_s,
             staleness,
+            retrans_bits: step_clock.retrans_bits,
+            retrans_s: step_clock.retrans_s,
+            skipped: false,
         })
     }
 
@@ -409,6 +527,9 @@ pub fn run_training(
         t_decode: clock.decode_s,
         t_comm_sim: clock.comm_s,
         t_straggler_wait: clock.straggler_wait_s,
+        t_retrans: clock.retrans_s,
+        retrans_bits: clock.retrans_bits,
+        skipped_steps: records.iter().filter(|r| r.skipped).count(),
     };
     Ok((records, summary))
 }

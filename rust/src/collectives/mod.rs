@@ -17,12 +17,13 @@
 pub mod packed;
 
 use crate::compress::bitpack::{self, Packed};
-use crate::netsim::{NetConfig, RingWidth, SimClock};
+use crate::netsim::{FaultPlan, HopFault, NetConfig, RingWidth, SimClock};
 use crate::tensor::LevelInt;
 
 pub use packed::{
-    allreduce_sum_packed_sched, ring_allreduce_sum_packed, NaiveReduce, PackedReduce,
-    PackedSchedule, PlaneTraffic, RingFixed, RingGrowing, RingTraffic, TreeReduce,
+    allreduce_sum_packed_sched, corrupt_word, ring_allreduce_sum_packed, xor_fold_checksum,
+    IntegrityConfig, NaiveReduce, PackedReduce, PackedSchedule, PlaneTraffic, RingFixed,
+    RingGrowing, RingTraffic, TreeReduce, CHECKSUM_BYTES,
 };
 
 /// Elementwise sum all-reduce via the ring schedule, generic over the
@@ -234,6 +235,16 @@ pub struct StepCtx<'a> {
     /// information — every aggregator charges fully exposed comm, exactly
     /// the pre-PR-4 behaviour.
     pub backward_s: Option<f64>,
+    /// Hop-segment integrity policy (PR 7). `Some` makes every packed hop
+    /// ship a [`packed::xor_fold_checksum`] ([`packed::CHECKSUM_BYTES`]
+    /// charged byte-exact per hop on both ledgers) and enables the
+    /// retransmit walk against `wire_faults`. `None` (the default) keeps
+    /// every charge bit-identical to the pre-integrity plane.
+    pub integrity: Option<IntegrityConfig>,
+    /// The fault plan and step the retransmit walk draws wire faults from.
+    /// `None` (or a plan with `loss = flip = 0`) means a clean wire: no
+    /// retransmit charges at all.
+    pub wire_faults: Option<(&'a FaultPlan, usize)>,
 }
 
 impl<'a> StepCtx<'a> {
@@ -244,6 +255,8 @@ impl<'a> StepCtx<'a> {
             wire_floor_bits: None,
             ring_width: RingWidth::Auto,
             backward_s: None,
+            integrity: None,
+            wire_faults: None,
         }
     }
 
@@ -403,6 +416,70 @@ impl<'a> StepCtx<'a> {
         for h in 0..sched.hops(m) {
             self.clock.hop_bits_per_worker +=
                 sched.hop_wire_bytes(h, elems, resident_bits, m) * 8.0;
+        }
+        self.charge_integrity(sched, elems, resident_bits);
+    }
+
+    /// Integrity + retransmit charge of one packed collective (PR 7);
+    /// a strict no-op when [`StepCtx::integrity`] is `None`.
+    ///
+    /// **Checksum:** every hop segment carries [`packed::CHECKSUM_BYTES`]
+    /// of [`packed::xor_fold_checksum`], charged on both bit ledgers and —
+    /// since the checksum rides the hop's existing packet — as the
+    /// bandwidth-only increment `hop_s(seg + 8) - hop_s(seg)` on `comm_s`
+    /// (no extra α per hop). With a clean wire the whole charge is the
+    /// closed form `64 * hops` bits the parity tests pin.
+    ///
+    /// **Retransmit walk:** with wire faults armed, each cohort slot's
+    /// delivery of each hop draws its fate per attempt from the fault
+    /// plan's pure `(seed, step, worker, hop, attempt)` stream. `f`
+    /// leading failures trigger `min(f, max_retries)` retransmits, each
+    /// charged its exponential-backoff rung plus the checksummed segment's
+    /// full wire time (a retransmit is a fresh packet: α included) into
+    /// `retrans_s` / `retrans_bits`. A slot that exhausts every retry here
+    /// is still charged the full ladder but not dropped — membership is
+    /// decided *before* aggregation by the cluster's escalation predicate
+    /// ([`FaultPlan::unreachable_peers`], keyed by original worker id; this
+    /// walk is keyed by cohort slot, which coincides on the identity
+    /// cohort the closed-form tests use). `retrans_bits` is a cohort
+    /// total, unlike per-worker `bits_per_worker`.
+    fn charge_integrity(&mut self, sched: &dyn PackedReduce, elems: usize, resident_bits: u32) {
+        let Some(cfg) = self.integrity else { return };
+        let m = self.net.workers.max(1);
+        if m <= 1 || elems == 0 {
+            return;
+        }
+        let hops = sched.hops(m);
+        let csum_bits = (8 * CHECKSUM_BYTES * hops) as f64;
+        self.clock.bits_per_worker += csum_bits;
+        self.clock.hop_bits_per_worker += csum_bits;
+        for h in 0..hops {
+            let seg = sched.hop_wire_bytes(h, elems, resident_bits, m);
+            self.clock.comm_s +=
+                self.net.hop_s(seg + CHECKSUM_BYTES as f64) - self.net.hop_s(seg);
+        }
+        let Some((plan, step)) = self.wire_faults else { return };
+        if plan.loss <= 0.0 && plan.flip <= 0.0 {
+            return;
+        }
+        for h in 0..hops {
+            let seg_bytes =
+                sched.hop_wire_bytes(h, elems, resident_bits, m) + CHECKSUM_BYTES as f64;
+            for w in 0..m {
+                let mut failed = 0u32;
+                while failed <= cfg.max_retries
+                    && plan.hop_fault(step, w, h, failed) != HopFault::None
+                {
+                    failed += 1;
+                }
+                let sent = failed.min(cfg.max_retries);
+                if sent > 0 {
+                    self.clock.retrans_bits += sent as f64 * 8.0 * seg_bytes;
+                    self.clock.retrans_s += cfg.backoff_base_s
+                        * (2f64.powi(sent as i32) - 1.0)
+                        + sent as f64 * self.net.hop_s(seg_bytes);
+                }
+            }
         }
     }
 
@@ -711,6 +788,94 @@ mod tests {
             clock.hop_bits_per_worker
         };
         assert!(hop_bits(&RingGrowing { lmax }) < hop_bits(&RingFixed));
+    }
+
+    #[test]
+    fn integrity_checksum_charge_matches_closed_form_per_schedule() {
+        // clean wire, integrity on: both bit ledgers gain exactly 64 bits
+        // per hop, comm_s gains the bandwidth-only increment of 8 bytes per
+        // hop, and nothing lands on the retransmit books.
+        let m = 4;
+        let elems = 1000usize;
+        let bits = 6u32;
+        let net = NetConfig::flat(m, 10.0);
+        for sched in [
+            PackedSchedule::RingFixed(RingFixed),
+            PackedSchedule::RingGrowing(RingGrowing { lmax: 7 }),
+            PackedSchedule::Tree(TreeReduce),
+            PackedSchedule::Naive(NaiveReduce),
+        ] {
+            let s = sched.as_dyn();
+            let mut off = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut off);
+            ctx.charge_packed(s, elems, bits, 4.0);
+            let mut on = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut on);
+            ctx.integrity = Some(IntegrityConfig::default());
+            ctx.charge_packed(s, elems, bits, 4.0);
+            let hops = s.hops(m);
+            let csum = (8 * CHECKSUM_BYTES * hops) as f64;
+            assert_eq!(on.bits_per_worker, off.bits_per_worker + csum, "{}", s.name());
+            assert_eq!(on.hop_bits_per_worker, off.hop_bits_per_worker + csum, "{}", s.name());
+            let comm_delta: f64 = (0..hops)
+                .map(|h| {
+                    let seg = s.hop_wire_bytes(h, elems, bits, m);
+                    net.hop_s(seg + CHECKSUM_BYTES as f64) - net.hop_s(seg)
+                })
+                .sum();
+            assert_eq!(on.comm_s, off.comm_s + comm_delta, "{}", s.name());
+            assert_eq!(on.retrans_s, 0.0);
+            assert_eq!(on.retrans_bits, 0.0);
+        }
+    }
+
+    #[test]
+    fn retransmit_walk_charges_the_ladder_closed_form() {
+        // Replay the exact fault draws the walk consumes and rebuild its
+        // charge from the closed form: min(f, R) retransmits per (hop,
+        // slot), each paying its backoff rung + the checksummed segment's
+        // wire time.
+        use crate::netsim::FaultPlan;
+        let m = 4;
+        let elems = 1000usize;
+        let bits = 6u32;
+        let net = NetConfig::flat(m, 10.0);
+        let plan = FaultPlan::wire(0xF1, 0.15, 0.15);
+        let step = 3usize;
+        let cfg = IntegrityConfig::default();
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.integrity = Some(cfg);
+        ctx.wire_faults = Some((&plan, step));
+        let sched = RingFixed;
+        ctx.charge_packed(&sched, elems, bits, 4.0);
+        let (mut want_bits, mut want_s) = (0.0f64, 0.0f64);
+        for h in 0..sched.hops(m) {
+            let seg = sched.hop_wire_bytes(h, elems, bits, m) + CHECKSUM_BYTES as f64;
+            for w in 0..m {
+                let mut f = 0u32;
+                while f <= cfg.max_retries
+                    && plan.hop_fault(step, w, h, f) != crate::netsim::HopFault::None
+                {
+                    f += 1;
+                }
+                let sent = f.min(cfg.max_retries);
+                want_bits += sent as f64 * 8.0 * seg;
+                want_s += cfg.backoff_base_s * (2f64.powi(sent as i32) - 1.0)
+                    + sent as f64 * net.hop_s(seg);
+            }
+        }
+        assert!(want_bits > 0.0, "p=0.3 over 24 hop-slots should fault somewhere");
+        assert_eq!(clock.retrans_bits, want_bits);
+        assert_eq!(clock.retrans_s, want_s);
+        // integrity off: the same faulty plan charges nothing — the wire
+        // has no checksum to detect with, so the books stay clean
+        let mut off = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut off);
+        ctx.wire_faults = Some((&plan, step));
+        ctx.charge_packed(&sched, elems, bits, 4.0);
+        assert_eq!(off.retrans_bits, 0.0);
+        assert_eq!(off.retrans_s, 0.0);
     }
 
     #[test]

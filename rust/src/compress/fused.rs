@@ -413,6 +413,10 @@ pub fn qsgd_step_packed_with_uniforms(
         sum_fits::<i32>(s, m),
         "widening rule: {m} workers x s={s} overflows i32"
     );
+    // release-mode backstop behind the pre-encode GradGuard scan: a
+    // non-finite shared norm poisons every level drawn from it, so fail
+    // loudly here rather than ship garbage codes
+    assert!(wnorm.is_finite(), "non-finite gradient norm reached the encoder: {wnorm}");
     debug_assert!(uni.len() == m && uni.iter().all(|u| u.len() >= n));
     let rbits = bitpack::packed_sum_bits(s.max(1), m);
     let sched = ctx.packed_schedule(s.max(1), m, n);
@@ -508,6 +512,9 @@ pub fn multiscale_step_packed_with_uniforms(
         sum_fits::<i32>(lmax, m),
         "widening rule: {m} workers x lmax={lmax} overflows i32"
     );
+    // release-mode backstop behind the pre-encode GradGuard scan (see
+    // qsgd_step_packed_with_uniforms)
+    assert!(wnorm.is_finite(), "non-finite gradient norm reached the encoder: {wnorm}");
     debug_assert!(uni.len() == m && uni.iter().all(|u| u.len() >= n));
     debug_assert!(shared_idx.len() >= n);
     let rbits = bitpack::packed_sum_bits(lmax, m);

@@ -168,6 +168,9 @@ impl ElasticCohort {
         for e in &cfg.faults.events {
             ensure!(e.worker < m, "fault event for worker {} of {m}", e.worker);
         }
+        for p in &cfg.faults.poisons {
+            ensure!(p.worker < m, "poison event for worker {} of {m}", p.worker);
+        }
         Ok(ElasticCohort {
             cfg,
             m,
@@ -348,6 +351,31 @@ impl ElasticCohort {
         }
     }
 
+    /// Escalation seam of the self-healing data plane (PR 7): remove
+    /// `dead` peers — workers whose hop deliveries exhausted every
+    /// integrity retry this step ([`FaultPlan::unreachable_peers`], keyed
+    /// by original id) — from an already-planned sync step. The survivors
+    /// proceed through the same partial-cohort path a timeout drop takes
+    /// (live-M renormalization via `aggregate_cohort` for free); if they
+    /// fall below quorum the step degrades to a local step, exactly like a
+    /// quorum failure at plan time. Dropped peers are NOT removed from the
+    /// cluster — membership events stay the fault plan's business — so
+    /// they age like any other skipped participant at [`Self::commit`].
+    /// No-op on an empty `dead` set or a non-sync plan.
+    pub fn drop_unreachable(&self, plan: &mut StepPlan, dead: &[usize]) {
+        if dead.is_empty() || !plan.sync {
+            return;
+        }
+        plan.live.retain(|w| !dead.contains(w));
+        if plan.live.len() < self.cfg.quorum.max(1) {
+            // below quorum: degrade to a local step over the full
+            // membership, the same shape plan_step's quorum guard emits
+            plan.live = self.members();
+            plan.sync = false;
+            plan.straggler_wait_s = 0.0;
+        }
+    }
+
     /// Simulated cost of a rejoining worker's parameter catch-up: a tree
     /// broadcast of the fp32 parameter vector over the current wire,
     /// `ceil(log2 m)` hops of `4n` bytes. Charged to comm time only — the
@@ -391,6 +419,39 @@ mod tests {
         for bad in ["strict:1", "partial:-1", "periodic:0", "async", "partial:x"] {
             assert!(CohortPolicy::parse(bad).is_err(), "'{bad}' must be rejected");
         }
+    }
+
+    #[test]
+    fn drop_unreachable_respects_quorum_and_empty_sets() {
+        let cfg = ElasticConfig {
+            policy: CohortPolicy::StrictSync,
+            quorum: 2,
+            faults: FaultPlan::none(),
+        };
+        let mut c = ElasticCohort::new(cfg, 4).unwrap();
+
+        // empty dead set: the plan is untouched
+        let mut plan = c.plan_step(0, 0.2);
+        let before = plan.clone();
+        c.drop_unreachable(&mut plan, &[]);
+        assert_eq!(plan, before);
+
+        // above quorum: survivors keep syncing without the dead peers
+        c.drop_unreachable(&mut plan, &[1, 3]);
+        assert_eq!(plan.live, vec![0, 2]);
+        assert!(plan.sync);
+
+        // below quorum: degrade to a local step over the full membership
+        let mut plan = c.plan_step(1, 0.2);
+        c.drop_unreachable(&mut plan, &[0, 1, 2]);
+        assert!(!plan.sync);
+        assert_eq!(plan.live, vec![0, 1, 2, 3]);
+        assert_eq!(plan.straggler_wait_s, 0.0);
+
+        // a non-sync plan is left alone even with a dead list
+        let mut local = plan.clone();
+        c.drop_unreachable(&mut local, &[0, 1, 2, 3]);
+        assert_eq!(local, plan);
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Pre-encode numeric anomaly guard (PR 7): scan local gradients for
+//! NaN/Inf *before* a single level is drawn, and gate the step by policy.
+//!
+//! The paper's quantizers normalize by the shared `||w||_2`; one non-finite
+//! coordinate poisons that norm, and through it every worker's levels — the
+//! packed plane would then ship garbage codes that decode to garbage on all
+//! M ranks. The guard runs on the raw f32 gradients (a pure read: a clean
+//! step is bit-identical with or without it) and the policy decides what a
+//! dirty step does:
+//!
+//! * [`AnomalyPolicy::Skip`] — drop the step entirely: nothing is encoded,
+//!   nothing is charged to the wire, the optimizer state is untouched, and
+//!   the run ledger counts one skipped step;
+//! * [`AnomalyPolicy::Clip`] — zero the non-finite coordinates and rescale
+//!   each offending gradient to at most the configured L2 norm, then
+//!   proceed normally (the TensorFlow-style "clip instead of crash"
+//!   mitigation, cf. Tsuzuku et al., arXiv:1802.06058);
+//! * [`AnomalyPolicy::Abort`] — fail the run loudly (CI / debugging).
+//!
+//! Widening-rule overflow — the third anomaly class — is structurally
+//! excluded at aggregator construction (`sum_fits` asserts) and backstopped
+//! by the encoder's finite-norm assert, so the scan here only needs the
+//! float-domain checks.
+
+use anyhow::{bail, Result};
+
+/// What to do when the pre-encode scan finds a non-finite gradient.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AnomalyPolicy {
+    /// Drop the step: no encode, no wire charge, no update.
+    Skip,
+    /// Zero non-finite coordinates, clip the gradient to this L2 norm,
+    /// and continue the step.
+    Clip(f32),
+    /// Fail the run with an error naming the first offending coordinate.
+    Abort,
+}
+
+impl AnomalyPolicy {
+    /// Parse the CLI form: `skip` | `clip:C` | `abort`.
+    pub fn parse(spec: &str) -> Result<AnomalyPolicy> {
+        match spec.trim() {
+            "skip" => Ok(AnomalyPolicy::Skip),
+            "abort" => Ok(AnomalyPolicy::Abort),
+            other => match other.strip_prefix("clip:") {
+                Some(c) => {
+                    let c: f32 = c
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad clip norm '{c}'"))?;
+                    anyhow::ensure!(
+                        c.is_finite() && c > 0.0,
+                        "clip norm must be finite and > 0, got {c}"
+                    );
+                    Ok(AnomalyPolicy::Clip(c))
+                }
+                None => bail!("unknown anomaly policy '{other}' (expect skip|clip:C|abort)"),
+            },
+        }
+    }
+
+    /// Stable label for ledgers and summaries.
+    pub fn label(&self) -> String {
+        match self {
+            AnomalyPolicy::Skip => "skip".to_string(),
+            AnomalyPolicy::Clip(c) => format!("clip:{c}"),
+            AnomalyPolicy::Abort => "abort".to_string(),
+        }
+    }
+}
+
+/// First non-finite coordinate found by [`scan`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Anomaly {
+    /// Index into the scanned slice-of-workers (a cohort slot).
+    pub worker: usize,
+    /// Coordinate index within that worker's gradient.
+    pub index: usize,
+    /// The offending value (NaN or ±Inf).
+    pub value: f32,
+}
+
+/// Scan the cohort's local gradients for the first non-finite coordinate.
+/// Pure read — a clean cohort passes through with zero side effects, which
+/// is what keeps the guard parity-free on every existing path.
+pub fn scan(grads: &[&[f32]]) -> Option<Anomaly> {
+    for (w, g) in grads.iter().enumerate() {
+        if let Some(i) = g.iter().position(|x| !x.is_finite()) {
+            return Some(Anomaly { worker: w, index: i, value: g[i] });
+        }
+    }
+    None
+}
+
+/// Sanitize one gradient under [`AnomalyPolicy::Clip`]: zero every
+/// non-finite coordinate, then rescale to L2 norm `c` if the cleaned norm
+/// exceeds it. Returns true iff anything changed.
+pub fn sanitize_clip(grad: &mut [f32], c: f32) -> bool {
+    let mut changed = false;
+    for x in grad.iter_mut() {
+        if !x.is_finite() {
+            *x = 0.0;
+            changed = true;
+        }
+    }
+    let norm = grad.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32;
+    if norm > c {
+        let scale = c / norm;
+        for x in grad.iter_mut() {
+            *x *= scale;
+        }
+        changed = true;
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_finds_the_first_anomaly_and_passes_clean_cohorts() {
+        let a = vec![1.0f32, -2.0, 0.5];
+        let b = vec![0.0f32, f32::NAN, 3.0];
+        let c = vec![f32::INFINITY, 0.0, 0.0];
+        assert_eq!(scan(&[&a, &a]), None);
+        let hit = scan(&[&a, &b, &c]).expect("must find the NaN");
+        assert_eq!((hit.worker, hit.index), (1, 1));
+        assert!(hit.value.is_nan());
+        let hit = scan(&[&c]).unwrap();
+        assert_eq!((hit.worker, hit.index), (0, 0));
+        assert_eq!(hit.value, f32::INFINITY);
+        // empty cohorts and empty gradients are clean
+        assert_eq!(scan(&[]), None);
+        assert_eq!(scan(&[&[]]), None);
+    }
+
+    #[test]
+    fn sanitize_clip_zeros_nonfinite_then_bounds_the_norm() {
+        let mut g = vec![3.0f32, f32::NAN, 4.0, f32::NEG_INFINITY];
+        assert!(sanitize_clip(&mut g, 1.0));
+        // NaN/Inf zeroed, then [3,0,4,0] (norm 5) rescaled to norm 1
+        let norm = g.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-6);
+        assert!(g.iter().all(|x| x.is_finite()));
+        assert_eq!(g[1], 0.0);
+        assert_eq!(g[3], 0.0);
+        // already-clean, already-small gradients pass through untouched
+        let mut small = vec![0.1f32, -0.2];
+        let before = small.clone();
+        assert!(!sanitize_clip(&mut small, 10.0));
+        assert_eq!(small, before);
+        // clean but large: clipped without zeroing anything
+        let mut big = vec![30.0f32, 40.0];
+        assert!(sanitize_clip(&mut big, 5.0));
+        assert!((big[0] - 3.0).abs() < 1e-5 && (big[1] - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn policy_parses_and_labels_round_trip() {
+        assert_eq!(AnomalyPolicy::parse("skip").unwrap(), AnomalyPolicy::Skip);
+        assert_eq!(AnomalyPolicy::parse("abort").unwrap(), AnomalyPolicy::Abort);
+        assert_eq!(AnomalyPolicy::parse("clip:2.5").unwrap(), AnomalyPolicy::Clip(2.5));
+        for p in ["skip", "abort", "clip:2.5"] {
+            assert_eq!(AnomalyPolicy::parse(p).unwrap().label(), p);
+        }
+        for bad in ["", "clamp", "clip:", "clip:abc", "clip:-1", "clip:0", "clip:inf"] {
+            assert!(AnomalyPolicy::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+}

@@ -51,6 +51,7 @@
 pub mod bucket;
 pub mod elastic;
 pub mod feedback;
+pub mod guard;
 pub mod overlap;
 pub mod precision;
 
@@ -65,6 +66,7 @@ use crate::util::rng::Rng;
 pub use bucket::{Bucket, BucketPlan};
 pub use elastic::{CohortPolicy, ElasticCohort, ElasticConfig, StepPlan};
 pub use feedback::ErrorFeedback;
+pub use guard::{Anomaly, AnomalyPolicy};
 pub use overlap::OverlapReport;
 pub use precision::{
     shift_scale_bits, BitsPolicy, BucketStats, FixedBits, PerLayerBits, PrecisionController,

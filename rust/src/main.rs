@@ -13,14 +13,18 @@
 //!   repro train --model vgg_lite --method grandk-mn-ts-4-8 --buckets 8
 //!   repro train --model mlp --method qsgd-mn-4 --faults jitter=0.1,seed=7 \
 //!       --cohort-policy partial:0.25 --quorum 2
+//!   repro train --model mlp --method qsgd-mn-4 --faults loss=0.01,flip=0.001,seed=7 \
+//!       --integrity --retries 3 --backoff-s 50e-6
+//!   repro train --model mlp --method qsgd-mn-4 --faults poison=1@3 --on-anomaly clip:10
 //!   repro figures --fig 3 --steps 150
 //!   repro perfmodel --floor-bits 8
 
 use anyhow::{bail, Result};
 
 use repro::cli::Args;
+use repro::collectives::IntegrityConfig;
 use repro::compress::Method;
-use repro::control::{BitsPolicy, CohortPolicy, ControlConfig, ElasticConfig};
+use repro::control::{AnomalyPolicy, BitsPolicy, CohortPolicy, ControlConfig, ElasticConfig};
 use repro::netsim::FaultPlan;
 use repro::figures::{self, FigureOpts};
 use repro::runtime::Artifacts;
@@ -58,6 +62,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out_dir = args.get_or("out-dir", "results").to_string();
     let mut control = parse_control(args)?;
     let elastic = parse_elastic(args, workers)?;
+    let integrity = parse_integrity(args)?;
+    let on_anomaly = match args.get("on-anomaly") {
+        Some(spec) => AnomalyPolicy::parse(spec)?,
+        None => AnomalyPolicy::Skip,
+    };
     if elastic.is_some() && control.is_none() {
         // the elastic layer runs on the bucketed control plane (the
         // monolithic aggregators are not cohort-aware): default to one
@@ -75,6 +84,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     exp.out_dir = out_dir.into();
     exp.control = control;
     exp.elastic = elastic;
+    exp.integrity = integrity;
+    exp.on_anomaly = on_anomaly;
     let results = exp.run(&arts)?;
     let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
     println!("{}", summary_table(&summaries));
@@ -111,13 +122,18 @@ fn parse_control(args: &Args) -> Result<Option<ControlConfig>> {
 }
 
 /// Elastic-cohort options: `--faults SPEC` injects a deterministic fault
-/// plan (`jitter=F,seed=N,leave=W@S,join=W@S,outage=A..B@F`, or `none`),
-/// `--cohort-policy strict|partial[:FRAC]|periodic[:PERIOD]` picks how the
-/// cohort synchronizes under it, `--quorum N` sets the minimum cohort for
-/// a synchronizing step (below it the step degrades to local
-/// accumulation). Any one of the three enables the elastic layer; the
-/// defaults are strict sync, quorum 1, no faults — bit-identical to a
-/// non-elastic run.
+/// plan (`jitter=F,seed=N,leave=W@S,join=W@S,outage=A..B@F,loss=P,flip=P,
+/// poison=W@S`, or `none`), `--cohort-policy
+/// strict|partial[:FRAC]|periodic[:PERIOD]` picks how the cohort
+/// synchronizes under it, `--quorum N` sets the minimum cohort for a
+/// synchronizing step (below it the step degrades to local accumulation).
+/// The PR 7 data-plane clauses: `loss=P` drops each hop delivery with
+/// probability P, `flip=P` corrupts one bit of one packed word instead,
+/// `poison=W@S` plants NaN/Inf in worker W's step-S gradient (repeatable).
+/// `loss`/`flip` only have observable effect with `--integrity` on — a
+/// trusting wire delivers the payload regardless. Any one of the three
+/// flags enables the elastic layer; the defaults are strict sync, quorum
+/// 1, no faults — bit-identical to a non-elastic run.
 fn parse_elastic(args: &Args, workers: usize) -> Result<Option<ElasticConfig>> {
     let faults_spec = args.get("faults").map(str::to_string);
     let policy_spec = args.get("cohort-policy").map(str::to_string);
@@ -142,6 +158,37 @@ fn parse_elastic(args: &Args, workers: usize) -> Result<Option<ElasticConfig>> {
         "--quorum {quorum} outside 1..={workers}"
     );
     Ok(Some(ElasticConfig { policy, quorum, faults }))
+}
+
+/// Hop-segment integrity options: `--integrity` checksums every packed hop
+/// segment (64-bit xor-fold, charged byte-exact) and retransmits
+/// corrupted/lost hops, `--retries N` bounds the retransmit attempts per
+/// hop (default 3; a peer that exhausts them is escalated into the elastic
+/// partial-cohort path), `--backoff-s S` sets the exponential-backoff base
+/// (default 50e-6). The knobs without `--integrity` are rejected loudly.
+fn parse_integrity(args: &Args) -> Result<Option<IntegrityConfig>> {
+    let on = args.flag("integrity");
+    let retries_spec = args.get("retries").map(str::to_string);
+    let backoff_spec = args.get("backoff-s").map(str::to_string);
+    if !on {
+        anyhow::ensure!(
+            retries_spec.is_none() && backoff_spec.is_none(),
+            "--retries/--backoff-s need --integrity"
+        );
+        return Ok(None);
+    }
+    let mut cfg = IntegrityConfig::default();
+    if let Some(r) = retries_spec {
+        cfg.max_retries = r.parse()?;
+    }
+    if let Some(b) = backoff_spec {
+        cfg.backoff_base_s = b.parse()?;
+        anyhow::ensure!(
+            cfg.backoff_base_s.is_finite() && cfg.backoff_base_s >= 0.0,
+            "--backoff-s must be finite and >= 0"
+        );
+    }
+    Ok(Some(cfg))
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {

@@ -69,6 +69,16 @@ pub struct StepRecord {
     /// the fixed synchronous path; bounded by period-1 under periodic
     /// sync)
     pub staleness: usize,
+    /// cohort-total wire bits retransmitted this step after checksum
+    /// mismatches / losses (0 with integrity off or a clean wire)
+    pub retrans_bits: f64,
+    /// simulated recovery seconds this step: exponential backoff plus the
+    /// retransmitted hop time, plus the detection-timeout ladder for peers
+    /// that exhausted every retry
+    pub retrans_s: f64,
+    /// true iff the pre-encode anomaly guard dropped this step under
+    /// `--on-anomaly skip` — compute is charged, nothing reached the wire
+    pub skipped: bool,
 }
 
 /// Whole-run summary, serializable for EXPERIMENTS.md extraction.
@@ -92,6 +102,13 @@ pub struct RunSummary {
     pub t_comm_sim: f64,
     /// run-level simulated straggler wait (0 off the elastic path)
     pub t_straggler_wait: f64,
+    /// run-level simulated recovery time (backoff + retransmitted hops +
+    /// detection ladders; 0 with integrity off)
+    pub t_retrans: f64,
+    /// run-level cohort-total retransmitted wire bits
+    pub retrans_bits: f64,
+    /// steps dropped by the anomaly guard under `--on-anomaly skip`
+    pub skipped_steps: usize,
 }
 
 impl RunSummary {
@@ -106,6 +123,8 @@ impl RunSummary {
             ("final_eval_acc", num(self.final_eval_acc)),
             ("mean_bits_per_step", num(self.mean_bits_per_step)),
             ("overlap_frac", num(self.overlap_frac)),
+            ("retrans_bits", num(self.retrans_bits)),
+            ("skipped_steps", num(self.skipped_steps as f64)),
             ("sim_time_s", num(self.sim_time_s)),
             ("wall_time_s", num(self.wall_time_s)),
             (
@@ -116,6 +135,7 @@ impl RunSummary {
                     ("decode", num(self.t_decode)),
                     ("comm_sim", num(self.t_comm_sim)),
                     ("straggler_wait", num(self.t_straggler_wait)),
+                    ("retrans", num(self.t_retrans)),
                 ]),
             ),
         ])
@@ -183,11 +203,22 @@ mod tests {
 
     #[test]
     fn summary_json_parses_back() {
-        let r = RunSummary { label: "QSGD-MN-8".into(), steps: 10, ..Default::default() };
+        let r = RunSummary {
+            label: "QSGD-MN-8".into(),
+            steps: 10,
+            retrans_bits: 512.0,
+            skipped_steps: 2,
+            t_retrans: 0.25,
+            ..Default::default()
+        };
         let j = r.to_json().to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
         assert_eq!(parsed.req("label").unwrap().as_str().unwrap(), "QSGD-MN-8");
         assert_eq!(parsed.req("steps").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(parsed.req("retrans_bits").unwrap().as_usize().unwrap(), 512);
+        assert_eq!(parsed.req("skipped_steps").unwrap().as_usize().unwrap(), 2);
+        let tb = parsed.req("time_breakdown").unwrap();
+        assert!(tb.req("retrans").is_ok());
     }
 
     #[test]

@@ -1,14 +1,18 @@
 //! Deterministic fault & latency injection for the simulated cluster
-//! (PR 6): per-worker step-time jitter, worker join/leave schedules, and
-//! per-link degradation windows.
+//! (PR 6 + PR 7): per-worker step-time jitter, worker join/leave schedules,
+//! per-link degradation windows, and — the PR 7 data-plane faults — per-hop
+//! packet loss, per-hop word corruption (bit flips), and gradient-poison
+//! events.
 //!
-//! Everything here is a pure function of `(plan seed, step, worker)` through
-//! [`crate::util::rng::Rng::derive`], so a faulted run is exactly as
-//! reproducible as a clean one — the determinism contract of DESIGN.md §5
-//! extends to chaos. [`FaultPlan::none`] is the identity plan: no jitter, no
-//! events, no outages, and [`FaultPlan::net_for_step`] returns the base
-//! topology untouched (bit-identity pinned by the fault-plane parity matrix
-//! in `tests/int_domain_equivalence.rs`).
+//! Everything here is a pure function of `(plan seed, step, worker[, hop,
+//! attempt])` through [`crate::util::rng::Rng::derive`], so a faulted run is
+//! exactly as reproducible as a clean one — the determinism contract of
+//! DESIGN.md §5 extends to chaos. [`FaultPlan::none`] is the identity plan:
+//! no jitter, no events, no outages, no wire faults, no poison, and
+//! [`FaultPlan::net_for_step`] returns the base topology untouched
+//! (bit-identity pinned by the fault-plane parity matrix in
+//! `tests/int_domain_equivalence.rs` and the wire-fault matrix in
+//! `tests/self_healing.rs`).
 
 use anyhow::{bail, Context, Result};
 
@@ -19,6 +23,12 @@ use crate::util::rng::Rng;
 /// worker])`) — disjoint from the cluster's `0x5354` step stream and the
 /// control plane's per-worker uniform streams.
 const FAULT_STREAM: u64 = 0xFA17;
+
+/// Label for the data-plane wire-fault stream
+/// (`derive(&[WIRE_STREAM, step, worker, hop, attempt])`) — disjoint from
+/// `FAULT_STREAM`, the cluster's `0x5354` step stream, and the `0xDA7A`
+/// data seeds, so adding wire faults perturbs no existing draw.
+const WIRE_STREAM: u64 = 0xC0DE;
 
 /// A membership change taking effect at the *start* of its step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,6 +45,31 @@ pub struct CohortEvent {
     pub step: usize,
     pub worker: usize,
     pub kind: EventKind,
+}
+
+/// A scheduled gradient-poison event: at the start of `step`, worker
+/// `worker`'s *local* gradient is corrupted with NaN/Inf before encode.
+/// This is the end-to-end probe for the pre-encode `GradGuard` scan — a
+/// poisoned gradient must be caught by the anomaly policy before a single
+/// code reaches the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoisonEvent {
+    pub step: usize,
+    pub worker: usize,
+}
+
+/// Outcome of one delivery attempt of one hop segment on the wire, drawn
+/// deterministically from `(seed, step, worker, hop, attempt)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HopFault {
+    /// The segment arrives intact.
+    None,
+    /// The segment is lost in transit (receiver times out, retransmit).
+    Lost,
+    /// One bit of one wire word is flipped in transit; the checksum
+    /// catches it and the segment is retransmitted. `word` is reduced
+    /// modulo the segment's word count by the corruption site.
+    Flip { word: u64, bit: u32 },
 }
 
 /// An inter-node link degradation window: for steps in `[from, to)` the
@@ -61,23 +96,49 @@ pub struct FaultPlan {
     pub events: Vec<CohortEvent>,
     /// Inter-node link degradation windows.
     pub outages: Vec<Outage>,
+    /// Per-hop-segment packet-loss probability in `[0, 1]`.
+    pub loss: f64,
+    /// Per-hop-segment single-bit corruption probability in `[0, 1]`
+    /// (`loss + flip <= 1`: one uniform draw decides the attempt's fate).
+    pub flip: f64,
+    /// Scheduled gradient-poison events (NaN/Inf in a local gradient).
+    pub poisons: Vec<PoisonEvent>,
 }
 
 impl FaultPlan {
     /// The identity plan: no faults. Strict-sync under this plan is
     /// bit-identical to the pre-elastic data plane.
     pub fn none() -> FaultPlan {
-        FaultPlan { seed: 0, jitter: 0.0, events: Vec::new(), outages: Vec::new() }
+        FaultPlan {
+            seed: 0,
+            jitter: 0.0,
+            events: Vec::new(),
+            outages: Vec::new(),
+            loss: 0.0,
+            flip: 0.0,
+            poisons: Vec::new(),
+        }
     }
 
     /// Jitter-only plan (the straggler scenario of `benches/micro_faults`).
     pub fn jittered(seed: u64, jitter: f64) -> FaultPlan {
-        FaultPlan { seed, jitter, events: Vec::new(), outages: Vec::new() }
+        FaultPlan { seed, jitter, ..FaultPlan::none() }
+    }
+
+    /// Wire-fault-only plan (the corruption scenario of
+    /// `benches/micro_integrity`).
+    pub fn wire(seed: u64, loss: f64, flip: f64) -> FaultPlan {
+        FaultPlan { seed, loss, flip, ..FaultPlan::none() }
     }
 
     /// True iff this plan injects nothing.
     pub fn is_none(&self) -> bool {
-        self.jitter == 0.0 && self.events.is_empty() && self.outages.is_empty()
+        self.jitter == 0.0
+            && self.events.is_empty()
+            && self.outages.is_empty()
+            && self.loss == 0.0
+            && self.flip == 0.0
+            && self.poisons.is_empty()
     }
 
     /// Simulated compute seconds of `worker` at `step`: `base_s` scaled by
@@ -90,6 +151,65 @@ impl FaultPlan {
         }
         let mut r = Rng::new(self.seed).derive(&[FAULT_STREAM, step as u64, worker as u64]);
         base_s * (1.0 + self.jitter * r.next_normal().abs())
+    }
+
+    /// Fate of delivery `attempt` (0 = first transmission, 1.. =
+    /// retransmits) of the hop segment sent by `worker` on hop `hop` of
+    /// `step`. A pure function of `(seed, step, worker, hop, attempt)`:
+    /// querying any attempt in any order, any number of times, replays the
+    /// same outcome. One uniform draw partitions `[0, 1)` into
+    /// `[0, loss) -> Lost`, `[loss, loss+flip) -> Flip`, rest intact; with
+    /// both probabilities zero no stream is derived at all.
+    pub fn hop_fault(&self, step: usize, worker: usize, hop: usize, attempt: u32) -> HopFault {
+        if self.loss <= 0.0 && self.flip <= 0.0 {
+            return HopFault::None;
+        }
+        let mut r = Rng::new(self.seed).derive(&[
+            WIRE_STREAM,
+            step as u64,
+            worker as u64,
+            hop as u64,
+            attempt as u64,
+        ]);
+        let u = r.next_f64();
+        if u < self.loss {
+            HopFault::Lost
+        } else if u < self.loss + self.flip {
+            HopFault::Flip { word: r.next_u64(), bit: (r.next_u64() % 64) as u32 }
+        } else {
+            HopFault::None
+        }
+    }
+
+    /// True iff `worker`'s local gradient is poisoned at `step`.
+    pub fn poisoned(&self, step: usize, worker: usize) -> bool {
+        self.poisons.iter().any(|p| p.step == step && p.worker == worker)
+    }
+
+    /// Workers (by *original id*, as in `ids`) that are unreachable at
+    /// `step` even after `retries` retransmits: a peer is unreachable iff
+    /// some hop in `0..hops` fails on every one of its `retries + 1`
+    /// delivery attempts. This is the escalation predicate — the cluster
+    /// drops these peers into the PR 6 elastic partial-cohort path instead
+    /// of stalling the step.
+    pub fn unreachable_peers(
+        &self,
+        step: usize,
+        ids: &[usize],
+        hops: usize,
+        retries: u32,
+    ) -> Vec<usize> {
+        if self.loss <= 0.0 && self.flip <= 0.0 {
+            return Vec::new();
+        }
+        ids.iter()
+            .copied()
+            .filter(|&w| {
+                (0..hops).any(|h| {
+                    (0..=retries).all(|a| self.hop_fault(step, w, h, a) != HopFault::None)
+                })
+            })
+            .collect()
     }
 
     /// Membership events taking effect at the start of `step`.
@@ -125,14 +245,26 @@ impl FaultPlan {
     }
 
     /// Parse a CLI fault spec: comma-separated clauses of
-    /// `jitter=F` | `seed=N` | `leave=W@S` | `join=W@S` | `outage=A..B@F`,
-    /// or the literal `none`. Example:
-    /// `--faults jitter=0.1,seed=7,leave=3@10,join=3@20,outage=5..8@0.25`.
+    /// `jitter=F` | `seed=N` | `leave=W@S` | `join=W@S` | `outage=A..B@F` |
+    /// `loss=P` | `flip=P` | `poison=W@S`, or the literal `none`. Scalar
+    /// keys (`jitter`, `seed`, `loss`, `flip`) may appear at most once;
+    /// event-like clauses (`leave`, `join`, `outage`, `poison`) repeat.
+    /// Example:
+    /// `--faults jitter=0.1,seed=7,leave=3@10,loss=0.01,flip=0.001,poison=2@5`.
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::none();
         if spec.trim() == "none" {
             return Ok(plan);
         }
+        let mut seen_scalar: Vec<&str> = Vec::new();
+        let mut scalar_once = |key: &'static str| -> Result<()> {
+            anyhow::ensure!(
+                !seen_scalar.contains(&key),
+                "duplicate fault clause '{key}' (scalar keys may appear once)"
+            );
+            seen_scalar.push(key);
+            Ok(())
+        };
         for clause in spec.split(',') {
             let clause = clause.trim();
             let (key, val) = clause
@@ -140,13 +272,40 @@ impl FaultPlan {
                 .with_context(|| format!("fault clause '{clause}' is not key=value"))?;
             match key {
                 "jitter" => {
+                    scalar_once("jitter")?;
                     plan.jitter = val
                         .parse()
                         .with_context(|| format!("bad jitter '{val}'"))?;
                     anyhow::ensure!(plan.jitter >= 0.0, "jitter must be >= 0");
                 }
                 "seed" => {
+                    scalar_once("seed")?;
                     plan.seed = val.parse().with_context(|| format!("bad seed '{val}'"))?;
+                }
+                "loss" | "flip" => {
+                    let p: f64 = val
+                        .parse()
+                        .with_context(|| format!("bad {key} probability '{val}'"))?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "{key} must be a probability in [0, 1], got {p}"
+                    );
+                    if key == "loss" {
+                        scalar_once("loss")?;
+                        plan.loss = p;
+                    } else {
+                        scalar_once("flip")?;
+                        plan.flip = p;
+                    }
+                }
+                "poison" => {
+                    let (w, s) = val
+                        .split_once('@')
+                        .with_context(|| format!("'poison={val}' wants W@STEP"))?;
+                    plan.poisons.push(PoisonEvent {
+                        worker: w.parse().with_context(|| format!("bad worker '{w}'"))?,
+                        step: s.parse().with_context(|| format!("bad step '{s}'"))?,
+                    });
                 }
                 "leave" | "join" => {
                     let (w, s) = val
@@ -185,10 +344,16 @@ impl FaultPlan {
                 }
                 other => bail!(
                     "unknown fault clause '{other}' \
-                     (expect jitter|seed|leave|join|outage, or 'none')"
+                     (expect jitter|seed|leave|join|outage|loss|flip|poison, or 'none')"
                 ),
             }
         }
+        anyhow::ensure!(
+            plan.loss + plan.flip <= 1.0,
+            "loss + flip must be <= 1 (one draw decides an attempt's fate), got {} + {}",
+            plan.loss,
+            plan.flip
+        );
         Ok(plan)
     }
 }
@@ -203,6 +368,9 @@ mod tests {
         assert!(plan.is_none());
         assert_eq!(plan.worker_compute_s(0.25, 7, 3), 0.25);
         assert_eq!(plan.link_factor(0), 1.0);
+        assert_eq!(plan.hop_fault(3, 1, 0, 0), HopFault::None);
+        assert!(!plan.poisoned(0, 0));
+        assert!(plan.unreachable_peers(0, &[0, 1, 2], 14, 3).is_empty());
         let base = NetConfig::flat(8, 10.0);
         let net = plan.net_for_step(&base, 5, 8);
         assert_eq!(net.workers, 8);
@@ -256,8 +424,11 @@ mod tests {
 
     #[test]
     fn parse_roundtrips_the_full_grammar() {
-        let plan =
-            FaultPlan::parse("jitter=0.1,seed=7,leave=3@10,join=3@20,outage=5..8@0.25").unwrap();
+        let plan = FaultPlan::parse(
+            "jitter=0.1,seed=7,leave=3@10,join=3@20,outage=5..8@0.25,\
+             loss=0.01,flip=0.002,poison=2@5,poison=0@9",
+        )
+        .unwrap();
         assert_eq!(plan.jitter, 0.1);
         assert_eq!(plan.seed, 7);
         assert_eq!(
@@ -268,22 +439,118 @@ mod tests {
             ]
         );
         assert_eq!(plan.outages, vec![Outage { from: 5, to: 8, factor: 0.25 }]);
+        assert_eq!(plan.loss, 0.01);
+        assert_eq!(plan.flip, 0.002);
+        assert_eq!(
+            plan.poisons,
+            vec![PoisonEvent { step: 5, worker: 2 }, PoisonEvent { step: 9, worker: 0 }]
+        );
+        assert!(plan.poisoned(5, 2));
+        assert!(!plan.poisoned(5, 3));
         assert!(FaultPlan::parse("none").unwrap().is_none());
+        // every documented example round-trips
+        for doc in [
+            "jitter=0.1,seed=7,leave=3@10,join=3@20,outage=5..8@0.25",
+            "jitter=0.1,seed=7,leave=3@10,loss=0.01,flip=0.001,poison=2@5",
+            "leave=2@1,join=2@4",
+            "loss=0.02",
+            "flip=1.0",
+        ] {
+            assert!(FaultPlan::parse(doc).is_ok(), "documented example '{doc}' must parse");
+        }
     }
 
     #[test]
     fn parse_rejects_malformed_specs() {
         for bad in [
-            "jitter",            // no value
-            "jitter=-0.5",       // negative
-            "leave=3",           // missing @step
-            "outage=5..5@0.5",   // empty window
-            "outage=5..8@0.0",   // zero factor
-            "outage=5..8@1.5",   // factor > 1
-            "wobble=1",          // unknown clause
+            "jitter",                  // no value
+            "jitter=-0.5",             // negative
+            "jitter=0.1,jitter=0.2",   // duplicate scalar key
+            "seed=1,seed=2",           // duplicate scalar key
+            "leave=3",                 // missing @step
+            "leave=@",                 // empty worker and step
+            "leave=3@",                // empty step
+            "outage=5..2@0.5",         // inverted window
+            "outage=5..5@0.5",         // empty window
+            "outage=5..8@0.0",         // zero factor
+            "outage=5..8@1.5",         // factor > 1
+            "loss=-0.1",               // negative probability
+            "loss=1.5",                // probability > 1
+            "loss=0.5,loss=0.5",       // duplicate scalar key
+            "flip=-0.1",               // negative probability
+            "flip=2",                  // probability > 1
+            "loss=0.6,flip=0.5",       // loss + flip > 1
+            "poison=2",                // missing @step
+            "poison=@3",               // empty worker
+            "wobble=1",                // unknown clause
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must be rejected");
         }
+    }
+
+    #[test]
+    fn wire_draws_are_pure_and_order_independent() {
+        let plan = FaultPlan::parse("jitter=0.2,seed=11,loss=0.3,flip=0.3,poison=1@4").unwrap();
+        // Query step 7 before step 3, then step 3 twice: every draw is a
+        // pure function of its arguments, untouched by query order.
+        let seven = plan.hop_fault(7, 2, 1, 0);
+        let three_a = plan.hop_fault(3, 2, 1, 0);
+        let three_b = plan.hop_fault(3, 2, 1, 0);
+        assert_eq!(three_a, three_b, "same (step, worker, hop, attempt) must replay");
+        assert_eq!(seven, plan.hop_fault(7, 2, 1, 0));
+        let j7 = plan.worker_compute_s(1.0, 7, 0);
+        let j3 = plan.worker_compute_s(1.0, 3, 0);
+        assert_eq!(j3, plan.worker_compute_s(1.0, 3, 0));
+        assert_eq!(j7, plan.worker_compute_s(1.0, 7, 0));
+        assert_eq!(plan.link_factor(5), plan.link_factor(5));
+        assert_eq!(plan.poisoned(4, 1), plan.poisoned(4, 1));
+        let dead_a = plan.unreachable_peers(9, &[0, 1, 2, 3], 6, 1);
+        let dead_b = plan.unreachable_peers(9, &[0, 1, 2, 3], 6, 1);
+        assert_eq!(dead_a, dead_b);
+        // Distinct attempts draw independent fates: over enough hops the
+        // first and second attempts must disagree somewhere at p=0.6.
+        let disagree = (0..64)
+            .any(|h| plan.hop_fault(0, 0, h, 0) != plan.hop_fault(0, 0, h, 1));
+        assert!(disagree, "retransmit attempts must re-draw, not replay the failure");
+    }
+
+    #[test]
+    fn hop_fault_rates_track_the_configured_probabilities() {
+        let plan = FaultPlan::wire(42, 0.25, 0.25);
+        let (mut lost, mut flipped, mut clean) = (0usize, 0usize, 0usize);
+        let trials = 4000usize;
+        for t in 0..trials {
+            match plan.hop_fault(t, t % 7, t % 5, 0) {
+                HopFault::Lost => lost += 1,
+                HopFault::Flip { bit, .. } => {
+                    assert!(bit < 64);
+                    flipped += 1;
+                }
+                HopFault::None => clean += 1,
+            }
+        }
+        let f = |c: usize| c as f64 / trials as f64;
+        assert!((f(lost) - 0.25).abs() < 0.05, "loss rate {} far from 0.25", f(lost));
+        assert!((f(flipped) - 0.25).abs() < 0.05, "flip rate {} far from 0.25", f(flipped));
+        assert!((f(clean) - 0.5).abs() < 0.05, "clean rate {} far from 0.5", f(clean));
+    }
+
+    #[test]
+    fn unreachable_peers_keys_by_original_id() {
+        // loss=1 makes every attempt fail: everyone in `ids` is unreachable,
+        // reported under the ids passed in (not cohort slots).
+        let plan = FaultPlan::wire(3, 1.0, 0.0);
+        assert_eq!(plan.unreachable_peers(2, &[0, 2, 5], 4, 3), vec![0, 2, 5]);
+        // loss=0 makes no one unreachable even with zero retries
+        let clean = FaultPlan::wire(3, 0.0, 0.0);
+        assert!(clean.unreachable_peers(2, &[0, 2, 5], 4, 0).is_empty());
+        // under a moderate rate, more retries can only shrink the dead set
+        let mid = FaultPlan::wire(7, 0.4, 0.0);
+        let ids: Vec<usize> = (0..16).collect();
+        let dead0 = mid.unreachable_peers(1, &ids, 6, 0);
+        let dead3 = mid.unreachable_peers(1, &ids, 6, 3);
+        assert!(dead3.iter().all(|w| dead0.contains(w)));
+        assert!(dead0.len() >= dead3.len());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 pub mod fault;
 
-pub use fault::{CohortEvent, EventKind, FaultPlan, Outage};
+pub use fault::{CohortEvent, EventKind, FaultPlan, HopFault, Outage, PoisonEvent};
 
 /// One link class: latency (s) + inverse bandwidth (s/byte).
 #[derive(Clone, Copy, Debug)]
@@ -301,6 +301,18 @@ pub struct SimClock {
     /// `hidden_comm_s <= comm_s` still holds and the wait is always fully
     /// exposed on the critical path.
     pub straggler_wait_s: f64,
+    /// recovery seconds spent on the self-healing data plane (PR 7):
+    /// exponential backoff plus retransmitted-segment wire time after a
+    /// checksum mismatch or injected loss, and the detection-timeout
+    /// ladder for peers dropped after retry exhaustion. Attributed
+    /// separately from `comm_s` (which stays the clean-wire charge) and
+    /// always fully exposed on the critical path — a retransmit serializes
+    /// behind the hop it repairs, so nothing overlaps it.
+    pub retrans_s: f64,
+    /// retransmitted wire bits, cohort-total (checksummed segment payload ×
+    /// failed attempts). Unlike `bits_per_worker` this is *not* per-worker:
+    /// a retransmit is one sender's repair, not a symmetric ring step.
+    pub retrans_bits: f64,
 }
 
 impl SimClock {
@@ -311,6 +323,7 @@ impl SimClock {
     /// cohort's backward, which ends before the barrier resolves).
     pub fn total_s(&self) -> f64 {
         self.comm_s + self.compute_s + self.encode_s + self.decode_s + self.straggler_wait_s
+            + self.retrans_s
             - self.hidden_comm_s
     }
 
@@ -415,6 +428,23 @@ mod tests {
         // the fully-hidden-comm extreme: total still includes the wait
         clock.hidden_comm_s = clock.comm_s;
         assert_eq!(clock.total_s(), 3.0 + 0.7);
+    }
+
+    #[test]
+    fn retrans_time_extends_total_and_never_hides() {
+        // PR 7: recovery time is a first-class critical-path term, added in
+        // full on top of clean-wire comm — retransmits serialize behind the
+        // hop they repair, so hidden comm never offsets them.
+        let mut clock = SimClock::default();
+        clock.comm_s = 2.0;
+        clock.compute_s = 3.0;
+        clock.hidden_comm_s = 2.0;
+        let base = clock.total_s();
+        clock.retrans_s = 0.3;
+        clock.retrans_bits = 4096.0;
+        assert_eq!(clock.total_s(), base + 0.3);
+        // retransmitted bits are ledgered but do not change overlap_frac
+        assert_eq!(clock.overlap_frac(), 1.0);
     }
 
     #[test]

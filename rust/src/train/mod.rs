@@ -7,8 +7,9 @@ use std::path::{Path, PathBuf};
 use anyhow::Result;
 
 use crate::cluster::{run_training, ClusterConfig};
+use crate::collectives::IntegrityConfig;
 use crate::compress::Method;
-use crate::control::{ControlConfig, ElasticConfig};
+use crate::control::{AnomalyPolicy, ControlConfig, ElasticConfig};
 use crate::metrics::{render_table, CsvWriter, RunSummary, StepRecord};
 use crate::runtime::Artifacts;
 
@@ -31,6 +32,11 @@ pub struct Experiment {
     pub control: Option<ControlConfig>,
     /// elastic-cohort policy + fault schedule applied to every method
     pub elastic: Option<ElasticConfig>,
+    /// hop-segment integrity (checksums + retransmit) applied to every
+    /// method; `None` trusts the wire
+    pub integrity: Option<IntegrityConfig>,
+    /// policy for non-finite local gradients (pre-encode guard)
+    pub on_anomaly: AnomalyPolicy,
 }
 
 impl Experiment {
@@ -49,6 +55,8 @@ impl Experiment {
             quiet: false,
             control: None,
             elastic: None,
+            integrity: None,
+            on_anomaly: AnomalyPolicy::Skip,
         }
     }
 
@@ -71,6 +79,8 @@ impl Experiment {
             cfg.net_gbps = self.net_gbps;
             cfg.control = self.control.clone();
             cfg.elastic = self.elastic.clone();
+            cfg.integrity = self.integrity;
+            cfg.on_anomaly = self.on_anomaly;
 
             let label = method.label();
             if !self.quiet {
@@ -78,7 +88,7 @@ impl Experiment {
             }
             let mut csv = CsvWriter::create(
                 &self.csv_path(&label),
-                &["step", "loss", "lr", "t_compute", "t_encode", "t_decode", "t_comm_sim", "bits_per_worker", "overlap_frac", "live_workers", "straggler_wait_s", "staleness"],
+                &["step", "loss", "lr", "t_compute", "t_encode", "t_decode", "t_comm_sim", "bits_per_worker", "overlap_frac", "live_workers", "straggler_wait_s", "staleness", "retrans_bits", "retrans_s", "skipped"],
             )?;
             let quiet = self.quiet;
             let steps = self.steps;
@@ -96,6 +106,9 @@ impl Experiment {
                     rec.live_workers as f64,
                     rec.straggler_wait_s,
                     rec.staleness as f64,
+                    rec.retrans_bits,
+                    rec.retrans_s,
+                    rec.skipped as u8 as f64,
                 ]);
                 if !quiet && (rec.step % 20 == 0 || rec.step + 1 == steps) {
                     eprintln!("  step {:>5}  loss {:.4}  lr {:.4}", rec.step, rec.loss, rec.lr);
@@ -126,13 +139,14 @@ pub fn summary_table(summaries: &[RunSummary]) -> String {
                 format!("{:.1}", r.mean_bits_per_step / 1e3),
                 format!("{:.2}", r.overlap_frac),
                 format!("{:.3}", r.t_straggler_wait),
+                format!("{:.3}", r.t_retrans),
                 format!("{:.3}", r.sim_time_s),
                 format!("{:.1}", r.wall_time_s),
             ]
         })
         .collect();
     render_table(
-        &["method", "train_loss", "eval_loss", "eval_acc", "kbits/step", "ovl", "wait_s", "sim_s", "wall_s"],
+        &["method", "train_loss", "eval_loss", "eval_acc", "kbits/step", "ovl", "wait_s", "rtx_s", "sim_s", "wall_s"],
         &rows,
     )
 }

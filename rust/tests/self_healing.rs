@@ -1,0 +1,321 @@
+//! Self-healing data plane (PR 7) — integration matrix.
+//!
+//! Three layers under test, without artifacts or a PJRT backend:
+//!
+//! 1. **Parity both ways.** Integrity ON over a clean wire changes the
+//!    ledgers by the closed-form checksum charge and nothing else — the
+//!    aggregated output is bit-identical. Integrity OFF under a corrupting
+//!    fault plan is a strict no-op: a trusting wire delivers the payload
+//!    regardless, so outputs *and* every clock match the fault-free run.
+//! 2. **Healing.** A faulty wire under integrity retransmits and converges
+//!    to the clean run bit-for-bit; `retrans_bits`/`retrans_s` carry the
+//!    closed-form ladder rebuilt here from the public hop ledger and the
+//!    same pure per-attempt draws.
+//! 3. **Escalation.** A peer that exhausts every retry is dropped through
+//!    [`ElasticCohort::drop_unreachable`] into the PR 6 partial-cohort
+//!    path, and the survivors' aggregate equals the independent id-keyed
+//!    fixed-M f32 reference; below quorum the step degrades to local.
+
+use repro::collectives::{self, packed, IntegrityConfig, StepCtx, CHECKSUM_BYTES};
+use repro::compress::{kernels, Aggregator, Method};
+use repro::control::{build_plane, ControlConfig, ElasticCohort, ElasticConfig};
+use repro::netsim::{Algo, FaultPlan, HopFault, NetConfig, RingWidth, SimClock};
+use repro::util::rng::Rng;
+
+fn make_grads(seed: u64, m: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+/// One monolithic aggregate with the integrity/fault seams armed as given.
+fn run_mono(
+    spec: &str,
+    grads: &[Vec<f32>],
+    seed: u64,
+    algo: Algo,
+    width: RingWidth,
+    integrity: Option<IntegrityConfig>,
+    faults: Option<(&FaultPlan, usize)>,
+) -> (Vec<f32>, SimClock) {
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let n = refs[0].len();
+    let mut agg = Method::parse(spec).unwrap().build(n, &[]).unwrap();
+    let mut net = NetConfig::flat(grads.len(), 10.0);
+    net.algo = algo;
+    let mut clock = SimClock::default();
+    let out = {
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.ring_width = width;
+        ctx.integrity = integrity;
+        ctx.wire_faults = faults;
+        let mut rng = Rng::new(seed);
+        agg.aggregate(&refs, &mut ctx, &mut rng)
+    };
+    (out, clock)
+}
+
+#[test]
+fn clean_wire_integrity_is_output_parity_plus_closed_form_checksum() {
+    // Integrity over a clean wire: same bits on the data plane, exactly
+    // 64*hops extra on both bit ledgers (8 checksum bytes per hop
+    // segment), a bandwidth-only comm increment, zero retransmission.
+    let m = 4usize;
+    let n = 513usize;
+    let grads = make_grads(0x5EA1, m, n);
+    let icfg = IntegrityConfig::default();
+    let clean = FaultPlan::wire(0x11, 0.0, 0.0);
+    for spec in ["qsgd-mn-4", "qsgd-mn-ts-2-6"] {
+        for (algo, width) in [
+            (Algo::Ring, RingWidth::Fixed),
+            (Algo::Ring, RingWidth::Growing),
+            (Algo::Tree, RingWidth::Auto),
+        ] {
+            let (out_off, clk_off) =
+                run_mono(spec, &grads, 0x7E57, algo, width, None, None);
+            let (out_on, clk_on) =
+                run_mono(spec, &grads, 0x7E57, algo, width, Some(icfg), None);
+            assert_eq!(out_on, out_off, "{spec} {algo:?} {width:?}: output parity");
+            let hops = packed::schedule_for(algo, false, 1).as_dyn().hops(m);
+            let want = (8 * CHECKSUM_BYTES * hops) as f64;
+            assert_eq!(
+                clk_on.bits_per_worker - clk_off.bits_per_worker,
+                want,
+                "{spec} {algo:?} {width:?}: nominal ledger delta"
+            );
+            assert_eq!(
+                clk_on.hop_bits_per_worker - clk_off.hop_bits_per_worker,
+                want,
+                "{spec} {algo:?} {width:?}: hop ledger delta"
+            );
+            assert!(
+                clk_on.comm_s > clk_off.comm_s,
+                "{spec} {algo:?} {width:?}: checksum bytes must cost wire time"
+            );
+            assert_eq!(clk_on.retrans_s, 0.0, "clean wire never retransmits");
+            assert_eq!(clk_on.retrans_bits, 0.0, "clean wire never retransmits");
+
+            // a loss=0,flip=0 fault plan armed alongside integrity is the
+            // same clean run bit for bit (the documented PR 6 parity knob)
+            let (out_armed, clk_armed) = run_mono(
+                spec,
+                &grads,
+                0x7E57,
+                algo,
+                width,
+                Some(icfg),
+                Some((&clean, 9)),
+            );
+            assert_eq!(out_armed, out_on, "{spec} {algo:?}: zero-rate plan output");
+            assert_eq!(clk_armed.comm_s, clk_on.comm_s, "{spec}: zero-rate plan comm");
+            assert_eq!(clk_armed.retrans_bits, 0.0, "{spec}: zero-rate plan retrans");
+        }
+    }
+}
+
+#[test]
+fn integrity_off_ignores_the_corrupting_wire_entirely() {
+    // The corruption matrix, integrity OFF: the simulated wire is
+    // trusting, so loss/flip draws change nothing — outputs and every
+    // deterministic clock field are bit-identical to the fault-free run.
+    let m = 4usize;
+    let n = 384usize;
+    let grads = make_grads(0xC0FF, m, n);
+    let plan = FaultPlan::wire(0xABCD, 0.2, 0.1);
+    for spec in ["qsgd-mn-4", "qsgd-mn-ts-2-6"] {
+        for (algo, width) in [
+            (Algo::Ring, RingWidth::Fixed),
+            (Algo::Ring, RingWidth::Growing),
+            (Algo::Tree, RingWidth::Auto),
+        ] {
+            let (out_base, clk_base) =
+                run_mono(spec, &grads, 0xBEEF, algo, width, None, None);
+            let (out_faulty, clk_faulty) =
+                run_mono(spec, &grads, 0xBEEF, algo, width, None, Some((&plan, 5)));
+            assert_eq!(out_faulty, out_base, "{spec} {algo:?} {width:?}: output");
+            assert_eq!(clk_faulty.comm_s, clk_base.comm_s, "{spec} {algo:?}: comm");
+            assert_eq!(
+                clk_faulty.bits_per_worker, clk_base.bits_per_worker,
+                "{spec} {algo:?}: bits"
+            );
+            assert_eq!(
+                clk_faulty.hop_bits_per_worker, clk_base.hop_bits_per_worker,
+                "{spec} {algo:?}: hop bits"
+            );
+            assert_eq!(clk_faulty.retrans_s, 0.0, "{spec} {algo:?}: no retrans charge");
+            assert_eq!(clk_faulty.retrans_bits, 0.0, "{spec} {algo:?}: no retrans bits");
+        }
+    }
+}
+
+#[test]
+fn faulty_wire_under_integrity_heals_bit_identically_at_the_ladder_price() {
+    // Healing: corrupted/lost hops retransmit until a clean copy lands, so
+    // the aggregate equals the clean-wire run bit for bit, and the whole
+    // price shows up on retrans_s/retrans_bits — rebuilt here closed-form
+    // from the public hop ledger (RingFixed ships the same segment every
+    // hop) and the same pure per-attempt draws the charger replays.
+    let m = 4usize;
+    let n = 420usize;
+    let grads = make_grads(0xFEED, m, n);
+    let icfg = IntegrityConfig::default();
+    let plan = FaultPlan::wire(0xF00D, 0.1, 0.15);
+    let hops = packed::schedule_for(Algo::Ring, false, 1).as_dyn().hops(m);
+
+    // find a step whose draws actually fail somewhere (pure queries — the
+    // same stream the charger consumes), so the assertion below has teeth
+    let step = (0..64)
+        .find(|&s| {
+            (0..m).any(|w| {
+                (0..hops).any(|h| plan.hop_fault(s, w, h, 0) != HopFault::None)
+            })
+        })
+        .expect("a 25% per-hop fault rate must fire within 64 steps");
+
+    let (out_clean, clk_clean) =
+        run_mono("qsgd-mn-4", &grads, 0xD1CE, Algo::Ring, RingWidth::Fixed, Some(icfg), None);
+    let (out_faulty, clk_faulty) = run_mono(
+        "qsgd-mn-4",
+        &grads,
+        0xD1CE,
+        Algo::Ring,
+        RingWidth::Fixed,
+        Some(icfg),
+        Some((&plan, step)),
+    );
+    assert_eq!(out_faulty, out_clean, "healed run must be bit-identical");
+    assert_eq!(clk_faulty.comm_s, clk_clean.comm_s, "first-copy wire time unchanged");
+    assert_eq!(
+        clk_faulty.bits_per_worker, clk_clean.bits_per_worker,
+        "nominal ledger unchanged (retransmits are booked separately)"
+    );
+
+    // closed form: seg bytes from the integrity-off hop ledger + checksum
+    let (_, clk_off) =
+        run_mono("qsgd-mn-4", &grads, 0xD1CE, Algo::Ring, RingWidth::Fixed, None, None);
+    let seg_bytes = clk_off.hop_bits_per_worker / hops as f64 / 8.0 + CHECKSUM_BYTES as f64;
+    let net = NetConfig::flat(m, 10.0);
+    let mut want_bits = 0.0;
+    let mut want_s = 0.0;
+    for h in 0..hops {
+        for w in 0..m {
+            let mut failed = 0u32;
+            while failed <= icfg.max_retries
+                && plan.hop_fault(step, w, h, failed) != HopFault::None
+            {
+                failed += 1;
+            }
+            let sent = failed.min(icfg.max_retries);
+            if sent > 0 {
+                want_bits += sent as f64 * 8.0 * seg_bytes;
+                want_s += icfg.backoff_base_s * (2f64.powi(sent as i32) - 1.0)
+                    + sent as f64 * net.hop_s(seg_bytes);
+            }
+        }
+    }
+    assert!(want_bits > 0.0, "the chosen step must have failing draws");
+    assert_eq!(clk_faulty.retrans_bits, want_bits, "closed-form retrans bits");
+    assert_eq!(clk_faulty.retrans_s, want_s, "closed-form retrans time");
+}
+
+/// Id-keyed f32 QSGD-MN reference (the PR 6 fixed-M pipeline): slot `i`
+/// draws the uniform stream of ORIGINAL worker id `ids[i]`, the shared
+/// norm is over the survivors only, the decode divides by the live count.
+fn reference_qsgd_ids(grads: &[&[f32]], ids: &[usize], bits: usize, seed: u64) -> Vec<f32> {
+    let m = grads.len();
+    let n = grads[0].len();
+    let s = kernels::s_for_bits(bits);
+    let wnorm = grads.iter().map(|v| kernels::l2_norm(v)).fold(0.0f32, f32::max);
+    let rng = Rng::new(seed);
+    let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(m);
+    for (g, &w) in grads.iter().zip(ids) {
+        let mut wrng = rng.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; n];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut buf = vec![0.0f32; n];
+        kernels::qsgd_encode(g, wnorm, &uni, s, &mut buf);
+        bufs.push(buf);
+    }
+    collectives::ring_allreduce_sum(&mut bufs);
+    let mut sum = bufs.swap_remove(0);
+    kernels::qsgd_decode_sum(&mut sum, wnorm, s, m);
+    sum
+}
+
+#[test]
+fn retry_exhaustion_escalates_into_the_id_keyed_partial_cohort() {
+    // With zero retries, any hop whose first copy fails makes its peer
+    // unreachable for the step. The cluster's escalation predicate finds
+    // those peers from the same pure draws, `drop_unreachable` folds them
+    // out, and the survivors' aggregate equals the independent id-keyed
+    // fixed-M reference — the PR 6 degradation, reached through the PR 7
+    // integrity path.
+    let m = 4usize;
+    let n = 501usize;
+    let grads = make_grads(0xDEAD, m, n);
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let icfg = IntegrityConfig { max_retries: 0, ..IntegrityConfig::default() };
+    let faults = FaultPlan::wire(0x57A9, 0.08, 0.0);
+    let hops = packed::schedule_for(Algo::Ring, false, 1).as_dyn().hops(m);
+
+    let ec = ElasticConfig {
+        policy: repro::control::CohortPolicy::StrictSync,
+        quorum: 1,
+        faults: faults.clone(),
+    };
+    let mut cohort = ElasticCohort::new(ec, m).unwrap();
+    let mut exercised = false;
+    for step in 0..40usize {
+        let mut plan = cohort.plan_step(step, 1.0);
+        let dead = faults.unreachable_peers(step, &plan.live, hops, icfg.max_retries);
+        cohort.drop_unreachable(&mut plan, &dead);
+        if plan.sync && !dead.is_empty() {
+            // a proper partial cohort: aggregate the survivors
+            assert!(plan.live.len() < m, "someone was dropped");
+            exercised = true;
+            let sub: Vec<&[f32]> = plan.live.iter().map(|&w| refs[w]).collect();
+            let mut plane =
+                build_plane(&Method::parse("qsgd-mn-4").unwrap(), &ControlConfig::new(1), n, &[])
+                    .unwrap();
+            let mut net = NetConfig::flat(plan.live.len(), 10.0);
+            net.algo = Algo::Ring;
+            let mut clock = SimClock::default();
+            let step_seed = 0xDEAD ^ step as u64;
+            let got = {
+                let mut ctx = StepCtx::new(&net, &mut clock);
+                ctx.integrity = Some(icfg);
+                ctx.wire_faults = Some((&faults, step));
+                let mut rng = Rng::new(step_seed);
+                plane.aggregate_cohort(&sub, &plan.live, &mut ctx, &mut rng)
+            };
+            let want = reference_qsgd_ids(&sub, &plan.live, 4, step_seed);
+            assert_eq!(got, want, "step {step} (live {:?}): id-keyed reference", plan.live);
+        }
+        cohort.commit(&plan);
+        if exercised {
+            break;
+        }
+    }
+    assert!(exercised, "no step produced a proper partial cohort in 40 tries");
+
+    // total loss: every peer exhausts its retries; below quorum the step
+    // degrades to a local one over the full membership — no empty collective
+    let total = FaultPlan::wire(0x57A9, 1.0, 0.0);
+    let ec = ElasticConfig {
+        policy: repro::control::CohortPolicy::StrictSync,
+        quorum: 1,
+        faults: total.clone(),
+    };
+    let mut cohort = ElasticCohort::new(ec, m).unwrap();
+    let mut plan = cohort.plan_step(0, 1.0);
+    let dead = total.unreachable_peers(0, &plan.live, hops, 0);
+    assert_eq!(dead, vec![0, 1, 2, 3], "loss=1.0 kills every delivery");
+    cohort.drop_unreachable(&mut plan, &dead);
+    assert!(!plan.sync, "empty cohort cannot synchronize");
+    assert_eq!(plan.live, vec![0, 1, 2, 3], "local step over the membership");
+}

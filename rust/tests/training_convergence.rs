@@ -212,3 +212,142 @@ fn timeout_into_partial_beats_strict_sync_under_jitter() {
         assert!(rp.last().unwrap().loss < rp.first().unwrap().loss, "partial learns");
     }
 }
+
+// ---------------------------------------------------------------------------
+// PR 7: self-healing data plane
+// ---------------------------------------------------------------------------
+
+use repro::collectives::IntegrityConfig;
+use repro::control::AnomalyPolicy;
+use repro::netsim::HopFault;
+
+#[test]
+fn poisoned_step_under_skip_never_reaches_the_wire() {
+    // `poison=1@3` plants NaN/Inf in worker 1's step-3 gradient; the
+    // default skip policy drops the round before a single level is drawn:
+    // compute is charged, the wire and the optimizer see nothing, and the
+    // run ledger counts exactly one skipped step.
+    let arts = artifacts();
+    let cfg = elastic_cfg(
+        2,
+        CohortPolicy::StrictSync,
+        FaultPlan::parse("poison=1@3").unwrap(),
+    );
+    let (records, summary) = run_training(&arts, cfg, |_| {}).unwrap();
+    let rec = &records[3];
+    assert!(rec.skipped, "the poisoned step must be skipped");
+    assert_eq!(rec.bits_per_worker, 0.0, "nothing reached the wire");
+    assert_eq!(rec.t_comm_sim, 0.0, "no comm time for a skipped step");
+    assert_eq!(rec.t_encode, 0.0, "no encode for a skipped step");
+    assert!(rec.t_compute > 0.0, "compute still happened (and is charged)");
+    assert_eq!(summary.skipped_steps, 1, "exactly one skip in the summary");
+    assert_eq!(records.iter().filter(|r| r.skipped).count(), 1);
+    assert!(
+        records.last().unwrap().loss < records.first().unwrap().loss,
+        "one dropped round must not stop learning"
+    );
+}
+
+#[test]
+fn poisoned_step_under_abort_fails_loudly() {
+    let arts = artifacts();
+    let mut cfg = elastic_cfg(
+        2,
+        CohortPolicy::StrictSync,
+        FaultPlan::parse("poison=0@2").unwrap(),
+    );
+    cfg.on_anomaly = AnomalyPolicy::Abort;
+    let err = run_training(&arts, cfg, |_| {}).unwrap_err().to_string();
+    assert!(
+        err.contains("non-finite gradient at step 2"),
+        "abort must name the step: {err}"
+    );
+}
+
+#[test]
+fn poisoned_step_under_clip_sanitizes_and_continues() {
+    let arts = artifacts();
+    let mut cfg = elastic_cfg(
+        2,
+        CohortPolicy::StrictSync,
+        FaultPlan::parse("poison=1@3").unwrap(),
+    );
+    cfg.on_anomaly = AnomalyPolicy::Clip(1.0);
+    let (records, summary) = run_training(&arts, cfg, |_| {}).unwrap();
+    assert_eq!(summary.skipped_steps, 0, "clip repairs instead of dropping");
+    assert!(records.iter().all(|r| !r.skipped));
+    assert!(records[3].bits_per_worker > 0.0, "the clipped step still syncs");
+    assert!(records.iter().all(|r| r.loss.is_finite()), "numerics stay finite");
+    assert!(records.last().unwrap().loss < records.first().unwrap().loss);
+}
+
+#[test]
+fn integrity_checksums_ride_along_without_touching_the_numerics() {
+    // integrity on, clean wire: every step's loss is bit-identical, the
+    // wire ledger grows by the checksum charge, nothing retransmits
+    let arts = artifacts();
+    let base = elastic_cfg(2, CohortPolicy::StrictSync, FaultPlan::none());
+    let (rec_off, _) = run_training(&arts, base.clone(), |_| {}).unwrap();
+    let mut on = base;
+    on.integrity = Some(IntegrityConfig::default());
+    let (rec_on, sum_on) = run_training(&arts, on, |_| {}).unwrap();
+    for (a, b) in rec_off.iter().zip(&rec_on) {
+        assert_eq!(a.loss, b.loss, "step {}: checksum must not change numerics", a.step);
+        assert!(
+            b.bits_per_worker > a.bits_per_worker,
+            "step {}: checksum bytes must be charged",
+            a.step
+        );
+        assert_eq!(b.retrans_bits, 0.0, "clean wire never retransmits");
+    }
+    assert_eq!(sum_on.t_retrans, 0.0);
+    assert_eq!(sum_on.skipped_steps, 0);
+}
+
+#[test]
+fn lossy_wire_with_integrity_heals_and_books_recovery_time() {
+    // corrupting wire + integrity: as long as no peer exhausts its retries
+    // the run is bit-identical to the clean-wire integrity run, and the
+    // whole recovery price lands in retrans_s/retrans_bits. Whether any
+    // retransmit (or escalation) happens at all is decided here from the
+    // same pure draws the cluster replays, so every branch is asserted
+    // deterministically.
+    let arts = artifacts();
+    let faults = FaultPlan::parse("loss=0.05,flip=0.02,seed=9").unwrap();
+    let icfg = IntegrityConfig::default();
+    let steps = 24usize;
+    let hops = 2 * (2 - 1); // RingFixed at M=2, the cluster's predicate shape
+    let any_fail = (0..steps).any(|s| {
+        (0..2).any(|w| (0..hops).any(|h| faults.hop_fault(s, w, h, 0) != HopFault::None))
+    });
+    let any_dead = (0..steps)
+        .any(|s| !faults.unreachable_peers(s, &[0, 1], hops, icfg.max_retries).is_empty());
+
+    let mut clean = elastic_cfg(2, CohortPolicy::StrictSync, FaultPlan::none());
+    clean.integrity = Some(icfg);
+    let (rec_clean, _) = run_training(&arts, clean, |_| {}).unwrap();
+    let mut lossy = elastic_cfg(2, CohortPolicy::StrictSync, faults);
+    lossy.integrity = Some(icfg);
+    let (rec_lossy, summary) = run_training(&arts, lossy, |_| {}).unwrap();
+
+    assert_eq!(
+        summary.t_retrans > 0.0,
+        any_fail || any_dead,
+        "recovery time books exactly when a draw fails"
+    );
+    if any_dead {
+        assert!(
+            rec_lossy.iter().any(|r| r.live_workers < 2),
+            "an exhausted peer must be dropped into the partial cohort"
+        );
+    } else {
+        for (a, b) in rec_clean.iter().zip(&rec_lossy) {
+            assert_eq!(a.loss, b.loss, "step {}: healing must not change numerics", a.step);
+            assert_eq!(
+                a.bits_per_worker, b.bits_per_worker,
+                "step {}: the nominal ledger ignores retransmits",
+                a.step
+            );
+        }
+    }
+}

@@ -6,13 +6,15 @@ Runs `cargo bench --bench micro_compressors` and `--bench micro_collectives`
 files, merges the two reports, and writes `BENCH_compress.json` at the repo
 root so the perf trajectory is tracked from this PR onward. Also runs
 `--bench micro_overlap` (the PR 4 bucketed control plane's overlap gate,
--> `BENCH_overlap.json`) and `--bench micro_faults` (the PR 6 straggler
+-> `BENCH_overlap.json`), `--bench micro_faults` (the PR 6 straggler
 scenario: strict-sync vs timeout-into-partial under seeded jitter,
--> `BENCH_faults.json`).
+-> `BENCH_faults.json`), and `--bench micro_integrity` (the PR 7
+self-healing gates: <= 2% checksum overhead and retransmit-recovery
+cheaper than a full-step redo, -> `BENCH_integrity.json`).
 
 Usage:
     python3 tools/bench_compress.py [--n COORDS] [--out PATH]
-        [--out-overlap PATH] [--out-faults PATH]
+        [--out-overlap PATH] [--out-faults PATH] [--out-integrity PATH]
 
 The acceptance gates this file evidences (ISSUE 1):
   * >= 4x throughput on pack/unpack vs the scalar reference;
@@ -85,6 +87,11 @@ def main() -> int:
         "--out-faults",
         default=os.path.join(REPO_ROOT, "BENCH_faults.json"),
         help="straggler report path (default: repo-root BENCH_faults.json)",
+    )
+    ap.add_argument(
+        "--out-integrity",
+        default=os.path.join(REPO_ROOT, "BENCH_integrity.json"),
+        help="integrity report path (default: repo-root BENCH_integrity.json)",
     )
     args = ap.parse_args()
 
@@ -163,8 +170,33 @@ def main() -> int:
         f.write("\n")
     print(f"wrote {args.out_faults}")
 
+    # Integrity bench, same non-required pattern: micro_integrity asserts
+    # its hard gates after emitting JSON. (It sizes itself at n=2^20;
+    # forward only an explicit --n override.)
+    integrity, integrity_rc = run_bench("micro_integrity", args.n, required=False)
+
+    # integrity gates: <= 2% checksum overhead with bit-equal output, and
+    # retransmit recovery cheaper than redoing the whole collective
+    integrity_gate = (
+        integrity_rc == 0
+        and integrity.get("gate_overhead_pass", 0.0) == 1.0
+        and integrity.get("gate_recovery_pass", 0.0) == 1.0
+    )
+    integrity_report = {
+        "schema": "repro-bench-integrity-v1",
+        "generated_unix": report["generated_unix"],
+        "machine": report["machine"],
+        "gates": {"checksum_cheap_and_recovery_beats_redo": integrity_gate},
+        "micro_integrity": integrity,
+    }
+    with open(args.out_integrity, "w") as f:
+        json.dump(integrity_report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out_integrity}")
+
     gates["bucketed_le_monolithic"] = overlap_gate
     gates["partial_beats_strict_under_jitter"] = faults_gate
+    gates["checksum_cheap_and_recovery_beats_redo"] = integrity_gate
     for k, ok in gates.items():
         print(f"  {k}: {'PASS' if ok else 'FAIL'}")
     return 0 if all(gates.values()) else 1
