@@ -1,0 +1,132 @@
+//! Hierarchical collective gate (PR 8, CI-gated): flat packed ring vs the
+//! two-level island schedule on the paper topology (128 workers = 32 nodes
+//! x 4 NVLink GPUs, 10 Gbps inter-node Ethernet), *simulated* comm time
+//! from the alpha-beta wire model at 2- and 4-bit QSGD-MN widths.
+//!
+//! The charge path is exactly the fused step's seam
+//! (`StepCtx::packed_schedule` -> `charge_packed`), so the numbers here are
+//! the ones a training step books; the payload itself is schedule-invariant
+//! (pinned bit-for-bit by `hierarchical_vs_flat_parity_matrix`). Hard
+//! gates, all deterministic:
+//!   * hier comm_s <= flat comm_s at every width (the NVLink islands
+//!     absorb 4x the ring hops at ~25x the bandwidth and 1/25 the alpha);
+//!   * flat books zero intra-level hop bits, hier books both levels and
+//!     the per-level split sums to the hop ledger.
+//!
+//! Set `REPRO_BENCH_JSON=<path>` to emit the numbers as JSON (consumed by
+//! `tools/bench_compress.py` -> `BENCH_hierarchy.json`).
+
+use repro::collectives::StepCtx;
+use repro::compress::{bitpack, kernels};
+use repro::netsim::{NetConfig, SimClock};
+use repro::util::json::{arr, num, obj, s as js, Json};
+
+struct Charge {
+    comm_s: f64,
+    hop_bits: f64,
+    intra_bits: f64,
+    inter_bits: f64,
+    sched: &'static str,
+}
+
+/// One charge-only collective through the fused seam: resolve the schedule
+/// for (`hier`, topology), book it on a fresh clock, return the ledgers.
+fn charge(net: &NetConfig, hier: bool, lmax: usize, wire_bits: f64, n: usize) -> Charge {
+    let m = net.workers;
+    let rbits = bitpack::packed_sum_bits(lmax, m);
+    let mut clock = SimClock::default();
+    let sched_name;
+    {
+        let mut ctx = StepCtx::new(net, &mut clock);
+        ctx.hier = hier;
+        let sched = ctx.packed_schedule(lmax, m, n);
+        sched_name = sched.as_dyn().name();
+        ctx.charge_packed(sched.as_dyn(), n, rbits, wire_bits);
+    }
+    Charge {
+        comm_s: clock.comm_s,
+        hop_bits: clock.hop_bits_per_worker,
+        intra_bits: clock.hop_bits_intra,
+        inter_bits: clock.hop_bits_inter,
+        sched: sched_name,
+    }
+}
+
+fn main() {
+    let n: usize = std::env::var("REPRO_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 20);
+    let gbps = 10.0;
+    let net = NetConfig::paper_cluster(gbps);
+    let (m, g) = (net.workers, net.gpus_per_node);
+    let nodes = net.nodes();
+
+    println!(
+        "=== flat vs hierarchical simulated comm time (n={n}, M={m} = {nodes} nodes x {g} GPUs, \
+         {gbps} Gbps inter, QSGD-MN) ==="
+    );
+    println!(
+        "{:>5} {:>12} {:>12} {:>8} {:>12} {:>14} {:>14} {:>8}",
+        "bits", "flat (ms)", "hier (ms)", "speedup", "hier sched", "intra (Mbit)", "inter (Mbit)", "gate"
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut all_pass = true;
+    for bits in [2usize, 4] {
+        let lmax = kernels::s_for_bits(bits);
+        let flat = charge(&net, false, lmax, bits as f64, n);
+        let hier = charge(&net, true, lmax, bits as f64, n);
+        let split_ok = flat.intra_bits == 0.0
+            && hier.intra_bits > 0.0
+            && hier.inter_bits > 0.0
+            && hier.intra_bits + hier.inter_bits == hier.hop_bits;
+        let pass = hier.comm_s <= flat.comm_s && split_ok;
+        all_pass &= pass;
+        println!(
+            "{:>5} {:>12.4} {:>12.4} {:>8.2} {:>12} {:>14.3} {:>14.3} {:>8}",
+            bits,
+            flat.comm_s * 1e3,
+            hier.comm_s * 1e3,
+            flat.comm_s / hier.comm_s,
+            hier.sched,
+            hier.intra_bits / 1e6,
+            hier.inter_bits / 1e6,
+            if pass { "ok" } else { "FAIL" }
+        );
+        entries.push(obj(vec![
+            ("bits", num(bits as f64)),
+            ("lmax", num(lmax as f64)),
+            ("flat_sched", js(flat.sched)),
+            ("hier_sched", js(hier.sched)),
+            ("flat_comm_s", num(flat.comm_s)),
+            ("hier_comm_s", num(hier.comm_s)),
+            ("speedup", num(flat.comm_s / hier.comm_s)),
+            ("flat_inter_bits", num(flat.inter_bits)),
+            ("hier_intra_bits", num(hier.intra_bits)),
+            ("hier_inter_bits", num(hier.inter_bits)),
+            ("gate_pass", num(pass as u8 as f64)),
+        ]));
+    }
+
+    if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
+        let json = obj(vec![
+            ("schema", js("repro-micro-hierarchy-v1")),
+            ("n", num(n as f64)),
+            ("workers", num(m as f64)),
+            ("gpus_per_node", num(g as f64)),
+            ("nodes", num(nodes as f64)),
+            ("net_gbps", num(gbps)),
+            ("entries", arr(entries)),
+        ]);
+        std::fs::write(&path, json.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+
+    assert!(
+        all_pass,
+        "hierarchy gate failed: the two-level schedule must not be slower than \
+         the flat ring on the paper topology (and must book both link levels)"
+    );
+    println!("\nhierarchy gate: hier <= flat simulated comm time at 2 and 4 bits");
+}

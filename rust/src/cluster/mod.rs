@@ -39,6 +39,16 @@ pub struct ClusterConfig {
     pub weight_decay: f32,
     /// Ethernet bandwidth for the simulated wire (Gbps)
     pub net_gbps: f64,
+    /// GPUs per NVLink island (CLI `--topology NxG`): the simulated wire's
+    /// island structure. 1 (the default) is the flat single-GPU-per-node
+    /// topology of PRs 1-7 — bit-identical charges everywhere.
+    pub gpus_per_node: usize,
+    /// hierarchical two-level packed schedule (CLI `--schedule hier`):
+    /// full-width island all-reduce over NVLink, compressed leader ring
+    /// across nodes (PR 8). Payload is bit-identical to the flat schedule;
+    /// only timing and the per-level wire ledgers differ. No effect unless
+    /// the topology genuinely spans >1 island of >1 GPU.
+    pub hier_schedule: bool,
     /// simulate the paper's >=8-bit tensor constraint
     pub wire_floor_bits: Option<f64>,
     /// per-GPU compute time override for the sim clock (s/step); when None,
@@ -76,6 +86,8 @@ impl ClusterConfig {
             momentum: 0.9,
             weight_decay: 5e-4,
             net_gbps: 10.0,
+            gpus_per_node: 1,
+            hier_schedule: false,
             wire_floor_bits: None,
             sim_compute_s: None,
             control: None,
@@ -161,7 +173,11 @@ impl Cluster {
         };
         let opt = Sgd::new(model.param_count, cfg.momentum, cfg.weight_decay);
         let sched = LrSchedule::paper(cfg.lr0, cfg.total_steps);
-        let net = NetConfig::flat(cfg.workers, cfg.net_gbps);
+        let mut net = NetConfig::flat(cfg.workers, cfg.net_gbps);
+        // the island structure rides on the net: every clone the elastic
+        // path takes (net_for_step) carries it, so a leaving worker shrinks
+        // its island — the leader ring only loses a node when one empties
+        net.gpus_per_node = cfg.gpus_per_node.max(1);
 
         let (data, seq_len) = match model.input_kind.as_str() {
             "image" => (Dataset::Images(CifarLike::new(cfg.seed ^ 0xDA7A)), 0),
@@ -323,6 +339,7 @@ impl Cluster {
             None => {
                 let mut ctx = StepCtx::new(&self.net, &mut step_clock);
                 ctx.wire_floor_bits = self.cfg.wire_floor_bits;
+                ctx.hier = self.cfg.hier_schedule;
                 // checksum accounting works on the fixed cohort too; with
                 // no fault plan there is nothing to retransmit
                 ctx.integrity = self.cfg.integrity;
@@ -348,9 +365,19 @@ impl Cluster {
                 let mut escalation_s = 0.0;
                 if let Some(icfg) = self.cfg.integrity {
                     if plan.sync && (faults.loss > 0.0 || faults.flip > 0.0) {
-                        let hops = crate::collectives::packed::schedule_for(self.net.algo, false, 1)
-                            .as_dyn()
-                            .hops(plan.live.len().max(1));
+                        // the live cohort's schedule shape decides how many
+                        // hop deliveries a peer owes (topology-aware: the
+                        // hier schedule has a different hop count)
+                        let hops = crate::collectives::packed::schedule_for_topo(
+                            self.net.algo,
+                            false,
+                            1,
+                            self.cfg.hier_schedule,
+                            self.net.gpus_per_node,
+                            plan.live.len().max(1),
+                        )
+                        .as_dyn()
+                        .hops(plan.live.len().max(1));
                         let dead = faults.unreachable_peers(
                             step,
                             &plan.live,
@@ -369,6 +396,7 @@ impl Cluster {
                 let step_net = faults.net_for_step(&self.net, step, live_m.max(1));
                 let mut ctx = StepCtx::new(&step_net, &mut step_clock);
                 ctx.wire_floor_bits = self.cfg.wire_floor_bits;
+                ctx.hier = self.cfg.hier_schedule;
                 ctx.integrity = self.cfg.integrity;
                 ctx.wire_faults = Some((&faults, step));
                 ctx.clock.retrans_s += escalation_s;
@@ -430,6 +458,8 @@ impl Cluster {
         self.clock.decode_s += step_clock.decode_s;
         self.clock.bits_per_worker += step_clock.bits_per_worker;
         self.clock.hop_bits_per_worker += step_clock.hop_bits_per_worker;
+        self.clock.hop_bits_intra += step_clock.hop_bits_intra;
+        self.clock.hop_bits_inter += step_clock.hop_bits_inter;
         self.clock.hidden_comm_s += step_clock.hidden_comm_s;
         self.clock.retrans_s += step_clock.retrans_s;
         self.clock.retrans_bits += step_clock.retrans_bits;

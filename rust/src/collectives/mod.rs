@@ -17,13 +17,13 @@
 pub mod packed;
 
 use crate::compress::bitpack::{self, Packed};
-use crate::netsim::{FaultPlan, HopFault, NetConfig, RingWidth, SimClock};
+use crate::netsim::{FaultPlan, HopFault, LinkLevel, NetConfig, RingWidth, SimClock};
 use crate::tensor::LevelInt;
 
 pub use packed::{
-    allreduce_sum_packed_sched, corrupt_word, ring_allreduce_sum_packed, xor_fold_checksum,
-    IntegrityConfig, NaiveReduce, PackedReduce, PackedSchedule, PlaneTraffic, RingFixed,
-    RingGrowing, RingTraffic, TreeReduce, CHECKSUM_BYTES,
+    allreduce_sum_packed_sched, corrupt_word, ring_allreduce_sum_packed, schedule_for_topo,
+    xor_fold_checksum, Hierarchical, IntegrityConfig, NaiveReduce, PackedReduce, PackedSchedule,
+    PlaneTraffic, RingFixed, RingGrowing, RingTraffic, TreeReduce, CHECKSUM_BYTES,
 };
 
 /// Elementwise sum all-reduce via the ring schedule, generic over the
@@ -245,6 +245,15 @@ pub struct StepCtx<'a> {
     /// `None` (or a plan with `loss = flip = 0`) means a clean wire: no
     /// retransmit charges at all.
     pub wire_faults: Option<(&'a FaultPlan, usize)>,
+    /// Topology-aware scheduling (PR 8): when true and the net spans more
+    /// than one multi-GPU island, [`StepCtx::packed_schedule`] resolves the
+    /// ring to the two-level [`packed::Hierarchical`] schedule (full-width
+    /// island all-reduce over `intra`, compressed leader ring over `inter`)
+    /// and `RingWidth::Auto` decides the leader ring's width per level
+    /// ([`NetConfig::growing_ring_wins_on`] on the Inter link with the
+    /// island-sum bound `g·lmax`). `false` (the default) keeps every
+    /// resolution bit-identical to the flat planes.
+    pub hier: bool,
 }
 
 impl<'a> StepCtx<'a> {
@@ -257,6 +266,7 @@ impl<'a> StepCtx<'a> {
             backward_s: None,
             integrity: None,
             wire_faults: None,
+            hier: false,
         }
     }
 
@@ -274,12 +284,27 @@ impl<'a> StepCtx<'a> {
             "packed schedule for m={m} over a {}-worker wire",
             self.net.workers
         );
+        let g = self.net.gpus_per_node.clamp(1, m.max(1));
+        let nodes = m.div_ceil(g);
+        let hier_active =
+            self.hier && matches!(self.net.algo, crate::netsim::Algo::Ring) && g > 1 && nodes > 1;
         let growing = match self.ring_width {
             RingWidth::Fixed => false,
             RingWidth::Growing => true,
+            // per-level decision (PR 8): on the two-level schedule only the
+            // leader ring has a width choice, so Auto asks the selector about
+            // the Inter link with the leader ring's shape — `nodes` ranks,
+            // island-sum contribution bound `g·lmax`. Flat shapes keep the
+            // bottleneck-link form, bit-identical to the pre-hier resolution.
+            RingWidth::Auto if hier_active => self.net.growing_ring_wins_on(
+                LinkLevel::Inter,
+                lmax.saturating_mul(g),
+                nodes,
+                elems,
+            ),
             RingWidth::Auto => self.net.growing_ring_wins(lmax, m, elems),
         };
-        packed::schedule_for(self.net.algo, growing, lmax)
+        packed::schedule_for_topo(self.net.algo, growing, lmax, self.hier, g, m)
     }
 
     /// Byte-exact payload bits for `elems` coordinates at `bits_per_elem`:
@@ -397,9 +422,13 @@ impl<'a> StepCtx<'a> {
     ///   actually ships ([`PackedReduce::hop_wire_bytes`] — resident-width
     ///   ring segments, growing-width partials, full tree/naive buffers),
     ///   and the time charge is the schedule's own wire model
-    ///   ([`PackedReduce::comm_s`]: hop-sum over the bottleneck link for
-    ///   the ring, the hierarchical α–β model at the resident width for
-    ///   tree/naive) — the deployment overhead the uniform model hides.
+    ///   ([`PackedReduce::comm_s`]: per-level hop-sum for the rings —
+    ///   each hop priced on its own link via [`PackedReduce::hop_level`] —
+    ///   the hierarchical α–β model at the resident width for tree/naive)
+    ///   — the deployment overhead the uniform model hides. The hop-bits
+    ///   book is additionally split per link level into
+    ///   [`SimClock::hop_bits_intra`] / [`SimClock::hop_bits_inter`]
+    ///   (their sum always equals the `hop_bits_per_worker` increment).
     pub fn charge_packed(
         &mut self,
         sched: &dyn PackedReduce,
@@ -413,9 +442,16 @@ impl<'a> StepCtx<'a> {
             return;
         }
         self.clock.comm_s += sched.comm_s(self.net, elems, resident_bits);
+        let fallback = self.net.bottleneck_level();
         for h in 0..sched.hops(m) {
-            self.clock.hop_bits_per_worker +=
-                sched.hop_wire_bytes(h, elems, resident_bits, m) * 8.0;
+            let bits = sched.hop_wire_bytes(h, elems, resident_bits, m) * 8.0;
+            self.clock.hop_bits_per_worker += bits;
+            // per-level split of the same book (flat schedules leave
+            // hop_level at None and land wholly on the bottleneck level)
+            match sched.hop_level(h, m).unwrap_or(fallback) {
+                LinkLevel::Intra => self.clock.hop_bits_intra += bits,
+                LinkLevel::Inter => self.clock.hop_bits_inter += bits,
+            }
         }
         self.charge_integrity(sched, elems, resident_bits);
     }
@@ -453,10 +489,18 @@ impl<'a> StepCtx<'a> {
         let csum_bits = (8 * CHECKSUM_BYTES * hops) as f64;
         self.clock.bits_per_worker += csum_bits;
         self.clock.hop_bits_per_worker += csum_bits;
+        let fallback = self.net.bottleneck_level();
         for h in 0..hops {
+            // each hop's checksum rides that hop's link (PR 8: per-level)
+            let level = sched.hop_level(h, m).unwrap_or(fallback);
+            let per_hop_csum = (8 * CHECKSUM_BYTES) as f64;
+            match level {
+                LinkLevel::Intra => self.clock.hop_bits_intra += per_hop_csum,
+                LinkLevel::Inter => self.clock.hop_bits_inter += per_hop_csum,
+            }
             let seg = sched.hop_wire_bytes(h, elems, resident_bits, m);
-            self.clock.comm_s +=
-                self.net.hop_s(seg + CHECKSUM_BYTES as f64) - self.net.hop_s(seg);
+            self.clock.comm_s += self.net.hop_s_on(level, seg + CHECKSUM_BYTES as f64)
+                - self.net.hop_s_on(level, seg);
         }
         let Some((plan, step)) = self.wire_faults else { return };
         if plan.loss <= 0.0 && plan.flip <= 0.0 {
@@ -465,6 +509,8 @@ impl<'a> StepCtx<'a> {
         for h in 0..hops {
             let seg_bytes =
                 sched.hop_wire_bytes(h, elems, resident_bits, m) + CHECKSUM_BYTES as f64;
+            // a retransmit is a fresh packet on the hop's own link
+            let level = sched.hop_level(h, m).unwrap_or(fallback);
             for w in 0..m {
                 let mut failed = 0u32;
                 while failed <= cfg.max_retries
@@ -477,7 +523,7 @@ impl<'a> StepCtx<'a> {
                     self.clock.retrans_bits += sent as f64 * 8.0 * seg_bytes;
                     self.clock.retrans_s += cfg.backoff_base_s
                         * (2f64.powi(sent as i32) - 1.0)
-                        + sent as f64 * self.net.hop_s(seg_bytes);
+                        + sent as f64 * self.net.hop_s_on(level, seg_bytes);
                 }
             }
         }
@@ -929,5 +975,158 @@ mod tests {
         assert!(clock.hop_bits_per_worker > clock.bits_per_worker);
         assert!(clock.comm_s > 0.0);
         assert!(traffic.bytes_moved > 0.0);
+    }
+
+    #[test]
+    fn charge_packed_splits_hop_bits_per_level() {
+        // PR 8: the hop-bits book gains a per-level split whose sum always
+        // equals hop_bits_per_worker, with flat schedules landing wholly on
+        // the bottleneck level and the hierarchical schedule splitting by
+        // its hop tags — closed forms on the paper topology.
+        let elems = 10_000usize;
+        let lmax = 7usize;
+        let net = NetConfig::paper_cluster(10.0);
+        let m = net.workers;
+        let (g, nodes) = (net.gpus_per_node, net.nodes());
+        let bits = bitpack::packed_sum_bits(lmax, m);
+
+        // flat ring on the multi-node net: everything is Inter
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.charge_packed(&RingFixed, elems, bits, 4.0);
+        assert_eq!(clock.hop_bits_inter, clock.hop_bits_per_worker);
+        assert_eq!(clock.hop_bits_intra, 0.0);
+
+        // flat ring on a single-node net: everything is Intra
+        let single = NetConfig::single_node(4);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&single, &mut clock);
+        ctx.charge_packed(&RingFixed, elems, bitpack::packed_sum_bits(lmax, 4), 4.0);
+        assert_eq!(clock.hop_bits_intra, clock.hop_bits_per_worker);
+        assert_eq!(clock.hop_bits_inter, 0.0);
+
+        // hierarchical: 4(g-1) Intra island-segment hops + 2(nodes-1) Inter
+        // leader hops, each book pinned to its closed form
+        let sched = Hierarchical { gpus_per_node: g, lmax, growing: false };
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.charge_packed(&sched, elems, bits, 4.0);
+        let island_seg = bitpack::wire_bytes_for(elems.div_ceil(g), bits) as f64;
+        let leader_seg = bitpack::wire_bytes_for(elems.div_ceil(nodes), bits) as f64;
+        assert_eq!(clock.hop_bits_intra, 4.0 * (g - 1) as f64 * island_seg * 8.0);
+        assert_eq!(clock.hop_bits_inter, 2.0 * (nodes - 1) as f64 * leader_seg * 8.0);
+        assert_eq!(clock.hop_bits_intra + clock.hop_bits_inter, clock.hop_bits_per_worker);
+        assert_eq!(clock.comm_s, packed::analytic_comm_s(&sched, &net, elems, bits));
+
+        // integrity on: each hop's checksum lands on that hop's level and
+        // the split invariant survives
+        let mut on = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut on);
+        ctx.integrity = Some(IntegrityConfig::default());
+        ctx.charge_packed(&sched, elems, bits, 4.0);
+        let csum = |hops: f64| hops * (8 * CHECKSUM_BYTES) as f64;
+        assert_eq!(on.hop_bits_intra, clock.hop_bits_intra + csum(4.0 * (g - 1) as f64));
+        assert_eq!(on.hop_bits_inter, clock.hop_bits_inter + csum(2.0 * (nodes - 1) as f64));
+        assert_eq!(on.hop_bits_intra + on.hop_bits_inter, on.hop_bits_per_worker);
+    }
+
+    #[test]
+    fn packed_schedule_resolution_is_topology_aware() {
+        // hier on a genuinely two-level net resolves Hier; single-island,
+        // single-GPU, off-ring, and hier=false shapes all stay flat.
+        let elems = 1 << 20;
+        let lmax = 7usize;
+        let net = NetConfig::paper_cluster(10.0);
+        let m = net.workers;
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        assert!(matches!(ctx.packed_schedule(lmax, m, elems), PackedSchedule::RingFixed(_)));
+        ctx.hier = true;
+        match ctx.packed_schedule(lmax, m, elems) {
+            PackedSchedule::Hier(h) => assert_eq!(h.gpus_per_node, net.gpus_per_node),
+            other => panic!("expected Hier, got {:?}", other),
+        }
+        // explicit width policy drives the leader ring
+        ctx.ring_width = RingWidth::Growing;
+        match ctx.packed_schedule(lmax, m, elems) {
+            PackedSchedule::Hier(h) => assert!(h.growing),
+            other => panic!("expected Hier, got {:?}", other),
+        }
+        // Auto on the hier shape asks the per-level selector about the
+        // leader ring: slow Ethernet, 32 leaders, bound g*lmax -> growing
+        let slow = NetConfig::paper_cluster(0.5);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&slow, &mut clock);
+        ctx.hier = true;
+        match ctx.packed_schedule(lmax, slow.workers, elems) {
+            PackedSchedule::Hier(h) => {
+                assert_eq!(
+                    h.growing,
+                    slow.growing_ring_wins_on(
+                        LinkLevel::Inter,
+                        lmax * slow.gpus_per_node,
+                        slow.nodes(),
+                        elems
+                    )
+                );
+                assert!(h.growing, "32 leaders over 0.5 Gb/s should pick growing");
+            }
+            other => panic!("expected Hier, got {:?}", other),
+        }
+        // single island: hier requested but the topology is flat NVLink
+        let single = NetConfig::single_node(4);
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&single, &mut clock);
+        ctx.hier = true;
+        assert!(matches!(ctx.packed_schedule(lmax, 4, elems), PackedSchedule::RingFixed(_)));
+        // off-ring algos ignore the hier flag entirely
+        let mut tree = NetConfig::paper_cluster(10.0);
+        tree.algo = crate::netsim::Algo::Tree;
+        let mut clock = SimClock::default();
+        let mut ctx = StepCtx::new(&tree, &mut clock);
+        ctx.hier = true;
+        assert!(matches!(ctx.packed_schedule(lmax, m, elems), PackedSchedule::Tree(_)));
+    }
+
+    #[test]
+    fn growing_selector_matches_alpha_inclusive_times_at_crossover() {
+        // The ISSUE-8 α satellite, pinned end-to-end: the selector's
+        // bandwidth-only decision must equal the comparison of the two
+        // candidates' FULL α-inclusive wire times (analytic_comm_s sums
+        // α + bytes/β per hop) plus the repack tax — for every α, on both
+        // sides of the elems crossover. Both rings make 2(m-1) hops, so α
+        // is a common term and cannot flip the comparison.
+        let m = 16usize;
+        let lmax = 1usize; // 1-bit-ish codes: the regime where growing pays
+        let bits = bitpack::packed_sum_bits(lmax, m);
+        let mut flipped = false;
+        for alpha in [0.0, 50e-6, 5e-3] {
+            let mut net = NetConfig::flat(m, 2.0);
+            net.inter.alpha_s = alpha;
+            let mut last = None;
+            for elems in [64usize, 512, 4 << 10, 64 << 10, 1 << 20, 8 << 20] {
+                let seg_fixed =
+                    bitpack::wire_bytes_for(elems.div_ceil(m), bits) as f64;
+                // GROWING_EXTRA_PASSES (2.0) repack passes per RS hop
+                let extra_s = (m - 1) as f64
+                    * 2.0
+                    * seg_fixed
+                    * crate::netsim::REPACK_S_PER_BYTE;
+                let fixed_s = packed::analytic_comm_s(&RingFixed, &net, elems, bits);
+                let grow_s =
+                    packed::analytic_comm_s(&RingGrowing { lmax }, &net, elems, bits);
+                let want = fixed_s - grow_s > extra_s;
+                let got = net.growing_ring_wins(lmax, m, elems);
+                assert_eq!(
+                    got, want,
+                    "selector vs α-inclusive times at elems={elems}, α={alpha}"
+                );
+                if let Some(prev) = last {
+                    flipped |= prev != got;
+                }
+                last = Some(got);
+            }
+        }
+        assert!(flipped, "the sweep must straddle the crossover");
     }
 }

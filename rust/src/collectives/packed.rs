@@ -33,7 +33,7 @@
 //! packed plane against the i16 plane and growing against fixed.
 
 use crate::compress::bitpack::{self, Packed};
-use crate::netsim::NetConfig;
+use crate::netsim::{LinkLevel, NetConfig};
 
 /// Data-plane ledger for a packed collective, generic over the schedule:
 /// counts the packed-buffer bytes read and written by reduce/copy/repack
@@ -161,19 +161,39 @@ pub trait PackedReduce: Sync {
     /// segment; tree/naive hops move the full buffer.
     fn hop_wire_bytes(&self, h: usize, elems: usize, bits: u32, m: usize) -> f64;
 
+    /// The [`LinkLevel`] hop `h` crosses, for topology-aware schedules
+    /// (PR 8): [`Hierarchical`] tags its island hops `Intra` and its
+    /// leader-ring hops `Inter`. `None` — the default every single-level
+    /// schedule keeps — means "the flat bottleneck link", which the charger
+    /// resolves through [`NetConfig::bottleneck_level`].
+    fn hop_level(&self, _h: usize, _m: usize) -> Option<LinkLevel> {
+        None
+    }
+
     /// Simulated wire seconds of one full pass at resident width `bits`.
-    /// Default: the sum of the schedule's hops over the bottleneck link —
-    /// right for the ring, whose synchronous pipeline of segment hops spans
-    /// nodes (this is what PR 2's `ring_steps_s` charged). Tree/naive
-    /// override it with the **hierarchical** α–β model at the resident
-    /// width, so multi-GPU-per-node clusters keep their NVLink advantage
-    /// (the pre-PR-3 behaviour, now at the width actually shipped).
+    /// Default: the sum of the schedule's hops, each over the link of its
+    /// [`PackedReduce::hop_level`] (the flat bottleneck when untagged) —
+    /// right for the rings, whose synchronous pipeline of segment hops
+    /// spans nodes (this is what PR 2's `ring_steps_s` charged), and for
+    /// the hierarchical schedule, whose hops carry their own level.
+    /// Tree/naive override it with the **hierarchical** α–β model at the
+    /// resident width, so multi-GPU-per-node clusters keep their NVLink
+    /// advantage (the pre-PR-3 behaviour, now at the width actually
+    /// shipped).
     fn comm_s(&self, net: &NetConfig, elems: usize, bits: u32) -> f64 {
         let m = net.workers.max(1);
         if m <= 1 || elems == 0 {
             return 0.0;
         }
-        (0..self.hops(m)).map(|h| net.hop_s(self.hop_wire_bytes(h, elems, bits, m))).sum()
+        let fallback = net.bottleneck_level();
+        (0..self.hops(m))
+            .map(|h| {
+                net.hop_s_on(
+                    self.hop_level(h, m).unwrap_or(fallback),
+                    self.hop_wire_bytes(h, elems, bits, m),
+                )
+            })
+            .sum()
     }
 }
 
@@ -384,8 +404,13 @@ impl RingGrowing {
         // reduce-scatter: the shipped partial holds k = step + 1
         // contributions, so the wire segment is bitlen(2*k*lmax) wide.
         for step in 0..m - 1 {
-            let wbits = growing_hop_bits(self.lmax, step + 1);
-            debug_assert!(wbits <= bits, "growing hop wider than resident");
+            // capped at the resident width: with the flat ring's lmax the
+            // cap never binds (k <= m), but the hierarchical leader ring
+            // reuses this schedule with the island-sum bound g*lmax, where
+            // a ragged last island can push bitlen(2*k*g*lmax) one past the
+            // resident bitlen(2*m_total*lmax) — the values themselves
+            // always fit the resident width, so shipping at it is exact
+            let wbits = growing_hop_bits(self.lmax, step + 1).min(bits);
             for r in 0..m {
                 let c = (r + m - step) % m;
                 let dst = (r + 1) % m;
@@ -560,6 +585,186 @@ impl PackedReduce for NaiveReduce {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Hierarchical two-level schedule (PR 8)
+// ---------------------------------------------------------------------------
+
+/// Two-level packed schedule for multi-GPU-per-node clusters: a full-width
+/// reduce-scatter + all-gather ring inside each contiguous NVLink island
+/// (`gpus_per_node` ranks), then the compressed fixed-or-growing packed
+/// ring **only across the island leaders** over the inter-node link, and
+/// finally an intra-island broadcast of the global sum. Ranks are grouped
+/// into islands by contiguous blocks (`island(w) = w / gpus_per_node`; the
+/// last island may be ragged), matching how the elastic cohort compacts:
+/// a leaving worker shrinks its island — the leader ring only loses a node
+/// when an island empties.
+///
+/// **Payload parity.** Every phase is an exact integer reduction of biased
+/// codes at a carry-safe width (island partials hold `<= g` contributions,
+/// leader partials `<= m`, both within the resident headroom), and integer
+/// addition is associative — so the final decoded payload is bit-identical
+/// to every flat schedule's. Only timing and the per-level wire ledgers
+/// differ, and those are pinned against closed forms.
+///
+/// **Per-level charge model** ([`PackedReduce::hop_level`] tags each hop):
+/// * island all-reduce: `2(g−1)` Intra hops × `ceil(elems/g)`-code
+///   segments at the resident width;
+/// * leader ring: `2(nodes−1)` Inter hops × `ceil(elems/nodes)`-code
+///   segments — resident width when fixed, `bitlen(2·k·g·lmax)` (capped at
+///   resident) on reduce-scatter hop `k` when growing: an island sum is one
+///   contribution bounded by `g·lmax`, so [`RingGrowing`]'s width law
+///   composes with `lmax → g·lmax`;
+/// * island broadcast: `2(g−1)` Intra hops × `ceil(elems/g)`-code segments
+///   at the resident width (a scatter + all-gather pipelined broadcast —
+///   the data plane performs the bit-identical simple copy, the wire model
+///   charges the efficient schedule, the same convention tree/naive use).
+///
+/// Degenerate shapes collapse honestly: one island (`nodes == 1`) is
+/// exactly the flat fixed ring on NVLink, one GPU per node (`g == 1`) is
+/// exactly the flat ring on Ethernet.
+#[derive(Clone, Copy, Debug)]
+pub struct Hierarchical {
+    /// island size (GPUs per NVLink island); islands are contiguous blocks
+    pub gpus_per_node: usize,
+    /// per-contribution level bound of the scheme (the per-rank bias)
+    pub lmax: usize,
+    /// leader-ring wire width: grow with the island-sum partial count?
+    /// (the intra phases always run fixed — NVLink outruns the re-packer)
+    pub growing: bool,
+}
+
+impl Hierarchical {
+    /// `(g, nodes)` for an `m`-rank cohort: the island size clamped to the
+    /// cohort and the leader-ring length `ceil(m/g)`.
+    fn shape(&self, m: usize) -> (usize, usize) {
+        let g = self.gpus_per_node.clamp(1, m.max(1));
+        (g, m.div_ceil(g))
+    }
+
+    /// Wire width of leader-ring hop `h` (0-based within the inter phase):
+    /// reduce-scatter hop `h` carries `k = h + 1` island sums, each bounded
+    /// by `g·lmax`; all-gather hops carry completed sums at the resident
+    /// width. Capped at the resident width (the values always fit it).
+    fn leader_hop_width(&self, h: usize, g: usize, nodes: usize, bits: u32) -> u32 {
+        if self.growing && h + 1 < nodes {
+            growing_hop_bits(self.lmax.saturating_mul(g), h + 1).min(bits)
+        } else {
+            bits
+        }
+    }
+}
+
+impl PackedReduce for Hierarchical {
+    fn name(&self) -> &'static str {
+        if self.growing {
+            "hier-growing"
+        } else {
+            "hier-fixed"
+        }
+    }
+
+    fn reduce(
+        &self,
+        bufs: &mut [&mut [u64]],
+        bits: u32,
+        n_codes: usize,
+        traffic: &mut PlaneTraffic,
+    ) {
+        let m = bufs.len();
+        if m <= 1 || n_codes == 0 {
+            return;
+        }
+        let (g, nodes) = self.shape(m);
+        // phase A: island-local RS+AG all-reduce at the resident width —
+        // every island member (the leader included) ends with the island sum
+        if g > 1 {
+            for island in bufs.chunks_mut(g) {
+                ring_allreduce_biased_range(island, bits, n_codes, traffic);
+            }
+        }
+        if nodes <= 1 {
+            return; // single island: the island sum IS the global sum
+        }
+        // phase B: compressed ring across the island leaders only. An
+        // island sum is one contribution bounded by g*lmax, so the growing
+        // ring composes with the scaled bound (width capped at resident).
+        {
+            let mut leaders: Vec<&mut [u64]> = bufs
+                .chunks_mut(g)
+                .filter_map(|island| match island {
+                    [first, ..] => Some(&mut **first),
+                    [] => None,
+                })
+                .collect();
+            if self.growing {
+                RingGrowing { lmax: self.lmax.saturating_mul(g) }
+                    .reduce(&mut leaders, bits, n_codes, traffic);
+            } else {
+                ring_allreduce_biased_range(&mut leaders, bits, n_codes, traffic);
+            }
+        }
+        // phase C: broadcast the global sum back into each island (data
+        // plane: a packed copy per member; wire model: scatter + all-gather)
+        if g > 1 {
+            for island in bufs.chunks_mut(g) {
+                if let [leader, rest @ ..] = island {
+                    for member in rest {
+                        bitpack::copy_packed_codes(&mut **member, &**leader, bits, 0, n_codes);
+                        traffic.seg(n_codes, bits, 2.0);
+                        traffic.wire(n_codes, bits);
+                        traffic.steps += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn hops(&self, m: usize) -> usize {
+        if m <= 1 {
+            return 0;
+        }
+        let (g, nodes) = self.shape(m);
+        if nodes <= 1 {
+            // one island: plain intra ring (g == m here)
+            2 * (g - 1)
+        } else {
+            // island all-reduce + leader ring + island broadcast
+            4 * g.saturating_sub(1) + 2 * (nodes - 1)
+        }
+    }
+
+    fn hop_wire_bytes(&self, h: usize, elems: usize, bits: u32, m: usize) -> f64 {
+        let (g, nodes) = self.shape(m);
+        let island_seg = bitpack::wire_bytes_for(elems.div_ceil(g), bits) as f64;
+        if nodes <= 1 {
+            return island_seg;
+        }
+        let intra_a = 2 * g.saturating_sub(1);
+        let inter = 2 * (nodes - 1);
+        if h >= intra_a && h < intra_a + inter {
+            let hh = h - intra_a;
+            let w = self.leader_hop_width(hh, g, nodes, bits);
+            bitpack::wire_bytes_for(elems.div_ceil(nodes), w) as f64
+        } else {
+            island_seg
+        }
+    }
+
+    fn hop_level(&self, h: usize, m: usize) -> Option<LinkLevel> {
+        let (g, nodes) = self.shape(m);
+        if nodes <= 1 {
+            return Some(LinkLevel::Intra);
+        }
+        let intra_a = 2 * g.saturating_sub(1);
+        let inter = 2 * (nodes - 1);
+        Some(if h >= intra_a && h < intra_a + inter {
+            LinkLevel::Inter
+        } else {
+            LinkLevel::Intra
+        })
+    }
+}
+
 /// The schedule for a [`crate::netsim::Algo`] + ring-width choice.
 /// `lmax` is the per-contribution level bound (ignored off-ring and for the
 /// fixed ring); `growing` selects [`RingGrowing`] on the ring.
@@ -572,7 +777,29 @@ pub fn schedule_for(algo: crate::netsim::Algo, growing: bool, lmax: usize) -> Pa
     }
 }
 
-/// Owned, allocation-free sum of the four schedules (so callers can select
+/// Topology-aware schedule resolution (PR 8): [`Hierarchical`] when the
+/// hierarchical policy is on, the algo is the ring, and the `m`-rank cohort
+/// genuinely spans more than one multi-GPU island over `gpus_per_node`;
+/// otherwise exactly [`schedule_for`]. `growing` picks the **leader ring's**
+/// width on the hierarchical schedule (the island phases always run fixed).
+pub fn schedule_for_topo(
+    algo: crate::netsim::Algo,
+    growing: bool,
+    lmax: usize,
+    hier: bool,
+    gpus_per_node: usize,
+    m: usize,
+) -> PackedSchedule {
+    if hier && matches!(algo, crate::netsim::Algo::Ring) {
+        let g = gpus_per_node.clamp(1, m.max(1));
+        if g > 1 && m.div_ceil(g) > 1 {
+            return PackedSchedule::Hier(Hierarchical { gpus_per_node: g, lmax, growing });
+        }
+    }
+    schedule_for(algo, growing, lmax)
+}
+
+/// Owned, allocation-free sum of the five schedules (so callers can select
 /// per step without boxing); derefs to the trait via [`PackedSchedule::as_dyn`].
 #[derive(Clone, Copy, Debug)]
 pub enum PackedSchedule {
@@ -580,6 +807,7 @@ pub enum PackedSchedule {
     RingGrowing(RingGrowing),
     Tree(TreeReduce),
     Naive(NaiveReduce),
+    Hier(Hierarchical),
 }
 
 impl PackedSchedule {
@@ -589,6 +817,7 @@ impl PackedSchedule {
             PackedSchedule::RingGrowing(s) => s,
             PackedSchedule::Tree(s) => s,
             PackedSchedule::Naive(s) => s,
+            PackedSchedule::Hier(s) => s,
         }
     }
 }
@@ -706,6 +935,10 @@ mod tests {
             PackedSchedule::RingGrowing(RingGrowing { lmax }),
             PackedSchedule::Tree(TreeReduce),
             PackedSchedule::Naive(NaiveReduce),
+            // two-level shapes, exact and ragged islands, both leader widths
+            PackedSchedule::Hier(Hierarchical { gpus_per_node: 2, lmax, growing: false }),
+            PackedSchedule::Hier(Hierarchical { gpus_per_node: 3, lmax, growing: true }),
+            PackedSchedule::Hier(Hierarchical { gpus_per_node: 4, lmax, growing: true }),
         ]
     }
 
@@ -904,6 +1137,163 @@ mod tests {
             (0..s.hops(m)).map(|h| s.hop_wire_bytes(h, elems, bits, m)).sum()
         };
         assert!(total(&grow) < total(&RingFixed));
+    }
+
+    #[test]
+    fn hierarchical_hop_model_matches_closed_form() {
+        // PR 8: hop count, per-hop bytes, per-hop level, and comm_s of the
+        // two-level schedule, pinned against the hand-written closed form
+        // on the paper topology (32 nodes x 4 GPUs).
+        use crate::netsim::LinkLevel;
+        let (elems, lmax, m, g, nodes) = (1_000_000usize, 7usize, 128usize, 4usize, 32usize);
+        let bits = packed_sum_bits(lmax, m);
+        let net = NetConfig::paper_cluster(10.0);
+        let island_seg = bitpack::wire_bytes_for(elems.div_ceil(g), bits) as f64;
+        let leader_seg = |w: u32| bitpack::wire_bytes_for(elems.div_ceil(nodes), w) as f64;
+
+        for growing in [false, true] {
+            let h = Hierarchical { gpus_per_node: g, lmax, growing };
+            assert_eq!(h.hops(m), 4 * (g - 1) + 2 * (nodes - 1)); // 12 + 62
+            let mut want_comm = 0.0;
+            let mut want_intra_bytes = 0.0;
+            let mut want_inter_bytes = 0.0;
+            for hop in 0..h.hops(m) {
+                let inter_hop = hop >= 2 * (g - 1) && hop < 2 * (g - 1) + 2 * (nodes - 1);
+                let bytes = if inter_hop {
+                    let hh = hop - 2 * (g - 1);
+                    let w = if growing && hh + 1 < nodes {
+                        growing_hop_bits(g * lmax, hh + 1).min(bits)
+                    } else {
+                        bits
+                    };
+                    leader_seg(w)
+                } else {
+                    island_seg
+                };
+                assert_eq!(
+                    h.hop_wire_bytes(hop, elems, bits, m),
+                    bytes,
+                    "hop {hop} bytes (growing={growing})"
+                );
+                let level = if inter_hop { LinkLevel::Inter } else { LinkLevel::Intra };
+                assert_eq!(h.hop_level(hop, m), Some(level), "hop {hop} level");
+                want_comm += net.hop_s_on(level, bytes);
+                if inter_hop {
+                    want_inter_bytes += bytes;
+                } else {
+                    want_intra_bytes += bytes;
+                }
+            }
+            let got = h.comm_s(&net, elems, bits);
+            assert!(
+                (got - want_comm).abs() <= 1e-12 * want_comm,
+                "comm_s closed form (growing={growing}): {got} vs {want_comm}"
+            );
+            // the per-level split the clock ledgers see
+            assert_eq!(want_intra_bytes, 4.0 * (g - 1) as f64 * island_seg);
+            assert!(want_inter_bytes > 0.0);
+            // the tentpole economics: the two-level schedule beats the flat
+            // 128-rank Ethernet ring in simulated time (the bench gate)
+            let flat = RingFixed.comm_s(&net, elems, bits);
+            assert!(got < flat, "hier {got} must beat flat {flat} (growing={growing})");
+        }
+        // growing leader ring never ships more inter bytes than fixed
+        let total_inter = |growing: bool| -> f64 {
+            let h = Hierarchical { gpus_per_node: g, lmax, growing };
+            (0..h.hops(m))
+                .filter(|&hop| h.hop_level(hop, m) == Some(LinkLevel::Inter))
+                .map(|hop| h.hop_wire_bytes(hop, elems, bits, m))
+                .sum()
+        };
+        assert!(total_inter(true) < total_inter(false));
+    }
+
+    #[test]
+    fn hierarchical_degenerates_to_flat_ring() {
+        // one island (nodes == 1) or one GPU per node (g == 1): the
+        // two-level schedule collapses to the flat fixed ring's hop shape,
+        // and schedule_for_topo resolves it away entirely.
+        use crate::netsim::{Algo, LinkLevel};
+        let (elems, lmax) = (4096usize, 3usize);
+        let m = 4usize;
+        let bits = packed_sum_bits(lmax, m);
+
+        // nodes == 1 on a single-node net: same hops, bytes, and comm as flat
+        let one_island = Hierarchical { gpus_per_node: 4, lmax, growing: true };
+        let net = NetConfig::single_node(m);
+        assert_eq!(one_island.hops(m), RingFixed.hops(m));
+        for h in 0..one_island.hops(m) {
+            assert_eq!(
+                one_island.hop_wire_bytes(h, elems, bits, m),
+                RingFixed.hop_wire_bytes(h, elems, bits, m)
+            );
+            assert_eq!(one_island.hop_level(h, m), Some(LinkLevel::Intra));
+        }
+        assert_eq!(one_island.comm_s(&net, elems, bits), RingFixed.comm_s(&net, elems, bits));
+
+        // g == 1 on a flat net: identical to the flat ring on Ethernet
+        let flat_g1 = Hierarchical { gpus_per_node: 1, lmax, growing: false };
+        let flat_net = NetConfig::flat(m, 10.0);
+        assert_eq!(flat_g1.hops(m), RingFixed.hops(m));
+        for h in 0..flat_g1.hops(m) {
+            assert_eq!(
+                flat_g1.hop_wire_bytes(h, elems, bits, m),
+                RingFixed.hop_wire_bytes(h, elems, bits, m)
+            );
+            assert_eq!(flat_g1.hop_level(h, m), Some(LinkLevel::Inter));
+        }
+        assert_eq!(
+            flat_g1.comm_s(&flat_net, elems, bits),
+            RingFixed.comm_s(&flat_net, elems, bits)
+        );
+
+        // resolution: hier only materializes on true two-level shapes
+        assert!(matches!(
+            schedule_for_topo(Algo::Ring, false, lmax, true, 4, 128),
+            PackedSchedule::Hier(_)
+        ));
+        assert!(matches!(
+            schedule_for_topo(Algo::Ring, false, lmax, true, 4, 4),
+            PackedSchedule::RingFixed(_)
+        ));
+        assert!(matches!(
+            schedule_for_topo(Algo::Ring, true, lmax, true, 1, 128),
+            PackedSchedule::RingGrowing(_)
+        ));
+        assert!(matches!(
+            schedule_for_topo(Algo::Tree, false, lmax, true, 4, 128),
+            PackedSchedule::Tree(_)
+        ));
+        assert!(matches!(
+            schedule_for_topo(Algo::Ring, false, lmax, false, 4, 128),
+            PackedSchedule::RingFixed(_)
+        ));
+    }
+
+    #[test]
+    fn hierarchical_traffic_matches_analytic() {
+        // data-plane ledger closed form, exact islands, fixed leader ring:
+        // phase A is one 5(g-1)-pass ring per island, phase B one
+        // 5(nodes-1)-pass ring over the leaders, phase C (g-1) two-pass
+        // full-buffer copies per island.
+        let (m, g, lmax, n) = (8usize, 4usize, 7usize, 513usize);
+        let nodes = m / g;
+        let bits = packed_sum_bits(lmax, m);
+        let field_bytes = (n * bits as usize) as f64 / 8.0;
+        let want = nodes as f64 * 5.0 * (g - 1) as f64 * field_bytes // A
+            + 5.0 * (nodes - 1) as f64 * field_bytes                 // B
+            + nodes as f64 * 2.0 * (g - 1) as f64 * field_bytes;     // C
+        let levels: Vec<Vec<i32>> = (0..m).map(|r| vec![(r % 3) as i32 - 1; n]).collect();
+        let mut bufs: Vec<Packed> =
+            levels.iter().map(|l| pack_biased_int(l, lmax as i64, bits)).collect();
+        let mut t = PlaneTraffic::default();
+        let sched = Hierarchical { gpus_per_node: g, lmax, growing: false };
+        allreduce_sum_packed_sched(&sched, &mut bufs, &mut t);
+        assert!(
+            (t.bytes_moved - want).abs() < 1e-6,
+            "hier bytes_moved {} != analytic {want}",
+            t.bytes_moved
+        );
     }
 
     #[test]

@@ -765,6 +765,56 @@ mod tests {
     }
 
     #[test]
+    fn hier_schedule_step_bit_identical_with_per_level_ledger() {
+        // PR 8 through the fused seam: with ctx.hier on a multi-island net,
+        // the step resolves the two-level schedule, the payload stays bit-
+        // identical to the flat reference, and the hop-bits book splits per
+        // link level (closed forms in the collectives tests; here we pin
+        // the seam: both levels charged, sum preserved, comm_s cheaper).
+        use crate::netsim::{NetConfig, SimClock};
+        let m = 8usize;
+        let bits = 4usize;
+        let n = 1003;
+        let s = kernels::s_for_bits(bits);
+        let grads: Vec<Vec<f32>> = (0..m).map(|w| vec![0.07 * (w as f32 - 3.0); n]).collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let wnorm = refs.iter().map(|v| l2_norm(v)).fold(0.0f32, f32::max);
+        let want = reference_qsgd_aggregate(&refs, wnorm, s, &Rng::new(11));
+
+        let mut net = NetConfig::flat(m, 10.0);
+        net.gpus_per_node = 4; // 2 islands x 4 GPUs
+        let run = |hier: bool| {
+            let mut clock = SimClock::default();
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.hier = hier;
+            let mut scratch = PackedScratch::new();
+            let mut uniform = Vec::new();
+            let mut out = vec![0.0f32; n];
+            qsgd_step_packed(
+                &refs, wnorm, s, bits as f64, &mut scratch, &mut uniform, &mut ctx,
+                &Rng::new(11), Some(3), &mut out,
+            );
+            (out, clock)
+        };
+        let (flat_out, flat_clock) = run(false);
+        let (hier_out, hier_clock) = run(true);
+        assert_eq!(flat_out, want, "flat payload vs f32 reference");
+        assert_eq!(hier_out, want, "hier payload must be bit-identical");
+        // nominal ledger identical across schedules; per-level split only
+        // on the hierarchical run (the flat net books everything Inter)
+        assert_eq!(flat_clock.bits_per_worker, hier_clock.bits_per_worker);
+        assert_eq!(flat_clock.hop_bits_intra, 0.0);
+        assert!(hier_clock.hop_bits_intra > 0.0);
+        assert!(hier_clock.hop_bits_inter > 0.0);
+        assert_eq!(
+            hier_clock.hop_bits_intra + hier_clock.hop_bits_inter,
+            hier_clock.hop_bits_per_worker
+        );
+        // islands of 4 keep 3/4 of the flat ring's traffic off Ethernet
+        assert!(hier_clock.comm_s < flat_clock.comm_s);
+    }
+
+    #[test]
     fn widening_rule_bounds() {
         assert!(narrow_fits(7, 4096)); // 4-bit, max workers: 28672 < 32767
         assert!(!narrow_fits(2047, 17)); // 12-bit: 17 * 2047 > i16::MAX

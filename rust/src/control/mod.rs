@@ -47,6 +47,13 @@
 //! `ceil(len_b * bits_b / 8)` payload terms (plus per-bucket
 //! `ceil(len_b * index_bits / 8)` scale-share terms for the multi-scale
 //! quantizer), never a re-derivation from the whole-gradient length.
+//!
+//! The plane is schedule-agnostic by construction: every bucket resolves
+//! its reduction through [`StepCtx::packed_schedule`], so the PR 8
+//! hierarchical two-level schedule (`ctx.hier` on a multi-island net)
+//! applies per bucket with zero parity cost — the payload pins above hold
+//! for any schedule, and the hierarchical-vs-flat matrix in
+//! `int_domain_equivalence.rs` exercises exactly this seam.
 
 pub mod bucket;
 pub mod elastic;

@@ -16,6 +16,7 @@
 //!   repro train --model mlp --method qsgd-mn-4 --faults loss=0.01,flip=0.001,seed=7 \
 //!       --integrity --retries 3 --backoff-s 50e-6
 //!   repro train --model mlp --method qsgd-mn-4 --faults poison=1@3 --on-anomaly clip:10
+//!   repro train --model mlp --method qsgd-mn-4 --workers 128 --topology 32x4 --schedule hier
 //!   repro figures --fig 3 --steps 150
 //!   repro perfmodel --floor-bits 8
 
@@ -60,6 +61,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let lr0: f64 = args.parse_or("lr", 0.05)?;
     let seed: u64 = args.parse_or("seed", 42)?;
     let out_dir = args.get_or("out-dir", "results").to_string();
+    let (gpus_per_node, hier_schedule) = parse_topology(args, workers)?;
     let mut control = parse_control(args)?;
     let elastic = parse_elastic(args, workers)?;
     let integrity = parse_integrity(args)?;
@@ -82,6 +84,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     exp.lr0 = lr0;
     exp.seed = seed;
     exp.out_dir = out_dir.into();
+    exp.gpus_per_node = gpus_per_node;
+    exp.hier_schedule = hier_schedule;
     exp.control = control;
     exp.elastic = elastic;
     exp.integrity = integrity;
@@ -90,6 +94,50 @@ fn cmd_train(args: &Args) -> Result<()> {
     let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
     println!("{}", summary_table(&summaries));
     Ok(())
+}
+
+/// Simulated-wire topology options (PR 8): `--topology NxG` declares `N`
+/// nodes of `G` GPUs each (`N*G` must equal `--workers`; e.g. `32x4` for
+/// the paper's §6.6 cluster) and `--schedule hier|flat` picks the packed
+/// collective schedule — `hier` runs the two-level island-then-leader-ring
+/// schedule, `flat` (the default) the single-ring planes of PRs 1-7.
+/// `--schedule hier` needs a `--topology` with `G > 1` and `N > 1`;
+/// payloads are bit-identical either way, only timing and the per-level
+/// wire ledgers differ.
+fn parse_topology(args: &Args, workers: usize) -> Result<(usize, bool)> {
+    let topo_spec = args.get("topology").map(str::to_string);
+    let sched_spec = args.get("schedule").map(str::to_string);
+    let gpus_per_node = match topo_spec {
+        None => 1,
+        Some(spec) => {
+            let (n, g) = spec
+                .split_once(|c| matches!(c, 'x' | 'X' | '×'))
+                .ok_or_else(|| anyhow::anyhow!("--topology wants NxG (e.g. 32x4), got '{spec}'"))?;
+            let nodes: usize = n.trim().parse()?;
+            let gpus: usize = g.trim().parse()?;
+            anyhow::ensure!(nodes >= 1 && gpus >= 1, "--topology needs N >= 1 and G >= 1");
+            anyhow::ensure!(
+                nodes * gpus == workers,
+                "--topology {nodes}x{gpus} describes {} ranks but --workers is {workers}",
+                nodes * gpus
+            );
+            gpus
+        }
+    };
+    let hier = match sched_spec.as_deref() {
+        None | Some("flat") => false,
+        Some("hier") => {
+            anyhow::ensure!(
+                gpus_per_node > 1 && workers > gpus_per_node,
+                "--schedule hier needs --topology NxG with N > 1 and G > 1 \
+                 (got {} GPUs/node over {workers} workers)",
+                gpus_per_node
+            );
+            true
+        }
+        Some(other) => bail!("unknown --schedule '{other}' (try hier|flat)"),
+    };
+    Ok((gpus_per_node, hier))
 }
 
 /// Bucketed control-plane options: `--buckets N` enables the plane for any

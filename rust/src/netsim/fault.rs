@@ -231,16 +231,28 @@ impl FaultPlan {
     /// topology with the *live* worker count substituted (so ring/tree hop
     /// counts, the packed resident width `bitlen(2*M_live*lmax)`, and every
     /// α–β charge re-derive from the surviving cohort) and any active
-    /// degradation window applied to the inter-node link. For
+    /// degradation window applied to the link the shrunk cohort bottlenecks
+    /// on. The island structure rides along untouched: `gpus_per_node` is
+    /// cloned from `base`, so a leaving worker shrinks its (last,
+    /// compacted) island while the leader ring keeps `ceil(live/g)` nodes —
+    /// it only loses a node when an island empties entirely. For
     /// [`FaultPlan::none`] with a full cohort this is an exact clone of
     /// `base` — the bit-identity condition of the parity matrix.
+    ///
+    /// PR 8 satellite fix: the outage factor used to scale only `inter`,
+    /// which silently no-ops on single-node topologies where every charge
+    /// reads the `intra` bottleneck. It now degrades the bottleneck link of
+    /// the live cohort — NVLink when `nodes() == 1`, Ethernet otherwise.
     pub fn net_for_step(&self, base: &NetConfig, step: usize, live_workers: usize) -> NetConfig {
         let mut net = base.clone();
         net.workers = live_workers;
         let f = self.link_factor(step);
         // multiplying by the neutral 1.0 factor is exact in f64, so the
         // no-outage path stays bit-identical without a branch
-        net.inter.bytes_per_s *= f;
+        match net.bottleneck_level() {
+            crate::netsim::LinkLevel::Inter => net.inter.bytes_per_s *= f,
+            crate::netsim::LinkLevel::Intra => net.intra.bytes_per_s *= f,
+        }
         net
     }
 
@@ -512,6 +524,35 @@ mod tests {
         let disagree = (0..64)
             .any(|h| plan.hop_fault(0, 0, h, 0) != plan.hop_fault(0, 0, h, 1));
         assert!(disagree, "retransmit attempts must re-draw, not replay the failure");
+    }
+
+    #[test]
+    fn outage_degrades_single_node_topologies() {
+        // PR 8 satellite regression: `outage=A..B@F` used to scale only the
+        // inter link, a silent no-op on single-node topologies whose
+        // bottleneck is NVLink. The degraded window must actually change
+        // comm_s on `NetConfig::single_node` — this fails on pre-fix code.
+        let plan = FaultPlan::parse("outage=2..5@0.25,seed=1").unwrap();
+        let base = NetConfig::single_node(4);
+        let clean = plan.net_for_step(&base, 0, 4);
+        let degraded = plan.net_for_step(&base, 3, 4);
+        assert_eq!(clean.intra.bytes_per_s, base.intra.bytes_per_s);
+        assert_eq!(degraded.intra.bytes_per_s, 0.25 * base.intra.bytes_per_s);
+        let bytes = 1e6;
+        assert!(
+            degraded.hop_s(bytes) > clean.hop_s(bytes),
+            "degraded window must slow the single-node wire"
+        );
+        assert!(degraded.allreduce_s(bytes) > clean.allreduce_s(bytes));
+        // multi-node topologies keep the inter-link semantics, and the
+        // island structure (gpus_per_node) rides along for the hierarchical
+        // schedule: a leaving worker shrinks its island, not the leader ring
+        let hier = NetConfig::paper_cluster(10.0);
+        let d = plan.net_for_step(&hier, 3, 127);
+        assert_eq!(d.inter.bytes_per_s, 0.25 * hier.inter.bytes_per_s);
+        assert_eq!(d.intra.bytes_per_s, hier.intra.bytes_per_s);
+        assert_eq!(d.gpus_per_node, 4);
+        assert_eq!(d.nodes(), 32, "127 live over g=4 still spans 32 islands");
     }
 
     #[test]

@@ -51,6 +51,15 @@ pub enum RingWidth {
     Auto,
 }
 
+/// One level of the two-level topology — the axis every per-level charge
+/// (PR 8) is keyed by: `Intra` is the NVLink island fabric, `Inter` the
+/// Ethernet between node leaders.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkLevel {
+    Intra,
+    Inter,
+}
+
 /// Modeled CPU cost of one byte of pack-per-hop re-pack work (unpack the
 /// resident segment, repack at the hop width, unpack on receive, repack the
 /// accumulated fields): ~2.5 GB/s of effective bit-twiddling throughput per
@@ -197,6 +206,16 @@ impl NetConfig {
             let node_bytes = g as f64 * bytes_per_rank;
             t += (nodes - 1) as f64 * self.inter.alpha_s
                 + (nodes - 1) as f64 * node_bytes / self.inter.bytes_per_s;
+            if g > 1 {
+                // distribution leg (PR 8 bugfix): the inter-node gather lands
+                // on each node's leader, but the other g−1 GPUs still need
+                // the foreign nodes' (nodes−1)·g·bytes_per_rank over NVLink —
+                // a pipelined intra broadcast: g−1 launch latencies plus the
+                // foreign bytes once through the NVLink bandwidth
+                let foreign_bytes = (nodes - 1) as f64 * node_bytes;
+                t += (g - 1) as f64 * self.intra.alpha_s
+                    + foreign_bytes / self.intra.bytes_per_s;
+            }
         }
         t
     }
@@ -206,23 +225,43 @@ impl NetConfig {
         self.allreduce_s(4.0)
     }
 
-    /// The link a synchronous collective step bottlenecks on: inter-node
-    /// when the cluster spans nodes, NVLink otherwise.
-    fn bottleneck(&self) -> &Link {
-        if self.nodes() > 1 {
-            &self.inter
-        } else {
-            &self.intra
+    /// The link class a [`LinkLevel`] names on this topology.
+    fn link(&self, level: LinkLevel) -> &Link {
+        match level {
+            LinkLevel::Intra => &self.intra,
+            LinkLevel::Inter => &self.inter,
         }
+    }
+
+    /// The level a flat (single-level) collective step bottlenecks on:
+    /// inter-node when the cluster spans nodes, NVLink otherwise.
+    pub fn bottleneck_level(&self) -> LinkLevel {
+        if self.nodes() > 1 {
+            LinkLevel::Inter
+        } else {
+            LinkLevel::Intra
+        }
+    }
+
+    /// The link a synchronous collective step bottlenecks on.
+    fn bottleneck(&self) -> &Link {
+        self.link(self.bottleneck_level())
     }
 
     /// One synchronous hop moving `bytes` per rank over the bottleneck link
     /// — the unit every hop-accurate packed-schedule charge is built from.
     pub fn hop_s(&self, bytes: f64) -> f64 {
+        self.hop_s_on(self.bottleneck_level(), bytes)
+    }
+
+    /// One synchronous hop moving `bytes` per rank over `level`'s link —
+    /// the per-level unit the hierarchical packed schedule charges its
+    /// intra-island and leader-ring hops from (PR 8).
+    pub fn hop_s_on(&self, level: LinkLevel, bytes: f64) -> f64 {
         if self.workers <= 1 {
             return 0.0;
         }
-        self.bottleneck().xfer_s(bytes)
+        self.link(level).xfer_s(bytes)
     }
 
     /// Hop-accurate ring time: `steps` synchronous ring steps, each moving
@@ -239,8 +278,19 @@ impl NetConfig {
     }
 
     /// Per-step analytic selector for the packed ring's wire width
-    /// ([`RingWidth::Auto`]): does the width-growing pack-per-hop ring beat
-    /// the fixed-width add-with-carry ring *in time* for this step?
+    /// ([`RingWidth::Auto`]) on the flat (bottleneck-link) ring: does the
+    /// width-growing pack-per-hop ring beat the fixed-width add-with-carry
+    /// ring *in time* for this step? Delegates to the per-level form at the
+    /// bottleneck level — the hierarchical schedule makes the same decision
+    /// for its leader ring with [`LinkLevel::Inter`] and the island-sum
+    /// contribution bound (PR 8).
+    pub fn growing_ring_wins(&self, lmax: usize, m: usize, elems: usize) -> bool {
+        self.growing_ring_wins_on(self.bottleneck_level(), lmax, m, elems)
+    }
+
+    /// Per-level form of the growing-ring selector: a ring of `m` ranks,
+    /// each contributing biased codes bounded by `lmax`, shipped over
+    /// `level`'s link.
     ///
     /// Wire seconds saved: each reduce-scatter hop `k` (of `m - 1`) ships
     /// its `ceil(elems/m)`-code segment at `bitlen(2*k*lmax)` instead of the
@@ -251,7 +301,21 @@ impl NetConfig {
     /// buy more than the repack tax — low bits × high M over commodity
     /// Ethernet); fixed wins when the link outruns the re-packer. The
     /// observed data-plane crossover is recorded in DESIGN.md.
-    pub fn growing_ring_wins(&self, lmax: usize, m: usize, elems: usize) -> bool {
+    ///
+    /// The link's α term appears on **neither** side, deliberately: both
+    /// rings make exactly `2(m−1)` synchronous hops, so the per-hop latency
+    /// is a common term of both candidates' [`PackedReduce::comm_s`] sums
+    /// and cancels in the comparison — including it would change nothing,
+    /// omitting it cannot flip the selector even for tiny segments on
+    /// high-α links. Pinned by `alpha_cancels_in_growing_selector` (here)
+    /// and the crossover regression in the collectives tests.
+    pub fn growing_ring_wins_on(
+        &self,
+        level: LinkLevel,
+        lmax: usize,
+        m: usize,
+        elems: usize,
+    ) -> bool {
         use crate::compress::bitpack::{packed_sum_bits, wire_bytes_for};
         if m <= 1 || elems == 0 {
             return false;
@@ -263,7 +327,7 @@ impl NetConfig {
         for k in 1..m {
             saved_bytes += seg_fixed_bytes - wire_bytes_for(seg, packed_sum_bits(lmax, k)) as f64;
         }
-        let saved_s = saved_bytes / self.bottleneck().bytes_per_s;
+        let saved_s = saved_bytes / self.link(level).bytes_per_s;
         let extra_s =
             (m - 1) as f64 * GROWING_EXTRA_PASSES * seg_fixed_bytes * REPACK_S_PER_BYTE;
         saved_s > extra_s
@@ -284,6 +348,15 @@ pub struct SimClock {
     /// sums ride wider codes than the nominal payload). Zero for paths that
     /// charge only the uniform model.
     pub hop_bits_per_worker: f64,
+    /// the [`LinkLevel::Intra`] share of `hop_bits_per_worker` (PR 8): hop
+    /// bits that crossed the NVLink island fabric. Flat schedules book
+    /// everything on the bottleneck level, so on a multi-node flat wire
+    /// this stays zero; the hierarchical schedule splits honestly.
+    /// Invariant: `hop_bits_intra + hop_bits_inter == hop_bits_per_worker`.
+    pub hop_bits_intra: f64,
+    /// the [`LinkLevel::Inter`] share of `hop_bits_per_worker` (PR 8): hop
+    /// bits that crossed the inter-node link.
+    pub hop_bits_inter: f64,
     /// communication seconds hidden behind backward compute by the bucketed
     /// control plane's overlap scheduler ([`crate::control`]): this much of
     /// `comm_s` ran concurrently with `compute_s` and does not extend the
@@ -402,6 +475,92 @@ mod tests {
         // degenerate shapes never pick growing
         assert!(!slow.growing_ring_wins(1, 1, 1 << 20));
         assert!(!slow.growing_ring_wins(1, 8, 0));
+    }
+
+    #[test]
+    fn allgather_charges_the_intra_distribution_leg() {
+        // PR 8 satellite regression: after the inter-node gather each node's
+        // g GPUs still need the other nodes' (nodes−1)·g·bytes_per_rank over
+        // NVLink. Pre-fix code stopped at the leader and this closed form
+        // fails on it.
+        let b = 1e6;
+        let net = NetConfig::paper_cluster(10.0); // 32 nodes × 4 GPUs
+        let (g, nodes) = (4f64, 32f64);
+        let want = (g - 1.0) * net.intra.alpha_s + (g - 1.0) * b / net.intra.bytes_per_s
+            + (nodes - 1.0) * net.inter.alpha_s
+            + (nodes - 1.0) * g * b / net.inter.bytes_per_s
+            + (g - 1.0) * net.intra.alpha_s
+            + (nodes - 1.0) * g * b / net.intra.bytes_per_s;
+        let got = net.allgather_s(b);
+        assert!(
+            (got - want).abs() <= 1e-12 * want,
+            "allgather closed form: got {got}, want {want}"
+        );
+        // the leg only exists on true two-level topologies: flat (g = 1) and
+        // single-node (nodes = 1) shapes are unchanged from the old model
+        let flat = NetConfig::flat(8, 10.0);
+        let flat_want = 7.0 * flat.inter.alpha_s + 7.0 * b / flat.inter.bytes_per_s;
+        assert!((flat.allgather_s(b) - flat_want).abs() <= 1e-12 * flat_want);
+        let single = NetConfig::single_node(8);
+        let single_want = 7.0 * single.intra.alpha_s + 7.0 * b / single.intra.bytes_per_s;
+        assert!((single.allgather_s(b) - single_want).abs() <= 1e-12 * single_want);
+    }
+
+    #[test]
+    fn hop_s_on_levels_and_bottleneck_agree() {
+        let hier = NetConfig::paper_cluster(10.0);
+        assert_eq!(hier.bottleneck_level(), LinkLevel::Inter);
+        assert_eq!(hier.hop_s(1e6), hier.hop_s_on(LinkLevel::Inter, 1e6));
+        assert!(hier.hop_s_on(LinkLevel::Intra, 1e6) < hier.hop_s_on(LinkLevel::Inter, 1e6));
+        let single = NetConfig::single_node(4);
+        assert_eq!(single.bottleneck_level(), LinkLevel::Intra);
+        assert_eq!(single.hop_s(1e6), single.hop_s_on(LinkLevel::Intra, 1e6));
+        // single worker: every hop is free on every level
+        let one = NetConfig::flat(1, 10.0);
+        assert_eq!(one.hop_s_on(LinkLevel::Intra, 1e6), 0.0);
+        assert_eq!(one.hop_s_on(LinkLevel::Inter, 1e6), 0.0);
+    }
+
+    #[test]
+    fn alpha_cancels_in_growing_selector() {
+        // PR 8 satellite regression: both ring widths make exactly 2(m−1)
+        // hops, so the per-hop α is a common term and cannot flip the
+        // selector — even for tiny segments on a very high-latency link.
+        // Sweep α across six orders of magnitude at the bandwidth crossover
+        // and at a tiny-segment shape; the decision must be α-invariant.
+        let (lmax, m) = (1usize, 8usize);
+        for &elems in &[64usize, 1 << 10, 1 << 20] {
+            for &gbps in &[0.5f64, 3.0, 25.0, 200.0] {
+                let mut reference = None;
+                for &alpha in &[0.0f64, 1e-6, 1e-3, 1.0] {
+                    let mut net = NetConfig::flat(m, gbps);
+                    net.inter.alpha_s = alpha;
+                    let wins = net.growing_ring_wins(lmax, m, elems);
+                    match reference {
+                        None => reference = Some(wins),
+                        Some(r) => assert_eq!(
+                            wins, r,
+                            "α flipped the selector (elems={elems} gbps={gbps} α={alpha})"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn growing_selector_is_per_level() {
+        // the same step can want growing across nodes and fixed inside them:
+        // on the paper cluster the inter link is slow Ethernet (growing
+        // wins) while NVLink outruns the re-packer (fixed wins).
+        let net = NetConfig::paper_cluster(0.5);
+        assert!(net.growing_ring_wins_on(LinkLevel::Inter, 4, 32, 1 << 20));
+        assert!(!net.growing_ring_wins_on(LinkLevel::Intra, 1, 128, 1 << 20));
+        // the flat form is exactly the bottleneck-level per-level form
+        assert_eq!(
+            net.growing_ring_wins(1, 128, 1 << 20),
+            net.growing_ring_wins_on(LinkLevel::Inter, 1, 128, 1 << 20)
+        );
     }
 
     #[test]

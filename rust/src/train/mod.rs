@@ -25,6 +25,10 @@ pub struct Experiment {
     pub lr0: f64,
     pub seed: u64,
     pub net_gbps: f64,
+    /// GPUs per NVLink island (CLI `--topology NxG`); 1 = flat topology
+    pub gpus_per_node: usize,
+    /// hierarchical two-level packed schedule (CLI `--schedule hier`)
+    pub hier_schedule: bool,
     pub eval_every: usize,
     pub out_dir: PathBuf,
     pub quiet: bool,
@@ -50,6 +54,8 @@ impl Experiment {
             lr0: 0.05,
             seed: 42,
             net_gbps: 10.0,
+            gpus_per_node: 1,
+            hier_schedule: false,
             eval_every: 0,
             out_dir: PathBuf::from("results"),
             quiet: false,
@@ -77,6 +83,8 @@ impl Experiment {
             cfg.lr0 = self.lr0;
             cfg.total_steps = self.steps;
             cfg.net_gbps = self.net_gbps;
+            cfg.gpus_per_node = self.gpus_per_node;
+            cfg.hier_schedule = self.hier_schedule;
             cfg.control = self.control.clone();
             cfg.elastic = self.elastic.clone();
             cfg.integrity = self.integrity;

@@ -927,6 +927,232 @@ fn bucketed_multiscale_and_grandk_bit_identical_to_monolithic_matrix() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// PR 8: hierarchical two-level schedule — parity matrix vs the flat planes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hierarchical_vs_flat_parity_matrix() {
+    // PR 8 acceptance matrix: with `ctx.hier` on, the two-level schedule is
+    // payload-bit-identical to the flat packed plane — itself pinned to the
+    // f32 references above — for methods {qsgd-mn-4, qsgd-mn-ts-2-6,
+    // grandk-mn-4-k256} x topologies {1x4, 4x4, 32x4} x bucket plans
+    // {1, 3, ragged-last 4}, with (a) the nominal bits ledger identical
+    // across schedules, (b) per-level hop-bits ledgers exactly equal to the
+    // hand-written closed forms (4(g-1) intra island segments + 2(nodes-1)
+    // inter leader segments per bucket, all at the resident width), and
+    // (c) the comm_s delta between the hier and flat runs equal to the
+    // closed-form schedule difference (everything else on the wire — norm
+    // and scale shares — is schedule-invariant).
+    use repro::compress::bitpack;
+    use repro::control::{build_plane, ControlConfig};
+    use repro::netsim::{LinkLevel, RingWidth};
+
+    // hand-written closed form of ONE fixed-width packed reduce of `l`
+    // encoded coords at resident width `rbits` under the schedule the
+    // topology resolves: (intra_bits, inter_bits, comm_s). Independent of
+    // the PackedReduce hop model on purpose.
+    fn closed_form(net: &NetConfig, hier: bool, l: usize, rbits: u32) -> (f64, f64, f64) {
+        let m = net.workers;
+        if m <= 1 || l == 0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let g = net.gpus_per_node.clamp(1, m);
+        let nodes = m.div_ceil(g);
+        if hier && g > 1 && nodes > 1 {
+            let iseg = bitpack::wire_bytes_for(l.div_ceil(g), rbits) as f64;
+            let lseg = bitpack::wire_bytes_for(l.div_ceil(nodes), rbits) as f64;
+            let ih = 4.0 * (g - 1) as f64;
+            let eh = 2.0 * (nodes - 1) as f64;
+            (
+                ih * iseg * 8.0,
+                eh * lseg * 8.0,
+                ih * net.hop_s_on(LinkLevel::Intra, iseg)
+                    + eh * net.hop_s_on(LinkLevel::Inter, lseg),
+            )
+        } else {
+            // flat fixed ring on the bottleneck link (also what the hier
+            // resolution degenerates to on a single island)
+            let seg = bitpack::wire_bytes_for(l.div_ceil(m), rbits) as f64;
+            let h = 2.0 * (m - 1) as f64;
+            let level = net.bottleneck_level();
+            let comm = h * net.hop_s_on(level, seg);
+            match level {
+                LinkLevel::Intra => (h * seg * 8.0, 0.0, comm),
+                LinkLevel::Inter => (0.0, h * seg * 8.0, comm),
+            }
+        }
+    }
+
+    let n = 1003usize;
+    let seg_lens = [334usize, 167, 167, 167, 100, 68];
+    let segments = contiguous_segments(&seg_lens);
+    let k = 256usize;
+
+    struct Case {
+        spec: String,
+        /// per-contribution level bound (drives the resident width)
+        lmax: usize,
+        grandk: bool,
+    }
+    let cases = [
+        Case { spec: "qsgd-mn-4".into(), lmax: kernels::s_for_bits(4), grandk: false },
+        Case {
+            spec: "qsgd-mn-ts-2-6".into(),
+            // eq. (10): multi-scale levels are bounded by s_min + 1
+            lmax: kernels::s_for_bits(2) + 1,
+            grandk: false,
+        },
+        Case { spec: format!("grandk-mn-4-k{k}"), lmax: kernels::s_for_bits(4), grandk: true },
+    ];
+
+    for case in &cases {
+        let method = Method::parse(&case.spec).unwrap();
+        for &(nodes, g) in &[(1usize, 4usize), (4, 4), (32, 4)] {
+            let m = nodes * g;
+            let rbits = bitpack::packed_sum_bits(case.lmax, m);
+            let mut net = NetConfig::flat(m, 10.0);
+            net.gpus_per_node = g;
+            assert_eq!(net.nodes(), nodes);
+            let seed = 0x41E8 + (m * 31) as u64;
+            let mut grng = Rng::new(seed);
+            let grads: Vec<Vec<f32>> = (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    grng.fill_normal_f32(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+
+            // the monolithic flat aggregate: the pinned payload reference
+            let want = {
+                let mut agg = method.build(n, &segments).unwrap();
+                let mut clock = SimClock::default();
+                let mut ctx = StepCtx::new(&net, &mut clock);
+                ctx.ring_width = RingWidth::Fixed;
+                let mut rng = Rng::new(seed ^ 0x51EED);
+                agg.aggregate(&refs, &mut ctx, &mut rng)
+            };
+            // the ragged K-split the grandk ledger is charged at
+            let drawn: Option<Vec<usize>> = case.grandk.then(|| {
+                Rng::new(seed ^ 0x51EED).derive(&[0x6B6579]).sample_distinct(n, k)
+            });
+
+            let mut seen = Vec::new();
+            for &target in &[1usize, 3, 6] {
+                let run = |hier: bool| {
+                    let cfg = ControlConfig::new(target);
+                    let mut plane = build_plane(&method, &cfg, n, &segments).unwrap();
+                    let nb = plane.plan.len();
+                    let mut clock = SimClock::default();
+                    let got = {
+                        let mut ctx = StepCtx::new(&net, &mut clock);
+                        ctx.ring_width = RingWidth::Fixed;
+                        ctx.hier = hier;
+                        let mut rng = Rng::new(seed ^ 0x51EED);
+                        plane.aggregate(&refs, &mut ctx, &mut rng)
+                    };
+                    let lens: Vec<usize> = match &drawn {
+                        None => plane.plan.buckets.iter().map(|b| b.len()).collect(),
+                        Some(idx) => plane
+                            .plan
+                            .buckets
+                            .iter()
+                            .map(|b| {
+                                idx.partition_point(|&i| i < b.hi)
+                                    - idx.partition_point(|&i| i < b.lo)
+                            })
+                            .collect(),
+                    };
+                    (got, clock, nb, lens)
+                };
+                let (flat_out, flat_clock, nb, lens) = run(false);
+                let (hier_out, hier_clock, nb_h, lens_h) = run(true);
+                assert_eq!(nb, nb_h);
+                assert_eq!(lens, lens_h);
+                seen.push(nb);
+
+                // (payload) bit-identical across schedules and to the
+                // monolithic flat reference
+                if flat_out != want || hier_out != want {
+                    let out = if flat_out != want { &flat_out } else { &hier_out };
+                    let bad = out.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                    panic!(
+                        "{} {nodes}x{g} buckets={nb}: payload diff at {bad}: {} vs {}",
+                        case.spec, out[bad], want[bad]
+                    );
+                }
+
+                // (a) nominal ledger is schedule-invariant
+                assert_eq!(
+                    flat_clock.bits_per_worker, hier_clock.bits_per_worker,
+                    "{} {nodes}x{g} buckets={nb}: nominal ledger",
+                    case.spec
+                );
+
+                // (b) per-level hop-bits ledgers: exact closed forms
+                let (mut fi, mut fe, mut fc) = (0.0, 0.0, 0.0);
+                let (mut hi, mut he, mut hc) = (0.0, 0.0, 0.0);
+                for &l in &lens {
+                    let (a, b, c) = closed_form(&net, false, l, rbits);
+                    fi += a;
+                    fe += b;
+                    fc += c;
+                    let (a, b, c) = closed_form(&net, true, l, rbits);
+                    hi += a;
+                    he += b;
+                    hc += c;
+                }
+                for (clock, want_i, want_e, label) in [
+                    (&flat_clock, fi, fe, "flat"),
+                    (&hier_clock, hi, he, "hier"),
+                ] {
+                    assert_eq!(
+                        clock.hop_bits_intra, want_i,
+                        "{} {nodes}x{g} buckets={nb}: {label} intra hop bits",
+                        case.spec
+                    );
+                    assert_eq!(
+                        clock.hop_bits_inter, want_e,
+                        "{} {nodes}x{g} buckets={nb}: {label} inter hop bits",
+                        case.spec
+                    );
+                    assert_eq!(
+                        clock.hop_bits_intra + clock.hop_bits_inter,
+                        clock.hop_bits_per_worker,
+                        "{} {nodes}x{g} buckets={nb}: {label} level split invariant",
+                        case.spec
+                    );
+                }
+                if nodes > 1 {
+                    assert!(hier_clock.hop_bits_intra > 0.0, "hier must use NVLink");
+                    assert_eq!(flat_clock.hop_bits_intra, 0.0, "flat is all-Ethernet");
+                }
+
+                // (c) comm_s: the runs differ by exactly the closed-form
+                // schedule difference (norm/scale shares are identical)
+                let got_delta = hier_clock.comm_s - flat_clock.comm_s;
+                let want_delta = hc - fc;
+                assert!(
+                    (got_delta - want_delta).abs()
+                        <= 1e-12 * (flat_clock.comm_s + hier_clock.comm_s),
+                    "{} {nodes}x{g} buckets={nb}: comm delta {got_delta} vs closed {want_delta}",
+                    case.spec
+                );
+                if nodes > 1 {
+                    assert!(
+                        hier_clock.comm_s < flat_clock.comm_s,
+                        "{} {nodes}x{g}: hier must beat flat on simulated time",
+                        case.spec
+                    );
+                }
+            }
+            assert_eq!(seen, vec![1, 3, 4], "bucket-plan matrix shape");
+        }
+    }
+}
+
 #[test]
 fn int_reducers_agree_exactly_on_quantizer_output() {
     // ring/tree/naive integer reducers on real quantizer levels: exact

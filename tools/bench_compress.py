@@ -10,11 +10,15 @@ root so the perf trajectory is tracked from this PR onward. Also runs
 scenario: strict-sync vs timeout-into-partial under seeded jitter,
 -> `BENCH_faults.json`), and `--bench micro_integrity` (the PR 7
 self-healing gates: <= 2% checksum overhead and retransmit-recovery
-cheaper than a full-step redo, -> `BENCH_integrity.json`).
+cheaper than a full-step redo, -> `BENCH_integrity.json`), and
+`--bench micro_hierarchy` (the PR 8 two-level collective gate: hier <= flat
+simulated comm time on the paper topology at 2/4 bits,
+-> `BENCH_hierarchy.json`).
 
 Usage:
     python3 tools/bench_compress.py [--n COORDS] [--out PATH]
         [--out-overlap PATH] [--out-faults PATH] [--out-integrity PATH]
+        [--out-hierarchy PATH]
 
 The acceptance gates this file evidences (ISSUE 1):
   * >= 4x throughput on pack/unpack vs the scalar reference;
@@ -87,6 +91,11 @@ def main() -> int:
         "--out-faults",
         default=os.path.join(REPO_ROOT, "BENCH_faults.json"),
         help="straggler report path (default: repo-root BENCH_faults.json)",
+    )
+    ap.add_argument(
+        "--out-hierarchy",
+        default=os.path.join(REPO_ROOT, "BENCH_hierarchy.json"),
+        help="hierarchy report path (default: repo-root BENCH_hierarchy.json)",
     )
     ap.add_argument(
         "--out-integrity",
@@ -194,9 +203,34 @@ def main() -> int:
         f.write("\n")
     print(f"wrote {args.out_integrity}")
 
+    # Hierarchy bench, same non-required pattern: micro_hierarchy asserts
+    # its hard gate after emitting JSON. (It sizes itself at n=2^20;
+    # forward only an explicit --n override.)
+    hierarchy, hierarchy_rc = run_bench("micro_hierarchy", args.n, required=False)
+
+    # hierarchy gate: two-level schedule <= flat ring on simulated comm
+    # time at every width, with the per-level hop-bit split intact
+    hierarchy_gate = (
+        hierarchy_rc == 0
+        and bool(hierarchy.get("entries"))
+        and all(e.get("gate_pass", 0.0) == 1.0 for e in hierarchy.get("entries", []))
+    )
+    hierarchy_report = {
+        "schema": "repro-bench-hierarchy-v1",
+        "generated_unix": report["generated_unix"],
+        "machine": report["machine"],
+        "gates": {"hier_le_flat_on_paper_topology": hierarchy_gate},
+        "micro_hierarchy": hierarchy,
+    }
+    with open(args.out_hierarchy, "w") as f:
+        json.dump(hierarchy_report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out_hierarchy}")
+
     gates["bucketed_le_monolithic"] = overlap_gate
     gates["partial_beats_strict_under_jitter"] = faults_gate
     gates["checksum_cheap_and_recovery_beats_redo"] = integrity_gate
+    gates["hier_le_flat_on_paper_topology"] = hierarchy_gate
     for k, ok in gates.items():
         print(f"  {k}: {'PASS' if ok else 'FAIL'}")
     return 0 if all(gates.values()) else 1
