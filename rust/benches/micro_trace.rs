@@ -1,0 +1,219 @@
+//! Flight-recorder smoke bench (PR 9, CI-gated): what arming the step
+//! tracer costs on the packed plane — 4-bit QSGD-MN, 4 buckets, 8 workers,
+//! 10 Gbps flat Ethernet, n = 2^20 coordinates.
+//!
+//! Hard gates:
+//!   * zero-cost-when-on (approximately): the armed recorder adds <= 3%
+//!     wall time to a full aggregate step (min of 5 trials per arm);
+//!   * inert: the armed aggregate is bit-identical to trace-off — output
+//!     and all twelve SimClock ledgers — with a clean audit.
+//!
+//! Set `REPRO_BENCH_JSON=<path>` to emit the numbers as JSON (consumed by
+//! `tools/bench_compress.py` -> `BENCH_trace.json`). Set
+//! `REPRO_TRACE_OUT=<path>` to additionally record a small traced
+//! hierarchical 4x4 run over a lossy checksummed wire and export it as
+//! Chrome trace-event JSON — CI validates that artifact with
+//! `tools/trace_report.py --check` and uploads it.
+
+use repro::collectives::{packed, IntegrityConfig, StepCtx};
+use repro::compress::Aggregator;
+use repro::control::{ControlConfig, GradientControlPlane};
+use repro::netsim::{Algo, FaultPlan, HopFault, NetConfig, SimClock};
+use repro::trace::Tracer;
+use repro::util::json::{num, obj, s as js};
+use repro::util::rng::Rng;
+
+fn run_once(
+    grads: &[Vec<f32>],
+    n: usize,
+    buckets: usize,
+    bits: usize,
+    gbps: f64,
+    mut tracer: Option<&mut Tracer>,
+) -> (Vec<f32>, SimClock, f64) {
+    let m = grads.len();
+    let plane = GradientControlPlane::new(ControlConfig::new(buckets), bits, n, &[]);
+    let mut plane = plane.expect("control plane");
+    let net = NetConfig::flat(m, gbps);
+    let mut clock = SimClock::default();
+    let t = std::time::Instant::now();
+    let out = {
+        let mut ctx = StepCtx::new(&net, &mut clock);
+        ctx.tracer = tracer.as_deref_mut();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let mut rng = Rng::new(0x1D3A);
+        plane.aggregate(&refs, &mut ctx, &mut rng)
+    };
+    let wall = t.elapsed().as_secs_f64();
+    if let Some(t) = tracer {
+        t.end_step(&clock);
+    }
+    (out, clock, wall)
+}
+
+fn clocks_equal(a: &SimClock, b: &SimClock) -> bool {
+    a.comm_s == b.comm_s
+        && a.compute_s == b.compute_s
+        && a.encode_s == b.encode_s
+        && a.decode_s == b.decode_s
+        && a.bits_per_worker == b.bits_per_worker
+        && a.hop_bits_per_worker == b.hop_bits_per_worker
+        && a.hop_bits_intra == b.hop_bits_intra
+        && a.hop_bits_inter == b.hop_bits_inter
+        && a.hidden_comm_s == b.hidden_comm_s
+        && a.straggler_wait_s == b.straggler_wait_s
+        && a.retrans_s == b.retrans_s
+        && a.retrans_bits == b.retrans_bits
+}
+
+/// The CI artifact: a 6-step traced hierarchical 4x4 run over a lossy
+/// checksummed wire, exported as Chrome trace-event JSON.
+fn record_hier_faults_trace(path: &str) {
+    let (m, g, n, bits, buckets, gbps) = (16usize, 4usize, 1usize << 14, 4usize, 3usize, 10.0);
+    let mut grng = Rng::new(0x7A11);
+    let grads: Vec<Vec<f32>> = (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            grng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let mut net = NetConfig::flat(m, gbps);
+    net.gpus_per_node = g;
+    let plan = FaultPlan::wire(0x9E7A, 0.05, 0.05);
+    let hops = packed::schedule_for_topo(Algo::Ring, false, 1, true, g, m).as_dyn().hops(m);
+    let fault_step = (0..512)
+        .find(|&s| {
+            (0..m).any(|w| (0..hops).any(|h| plan.hop_fault(s, w, h, 0) != HopFault::None))
+        })
+        .expect("a lossy wire must fault within 512 steps");
+
+    let mut plane =
+        GradientControlPlane::new(ControlConfig::new(buckets), bits, n, &[]).expect("plane");
+    let mut tracer = Tracer::new();
+    let mut run_clock = SimClock::default();
+    for step in 0..6usize {
+        let mut clock = SimClock::default();
+        tracer.begin_step(step, run_clock.total_s());
+        {
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.hier = true;
+            ctx.integrity = Some(IntegrityConfig::default());
+            ctx.wire_faults = Some((&plan, fault_step + step));
+            ctx.tracer = Some(&mut tracer);
+            let mut rng = Rng::new(0x7A11 ^ step as u64);
+            plane.aggregate(&refs, &mut ctx, &mut rng);
+        }
+        tracer.end_step(&clock);
+        run_clock.accumulate(&clock);
+    }
+    tracer.write_chrome(std::path::Path::new(path), m).expect("writing trace artifact");
+    println!(
+        "trace artifact: 6-step hier 4x4 lossy run -> {path}  \
+         ({:.0} hop bits intra / {:.0} inter, {:.0} retransmitted, {} violations)",
+        run_clock.hop_bits_intra,
+        run_clock.hop_bits_inter,
+        run_clock.retrans_bits,
+        tracer.violation_count()
+    );
+    assert_eq!(tracer.violation_count(), 0, "traced artifact run must audit clean");
+}
+
+fn main() {
+    let n: usize = std::env::var("REPRO_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 20);
+    let (m, bits, buckets, gbps) = (8usize, 4usize, 4usize, 10.0);
+    const TRIALS: usize = 5;
+
+    let mut rng = Rng::new(0x16B1);
+    let grads: Vec<Vec<f32>> = (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    println!(
+        "=== flight-recorder overhead (n={n}, M={m}, {bits}-bit, {buckets} buckets, \
+         {gbps} Gbps, min of {TRIALS}) ==="
+    );
+
+    // min-of-TRIALS wall per arm; outputs/clocks are deterministic so the
+    // parity checks use the last trial of each arm.
+    let mut wall_off = f64::INFINITY;
+    let mut wall_on = f64::INFINITY;
+    let mut off = None;
+    let mut on = None;
+    let mut violations = 0usize;
+    for _ in 0..TRIALS {
+        let (o, c, w) = run_once(&grads, n, buckets, bits, gbps, None);
+        wall_off = wall_off.min(w);
+        off = Some((o, c));
+        let mut tracer = Tracer::new();
+        let (o, c, w) = run_once(&grads, n, buckets, bits, gbps, Some(&mut tracer));
+        wall_on = wall_on.min(w);
+        violations = tracer.violation_count();
+        on = Some((o, c));
+    }
+    let (out_off, clk_off) = off.unwrap();
+    let (out_on, clk_on) = on.unwrap();
+
+    let overhead = (wall_on - wall_off) / wall_off;
+    let gate_overhead = overhead <= 0.03;
+    let gate_parity = out_on == out_off && clocks_equal(&clk_on, &clk_off) && violations == 0;
+    println!(
+        "wall: {:.6}s off -> {:.6}s on  ({:+.3}% overhead)  gate {}",
+        wall_off,
+        wall_on,
+        overhead * 100.0,
+        if gate_overhead { "ok" } else { "FAIL" }
+    );
+    println!(
+        "parity: output {}  ledgers {}  violations {}  gate {}",
+        if out_on == out_off { "bit-equal" } else { "DIVERGED" },
+        if clocks_equal(&clk_on, &clk_off) { "bit-equal" } else { "DIVERGED" },
+        violations,
+        if gate_parity { "ok" } else { "FAIL" }
+    );
+
+    if let Ok(path) = std::env::var("REPRO_TRACE_OUT") {
+        record_hier_faults_trace(&path);
+    }
+
+    if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
+        let json = obj(vec![
+            ("schema", js("repro-micro-trace-v1")),
+            ("n", num(n as f64)),
+            ("workers", num(m as f64)),
+            ("bits", num(bits as f64)),
+            ("buckets", num(buckets as f64)),
+            ("net_gbps", num(gbps)),
+            ("trials", num(TRIALS as f64)),
+            ("wall_off_s", num(wall_off)),
+            ("wall_on_s", num(wall_on)),
+            ("overhead_frac", num(overhead)),
+            ("violations", num(violations as f64)),
+            ("gate_overhead_pass", num(gate_overhead as u8 as f64)),
+            ("gate_parity_pass", num(gate_parity as u8 as f64)),
+        ]);
+        std::fs::write(&path, json.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+
+    assert!(
+        gate_parity,
+        "trace gate failed: the armed recorder must be inert — bit-identical \
+         output and ledgers, zero audit violations"
+    );
+    assert!(
+        gate_overhead,
+        "trace gate failed: the armed recorder must add <= 3% wall time \
+         (measured +{:.3}%)",
+        overhead * 100.0
+    );
+    println!("\ntrace gate: <= 3% wall overhead, bit-equal output + ledgers, clean audit");
+}

@@ -72,6 +72,13 @@ pub struct ClusterConfig {
     /// `--on-anomaly skip|clip:C|abort`); the pre-encode scan itself runs
     /// on every step and is a pure read on clean cohorts
     pub on_anomaly: AnomalyPolicy,
+    /// step flight recorder output (CLI `--trace PATH`, PR 9): `Some` arms
+    /// a [`crate::trace::Tracer`] over every step and writes the trace when
+    /// the run finishes — `.jsonl` extension selects the compact per-step
+    /// JSON-lines form, anything else the Chrome trace-event JSON. `None`
+    /// (the default) records nothing and every charge path stays
+    /// bit-identical to the untraced plane.
+    pub trace: Option<std::path::PathBuf>,
 }
 
 impl ClusterConfig {
@@ -94,6 +101,7 @@ impl ClusterConfig {
             elastic: None,
             integrity: None,
             on_anomaly: AnomalyPolicy::Skip,
+            trace: None,
         }
     }
 }
@@ -121,6 +129,8 @@ pub struct Cluster {
     root_rng: Rng,
     /// elastic membership/staleness state (None = fixed synchronous cohort)
     elastic: Option<ElasticCohort>,
+    /// step flight recorder (None = untraced, the zero-cost default)
+    tracer: Option<crate::trace::Tracer>,
     /// scratch for eval batches
     eval_cache: Option<EvalBatch>,
 }
@@ -190,6 +200,7 @@ impl Cluster {
         };
 
         let root_rng = Rng::new(cfg.seed);
+        let tracer = cfg.trace.is_some().then(crate::trace::Tracer::new);
         Ok(Cluster {
             cfg,
             params,
@@ -206,6 +217,7 @@ impl Cluster {
             seq_len,
             root_rng,
             elastic,
+            tracer,
             eval_cache: None,
         })
     }
@@ -261,6 +273,16 @@ impl Cluster {
         // is wall/M only if cores were dedicated — we charge the configured
         // profile when provided, else the measured wall time as-is).
         let sim_compute = self.cfg.sim_compute_s.unwrap_or(wall_compute);
+        if let Some(t) = self.tracer.as_mut() {
+            t.begin_step(step, self.clock.total_s());
+            t.push(crate::trace::Span::new(
+                crate::trace::Cat::Compute,
+                crate::trace::SpanKind::Compute,
+                0.0,
+                sim_compute,
+                0.0,
+            ));
+        }
         self.clock.compute_s += sim_compute;
 
         // ---- 1b. deterministic gradient poison (`--faults poison=W@S`):
@@ -298,6 +320,18 @@ impl Cluster {
                         // not planned — the step simply never synchronized
                         let loss =
                             out.losses.iter().map(|l| *l as f64).sum::<f64>() / m as f64;
+                        if let Some(t) = self.tracer.as_mut() {
+                            t.push(crate::trace::Span::new(
+                                crate::trace::Cat::Compute,
+                                crate::trace::SpanKind::GuardSkip,
+                                sim_compute,
+                                sim_compute,
+                                0.0,
+                            ));
+                            let delta =
+                                SimClock { compute_s: sim_compute, ..SimClock::default() };
+                            t.end_step(&delta);
+                        }
                         return Ok(StepRecord {
                             step,
                             loss,
@@ -347,6 +381,7 @@ impl Cluster {
                 // bucketed control plane's overlap scheduler may hide
                 // communication behind
                 ctx.backward_s = Some(sim_compute * crate::perfmodel::BACKWARD_FRAC);
+                ctx.tracer = self.tracer.as_mut();
                 (Some(self.agg.aggregate(&grads, &mut ctx, &mut step_rng)), m, 0, 0.0)
             }
             Some(cohort) => {
@@ -399,12 +434,37 @@ impl Cluster {
                 ctx.hier = self.cfg.hier_schedule;
                 ctx.integrity = self.cfg.integrity;
                 ctx.wire_faults = Some((&faults, step));
+                ctx.tracer = self.tracer.as_mut();
+                // the += stays unconditional (bit-identical to the untraced
+                // plane); only the span is gated on a real charge
+                let r0 = ctx.clock.retrans_s;
                 ctx.clock.retrans_s += escalation_s;
+                if escalation_s > 0.0 {
+                    if let Some(t) = ctx.tracer.as_deref_mut() {
+                        t.push(crate::trace::Span::new(
+                            crate::trace::Cat::Retrans,
+                            crate::trace::SpanKind::Escalation,
+                            r0,
+                            ctx.clock.retrans_s,
+                            0.0,
+                        ));
+                    }
+                }
                 if !plan.rejoined.is_empty() {
                     // one tree broadcast of the fp32 parameters serves
                     // every rejoiner; time-only — the bits ledgers stay
                     // gradient-payload accounting
+                    let cu0 = ctx.clock.comm_s;
                     ctx.clock.comm_s += cohort.catch_up_s(&step_net, p);
+                    if let Some(t) = ctx.tracer.as_deref_mut() {
+                        t.push(crate::trace::Span::new(
+                            crate::trace::Cat::Comm,
+                            crate::trace::SpanKind::CatchUp,
+                            cu0,
+                            ctx.clock.comm_s,
+                            0.0,
+                        ));
+                    }
                 }
                 let agg_grad = if plan.sync {
                     // the overlap scheduler's cover is the SURVIVING
@@ -453,16 +513,28 @@ impl Cluster {
             self.opt.step(&mut self.params, agg_grad, lr as f32);
         }
 
-        self.clock.comm_s += step_clock.comm_s;
-        self.clock.encode_s += step_clock.encode_s;
-        self.clock.decode_s += step_clock.decode_s;
-        self.clock.bits_per_worker += step_clock.bits_per_worker;
-        self.clock.hop_bits_per_worker += step_clock.hop_bits_per_worker;
-        self.clock.hop_bits_intra += step_clock.hop_bits_intra;
-        self.clock.hop_bits_inter += step_clock.hop_bits_inter;
-        self.clock.hidden_comm_s += step_clock.hidden_comm_s;
-        self.clock.retrans_s += step_clock.retrans_s;
-        self.clock.retrans_bits += step_clock.retrans_bits;
+        // ---- close the flight-recorder step against the audited delta:
+        // compute and straggler wait were charged on the run clock directly,
+        // so the step delta is the step ctx's clock plus those two fields.
+        if let Some(t) = self.tracer.as_mut() {
+            if straggler_wait_s > 0.0 {
+                t.push(crate::trace::Span::new(
+                    crate::trace::Cat::StragglerWait,
+                    crate::trace::SpanKind::StragglerWait,
+                    0.0,
+                    straggler_wait_s,
+                    0.0,
+                ));
+            }
+            let mut delta = step_clock.clone();
+            delta.compute_s = sim_compute;
+            delta.straggler_wait_s = straggler_wait_s;
+            t.end_step(&delta);
+        }
+        // step_clock.compute_s / straggler_wait_s are always 0 here (both
+        // charged on the run clock above), so the field-wise accumulate is
+        // bit-identical to the per-field adds it replaces.
+        self.clock.accumulate(&step_clock);
 
         let loss = out.losses.iter().map(|l| *l as f64).sum::<f64>() / m as f64;
         Ok(StepRecord {
@@ -517,6 +589,25 @@ impl Cluster {
     pub fn exec_stats(&self) -> (f64, u64) {
         self.rt.exec_stats()
     }
+
+    /// The flight recorder, when armed (`cfg.trace`).
+    pub fn tracer(&self) -> Option<&crate::trace::Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Write the recorded trace to `path`: `.jsonl` selects the compact
+    /// per-step JSON-lines form, anything else the Chrome trace-event JSON
+    /// (`chrome://tracing` / Perfetto). Errors if the run was untraced.
+    pub fn write_trace(&self, path: &std::path::Path) -> Result<()> {
+        let Some(t) = self.tracer.as_ref() else {
+            bail!("no trace recorded: the cluster was built without cfg.trace");
+        };
+        if path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+            t.write_jsonl(path)
+        } else {
+            t.write_chrome(path, self.cfg.workers)
+        }
+    }
 }
 
 /// Convenience: load artifacts once and run a full configured training run,
@@ -539,6 +630,9 @@ pub fn run_training(
         records.push(rec);
     }
     let (eval_loss, eval_acc) = cluster.evaluate()?;
+    if let Some(path) = cluster.cfg.trace.clone() {
+        cluster.write_trace(&path).context("writing trace")?;
+    }
     let clock = cluster.clock.clone();
     let summary = crate::metrics::RunSummary {
         label: label_method,

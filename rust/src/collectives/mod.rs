@@ -254,6 +254,11 @@ pub struct StepCtx<'a> {
     /// island-sum bound `g·lmax`). `false` (the default) keeps every
     /// resolution bit-identical to the flat planes.
     pub hier: bool,
+    /// Step flight recorder (PR 9). `None` (the default) is the zero-cost
+    /// off state: no instrumentation site allocates, branches on data, or
+    /// touches a charge — the recorder only *reads* clock fields the charge
+    /// just wrote, so trace-on runs are bit-identical to trace-off.
+    pub tracer: Option<&'a mut crate::trace::Tracer>,
 }
 
 impl<'a> StepCtx<'a> {
@@ -267,6 +272,7 @@ impl<'a> StepCtx<'a> {
             integrity: None,
             wire_faults: None,
             hier: false,
+            tracer: None,
         }
     }
 
@@ -337,8 +343,23 @@ impl<'a> StepCtx<'a> {
     {
         let elems = bufs.first().map(|b| b.len()).unwrap_or(0) as f64;
         let bits = self.effective_bits(elems, bits_per_elem);
+        let c0 = self.clock.comm_s;
         self.clock.comm_s += self.net.allreduce_s(bits / 8.0);
         self.clock.bits_per_worker += bits;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            let schedule = match self.net.algo {
+                crate::netsim::Algo::Ring => "ring",
+                crate::netsim::Algo::Tree => "tree",
+                crate::netsim::Algo::Naive => "naive",
+            };
+            t.push(crate::trace::Span::new(
+                crate::trace::Cat::Comm,
+                crate::trace::SpanKind::Collective { schedule },
+                c0,
+                self.clock.comm_s,
+                bits,
+            ));
+        }
         match self.net.algo {
             crate::netsim::Algo::Ring => ring_allreduce_sum_t(bufs),
             crate::netsim::Algo::Tree => tree_allreduce_sum_t(bufs),
@@ -368,8 +389,19 @@ impl<'a> StepCtx<'a> {
 
     /// Scalar max all-reduce (`||w||_2` sharing): one 32-bit float.
     pub fn allreduce_max_scalar(&mut self, vals: &[f32]) -> f32 {
+        let c0 = self.clock.comm_s;
         self.clock.comm_s += self.net.scalar_allreduce_s();
         self.clock.bits_per_worker += 32.0;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            let bucket = t.bucket();
+            t.push(crate::trace::Span::new(
+                crate::trace::Cat::Comm,
+                crate::trace::SpanKind::NormShare { bucket },
+                c0,
+                self.clock.comm_s,
+                32.0,
+            ));
+        }
         max_allreduce_scalar(vals)
     }
 
@@ -391,8 +423,19 @@ impl<'a> StepCtx<'a> {
     ) {
         let elems = vecs.first().map(|v| v.len()).unwrap_or(0) as f64;
         let bits = self.effective_bits(elems, bits_per_elem);
+        let c0 = self.clock.comm_s;
         self.clock.comm_s += self.net.allreduce_s(bits / 8.0);
         self.clock.bits_per_worker += bits;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            let bucket = t.bucket();
+            t.push(crate::trace::Span::new(
+                crate::trace::Cat::Comm,
+                crate::trace::SpanKind::ScaleShareReduce { bucket },
+                c0,
+                self.clock.comm_s,
+                bits,
+            ));
+        }
         min_allreduce_u8_into(vecs, out);
     }
 
@@ -404,10 +447,20 @@ impl<'a> StepCtx<'a> {
     /// the wire is charged.)
     pub fn charge_allgather(&mut self, elems: f64, bits_per_elem: f64) {
         let bits_per_rank = self.effective_bits(elems, bits_per_elem);
+        let c0 = self.clock.comm_s;
         self.clock.comm_s += self.net.allgather_s(bits_per_rank / 8.0);
         // each worker transmits its payload and receives M-1 others; the
         // ledger tracks *sent* bits per worker to match the paper's metric
         self.clock.bits_per_worker += bits_per_rank;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.push(crate::trace::Span::new(
+                crate::trace::Cat::Comm,
+                crate::trace::SpanKind::Allgather,
+                c0,
+                self.clock.comm_s,
+                bits_per_rank,
+            ));
+        }
     }
 
     /// Ledger + simulated-time charge for one packed-resident collective of
@@ -436,13 +489,31 @@ impl<'a> StepCtx<'a> {
         resident_bits: u32,
         payload_bits_per_elem: f64,
     ) {
-        self.clock.bits_per_worker += self.effective_bits(elems as f64, payload_bits_per_elem);
+        let payload_bits = self.effective_bits(elems as f64, payload_bits_per_elem);
+        self.clock.bits_per_worker += payload_bits;
         let m = self.net.workers.max(1);
         if m <= 1 || elems == 0 {
+            if let Some(t) = self.tracer.as_deref_mut() {
+                let bucket = t.bucket();
+                let at = self.clock.comm_s;
+                t.push(crate::trace::Span::new(
+                    crate::trace::Cat::Comm,
+                    crate::trace::SpanKind::Pack { bucket, payload_bits },
+                    at,
+                    at,
+                    payload_bits,
+                ));
+            }
             return;
         }
+        let c0 = self.clock.comm_s;
         self.clock.comm_s += sched.comm_s(self.net, elems, resident_bits);
+        let c1 = self.clock.comm_s;
         let fallback = self.net.bottleneck_level();
+        // Per-hop shape for the flight recorder: (wire bits, level, weight).
+        // Collected only when tracing so the off path allocates nothing.
+        let tracing = self.tracer.is_some();
+        let mut hop_shape: Vec<(f64, LinkLevel, f64)> = Vec::new();
         for h in 0..sched.hops(m) {
             let bits = sched.hop_wire_bytes(h, elems, resident_bits, m) * 8.0;
             self.clock.hop_bits_per_worker += bits;
@@ -451,6 +522,67 @@ impl<'a> StepCtx<'a> {
             match sched.hop_level(h, m).unwrap_or(fallback) {
                 LinkLevel::Intra => self.clock.hop_bits_intra += bits,
                 LinkLevel::Inter => self.clock.hop_bits_inter += bits,
+            }
+            if tracing {
+                hop_shape.push((
+                    bits,
+                    sched.hop_level(h, m).unwrap_or(fallback),
+                    sched.hop_time_s(self.net, h, elems, resident_bits, m),
+                ));
+            }
+        }
+        if let Some(t) = self.tracer.as_deref_mut() {
+            let bucket = t.bucket();
+            let name = sched.name();
+            t.push(crate::trace::Span::new(
+                crate::trace::Cat::Comm,
+                crate::trace::SpanKind::Pack { bucket, payload_bits },
+                c0,
+                c0,
+                payload_bits,
+            ));
+            if hop_shape.is_empty() {
+                // A schedule with comm but no hops (cannot happen today:
+                // m > 1 implies hops >= 1) still keeps the comm chain whole.
+                t.push(crate::trace::Span::new(
+                    crate::trace::Cat::Comm,
+                    crate::trace::SpanKind::Collective { schedule: name },
+                    c0,
+                    c1,
+                    0.0,
+                ));
+            } else {
+                // Partition the schedule's one comm lump into per-hop
+                // windows proportional to each hop's analytic wire time,
+                // normalized so the last window ends exactly at the charged
+                // snapshot (tree/naive override comm_s with the
+                // hierarchical α–β model, so their weights only set shape).
+                let w_total: f64 = hop_shape.iter().map(|&(_, _, w)| w).sum();
+                let total = c1 - c0;
+                let last = hop_shape.len() - 1;
+                let mut cum = 0.0;
+                let mut prev = c0;
+                for (h, &(bits, level, w)) in hop_shape.iter().enumerate() {
+                    cum += w;
+                    let end = if h == last || w_total <= 0.0 {
+                        c1
+                    } else {
+                        (c0 + total * (cum / w_total)).max(prev).min(c1)
+                    };
+                    t.push(crate::trace::Span::new(
+                        crate::trace::Cat::Comm,
+                        crate::trace::SpanKind::Hop {
+                            schedule: name,
+                            level,
+                            hop_idx: h,
+                            wire_bits: bits,
+                        },
+                        prev,
+                        end,
+                        0.0,
+                    ));
+                    prev = end;
+                }
             }
         }
         self.charge_integrity(sched, elems, resident_bits);
@@ -499,8 +631,22 @@ impl<'a> StepCtx<'a> {
                 LinkLevel::Inter => self.clock.hop_bits_inter += per_hop_csum,
             }
             let seg = sched.hop_wire_bytes(h, elems, resident_bits, m);
+            let c0 = self.clock.comm_s;
             self.clock.comm_s += self.net.hop_s_on(level, seg + CHECKSUM_BYTES as f64)
                 - self.net.hop_s_on(level, seg);
+            if let Some(t) = self.tracer.as_deref_mut() {
+                t.push(crate::trace::Span::new(
+                    crate::trace::Cat::Comm,
+                    crate::trace::SpanKind::Checksum {
+                        level,
+                        hop_idx: h,
+                        wire_bits: per_hop_csum,
+                    },
+                    c0,
+                    self.clock.comm_s,
+                    per_hop_csum,
+                ));
+            }
         }
         let Some((plan, step)) = self.wire_faults else { return };
         if plan.loss <= 0.0 && plan.flip <= 0.0 {
@@ -520,10 +666,27 @@ impl<'a> StepCtx<'a> {
                 }
                 let sent = failed.min(cfg.max_retries);
                 if sent > 0 {
-                    self.clock.retrans_bits += sent as f64 * 8.0 * seg_bytes;
+                    let add_bits = sent as f64 * 8.0 * seg_bytes;
+                    self.clock.retrans_bits += add_bits;
+                    let r0 = self.clock.retrans_s;
                     self.clock.retrans_s += cfg.backoff_base_s
                         * (2f64.powi(sent as i32) - 1.0)
                         + sent as f64 * self.net.hop_s_on(level, seg_bytes);
+                    if let Some(t) = self.tracer.as_deref_mut() {
+                        t.push(crate::trace::Span::new(
+                            crate::trace::Cat::Retrans,
+                            crate::trace::SpanKind::Retransmit {
+                                attempt: sent,
+                                worker: w,
+                                hop_idx: h,
+                                level,
+                                wire_bits: add_bits,
+                            },
+                            r0,
+                            self.clock.retrans_s,
+                            0.0,
+                        ));
+                    }
                 }
             }
         }
@@ -570,17 +733,39 @@ impl<'a> StepCtx<'a> {
 
     /// Time a closure into the encode bucket.
     pub fn time_encode<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let e0 = self.clock.encode_s;
         let t0 = std::time::Instant::now();
         let r = f();
         self.clock.encode_s += t0.elapsed().as_secs_f64();
+        if let Some(t) = self.tracer.as_deref_mut() {
+            let bucket = t.bucket();
+            t.push(crate::trace::Span::new(
+                crate::trace::Cat::Encode,
+                crate::trace::SpanKind::Encode { bucket },
+                e0,
+                self.clock.encode_s,
+                0.0,
+            ));
+        }
         r
     }
 
     /// Time a closure into the decode bucket.
     pub fn time_decode<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let d0 = self.clock.decode_s;
         let t0 = std::time::Instant::now();
         let r = f();
         self.clock.decode_s += t0.elapsed().as_secs_f64();
+        if let Some(t) = self.tracer.as_deref_mut() {
+            let bucket = t.bucket();
+            t.push(crate::trace::Span::new(
+                crate::trace::Cat::Decode,
+                crate::trace::SpanKind::Decode { bucket },
+                d0,
+                self.clock.decode_s,
+                0.0,
+            ));
+        }
         r
     }
 }

@@ -185,15 +185,20 @@ pub trait PackedReduce: Sync {
         if m <= 1 || elems == 0 {
             return 0.0;
         }
-        let fallback = net.bottleneck_level();
-        (0..self.hops(m))
-            .map(|h| {
-                net.hop_s_on(
-                    self.hop_level(h, m).unwrap_or(fallback),
-                    self.hop_wire_bytes(h, elems, bits, m),
-                )
-            })
-            .sum()
+        (0..self.hops(m)).map(|h| self.hop_time_s(net, h, elems, bits, m)).sum()
+    }
+
+    /// Analytic wire seconds of hop `h` alone — the flight recorder's
+    /// per-hop weight when it partitions a schedule's `comm_s` charge into
+    /// hop windows ([`super::StepCtx::charge_packed`]). For the rings these
+    /// weights sum to exactly the default [`PackedReduce::comm_s`]; for
+    /// tree/naive (which override `comm_s` with the hierarchical α–β model)
+    /// the recorder normalizes, so only the *relative* weights matter.
+    fn hop_time_s(&self, net: &NetConfig, h: usize, elems: usize, bits: u32, m: usize) -> f64 {
+        net.hop_s_on(
+            self.hop_level(h, m).unwrap_or(net.bottleneck_level()),
+            self.hop_wire_bytes(h, elems, bits, m),
+        )
     }
 }
 

@@ -352,8 +352,27 @@ fn packed_pipeline(
         );
     }
     let wall = t0.elapsed().as_secs_f64();
+    let e0 = ctx.clock.encode_s;
     ctx.clock.encode_s += (wall - decode_s).max(0.0);
+    let d0 = ctx.clock.decode_s;
     ctx.clock.decode_s += decode_s;
+    if let Some(t) = ctx.tracer.as_deref_mut() {
+        let bucket = t.bucket();
+        t.push(crate::trace::Span::new(
+            crate::trace::Cat::Encode,
+            crate::trace::SpanKind::Encode { bucket },
+            e0,
+            ctx.clock.encode_s,
+            0.0,
+        ));
+        t.push(crate::trace::Span::new(
+            crate::trace::Cat::Decode,
+            crate::trace::SpanKind::Decode { bucket },
+            d0,
+            ctx.clock.decode_s,
+            0.0,
+        ));
+    }
     traffic
 }
 

@@ -652,6 +652,10 @@ impl GradientControlPlane {
 
         for b in 0..nb {
             let bk = self.plan.buckets[b];
+            // the flight recorder tags this bucket's inner collective spans
+            if let Some(t) = ctx.tracer.as_deref_mut() {
+                t.set_bucket(Some(b));
+            }
             // encode-domain range of this bucket: its own coordinate range
             // (dense), or the sorted K-draw's sub-range inside it (GlobalK)
             let (elo, ehi) = match &coord_idx {
@@ -791,6 +795,9 @@ impl GradientControlPlane {
             }
             self.bucket_comm[b] = ctx.clock.comm_s - comm_before;
         }
+        if let Some(t) = ctx.tracer.as_deref_mut() {
+            t.set_bucket(None);
+        }
 
         // GlobalK: scatter the decoded K-vector back (+ optional n/K
         // unbiasedness rescale) — exactly the monolithic reconstruction
@@ -804,11 +811,24 @@ impl GradientControlPlane {
         }
 
         // overlap accounting: hide bucket comm inside the backward window
+        let h0 = ctx.clock.hidden_comm_s;
         self.last_overlap = match (self.cfg.overlap, ctx.backward_s) {
             (true, Some(backward_s)) => {
                 let ready = self.plan.ready_times(backward_s);
                 let report = overlap::schedule(&ready, &self.bucket_comm, backward_s);
                 ctx.clock.hidden_comm_s += report.hidden_s;
+                if let Some(t) = ctx.tracer.as_deref_mut() {
+                    t.push(crate::trace::Span::new(
+                        crate::trace::Cat::HiddenComm,
+                        crate::trace::SpanKind::Overlap {
+                            hidden_s: report.hidden_s,
+                            exposed_s: report.exposed_s,
+                        },
+                        h0,
+                        ctx.clock.hidden_comm_s,
+                        0.0,
+                    ));
+                }
                 report
             }
             _ => OverlapReport::default(),

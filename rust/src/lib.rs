@@ -17,6 +17,7 @@
 //! * [`optim`] / [`data`] / [`train`] — the training framework around it
 //! * [`perfmodel`] — the §6.6 analytical throughput model
 //! * [`figures`] — regenerates every figure in the paper
+//! * [`trace`] — step flight recorder + self-auditing ledger registry
 
 pub mod cli;
 pub mod cluster;
@@ -31,5 +32,6 @@ pub mod optim;
 pub mod perfmodel;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod util;

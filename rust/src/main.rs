@@ -17,6 +17,8 @@
 //!       --integrity --retries 3 --backoff-s 50e-6
 //!   repro train --model mlp --method qsgd-mn-4 --faults poison=1@3 --on-anomaly clip:10
 //!   repro train --model mlp --method qsgd-mn-4 --workers 128 --topology 32x4 --schedule hier
+//!   repro train --model mlp --method qsgd-mn-4 --workers 16 --topology 4x4 \
+//!       --schedule hier --trace results/train.trace.json
 //!   repro figures --fig 3 --steps 150
 //!   repro perfmodel --floor-bits 8
 
@@ -75,6 +77,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         // bucket, which is bit-identical to the monolithic path
         control = Some(ControlConfig::new(1));
     }
+    // `--trace PATH` (PR 9) arms the step flight recorder and writes the
+    // trace when the run finishes. The extension picks the format: `.jsonl`
+    // emits compact per-step JSON lines; anything else emits Chrome
+    // trace-event JSON loadable in chrome://tracing or ui.perfetto.dev
+    // (one track per worker plus per-level wire tracks). Multi-method
+    // sweeps suffix the sanitized method label before the extension.
+    // Render either with `tools/trace_report.py PATH`.
+    let trace = args.get("trace").map(std::path::PathBuf::from);
     args.reject_unknown()?;
 
     let arts = Artifacts::load_default()?;
@@ -90,6 +100,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     exp.elastic = elastic;
     exp.integrity = integrity;
     exp.on_anomaly = on_anomaly;
+    exp.trace = trace;
     let results = exp.run(&arts)?;
     let summaries: Vec<_> = results.into_iter().map(|(_, s)| s).collect();
     println!("{}", summary_table(&summaries));

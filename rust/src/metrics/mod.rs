@@ -29,8 +29,17 @@ impl CsvWriter {
         let line = values
             .iter()
             .map(|v| {
-                if v.fract() == 0.0 && v.abs() < 1e15 {
-                    format!("{}", *v as i64)
+                if v.fract() == 0.0 {
+                    // integral values print as exact integers: i64 text for
+                    // the common range, `{:.0}` (exact for any f64) beyond
+                    // it — long-run cumulative bit counters pass 1e15 and
+                    // must not fall into the rounded `{:.6}` branch.
+                    // (inf/NaN have NaN fract(), so they keep `{:.6}`.)
+                    if v.abs() < 1e15 {
+                        format!("{}", *v as i64)
+                    } else {
+                        format!("{v:.0}")
+                    }
                 } else {
                     format!("{v:.6}")
                 }
@@ -199,6 +208,22 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3);
         assert!(text.starts_with("a,b\n1,2.500000\n"));
+    }
+
+    #[test]
+    fn csv_big_integral_counters_format_exactly() {
+        let dir = std::env::temp_dir().join("repro_metrics_test");
+        let path = dir.join("big.csv");
+        let mut w = CsvWriter::create(&path, &["bits", "edge", "frac"]).unwrap();
+        // 2^53: exactly representable, above the old 1e15 i64-text cutoff —
+        // the regression printed 9007199254740992.000000-style rounded text.
+        w.row(&[9_007_199_254_740_992.0, 1e15, 2.5]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text.lines().nth(1).unwrap(),
+            "9007199254740992,1000000000000000,2.500000"
+        );
     }
 
     #[test]

@@ -409,11 +409,70 @@ impl SimClock {
             0.0
         }
     }
+
+    /// Field-wise add of another clock (a per-step delta) into this one.
+    pub fn accumulate(&mut self, d: &SimClock) {
+        self.comm_s += d.comm_s;
+        self.compute_s += d.compute_s;
+        self.encode_s += d.encode_s;
+        self.decode_s += d.decode_s;
+        self.bits_per_worker += d.bits_per_worker;
+        self.hop_bits_per_worker += d.hop_bits_per_worker;
+        self.hop_bits_intra += d.hop_bits_intra;
+        self.hop_bits_inter += d.hop_bits_inter;
+        self.hidden_comm_s += d.hidden_comm_s;
+        self.straggler_wait_s += d.straggler_wait_s;
+        self.retrans_s += d.retrans_s;
+        self.retrans_bits += d.retrans_bits;
+    }
+
+    /// Field-wise difference `self - before`: the ledger delta between two
+    /// snapshots of the same accumulating clock (the flight recorder's
+    /// per-step audit input, [`crate::trace::LedgerAudit`]).
+    pub fn delta_since(&self, before: &SimClock) -> SimClock {
+        SimClock {
+            comm_s: self.comm_s - before.comm_s,
+            compute_s: self.compute_s - before.compute_s,
+            encode_s: self.encode_s - before.encode_s,
+            decode_s: self.decode_s - before.decode_s,
+            bits_per_worker: self.bits_per_worker - before.bits_per_worker,
+            hop_bits_per_worker: self.hop_bits_per_worker - before.hop_bits_per_worker,
+            hop_bits_intra: self.hop_bits_intra - before.hop_bits_intra,
+            hop_bits_inter: self.hop_bits_inter - before.hop_bits_inter,
+            hidden_comm_s: self.hidden_comm_s - before.hidden_comm_s,
+            straggler_wait_s: self.straggler_wait_s - before.straggler_wait_s,
+            retrans_s: self.retrans_s - before.retrans_s,
+            retrans_bits: self.retrans_bits - before.retrans_bits,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn clock_accumulate_and_delta_roundtrip() {
+        let mut base = SimClock::default();
+        base.comm_s = 1.5;
+        base.compute_s = 2.0;
+        base.bits_per_worker = 4096.0;
+        base.hop_bits_intra = 1024.0;
+        let mut d = SimClock::default();
+        d.comm_s = 0.25;
+        d.encode_s = 0.125;
+        d.hop_bits_intra = 512.0;
+        d.retrans_bits = 64.0;
+        let before = base.clone();
+        base.accumulate(&d);
+        let got = base.delta_since(&before);
+        assert_eq!(got.comm_s, d.comm_s);
+        assert_eq!(got.compute_s, 0.0);
+        assert_eq!(got.encode_s, d.encode_s);
+        assert_eq!(got.hop_bits_intra, d.hop_bits_intra);
+        assert_eq!(got.retrans_bits, d.retrans_bits);
+        assert_eq!(got.bits_per_worker, 0.0);
+    }
 
     #[test]
     fn ring_beats_naive_at_scale() {

@@ -41,6 +41,9 @@ pub struct Experiment {
     pub integrity: Option<IntegrityConfig>,
     /// policy for non-finite local gradients (pre-encode guard)
     pub on_anomaly: AnomalyPolicy,
+    /// flight-recorder output path (CLI `--trace PATH`); multi-method
+    /// sweeps suffix the method label before the extension
+    pub trace: Option<PathBuf>,
 }
 
 impl Experiment {
@@ -63,6 +66,7 @@ impl Experiment {
             elastic: None,
             integrity: None,
             on_anomaly: AnomalyPolicy::Skip,
+            trace: None,
         }
     }
 
@@ -72,6 +76,26 @@ impl Experiment {
             .map(|c| if c.is_ascii_alphanumeric() || c == '-' { c } else { '_' })
             .collect();
         self.out_dir.join(format!("{}_{}.csv", self.name, safe))
+    }
+
+    /// Per-method trace path: the configured path as-is for a single-method
+    /// run; sweeps get the sanitized method label spliced in before the
+    /// extension so each method's trace survives.
+    fn trace_path(&self, label: &str) -> Option<PathBuf> {
+        let base = self.trace.as_ref()?;
+        if self.methods.len() <= 1 {
+            return Some(base.clone());
+        }
+        let safe: String = label
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' { c } else { '_' })
+            .collect();
+        let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+        let name = match base.extension().and_then(|e| e.to_str()) {
+            Some(ext) => format!("{stem}_{safe}.{ext}"),
+            None => format!("{stem}_{safe}"),
+        };
+        Some(base.with_file_name(name))
     }
 
     /// Run all methods; returns (per-method curves, summaries).
@@ -91,6 +115,7 @@ impl Experiment {
             cfg.on_anomaly = self.on_anomaly;
 
             let label = method.label();
+            cfg.trace = self.trace_path(&label);
             if !self.quiet {
                 eprintln!("[{}] {} on {} (M={}, {} steps)", self.name, label, self.model, self.workers, self.steps);
             }

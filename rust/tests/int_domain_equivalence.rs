@@ -1445,3 +1445,60 @@ fn drop_then_rejoin_cohort_matches_independent_fixed_m_references() {
         }
     }
 }
+
+/// PR 9 pin: the flight recorder is structurally off by default —
+/// `StepCtx::new` leaves `tracer == None`, so every other test in this file
+/// (and every pre-PR-9 caller) runs the exact pre-recorder hot path — and
+/// arming it perturbs neither the integer-domain output nor any of the
+/// twelve simulated ledgers, bit for bit.
+#[test]
+fn flight_recorder_default_off_and_armed_runs_bit_identical() {
+    use repro::control::{build_plane, ControlConfig};
+
+    let m = 8usize;
+    let n = 1201usize;
+    let mut grng = Rng::new(0x7F1A);
+    let grads: Vec<Vec<f32>> = (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            grng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let net = NetConfig::flat(m, 10.0);
+    let method = Method::parse("qsgd-mn-ts-2-6").unwrap();
+
+    let run = |tracer: Option<&mut repro::trace::Tracer>| -> (Vec<f32>, SimClock) {
+        let mut plane = build_plane(&method, &ControlConfig::new(3), n, &[]).unwrap();
+        let mut clock = SimClock::default();
+        let out = {
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            assert!(ctx.tracer.is_none(), "StepCtx must construct trace-off");
+            ctx.tracer = tracer;
+            let mut rng = Rng::new(0x7F1A ^ 0x51EED);
+            plane.aggregate(&refs, &mut ctx, &mut rng)
+        };
+        (out, clock)
+    };
+
+    let (out_off, clk_off) = run(None);
+    let mut tracer = repro::trace::Tracer::new();
+    let (out_on, clk_on) = run(Some(&mut tracer));
+    tracer.end_step(&clk_on);
+
+    assert_eq!(out_on, out_off, "armed recorder changed the output");
+    assert_eq!(clk_on.comm_s, clk_off.comm_s);
+    assert_eq!(clk_on.compute_s, clk_off.compute_s);
+    assert_eq!(clk_on.encode_s, clk_off.encode_s);
+    assert_eq!(clk_on.decode_s, clk_off.decode_s);
+    assert_eq!(clk_on.bits_per_worker, clk_off.bits_per_worker);
+    assert_eq!(clk_on.hop_bits_per_worker, clk_off.hop_bits_per_worker);
+    assert_eq!(clk_on.hop_bits_intra, clk_off.hop_bits_intra);
+    assert_eq!(clk_on.hop_bits_inter, clk_off.hop_bits_inter);
+    assert_eq!(clk_on.hidden_comm_s, clk_off.hidden_comm_s);
+    assert_eq!(clk_on.straggler_wait_s, clk_off.straggler_wait_s);
+    assert_eq!(clk_on.retrans_s, clk_off.retrans_s);
+    assert_eq!(clk_on.retrans_bits, clk_off.retrans_bits);
+    assert_eq!(tracer.violation_count(), 0, "armed run must audit clean");
+}

@@ -1,0 +1,405 @@
+//! Flight-recorder invariants (PR 9 acceptance):
+//!
+//! * **Inert when off / complete when on** — over the PR 8 parity matrix
+//!   (qsgd-mn-4 × {flat ring, hier 4×4, tree} × {strict, partial cohort,
+//!   lossy wire}), a traced run's output and all twelve SimClock ledgers
+//!   are bit-identical to the untraced run, and every SimClock category's
+//!   step delta equals the sum of its spans (re-verified here from the raw
+//!   spans, independently of `LedgerAudit`).
+//! * **Chrome export** — a traced hierarchical lossy run emits trace-event
+//!   JSON that parses back, keeps every track's complete events monotone
+//!   and non-overlapping, and whose per-level wire tracks reconcile exactly
+//!   with `hop_bits_intra` / `hop_bits_inter` / `retrans_bits`.
+//!
+//! Like the rest of this tier the tests run without PJRT: they drive the
+//! bucketed control plane through `StepCtx` directly.
+
+use repro::collectives::{packed, IntegrityConfig, StepCtx};
+use repro::compress::{Aggregator, Method};
+use repro::control::{build_plane, ControlConfig};
+use repro::netsim::{Algo, FaultPlan, HopFault, LinkLevel, NetConfig, SimClock};
+use repro::runtime::{contiguous_segments, Segment};
+use repro::trace::{Cat, SpanKind, Tracer};
+use repro::util::json::Json;
+use repro::util::rng::Rng;
+
+#[derive(Clone, Copy)]
+struct Topo {
+    name: &'static str,
+    m: usize,
+    g: usize,
+    hier: bool,
+    algo: Algo,
+}
+
+const TOPOS: [Topo; 3] = [
+    Topo { name: "flat-ring", m: 8, g: 1, hier: false, algo: Algo::Ring },
+    Topo { name: "hier-4x4", m: 16, g: 4, hier: true, algo: Algo::Ring },
+    Topo { name: "tree", m: 8, g: 1, hier: false, algo: Algo::Tree },
+];
+
+#[derive(Clone, Copy, PartialEq)]
+enum Scenario {
+    Strict,
+    Partial,
+    Lossy,
+}
+
+impl Scenario {
+    fn name(&self) -> &'static str {
+        match self {
+            Scenario::Strict => "strict",
+            Scenario::Partial => "partial",
+            Scenario::Lossy => "lossy",
+        }
+    }
+}
+
+fn net_for(m: usize, g: usize, algo: Algo) -> NetConfig {
+    let mut net = NetConfig::flat(m, 10.0);
+    net.gpus_per_node = g.max(1);
+    net.algo = algo;
+    net
+}
+
+fn grads_for(m: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut grng = Rng::new(seed);
+    (0..m)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            grng.fill_normal_f32(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+/// A deterministic step at which the wire plan actually faults at least one
+/// hop delivery (so the lossy scenario exercises the retransmit spans).
+fn faulting_step(plan: &FaultPlan, topo: &Topo) -> usize {
+    let hops = packed::schedule_for_topo(topo.algo, false, 1, topo.hier, topo.g, topo.m)
+        .as_dyn()
+        .hops(topo.m);
+    (0..512)
+        .find(|&s| {
+            (0..topo.m)
+                .any(|w| (0..hops).any(|h| plan.hop_fault(s, w, h, 0) != HopFault::None))
+        })
+        .expect("a 4% per-hop fault rate must fire within 512 steps")
+}
+
+/// Run one aggregate under the scenario; `tracer` arms the flight recorder.
+fn run_once(
+    topo: &Topo,
+    scenario: Scenario,
+    grads: &[Vec<f32>],
+    n: usize,
+    segments: &[Segment],
+    plan: &FaultPlan,
+    fault_step: usize,
+    seed: u64,
+    mut tracer: Option<&mut Tracer>,
+) -> (Vec<f32>, SimClock) {
+    let method = Method::parse("qsgd-mn-4").unwrap();
+    let mut plane = build_plane(&method, &ControlConfig::new(3), n, segments).unwrap();
+    let mut clock = SimClock::default();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let mut rng = Rng::new(seed ^ 0x51EED);
+    let out = match scenario {
+        Scenario::Strict | Scenario::Lossy => {
+            let net = net_for(topo.m, topo.g, topo.algo);
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.hier = topo.hier;
+            if scenario == Scenario::Lossy {
+                ctx.integrity = Some(IntegrityConfig::default());
+                ctx.wire_faults = Some((plan, fault_step));
+            }
+            ctx.tracer = tracer.as_deref_mut();
+            plane.aggregate(&refs, &mut ctx, &mut rng)
+        }
+        Scenario::Partial => {
+            // worker 2 dropped: the id-keyed partial-cohort seam over a
+            // wire rebuilt for the live width
+            let live: Vec<usize> = (0..topo.m).filter(|&w| w != 2).collect();
+            let slices: Vec<&[f32]> = live.iter().map(|&w| refs[w]).collect();
+            let net = net_for(live.len(), topo.g, topo.algo);
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.hier = topo.hier;
+            ctx.tracer = tracer.as_deref_mut();
+            plane.aggregate_cohort(&slices, &live, &mut ctx, &mut rng)
+        }
+    };
+    if let Some(t) = tracer {
+        t.end_step(&clock);
+    }
+    (out, clock)
+}
+
+fn assert_clock_eq(a: &SimClock, b: &SimClock, what: &str) {
+    assert_eq!(a.comm_s, b.comm_s, "{what}: comm_s");
+    assert_eq!(a.compute_s, b.compute_s, "{what}: compute_s");
+    assert_eq!(a.encode_s, b.encode_s, "{what}: encode_s");
+    assert_eq!(a.decode_s, b.decode_s, "{what}: decode_s");
+    assert_eq!(a.bits_per_worker, b.bits_per_worker, "{what}: bits_per_worker");
+    assert_eq!(
+        a.hop_bits_per_worker, b.hop_bits_per_worker,
+        "{what}: hop_bits_per_worker"
+    );
+    assert_eq!(a.hop_bits_intra, b.hop_bits_intra, "{what}: hop_bits_intra");
+    assert_eq!(a.hop_bits_inter, b.hop_bits_inter, "{what}: hop_bits_inter");
+    assert_eq!(a.hidden_comm_s, b.hidden_comm_s, "{what}: hidden_comm_s");
+    assert_eq!(a.straggler_wait_s, b.straggler_wait_s, "{what}: straggler_wait_s");
+    assert_eq!(a.retrans_s, b.retrans_s, "{what}: retrans_s");
+    assert_eq!(a.retrans_bits, b.retrans_bits, "{what}: retrans_bits");
+}
+
+/// Independent re-verification of the span accounting, from the raw spans
+/// (not through `LedgerAudit`, which already ran inside `end_step`).
+fn verify_spans(tracer: &Tracer, clock: &SimClock, what: &str) {
+    assert_eq!(tracer.violation_count(), 0, "{what}: audit violations");
+    assert_eq!(tracer.steps().len(), 1, "{what}: one recorded step");
+    let st = &tracer.steps()[0];
+    assert!(st.violations.is_empty(), "{what}: {:?}", st.violations);
+
+    // (1) per-category chains tile [0, delta] exactly.
+    for cat in Cat::ALL {
+        let want = cat.of(clock);
+        let chain: Vec<_> = st
+            .spans
+            .iter()
+            .filter(|sp| sp.cat == cat && !sp.kind.is_instant())
+            .collect();
+        if chain.is_empty() {
+            assert_eq!(want, 0.0, "{what}: {} charged without spans", cat.name());
+            continue;
+        }
+        assert_eq!(chain[0].t0, 0.0, "{what}: {} chain start", cat.name());
+        for w in chain.windows(2) {
+            assert_eq!(
+                w[1].t0,
+                w[0].t1,
+                "{what}: {} chain gap between {} and {}",
+                cat.name(),
+                w[0].kind.name(),
+                w[1].kind.name()
+            );
+        }
+        assert_eq!(
+            chain.last().unwrap().t1,
+            want,
+            "{what}: {} span-sum != ledger delta",
+            cat.name()
+        );
+    }
+
+    // (2) bit books are exact sums of the spans'.
+    let payload: f64 = st.spans.iter().map(|sp| sp.bits).sum();
+    assert_eq!(payload, clock.bits_per_worker, "{what}: payload bit book");
+    let mut intra = 0.0;
+    let mut inter = 0.0;
+    let mut rtx = 0.0;
+    for sp in &st.spans {
+        match sp.kind {
+            SpanKind::Hop { level, wire_bits, .. }
+            | SpanKind::Checksum { level, wire_bits, .. } => match level {
+                LinkLevel::Intra => intra += wire_bits,
+                LinkLevel::Inter => inter += wire_bits,
+            },
+            SpanKind::Retransmit { wire_bits, .. } => rtx += wire_bits,
+            _ => {}
+        }
+    }
+    assert_eq!(intra, clock.hop_bits_intra, "{what}: intra wire book");
+    assert_eq!(inter, clock.hop_bits_inter, "{what}: inter wire book");
+    assert_eq!(
+        intra + inter,
+        clock.hop_bits_per_worker,
+        "{what}: hop wire book"
+    );
+    assert_eq!(rtx, clock.retrans_bits, "{what}: retransmit wire book");
+}
+
+#[test]
+fn traced_matches_untraced_and_spans_sum_to_deltas() {
+    let n = 1543usize;
+    let seg_lens = [600usize, 400, 300, 150, 93];
+    let segments = contiguous_segments(&seg_lens);
+    let plan = FaultPlan::wire(0x9E7A, 0.02, 0.02);
+
+    for topo in &TOPOS {
+        let fault_step = faulting_step(&plan, topo);
+        let seed = 0x7ACE + topo.m as u64;
+        let grads = grads_for(topo.m, n, seed);
+        for scenario in [Scenario::Strict, Scenario::Partial, Scenario::Lossy] {
+            let what = format!("{} / {}", topo.name, scenario.name());
+
+            let (out_off, clk_off) = run_once(
+                topo, scenario, &grads, n, &segments, &plan, fault_step, seed, None,
+            );
+            let mut tracer = Tracer::new();
+            let (out_on, clk_on) = run_once(
+                topo,
+                scenario,
+                &grads,
+                n,
+                &segments,
+                &plan,
+                fault_step,
+                seed,
+                Some(&mut tracer),
+            );
+
+            // inert when on: output and every ledger bit-identical
+            assert_eq!(out_on, out_off, "{what}: traced output diverged");
+            assert_clock_eq(&clk_on, &clk_off, &what);
+            // complete when on: span accounting closes every ledger
+            verify_spans(&tracer, &clk_on, &what);
+            if scenario == Scenario::Lossy {
+                assert!(
+                    clk_on.retrans_bits > 0.0,
+                    "{what}: lossy scenario must exercise retransmits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chrome_trace_parses_monotone_and_reconciles_wire_tracks() {
+    // A 3-step traced hierarchical lossy run — the acceptance scenario.
+    let topo = TOPOS[1];
+    assert!(topo.hier);
+    let n = 1543usize;
+    let seg_lens = [600usize, 400, 300, 150, 93];
+    let segments = contiguous_segments(&seg_lens);
+    let plan = FaultPlan::wire(0x9E7A, 0.05, 0.05);
+    let fault_step = faulting_step(&plan, &topo);
+    let seed = 0xC42;
+    let grads = grads_for(topo.m, n, seed);
+    let method = Method::parse("qsgd-mn-4").unwrap();
+    let mut plane = build_plane(&method, &ControlConfig::new(3), n, &segments).unwrap();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let net = net_for(topo.m, topo.g, topo.algo);
+
+    let mut tracer = Tracer::new();
+    let mut run_clock = SimClock::default();
+    for step in 0..3 {
+        let mut clock = SimClock::default();
+        tracer.begin_step(step, run_clock.total_s());
+        {
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.hier = topo.hier;
+            ctx.integrity = Some(IntegrityConfig::default());
+            ctx.wire_faults = Some((&plan, fault_step + step));
+            ctx.tracer = Some(&mut tracer);
+            let mut rng = Rng::new(seed ^ 0x51EED ^ step as u64);
+            plane.aggregate(&refs, &mut ctx, &mut rng);
+        }
+        tracer.end_step(&clock);
+        run_clock.accumulate(&clock);
+    }
+    assert_eq!(tracer.violation_count(), 0);
+
+    let text = tracer.to_chrome(topo.m).to_string();
+    let parsed = Json::parse(&text).expect("chrome trace must parse");
+    let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+
+    let mut last_end: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+    let mut worker_tracks = std::collections::BTreeSet::new();
+    let (mut wire_intra, mut wire_inter, mut wire_rtx) = (0.0f64, 0.0f64, 0.0f64);
+    for e in events {
+        if e.req("ph").unwrap().as_str().unwrap() != "X" {
+            continue;
+        }
+        let pid = e.req("pid").unwrap().as_usize().unwrap();
+        let tid = e.req("tid").unwrap().as_usize().unwrap();
+        let ts = e.req("ts").unwrap().as_f64().unwrap();
+        let dur = e.req("dur").unwrap().as_f64().unwrap();
+        assert!(dur >= 0.0);
+        let prev = last_end.get(&(pid, tid)).copied().unwrap_or(f64::NEG_INFINITY);
+        assert!(
+            ts + 1e-3 >= prev,
+            "track ({pid},{tid}): event at {ts}us overlaps previous end {prev}us"
+        );
+        last_end.insert((pid, tid), ts + dur);
+        if pid == 0 {
+            worker_tracks.insert(tid);
+        } else {
+            let name = e.req("name").unwrap().as_str().unwrap();
+            let bits = e.req("args").unwrap().req("wire_bits").unwrap().as_f64().unwrap();
+            match (name, tid) {
+                ("hop", 0) | ("checksum", 0) => wire_intra += bits,
+                ("hop", 1) | ("checksum", 1) => wire_inter += bits,
+                ("retransmit", _) => wire_rtx += bits,
+                other => panic!("unexpected wire-track event {other:?}"),
+            }
+        }
+    }
+    assert_eq!(worker_tracks.len(), topo.m, "one track per worker");
+
+    // Per-level wire tracks reconcile exactly with the run totals.
+    let totals = parsed.req("reproTotals").unwrap();
+    let tot = |k: &str| totals.req(k).unwrap().as_f64().unwrap();
+    assert_eq!(wire_intra, tot("hop_bits_intra"), "intra wire track");
+    assert_eq!(wire_inter, tot("hop_bits_inter"), "inter wire track");
+    assert_eq!(wire_rtx, tot("retrans_bits"), "retransmit wire total");
+    assert_eq!(wire_intra + wire_inter, tot("hop_bits_per_worker"));
+    assert_eq!(tot("violations"), 0.0);
+    // the hierarchical schedule genuinely split the books
+    assert!(wire_intra > 0.0 && wire_inter > 0.0, "hier run must use both levels");
+}
+
+#[test]
+fn jsonl_export_reconciles_per_step() {
+    let topo = TOPOS[0];
+    let n = 777usize;
+    let grads = grads_for(topo.m, n, 0xBEA7);
+    let method = Method::parse("qsgd-mn-4").unwrap();
+    let mut plane = build_plane(&method, &ControlConfig::new(2), n, &[]).unwrap();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let net = net_for(topo.m, topo.g, topo.algo);
+
+    let mut tracer = Tracer::new();
+    let mut run_clock = SimClock::default();
+    for step in 0..2 {
+        let mut clock = SimClock::default();
+        tracer.begin_step(step, run_clock.total_s());
+        {
+            let mut ctx = StepCtx::new(&net, &mut clock);
+            ctx.tracer = Some(&mut tracer);
+            let mut rng = Rng::new(0xBEA7 ^ step as u64);
+            plane.aggregate(&refs, &mut ctx, &mut rng);
+        }
+        tracer.end_step(&clock);
+        run_clock.accumulate(&clock);
+    }
+
+    let dir = std::env::temp_dir().join("repro_trace_invariants");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.trace.jsonl");
+    tracer.write_jsonl(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 4, "meta + 2 steps + run footer");
+    assert_eq!(lines[0].req("type").unwrap().as_str().unwrap(), "meta");
+    let mut sum_comm = 0.0;
+    for l in &lines[1..3] {
+        assert_eq!(l.req("type").unwrap().as_str().unwrap(), "step");
+        assert_eq!(l.req("violations").unwrap().as_f64().unwrap(), 0.0);
+        let intra = l.req("hop_bits_intra").unwrap().as_f64().unwrap();
+        let inter = l.req("hop_bits_inter").unwrap().as_f64().unwrap();
+        let hop = l.req("hop_bits_per_worker").unwrap().as_f64().unwrap();
+        assert_eq!(intra + inter, hop, "per-step per-level split");
+        // the per-category span sums mirror the flattened delta
+        let span_comm =
+            l.req("span_s").unwrap().req("comm").unwrap().as_f64().unwrap();
+        let comm = l.req("comm_s").unwrap().as_f64().unwrap();
+        assert!((span_comm - comm).abs() <= 1e-12 * comm.abs().max(1.0));
+        sum_comm += comm;
+    }
+    let run = &lines[3];
+    assert_eq!(run.req("type").unwrap().as_str().unwrap(), "run");
+    assert_eq!(run.req("steps").unwrap().as_f64().unwrap(), 2.0);
+    let total_comm = run.req("comm_s").unwrap().as_f64().unwrap();
+    assert!((total_comm - sum_comm).abs() <= 1e-12 * total_comm.abs().max(1.0));
+    std::fs::remove_file(&path).ok();
+}

@@ -13,12 +13,14 @@ self-healing gates: <= 2% checksum overhead and retransmit-recovery
 cheaper than a full-step redo, -> `BENCH_integrity.json`), and
 `--bench micro_hierarchy` (the PR 8 two-level collective gate: hier <= flat
 simulated comm time on the paper topology at 2/4 bits,
--> `BENCH_hierarchy.json`).
+-> `BENCH_hierarchy.json`), and `--bench micro_trace` (the PR 9 flight
+recorder gates: armed tracer <= 3% wall overhead, bit-identical output and
+ledgers, clean audit, -> `BENCH_trace.json`).
 
 Usage:
     python3 tools/bench_compress.py [--n COORDS] [--out PATH]
         [--out-overlap PATH] [--out-faults PATH] [--out-integrity PATH]
-        [--out-hierarchy PATH]
+        [--out-hierarchy PATH] [--out-trace PATH]
 
 The acceptance gates this file evidences (ISSUE 1):
   * >= 4x throughput on pack/unpack vs the scalar reference;
@@ -101,6 +103,11 @@ def main() -> int:
         "--out-integrity",
         default=os.path.join(REPO_ROOT, "BENCH_integrity.json"),
         help="integrity report path (default: repo-root BENCH_integrity.json)",
+    )
+    ap.add_argument(
+        "--out-trace",
+        default=os.path.join(REPO_ROOT, "BENCH_trace.json"),
+        help="flight-recorder report path (default: repo-root BENCH_trace.json)",
     )
     args = ap.parse_args()
 
@@ -227,10 +234,35 @@ def main() -> int:
         f.write("\n")
     print(f"wrote {args.out_hierarchy}")
 
+    # Flight-recorder bench, same non-required pattern: micro_trace asserts
+    # its hard gates after emitting JSON. (It sizes itself at n=2^20;
+    # forward only an explicit --n override.)
+    trace, trace_rc = run_bench("micro_trace", args.n, required=False)
+
+    # trace gates: armed recorder adds <= 3% wall time and stays inert
+    # (bit-identical output + all twelve ledgers, zero audit violations)
+    trace_gate = (
+        trace_rc == 0
+        and trace.get("gate_overhead_pass", 0.0) == 1.0
+        and trace.get("gate_parity_pass", 0.0) == 1.0
+    )
+    trace_report = {
+        "schema": "repro-bench-trace-v1",
+        "generated_unix": report["generated_unix"],
+        "machine": report["machine"],
+        "gates": {"trace_overhead_le_3pct_and_inert": trace_gate},
+        "micro_trace": trace,
+    }
+    with open(args.out_trace, "w") as f:
+        json.dump(trace_report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out_trace}")
+
     gates["bucketed_le_monolithic"] = overlap_gate
     gates["partial_beats_strict_under_jitter"] = faults_gate
     gates["checksum_cheap_and_recovery_beats_redo"] = integrity_gate
     gates["hier_le_flat_on_paper_topology"] = hierarchy_gate
+    gates["trace_overhead_le_3pct_and_inert"] = trace_gate
     for k, ok in gates.items():
         print(f"  {k}: {'PASS' if ok else 'FAIL'}")
     return 0 if all(gates.values()) else 1

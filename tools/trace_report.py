@@ -1,0 +1,237 @@
+#!/usr/bin/env python3
+"""Render (and optionally validate) a flight-recorder trace.
+
+The Rust side (`repro train ... --trace PATH`, see `rust/src/trace/`) emits
+either of two formats, autodetected here:
+
+  * Chrome trace-event JSON (default, any extension but `.jsonl`): an object
+    with `traceEvents` + a `reproTotals` footer. Loadable as-is in
+    `chrome://tracing` or https://ui.perfetto.dev — this tool prints the
+    time/bit breakdown table without a browser.
+  * JSON lines (`.jsonl`): one `meta` line, one `step` line per training
+    step (flattened SimClock delta + per-category span sums), one `run`
+    footer with totals.
+
+Usage:
+    python3 tools/trace_report.py results/train.trace.json
+    python3 tools/trace_report.py results/train.trace.jsonl
+    python3 tools/trace_report.py results/hier.trace.json --check
+
+`--check` re-validates the recorder's structural invariants from the
+artifact alone (used by CI on the traced hier+faults run):
+
+  * Chrome: every (pid, tid) track's complete events are monotone and
+    non-overlapping; the per-level wire tracks reconcile with the
+    `hop_bits_intra` / `hop_bits_inter` / `retrans_bits` run totals; the
+    in-run ledger audit reported zero violations.
+  * JSONL: per-step `hop_bits_intra + hop_bits_inter == hop_bits_per_worker`,
+    per-category span sums match the step deltas, step deltas sum to the
+    run footer, zero violations.
+
+Exit status: 0 ok, 1 check failed, 2 bad input. Stdlib only.
+"""
+
+import argparse
+import json
+import sys
+
+CLOCK_KEYS = [
+    "comm_s", "compute_s", "encode_s", "decode_s",
+    "bits_per_worker", "hop_bits_per_worker", "hop_bits_intra",
+    "hop_bits_inter", "hidden_comm_s", "straggler_wait_s",
+    "retrans_s", "retrans_bits",
+]
+TIME_CATS = [
+    ("comm_s", "comm"), ("compute_s", "compute"), ("encode_s", "encode"),
+    ("decode_s", "decode"), ("straggler_wait_s", "straggler wait"),
+    ("retrans_s", "retransmit"),
+]
+
+
+def close(a, b, scale=1.0):
+    return abs(a - b) <= 1e-9 * max(abs(a), abs(b), abs(scale), 1e-12)
+
+
+def load(path):
+    """Returns ("chrome", dict) or ("jsonl", list-of-dicts)."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        doc = json.loads(text)
+        if isinstance(doc, dict) and "traceEvents" in doc:
+            return "chrome", doc
+    except json.JSONDecodeError:
+        pass
+    lines = []
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            continue
+        try:
+            lines.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            sys.exit(f"error: {path}:{i + 1}: neither Chrome JSON nor JSONL: {e}")
+    if not lines:
+        sys.exit(f"error: {path}: empty trace")
+    return "jsonl", lines
+
+
+def totals_of(fmt, doc):
+    if fmt == "chrome":
+        tot = doc.get("reproTotals")
+        if tot is None:
+            sys.exit("error: Chrome trace has no reproTotals footer")
+        return tot
+    runs = [l for l in doc if l.get("type") == "run"]
+    if not runs:
+        sys.exit("error: JSONL trace has no run footer")
+    return runs[-1]
+
+
+def fmt_bits(b):
+    for unit, scale in [("Gbit", 1e9), ("Mbit", 1e6), ("kbit", 1e3)]:
+        if abs(b) >= scale:
+            return f"{b / scale:.3f} {unit}"
+    return f"{b:.0f} bit"
+
+
+def report(fmt, doc, path):
+    tot = totals_of(fmt, doc)
+    total_s = (sum(tot[k] for k, _ in TIME_CATS) - tot["hidden_comm_s"])
+    print(f"{path}  [{fmt}]  steps={tot['steps']:.0f}  "
+          f"violations={tot['violations']:.0f}")
+    print()
+    print(f"  {'phase':<16} {'seconds':>12} {'share':>7}")
+    print("  " + "-" * 37)
+    for key, label in TIME_CATS:
+        share = tot[key] / total_s if total_s > 0 else 0.0
+        print(f"  {label:<16} {tot[key]:>12.6f} {share:>6.1%}")
+    print(f"  {'hidden (comm)':<16} {-tot['hidden_comm_s']:>12.6f} "
+          f"{(-tot['hidden_comm_s'] / total_s if total_s > 0 else 0.0):>6.1%}")
+    print("  " + "-" * 37)
+    print(f"  {'critical path':<16} {total_s:>12.6f} {1:>6.1%}")
+    ovl = tot["hidden_comm_s"] / tot["comm_s"] if tot["comm_s"] > 0 else 0.0
+    print()
+    print(f"  payload        {fmt_bits(tot['bits_per_worker'])} per worker")
+    print(f"  wire hops      {fmt_bits(tot['hop_bits_per_worker'])} per worker "
+          f"(intra {fmt_bits(tot['hop_bits_intra'])}, "
+          f"inter {fmt_bits(tot['hop_bits_inter'])})")
+    print(f"  retransmitted  {fmt_bits(tot['retrans_bits'])}")
+    print(f"  overlap        {ovl:.1%} of comm hidden behind compute")
+
+    if fmt == "chrome":
+        attempts = {}
+        for e in doc["traceEvents"]:
+            if e.get("ph") == "X" and e.get("name") == "retransmit":
+                a = int(e["args"]["attempt"])
+                attempts[a] = attempts.get(a, 0) + 1
+        if attempts:
+            ladder = "  ".join(f"attempt {a}: {attempts[a]}"
+                               for a in sorted(attempts))
+            print(f"  retry ladder   {ladder}")
+    else:
+        rtx = sum(l.get("retransmits", 0) for l in doc if l.get("type") == "step")
+        if rtx:
+            print(f"  retransmits    {rtx:.0f} hop segments across the run")
+
+
+def check_chrome(doc):
+    errors = []
+    tot = totals_of("chrome", doc)
+    if tot["violations"] != 0:
+        errors.append(f"ledger audit recorded {tot['violations']:.0f} violations")
+    last_end = {}
+    wire = {("hop", 0): 0.0, ("checksum", 0): 0.0,
+            ("hop", 1): 0.0, ("checksum", 1): 0.0}
+    rtx_bits = 0.0
+    for e in doc["traceEvents"]:
+        if e.get("ph") != "X":
+            continue
+        key = (e["pid"], e["tid"])
+        ts, dur = e["ts"], e["dur"]
+        if dur < 0:
+            errors.append(f"track {key}: negative duration at ts={ts}")
+        prev = last_end.get(key)
+        # 1e-3 us of slack: ts values round-trip through decimal text
+        if prev is not None and ts + 1e-3 < prev:
+            errors.append(
+                f"track {key}: event '{e['name']}' at {ts}us overlaps "
+                f"previous end {prev}us")
+        last_end[key] = ts + dur if prev is None else max(prev, ts + dur)
+        if e["pid"] == 1:
+            bits = e["args"]["wire_bits"]
+            if e["name"] == "retransmit":
+                rtx_bits += bits
+            elif (e["name"], e["tid"]) in wire:
+                wire[(e["name"], e["tid"])] += bits
+            else:
+                errors.append(f"unexpected wire-track event {e['name']!r}")
+    intra = wire[("hop", 0)] + wire[("checksum", 0)]
+    inter = wire[("hop", 1)] + wire[("checksum", 1)]
+    for got, key in [(intra, "hop_bits_intra"), (inter, "hop_bits_inter"),
+                     (rtx_bits, "retrans_bits"),
+                     (intra + inter, "hop_bits_per_worker")]:
+        if not close(got, tot[key]):
+            errors.append(f"wire tracks carry {got:.0f} bits but "
+                          f"reproTotals.{key} = {tot[key]:.0f}")
+    return errors
+
+
+def check_jsonl(doc):
+    errors = []
+    if doc[0].get("type") != "meta":
+        errors.append("first line is not a meta record")
+    steps = [l for l in doc if l.get("type") == "step"]
+    tot = totals_of("jsonl", doc)
+    if not steps:
+        errors.append("no step records")
+    sums = {k: 0.0 for k in CLOCK_KEYS}
+    for l in steps:
+        sid = l.get("step")
+        if l.get("violations", 0) != 0:
+            errors.append(f"step {sid}: {l['violations']:.0f} audit violations")
+        if not close(l["hop_bits_intra"] + l["hop_bits_inter"],
+                     l["hop_bits_per_worker"]):
+            errors.append(f"step {sid}: per-level hop bits do not sum")
+        for key, cat in [("comm_s", "comm"), ("encode_s", "encode"),
+                         ("decode_s", "decode"), ("compute_s", "compute"),
+                         ("straggler_wait_s", "straggler_wait"),
+                         ("retrans_s", "retrans"),
+                         ("hidden_comm_s", "hidden_comm")]:
+            if not close(l["span_s"][cat], l[key]):
+                errors.append(f"step {sid}: span sum for {cat} "
+                              f"({l['span_s'][cat]}) != delta ({l[key]})")
+        for k in CLOCK_KEYS:
+            sums[k] += l[k]
+    for k in CLOCK_KEYS:
+        if not close(sums[k], tot[k]):
+            errors.append(f"run.{k} = {tot[k]} but steps sum to {sums[k]}")
+    if tot.get("violations", 0) != 0:
+        errors.append(f"run footer reports {tot['violations']:.0f} violations")
+    if tot.get("steps") != len(steps):
+        errors.append(f"run footer reports {tot.get('steps')} steps, "
+                      f"file has {len(steps)}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("trace", help="trace file (.json Chrome form or .jsonl)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate structural invariants; nonzero exit on failure")
+    args = ap.parse_args()
+
+    fmt, doc = load(args.trace)
+    report(fmt, doc, args.trace)
+    if args.check:
+        errors = check_chrome(doc) if fmt == "chrome" else check_jsonl(doc)
+        print()
+        if errors:
+            for e in errors:
+                print(f"CHECK FAIL: {e}", file=sys.stderr)
+            sys.exit(1)
+        print(f"check ok: {fmt} trace is internally consistent")
+
+
+if __name__ == "__main__":
+    main()
