@@ -14,6 +14,7 @@ use repro::compress::{bitpack, fused, kernels, Method};
 use repro::netsim::{NetConfig, SimClock};
 use repro::util::json::{arr, num, obj, s as js, Json};
 use repro::util::rng::Rng;
+use repro::util::simd::{self, Backend};
 
 struct Report {
     entries: Vec<(String, f64, f64)>, // (name, ms, GB/s)
@@ -199,6 +200,74 @@ fn main() {
     });
     report.push("fused_qsgd4_int_wire", t_new, gbytes);
 
+    // SIMD dispatch vs pinned scalar fallback (the PR 10 tentpole): the same
+    // backend-explicit entries the differential tests pin bit-identical,
+    // timed per available backend. The packed-add runs at 32-bit fields so
+    // the repeated timing iterations stay carry-safe (fields accumulate
+    // across reps; 32-bit headroom covers millions of iterations).
+    println!("\n=== SIMD dispatch vs scalar fallback ===");
+    let backends = simd::available();
+    let vector_bk = backends.iter().copied().find(|&b| b != Backend::Scalar);
+    println!(
+        "active backend: {} (available: {})",
+        simd::active().label(),
+        backends.iter().map(|b| b.label()).collect::<Vec<_>>().join(",")
+    );
+    let rbits = bitpack::packed_sum_bits(s4, m);
+    let bias = s4 as i64;
+    let mut lv = vec![0i32; n];
+    for &bk in &backends {
+        let lbl = bk.label();
+        let t = common::time_median(5, || {
+            kernels::qsgd_encode_int_backend::<i32>(bk, v, w, &u, s4, &mut lv);
+            std::hint::black_box(&lv);
+        });
+        report.push(&format!("qsgd_encode_int[{lbl}]"), t, vb);
+
+        let mut words = vec![0u64; bitpack::words_for(n, rbits)];
+        let t = common::time_median(5, || {
+            bitpack::pack_biased_i32_at_backend(bk, &lv, bias, rbits, &mut words, 0);
+            std::hint::black_box(&words);
+        });
+        report.push(&format!("pack_biased[{lbl}]"), t, vb);
+
+        let mut codes = vec![0u64; n];
+        let t = common::time_median(5, || {
+            bitpack::unpack_codes_at_backend(bk, &words, rbits, 0, &mut codes);
+            std::hint::black_box(&codes);
+        });
+        report.push(&format!("unpack_fields[{lbl}]"), t, vb);
+
+        let mut wide = vec![0u64; bitpack::words_for(n, 32)];
+        bitpack::pack_biased_i32_at_backend(bk, &lv, bias, 32, &mut wide, 0);
+        let src = wide.clone();
+        let mut dst = wide;
+        let t = common::time_median(5, || {
+            bitpack::add_packed_codes_backend(bk, &mut dst, &src, 32, 1, n - 1);
+            std::hint::black_box(&dst);
+        });
+        report.push(&format!("packed_add[{lbl}]"), t, vb);
+    }
+    let mut simd_speedups: Vec<(String, f64)> = Vec::new();
+    if let Some(vbk) = vector_bk {
+        let vl = vbk.label();
+        for key in ["qsgd_encode_int", "pack_biased", "unpack_fields", "packed_add"] {
+            let x = report.gbps(&format!("{key}[{vl}]")) / report.gbps(&format!("{key}[scalar]"));
+            simd_speedups.push((format!("simd_{key}"), x));
+        }
+        // tentpole gate: the vectorized level kernel must clear 2x over the
+        // pinned scalar loop (the bit-plane kernels are gated by
+        // tools/bench_compress.py, which knows which ones this backend
+        // implements). REPRO_BENCH_NO_SIMD_GATE=1 skips on odd hardware.
+        let enc = simd_speedups[0].1;
+        if std::env::var("REPRO_BENCH_NO_SIMD_GATE").is_err() {
+            assert!(
+                enc >= 2.0,
+                "SIMD gate: qsgd_encode_int[{vl}] only {enc:.2}x over scalar (need >= 2x)"
+            );
+        }
+    }
+
     let speedups = vec![
         ("pack_4b", report.gbps("pack(4b)") / report.gbps("pack_ref(4b)")),
         ("unpack_4b", report.gbps("unpack(4b)") / report.gbps("unpack_ref(4b)")),
@@ -215,6 +284,9 @@ fn main() {
     for (name, x) in &speedups {
         println!("{name:>20}: {x:.2}x");
     }
+    for (name, x) in &simd_speedups {
+        println!("{name:>24}: {x:.2}x (vector / scalar)");
+    }
 
     if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
         let json = obj(vec![
@@ -225,7 +297,25 @@ fn main() {
             ("kernels", report.to_json()),
             (
                 "speedups",
-                obj(speedups.iter().map(|(k, v)| (*k, num(*v))).collect()),
+                obj(speedups
+                    .iter()
+                    .map(|(k, v)| (*k, num(*v)))
+                    .chain(simd_speedups.iter().map(|(k, v)| (k.as_str(), num(*v))))
+                    .collect()),
+            ),
+            (
+                "simd",
+                obj(vec![
+                    ("active", js(simd::active().label())),
+                    (
+                        "available",
+                        arr(backends.iter().map(|b| js(b.label())).collect()),
+                    ),
+                    (
+                        "vector_available",
+                        num(if vector_bk.is_some() { 1.0 } else { 0.0 }),
+                    ),
+                ]),
             ),
         ]);
         std::fs::write(&path, json.to_string()).expect("writing bench JSON");

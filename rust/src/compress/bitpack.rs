@@ -20,6 +20,7 @@
 //! remaining `bits-1` = magnitude level. `bits` in 2..=16, levels must fit.
 
 use crate::tensor::LevelInt;
+use crate::util::simd::{self, Backend};
 
 /// Packed payload: `bits` per code, `len` codes.
 #[derive(Clone, Debug, PartialEq)]
@@ -72,13 +73,25 @@ pub fn codes_per_word_period(bits: u32) -> usize {
     (64 / gcd(bits as u64, 64)) as usize
 }
 
+// Satellite fix (ISSUE 10): these used to `debug_assert!` the range and
+// then clamp with `mag.min(max_mag)` — so a release build silently
+// *saturated* an overflowing magnitude and shipped a corrupted payload with
+// no signal, violating the PR 7 loud-guard discipline. The widening rule
+// (`packed_sum_bits` / quantizer level bounds) means an overflow here can
+// only be a real bug upstream, so the reference path now asserts loudly in
+// release too; a NaN level saturates the `as u64` cast to 0 < max_mag but
+// trips the (debug) integrality check and the upstream NaN guards.
 #[inline(always)]
 fn f32_code(lv: f32, mag_bits: u32, max_mag: u64) -> u64 {
     debug_assert_eq!(lv.fract(), 0.0, "non-integer level {lv}");
     let neg = lv < 0.0;
     let mag = lv.abs() as u64;
-    debug_assert!(mag <= max_mag, "level {lv} overflows {}-bit code", mag_bits + 1);
-    ((neg as u64) << mag_bits) | mag.min(max_mag)
+    assert!(
+        mag <= max_mag,
+        "level {lv} overflows {}-bit code (silent saturation forbidden)",
+        mag_bits + 1
+    );
+    ((neg as u64) << mag_bits) | mag
 }
 
 #[inline(always)]
@@ -86,8 +99,12 @@ fn int_code<T: LevelInt>(lv: T, mag_bits: u32, max_mag: u64) -> u64 {
     let v = lv.to_i64();
     let neg = v < 0;
     let mag = v.unsigned_abs();
-    debug_assert!(mag <= max_mag, "level {v} overflows {}-bit code", mag_bits + 1);
-    ((neg as u64) << mag_bits) | mag.min(max_mag)
+    assert!(
+        mag <= max_mag,
+        "level {v} overflows {}-bit code (silent saturation forbidden)",
+        mag_bits + 1
+    );
+    ((neg as u64) << mag_bits) | mag
 }
 
 #[inline(always)]
@@ -158,11 +175,19 @@ fn pack_core(n: usize, bits: u32, words: &mut Vec<u64>, code_at: impl Fn(usize) 
 }
 
 /// Word-level unpacking core: calls `emit(i, code)` for codes 0..len.
+/// Dispatches to the gather-based SIMD extraction when a vector backend is
+/// active; the scalar aligned/staging paths below remain the pinned oracle
+/// (and the whole path under `REPRO_FORCE_SCALAR`).
 #[inline(always)]
 fn unpack_core(p: &Packed, mut emit: impl FnMut(usize, u64)) {
     let bits = p.bits;
     let mask = (1u64 << bits) - 1;
     if p.len == 0 {
+        return;
+    }
+    let bk = simd::active();
+    if bk != Backend::Scalar && p.len >= 8 {
+        unpack_codes_at_with_backend(bk, &p.words, bits, 0, p.len, emit);
         return;
     }
     if 64 % bits == 0 {
@@ -280,18 +305,54 @@ fn low_mask(b: u32) -> u64 {
 
 /// Pack raw (already-encoded) codes into fields
 /// `[code_off, code_off + codes.len())` of `words`. Codes must be < 2^bits.
+/// Rides the runtime SIMD dispatch (aligned-width word builder); the scalar
+/// staging loop remains the pinned fallback and handles every tail.
 pub fn pack_codes_at(codes: &[u64], bits: u32, words: &mut [u64], code_off: usize) {
-    pack_core_at(words, code_off * bits as usize, codes.len(), bits, |i| codes[i]);
+    pack_codes_at_backend(simd::active(), codes, bits, words, code_off)
 }
 
-/// Unpack `out.len()` raw codes starting at field `code_off`.
+/// Backend-explicit form of [`pack_codes_at`] (test/bench seam).
+pub fn pack_codes_at_backend(bk: Backend, codes: &[u64], bits: u32, words: &mut [u64], code_off: usize) {
+    let start_bit = code_off * bits as usize;
+    let mut done = 0usize;
+    // SIMD fast path: word-aligned start, width dividing 64 with >= 4 codes
+    // per word — each output word is an independent shift/OR reduction.
+    if bk != Backend::Scalar && 64 % bits == 0 && start_bit % 64 == 0 && 64 / bits >= 4 && codes.len() >= (64 / bits) as usize
+    {
+        let w0 = start_bit / 64;
+        let nw = simd::pack_aligned_words(bk, codes, bits, &mut words[w0..]);
+        done = nw * (64 / bits) as usize;
+    }
+    pack_core_at(words, start_bit + done * bits as usize, codes.len() - done, bits, |i| {
+        codes[done + i]
+    });
+}
+
+/// Unpack `out.len()` raw codes starting at field `code_off`. Rides the
+/// runtime SIMD dispatch (gather-based field extraction at any offset and
+/// width); the scalar staging loop finishes the buffer-edge tail.
 pub fn unpack_codes_at(words: &[u64], bits: u32, code_off: usize, out: &mut [u64]) {
-    unpack_core_at(words, code_off * bits as usize, out.len(), bits, |i, c| out[i] = c);
+    unpack_codes_at_backend(simd::active(), words, bits, code_off, out)
+}
+
+/// Backend-explicit form of [`unpack_codes_at`] (test/bench seam).
+pub fn unpack_codes_at_backend(bk: Backend, words: &[u64], bits: u32, code_off: usize, out: &mut [u64]) {
+    let start_bit = code_off * bits as usize;
+    let done = if bk != Backend::Scalar {
+        simd::unpack_fields(bk, words, start_bit, bits, out)
+    } else {
+        0
+    };
+    unpack_core_at(words, start_bit + done * bits as usize, out.len() - done, bits, |i, c| {
+        out[done + i] = c
+    });
 }
 
 /// Closure form of [`unpack_codes_at`]: emits `(i, code)` for the `len`
 /// fields starting at `code_off` — the zero-scratch decode entry the fused
-/// pipelined path feeds its per-chunk reconstruct from.
+/// pipelined path feeds its per-chunk reconstruct from. SIMD extracts codes
+/// into a stack block, then `emit` runs on the exact same integer codes the
+/// scalar staging loop would have produced.
 pub fn unpack_codes_at_with(
     words: &[u64],
     bits: u32,
@@ -299,7 +360,42 @@ pub fn unpack_codes_at_with(
     len: usize,
     emit: impl FnMut(usize, u64),
 ) {
-    unpack_core_at(words, code_off * bits as usize, len, bits, emit);
+    unpack_codes_at_with_backend(simd::active(), words, bits, code_off, len, emit)
+}
+
+/// Backend-explicit form of [`unpack_codes_at_with`] (test/bench seam).
+pub fn unpack_codes_at_with_backend(
+    bk: Backend,
+    words: &[u64],
+    bits: u32,
+    code_off: usize,
+    len: usize,
+    mut emit: impl FnMut(usize, u64),
+) {
+    let start_bit = code_off * bits as usize;
+    let mut done = 0usize;
+    if bk != Backend::Scalar && len >= 8 {
+        let mut buf = [0u64; 64];
+        while done < len {
+            let take = (len - done).min(64);
+            let got = simd::unpack_fields(bk, words, start_bit + done * bits as usize, bits, &mut buf[..take]);
+            if got == 0 {
+                break;
+            }
+            for (k, &c) in buf.iter().enumerate().take(got) {
+                emit(done + k, c);
+            }
+            done += got;
+            if got < take {
+                break;
+            }
+        }
+    }
+    if done < len {
+        unpack_core_at(words, start_bit + done * bits as usize, len - done, bits, |i, c| {
+            emit(done + i, c)
+        });
+    }
 }
 
 /// Pack biased codes `levels[i] + bias` (all non-negative by construction:
@@ -318,12 +414,60 @@ pub fn pack_biased_int_at<T: LevelInt>(
     let max_code = low_mask(bits) as i64;
     pack_core_at(words, code_off * bits as usize, levels.len(), bits, |i| {
         let code = levels[i].to_i64() + bias;
-        debug_assert!(
+        // loud in release (satellite fix): an out-of-range biased code can
+        // only be a real bug, and truncation here would corrupt neighbors.
+        assert!(
             (0..=max_code).contains(&code),
-            "biased code {code} out of {bits}-bit range"
+            "biased code {code} out of {bits}-bit range (silent saturation forbidden)"
         );
         code as u64
     });
+}
+
+/// `i32` specialization of [`pack_biased_int_at`] — the fused packed
+/// pipeline's encode-side entry. The level→biased-code materialization runs
+/// on the SIMD backend (widening add with a lane-wise range check that
+/// panics before any word is published); the word staging absorbs each
+/// 64-code block through the same scalar `pack_core_at` engine, whose
+/// `(acc, fill)` dependency is inherently serial (DESIGN.md). Bit-identical
+/// to the generic path: codes are exact integers either way.
+pub fn pack_biased_i32_at(levels: &[i32], bias: i64, bits: u32, words: &mut [u64], code_off: usize) {
+    pack_biased_i32_at_backend(simd::active(), levels, bias, bits, words, code_off)
+}
+
+/// Backend-explicit form of [`pack_biased_i32_at`] (test/bench seam).
+pub fn pack_biased_i32_at_backend(
+    bk: Backend,
+    levels: &[i32],
+    bias: i64,
+    bits: u32,
+    words: &mut [u64],
+    code_off: usize,
+) {
+    debug_assert!((2..=32).contains(&bits), "biased bits out of range: {bits}");
+    let mut done = 0usize;
+    if bk != Backend::Scalar && levels.len() >= 16 {
+        let max_code = low_mask(bits);
+        let mut buf = [0u64; 64];
+        while done < levels.len() {
+            let take = (levels.len() - done).min(64);
+            let got = simd::biased_codes_i32(bk, &levels[done..done + take], bias, max_code, &mut buf[..take]);
+            if got == 0 {
+                break;
+            }
+            // consecutive blocks share boundary words; pack_core_at's
+            // read-modify-write seeding makes sequential block packs exact
+            // (the same mechanism the pipelined chunk encode relies on).
+            pack_core_at(words, (code_off + done) * bits as usize, got, bits, |i| buf[i]);
+            done += got;
+            if got < take {
+                break;
+            }
+        }
+    }
+    if done < levels.len() {
+        pack_biased_int_at(&levels[done..], bias, bits, words, code_off + done);
+    }
 }
 
 /// Unpack biased fields `[code_off, code_off + out.len())`, subtracting
@@ -352,6 +496,36 @@ pub fn pack_biased_int<T: LevelInt>(levels: &[T], bias: i64, bits: u32) -> Packe
 /// forwards are exactly the *intra*-field carries of codes straddling a
 /// word boundary.
 pub fn add_packed_codes(dst: &mut [u64], src: &[u64], bits: u32, code_lo: usize, code_hi: usize) {
+    add_packed_codes_backend(simd::active(), dst, src, bits, code_lo, code_hi)
+}
+
+/// One adc step with the carry-independence simplification: under the
+/// carry-safety condition, a carry-in of 1 only ripples within the field
+/// straddling this word's low boundary — that field's in-word part has
+/// headroom (its total sum < 2^bits), so the ripple can never reach bit 63.
+/// The carry OUT of the word is therefore `c1` (from `dst + src`) alone,
+/// independent of the carry IN — the property that lets the SIMD body
+/// compute all four lane carries in parallel.
+#[inline(always)]
+fn adc_word(d: &mut u64, s: u64, carry: u64) -> u64 {
+    let (a, c1) = d.overflowing_add(s);
+    let (b, c2) = a.overflowing_add(carry);
+    debug_assert!(!c2, "add_packed_codes: carry ripple escaped a straddling field");
+    *d = b;
+    c1 as u64
+}
+
+/// Backend-explicit form of [`add_packed_codes`] (test/bench seam). The
+/// masked boundary words run scalar; the full middle words ride the
+/// vectorized add (see `util::simd::add_words` for the soundness argument).
+pub fn add_packed_codes_backend(
+    bk: Backend,
+    dst: &mut [u64],
+    src: &[u64],
+    bits: u32,
+    code_lo: usize,
+    code_hi: usize,
+) {
     if code_hi <= code_lo {
         return;
     }
@@ -359,21 +533,31 @@ pub fn add_packed_codes(dst: &mut [u64], src: &[u64], bits: u32, code_lo: usize,
     let hi_bit = code_hi * bits as usize;
     let w0 = lo_bit / 64;
     let w1 = (hi_bit - 1) / 64;
-    let mut carry = 0u64;
-    for w in w0..=w1 {
-        let mut s = src[w];
-        if w == w0 {
-            s &= !low_mask((lo_bit % 64) as u32);
-        }
-        if w == w1 {
-            let rem = hi_bit - w * 64;
-            s &= low_mask(rem as u32);
-        }
-        let (a, c1) = dst[w].overflowing_add(s);
-        let (b, c2) = a.overflowing_add(carry);
-        dst[w] = b;
-        carry = (c1 | c2) as u64;
+    if w0 == w1 {
+        let rem = hi_bit - w1 * 64;
+        let s = src[w0] & !low_mask((lo_bit % 64) as u32) & low_mask(rem as u32);
+        let carry = adc_word(&mut dst[w0], s, 0);
+        debug_assert_eq!(carry, 0, "add_packed_codes: carry escaped the range (overflowed field)");
+        return;
     }
+    // first (low-masked) word
+    let mut carry = adc_word(&mut dst[w0], src[w0] & !low_mask((lo_bit % 64) as u32), 0);
+    // full middle words [w0+1, w1): SIMD prefix, scalar remainder
+    let mut w = w0 + 1;
+    if w < w1 && bk != Backend::Scalar {
+        let (done, c) = simd::add_words(bk, &mut dst[w..w1], &src[w..w1], carry);
+        if done > 0 {
+            carry = c;
+            w += done;
+        }
+    }
+    while w < w1 {
+        carry = adc_word(&mut dst[w], src[w], carry);
+        w += 1;
+    }
+    // last (high-masked) word
+    let rem = hi_bit - w1 * 64;
+    carry = adc_word(&mut dst[w1], src[w1] & low_mask(rem as u32), carry);
     // the range's top field has headroom, so the chain cannot carry out
     debug_assert_eq!(carry, 0, "add_packed_codes: carry escaped the range (overflowed field)");
 }
@@ -861,5 +1045,170 @@ mod tests {
         let empty = pack(&[], 5);
         assert_eq!(unpack(&empty).len(), 0);
         assert_eq!(empty.wire_bytes(), 0);
+    }
+
+    // ---- satellite 1: overflow must be loud in release builds too ----
+
+    #[test]
+    #[should_panic(expected = "silent saturation forbidden")]
+    fn overflowing_f32_level_cannot_silently_roundtrip() {
+        // regression (fails pre-fix in release, where the old debug_assert
+        // compiled out and `mag.min(max_mag)` saturated 8 -> 7 silently):
+        // a 4-bit code holds magnitudes 0..=7, so level 8 must panic.
+        let _ = pack(&[1.0f32, -3.0, 8.0], 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "silent saturation forbidden")]
+    fn overflowing_int_level_cannot_silently_roundtrip() {
+        let _ = pack_int(&[-8i32], 4); // |-8| > 7 = 2^(4-1) - 1
+    }
+
+    #[test]
+    #[should_panic(expected = "silent saturation forbidden")]
+    fn overflowing_biased_code_is_loud() {
+        // bias 7 at 4 bits: codes 0..=15; level 9+7 = 16 is out of range.
+        let mut words = vec![0u64; words_for(4, 4)];
+        pack_biased_int_at(&[0i32, 1, -2, 9], 7, 4, &mut words, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn simd_biased_block_check_is_loud_too() {
+        // the SIMD materialization's lane-wise range check must fire for
+        // every backend (>= 16 levels so the vector path engages when
+        // available; the scalar fallback funnels into the assert above).
+        let levels: Vec<i32> = (0..64).map(|i| if i == 37 { 9 } else { 0 }).collect();
+        let mut words = vec![0u64; words_for(64, 4)];
+        pack_biased_i32_at(&levels, 7, 4, &mut words, 0);
+    }
+
+    #[test]
+    fn max_magnitude_level_still_roundtrips() {
+        // the widening-rule boundary itself stays legal: |level| == max_mag
+        for bits in [2u32, 4, 9, 16] {
+            let top = ((1i64 << (bits - 1)) - 1) as f32;
+            let p = pack(&[top, -top, 0.0], bits);
+            assert_eq!(unpack(&p), vec![top, -top, 0.0]);
+        }
+    }
+
+    // ---- satellite 3: differential fuzz matrix, SIMD vs scalar ----
+
+    #[test]
+    fn simd_vs_scalar_full_width_and_tail_matrix() {
+        // every wire width 2..=16 and every resident-ish width up to 32,
+        // every tail length 0..=codes_per_word_period(bits), both packing
+        // directions, all available backends — words and codes must be
+        // bit-identical to the scalar path.
+        let mut rng = crate::util::rng::Rng::new(0xB17_9AC8);
+        for bk in simd::available() {
+            for bits in (2u32..=16).chain([20, 28, 32]) {
+                let period = codes_per_word_period(bits);
+                for tail in 0..=period {
+                    let n = 2 * period + tail;
+                    let mask = low_mask(bits);
+                    let codes: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+                    let mut w_ref = vec![0u64; words_for(n, bits)];
+                    pack_codes_at_backend(simd::Backend::Scalar, &codes, bits, &mut w_ref, 0);
+                    let mut w_bk = vec![0u64; words_for(n, bits)];
+                    pack_codes_at_backend(bk, &codes, bits, &mut w_bk, 0);
+                    assert_eq!(w_bk, w_ref, "{bk:?} pack bits={bits} tail={tail}");
+                    let mut back_ref = vec![0u64; n];
+                    unpack_codes_at_backend(simd::Backend::Scalar, &w_ref, bits, 0, &mut back_ref);
+                    let mut back_bk = vec![0u64; n];
+                    unpack_codes_at_backend(bk, &w_ref, bits, 0, &mut back_bk);
+                    assert_eq!(back_bk, back_ref, "{bk:?} unpack bits={bits} tail={tail}");
+                    assert_eq!(back_ref, codes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_vs_scalar_unaligned_offsets() {
+        // unaligned pack_core_at/unpack offsets: every field offset within a
+        // word period, with a live background that must survive bit-exactly.
+        let mut rng = crate::util::rng::Rng::new(0x0FF5E7);
+        for bk in simd::available() {
+            for bits in [3u32, 5, 8, 11, 13, 16, 28] {
+                let period = codes_per_word_period(bits);
+                let total = 3 * period + 17;
+                for off in [0usize, 1, period / 2 + 1, period - 1] {
+                    let mask = low_mask(bits);
+                    let bg: Vec<u64> = (0..total).map(|_| rng.next_u64() & mask).collect();
+                    let n = total - off.max(1) - 5;
+                    let seg: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+                    let mut w_ref = vec![0u64; words_for(total, bits)];
+                    pack_codes_at_backend(simd::Backend::Scalar, &bg, bits, &mut w_ref, 0);
+                    let mut w_bk = w_ref.clone();
+                    pack_codes_at_backend(simd::Backend::Scalar, &seg, bits, &mut w_ref, off);
+                    pack_codes_at_backend(bk, &seg, bits, &mut w_bk, off);
+                    assert_eq!(w_bk, w_ref, "{bk:?} offset pack bits={bits} off={off}");
+                    let mut sub_ref = vec![0u64; n];
+                    let mut sub_bk = vec![0u64; n];
+                    unpack_codes_at_backend(simd::Backend::Scalar, &w_ref, bits, off, &mut sub_ref);
+                    unpack_codes_at_backend(bk, &w_ref, bits, off, &mut sub_bk);
+                    assert_eq!(sub_bk, sub_ref, "{bk:?} offset unpack bits={bits} off={off}");
+                    assert_eq!(sub_ref, seg);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_vs_scalar_closure_unpack_and_biased_pack() {
+        let mut rng = crate::util::rng::Rng::new(0xC105_0E);
+        for bk in simd::available() {
+            for &(lmax, m) in &[(7usize, 4usize), (127, 64), (2047, 5)] {
+                let bits = packed_sum_bits(lmax, m);
+                let n = 777;
+                let levels: Vec<i32> =
+                    (0..n).map(|_| rng.next_below(2 * lmax as u64 + 1) as i32 - lmax as i32).collect();
+                let mut w_ref = vec![0u64; words_for(n + 13, bits)];
+                let mut w_bk = w_ref.clone();
+                pack_biased_int_at(&levels, lmax as i64, bits, &mut w_ref, 13);
+                pack_biased_i32_at_backend(bk, &levels, lmax as i64, bits, &mut w_bk, 13);
+                assert_eq!(w_bk, w_ref, "{bk:?} biased pack bits={bits}");
+                let mut got_ref = Vec::new();
+                let mut got_bk = Vec::new();
+                unpack_codes_at_with_backend(simd::Backend::Scalar, &w_ref, bits, 13, n, |i, c| {
+                    got_ref.push((i, c))
+                });
+                unpack_codes_at_with_backend(bk, &w_ref, bits, 13, n, |i, c| got_bk.push((i, c)));
+                assert_eq!(got_bk, got_ref, "{bk:?} closure unpack bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_vs_scalar_packed_add_matrix() {
+        // the hop-loop add across widths, segment boundaries and backends:
+        // vectorized middle words + scalar boundaries == scalar adc chain.
+        let mut rng = crate::util::rng::Rng::new(0xADD_CA4);
+        for bk in simd::available() {
+            for &bits in &[3u32, 5, 8, 13, 14, 28, 32] {
+                let n = 700; // enough words that the SIMD middle engages
+                let mask = low_mask(bits);
+                let a: Vec<u64> = (0..n).map(|_| rng.next_u64() & (mask >> 1)).collect();
+                let b: Vec<u64> = (0..n).map(|_| rng.next_u64() & (mask >> 1)).collect();
+                for &(lo, hi) in &[(0usize, 700usize), (1, 699), (63, 641), (130, 131)] {
+                    let mut p_ref = vec![0u64; words_for(n, bits)];
+                    pack_codes_at_backend(simd::Backend::Scalar, &a, bits, &mut p_ref, 0);
+                    let mut p_bk = p_ref.clone();
+                    let mut q = vec![0u64; words_for(n, bits)];
+                    pack_codes_at_backend(simd::Backend::Scalar, &b, bits, &mut q, 0);
+                    add_packed_codes_backend(simd::Backend::Scalar, &mut p_ref, &q, bits, lo, hi);
+                    add_packed_codes_backend(bk, &mut p_bk, &q, bits, lo, hi);
+                    assert_eq!(p_bk, p_ref, "{bk:?} add bits={bits} lo={lo} hi={hi}");
+                    let mut got = vec![0u64; n];
+                    unpack_codes_at_backend(simd::Backend::Scalar, &p_ref, bits, 0, &mut got);
+                    for i in 0..n {
+                        let want = if i >= lo && i < hi { a[i] + b[i] } else { a[i] };
+                        assert_eq!(got[i], want, "bits={bits} field {i}");
+                    }
+                }
+            }
+        }
     }
 }

@@ -454,7 +454,9 @@ pub fn qsgd_step_packed_with_uniforms(
         |wk, lo, hi, tmp, wslice| {
             tmp.resize(hi - lo, 0);
             kernels::qsgd_encode_int(&grads[wk][lo..hi], wnorm, &uni[wk][lo..hi], s, &mut tmp[..]);
-            bitpack::pack_biased_int_at(&tmp[..], bias, rbits, wslice, 0);
+            // i32-specialized biased pack: SIMD code materialization with a
+            // loud lane-wise range check (bit-identical to the generic path)
+            bitpack::pack_biased_i32_at(&tmp[..], bias, rbits, wslice, 0);
         },
         |lo, hi, sum_words| {
             let dst = &mut out[lo..hi];
@@ -559,15 +561,19 @@ pub fn multiscale_step_packed_with_uniforms(
                 table,
                 &mut tmp[..],
             );
-            bitpack::pack_biased_int_at(&tmp[..], bias, rbits, wslice, 0);
+            // i32-specialized biased pack (see qsgd_step path)
+            bitpack::pack_biased_i32_at(&tmp[..], bias, rbits, wslice, 0);
         },
         |lo, hi, sum_words| {
             let dst = &mut out[lo..hi];
             let idx = &shared_idx[lo..hi];
             bitpack::unpack_codes_at_with(sum_words, rbits, 0, hi - lo, |i, code| {
-                // mirror of multiscale_decode_sum_int's float op order
+                // mirror of multiscale_decode_sum_int's float op order.
+                // decode boundary: the share indices crossed the wire, so a
+                // poisoned index must panic here, not divide by the 0.0
+                // padding lane into silent ±inf gradients (satellite 2).
                 let z = (code as i64 - bias_total) as f32;
-                let s_sel = table.select(idx[i] as u32);
+                let s_sel = table.select_checked(idx[i] as u32);
                 dst[i] = z * wnorm / (s_sel * mf);
             });
         },

@@ -7,6 +7,13 @@
 //! `rust/tests/pallas_parity.rs` (DESIGN.md §5).
 
 use crate::tensor::LevelInt;
+use crate::util::simd::{self, Backend};
+
+/// Stack block size for SIMD level materialization in the integer-domain
+/// encoders: the vector kernel fills f32 levels into this scratch, then the
+/// same `T::from_level` cast as the scalar loop lands them in the widened
+/// integer buffer — one code path for the lossless cast, minimal unsafe.
+const LEVEL_BLOCK: usize = 256;
 
 /// jnp.sign semantics: 0 for 0 (f32::signum would give ±1 for ±0).
 #[inline(always)]
@@ -55,7 +62,15 @@ pub fn qsgd_level(v: f32, safe_w: f32, u: f32, s: f32) -> f32 {
 
 /// Vectorized QSGDMaxNorm encode: fills `out[i] = zeta_i`.
 /// `wnorm` is the shared max norm; `u` the explicit uniform randomness.
+/// Dispatches to the runtime-detected SIMD backend; the scalar tail (and the
+/// whole buffer under `REPRO_FORCE_SCALAR`) runs the pinned reference loop.
 pub fn qsgd_encode(v: &[f32], wnorm: f32, u: &[f32], s: usize, out: &mut [f32]) {
+    qsgd_encode_backend(simd::active(), v, wnorm, u, s, out)
+}
+
+/// Backend-explicit form of [`qsgd_encode`] — the test/bench seam that lets
+/// one process exercise both the vector path and the scalar oracle.
+pub fn qsgd_encode_backend(bk: Backend, v: &[f32], wnorm: f32, u: &[f32], s: usize, out: &mut [f32]) {
     debug_assert_eq!(v.len(), u.len());
     debug_assert_eq!(v.len(), out.len());
     if wnorm <= 0.0 {
@@ -63,8 +78,9 @@ pub fn qsgd_encode(v: &[f32], wnorm: f32, u: &[f32], s: usize, out: &mut [f32]) 
         return;
     }
     let sf = s as f32;
-    for ((o, &vi), &ui) in out.iter_mut().zip(v).zip(u) {
-        *o = qsgd_level(vi, wnorm, ui, sf);
+    let done = simd::qsgd_levels(bk, v, wnorm, u, sf, out);
+    for i in done..v.len() {
+        out[i] = qsgd_level(v[i], wnorm, u[i], sf);
     }
 }
 
@@ -74,6 +90,21 @@ pub fn qsgd_encode(v: &[f32], wnorm: f32, u: &[f32], s: usize, out: &mut [f32]) 
 /// path (DESIGN.md §Performance). Bit-identical to the f32 path by
 /// construction: the level value is the same f32 before the lossless cast.
 pub fn qsgd_encode_int<T: LevelInt>(v: &[f32], wnorm: f32, u: &[f32], s: usize, out: &mut [T]) {
+    qsgd_encode_int_backend(simd::active(), v, wnorm, u, s, out)
+}
+
+/// Backend-explicit form of [`qsgd_encode_int`]. The SIMD kernel fills f32
+/// levels into a stack block; the levels then go through the *same*
+/// `T::from_level` lossless cast as the scalar loop, so the integer output
+/// is bit-identical whichever backend ran.
+pub fn qsgd_encode_int_backend<T: LevelInt>(
+    bk: Backend,
+    v: &[f32],
+    wnorm: f32,
+    u: &[f32],
+    s: usize,
+    out: &mut [T],
+) {
     debug_assert_eq!(v.len(), u.len());
     debug_assert_eq!(v.len(), out.len());
     debug_assert!((s as i64) <= T::MAX_MAG, "s={s} overflows {}", T::TAG);
@@ -82,8 +113,27 @@ pub fn qsgd_encode_int<T: LevelInt>(v: &[f32], wnorm: f32, u: &[f32], s: usize, 
         return;
     }
     let sf = s as f32;
-    for ((o, &vi), &ui) in out.iter_mut().zip(v).zip(u) {
-        *o = T::from_level(qsgd_level(vi, wnorm, ui, sf));
+    let mut done = 0usize;
+    if bk != Backend::Scalar {
+        let mut block = [0.0f32; LEVEL_BLOCK];
+        while done < v.len() {
+            let take = (v.len() - done).min(LEVEL_BLOCK);
+            let got =
+                simd::qsgd_levels(bk, &v[done..done + take], wnorm, &u[done..done + take], sf, &mut block[..take]);
+            if got == 0 {
+                break;
+            }
+            for k in 0..got {
+                out[done + k] = T::from_level(block[k]);
+            }
+            done += got;
+            if got < take {
+                break;
+            }
+        }
+    }
+    for i in done..v.len() {
+        out[i] = T::from_level(qsgd_level(v[i], wnorm, u[i], sf));
     }
 }
 
@@ -199,6 +249,14 @@ impl ScaleTable {
 
     /// Branchless select of scale `idx`: sum of `(idx==j) * s_j` over the
     /// padded table — the same compare chain the Pallas kernel lowers to.
+    ///
+    /// NOTE: any `idx >= len()` lands in a `0.0` padding lane and selects
+    /// 0.0. That is fine on the *encode* side, where indices are produced
+    /// internally by [`multiscale_scale_index_t`] and always in range — but
+    /// a decode must never feed this a wire-derived index directly: a
+    /// corrupted scale share would flow into the `/ s` of eq. (12) as a
+    /// divide-by-zero and emerge as silent ±inf gradients. Decode
+    /// boundaries use [`Self::select_checked`].
     #[inline(always)]
     pub fn select(&self, idx: u32) -> f32 {
         let mut s_eff = 0.0f32;
@@ -206,6 +264,31 @@ impl ScaleTable {
             s_eff += (idx == j as u32) as u32 as f32 * self.sel[j];
         }
         s_eff
+    }
+
+    /// [`Self::select`] with a loud release-mode range check — the decode-
+    /// boundary entry. A poisoned or out-of-range scale-share index panics
+    /// here instead of producing a non-finite gradient unnoticed.
+    #[inline(always)]
+    pub fn select_checked(&self, idx: u32) -> f32 {
+        assert!(
+            (idx as usize) < self.len,
+            "scale index {idx} out of range (table has {} scales) — corrupt scale share",
+            self.len
+        );
+        self.select(idx)
+    }
+
+    /// The padded select lanes (`0.0` padding) — handed to the SIMD select
+    /// chain and to differential tests.
+    pub fn sel_lanes(&self) -> &[f32; MAX_SCALES] {
+        &self.sel
+    }
+
+    /// The padded qualifying lanes (`+inf` padding) — handed to the SIMD
+    /// scale-index kernel and to differential tests.
+    pub fn qual_lanes(&self) -> &[f32; MAX_SCALES] {
+        &self.qual
     }
 }
 
@@ -218,6 +301,11 @@ pub fn multiscale_scale_index(v: &[f32], wnorm: f32, scales: &[usize], out: &mut
 /// Table-based form of [`multiscale_scale_index`] — the zero-allocation
 /// hot-path entry used by the aggregators.
 pub fn multiscale_scale_index_t(v: &[f32], wnorm: f32, table: &ScaleTable, out: &mut [u8]) {
+    multiscale_scale_index_t_backend(simd::active(), v, wnorm, table, out)
+}
+
+/// Backend-explicit form of [`multiscale_scale_index_t`].
+pub fn multiscale_scale_index_t_backend(bk: Backend, v: &[f32], wnorm: f32, table: &ScaleTable, out: &mut [u8]) {
     debug_assert_eq!(v.len(), out.len());
     let safe_w = if wnorm > 0.0 { wnorm } else { 1.0 };
     let thresh = safe_w * table.smin;
@@ -226,7 +314,8 @@ pub fn multiscale_scale_index_t(v: &[f32], wnorm: f32, table: &ScaleTable, out: 
     // (count of qualifying scales) − 1. Branchless popcount-style select —
     // index 0 always qualifies since |v| <= ||w||. Padding lanes hold +inf
     // (inf·|v| > thresh, and inf·0 = NaN compares false), contributing 0.
-    for (o, &vi) in out.iter_mut().zip(v) {
+    let done = simd::scale_index(bk, v, thresh, &table.qual, out);
+    for (o, &vi) in out.iter_mut().zip(v).skip(done) {
         let av = vi.abs();
         let mut count = 0u32;
         for j in 0..MAX_SCALES {
@@ -257,11 +346,25 @@ pub fn multiscale_encode_t(
     table: &ScaleTable,
     out: &mut [f32],
 ) {
+    multiscale_encode_t_backend(simd::active(), v, wnorm, u, scale_idx, table, out)
+}
+
+/// Backend-explicit form of [`multiscale_encode_t`].
+pub fn multiscale_encode_t_backend(
+    bk: Backend,
+    v: &[f32],
+    wnorm: f32,
+    u: &[f32],
+    scale_idx: &[u8],
+    table: &ScaleTable,
+    out: &mut [f32],
+) {
     if wnorm <= 0.0 {
         out.fill(0.0);
         return;
     }
-    for i in 0..v.len() {
+    let done = simd::multiscale_levels(bk, v, wnorm, u, scale_idx, &table.sel, out);
+    for i in done..v.len() {
         let s_eff = table.select(scale_idx[i] as u32);
         out[i] = qsgd_level(v[i], wnorm, u[i], s_eff);
     }
@@ -276,18 +379,62 @@ pub fn multiscale_encode_int<T: LevelInt>(
     table: &ScaleTable,
     out: &mut [T],
 ) {
+    multiscale_encode_int_backend(simd::active(), v, wnorm, u, scale_idx, table, out)
+}
+
+/// Backend-explicit form of [`multiscale_encode_int`] (stack-block level
+/// materialization, same `T::from_level` funnel as
+/// [`qsgd_encode_int_backend`]).
+pub fn multiscale_encode_int_backend<T: LevelInt>(
+    bk: Backend,
+    v: &[f32],
+    wnorm: f32,
+    u: &[f32],
+    scale_idx: &[u8],
+    table: &ScaleTable,
+    out: &mut [T],
+) {
     debug_assert_eq!(v.len(), out.len());
     if wnorm <= 0.0 {
         out.fill(T::default());
         return;
     }
-    for i in 0..v.len() {
+    let mut done = 0usize;
+    if bk != Backend::Scalar {
+        let mut block = [0.0f32; LEVEL_BLOCK];
+        while done < v.len() {
+            let take = (v.len() - done).min(LEVEL_BLOCK);
+            let got = simd::multiscale_levels(
+                bk,
+                &v[done..done + take],
+                wnorm,
+                &u[done..done + take],
+                &scale_idx[done..done + take],
+                &table.sel,
+                &mut block[..take],
+            );
+            if got == 0 {
+                break;
+            }
+            for k in 0..got {
+                out[done + k] = T::from_level(block[k]);
+            }
+            done += got;
+            if got < take {
+                break;
+            }
+        }
+    }
+    for i in done..v.len() {
         let s_eff = table.select(scale_idx[i] as u32);
         out[i] = T::from_level(qsgd_level(v[i], wnorm, u[i], s_eff));
     }
 }
 
 /// eq. (12) on the all-reduced sum: elementwise divide by s*, then /M.
+/// Decode boundary: the scale-share indices crossed the wire, so the select
+/// is range-checked — a poisoned share panics loudly instead of dividing by
+/// the 0.0 padding lane and emitting silent ±inf gradients.
 pub fn multiscale_decode_sum(
     zeta_sum: &mut [f32],
     wnorm: f32,
@@ -298,7 +445,7 @@ pub fn multiscale_decode_sum(
     let table = ScaleTable::new(scales);
     let mf = m as f32;
     for (z, &idx) in zeta_sum.iter_mut().zip(scale_idx) {
-        let s = table.select(idx as u32);
+        let s = table.select_checked(idx as u32);
         *z = *z * wnorm / (s * mf);
     }
 }
@@ -317,7 +464,8 @@ pub fn multiscale_decode_sum_int<T: LevelInt>(
     debug_assert_eq!(sum.len(), scale_idx.len());
     let mf = m as f32;
     for i in 0..sum.len() {
-        let s = table.select(scale_idx[i] as u32);
+        // decode boundary: wire-derived index, range-checked (satellite 2)
+        let s = table.select_checked(scale_idx[i] as u32);
         out[i] = sum[i].to_f32() * wnorm / (s * mf);
     }
 }
@@ -567,6 +715,117 @@ mod tests {
                 err_ms <= err_ss * 1.02,
                 &format!("multiscale variance {err_ms} should be <= single-scale {err_ss}"),
             )
+        });
+    }
+
+    #[test]
+    fn scale_table_select_exhaustive_index_sweep() {
+        // satellite 3: exhaustive 0..=MAX_SCALES sweep pins the padded
+        // semantics of the unchecked select — in-range indices yield their
+        // scale, every padding index yields exactly 0.0 (the hazard the
+        // checked decode boundary exists to catch).
+        for len in 1..=MAX_SCALES {
+            let scales: Vec<usize> = (0..len).map(|i| (1usize << (i + 1)) - 1).collect();
+            let table = ScaleTable::new(&scales);
+            for idx in 0..=MAX_SCALES as u32 {
+                let got = table.select(idx);
+                if (idx as usize) < len {
+                    assert_eq!(got, scales[idx as usize] as f32, "len={len} idx={idx}");
+                    assert_eq!(table.select_checked(idx), got);
+                } else {
+                    assert_eq!(got, 0.0, "padding lane must select 0.0 (len={len} idx={idx})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scale index")]
+    fn poisoned_scale_share_cannot_reach_decode() {
+        // satellite 2 regression (fails pre-fix): a corrupted scale-share
+        // byte >= the table length used to select the 0.0 padding lane and
+        // decode to ±inf with no signal. It must panic at the decode
+        // boundary instead — in release builds too.
+        let table = ScaleTable::new(&[7, 127]);
+        let sum = vec![5i32; 4];
+        let idx = vec![0u8, 1, 7, 0]; // idx 7 is poisoned (table len 2)
+        let mut out = vec![0.0f32; 4];
+        multiscale_decode_sum_int(&sum, 1.0, &idx, &table, 2, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scale index")]
+    fn poisoned_scale_share_cannot_reach_f32_decode() {
+        let mut sum = vec![5.0f32; 3];
+        let idx = vec![0u8, 200, 1]; // 200 is far out of range
+        multiscale_decode_sum(&mut sum, 1.0, &idx, &[7, 127], 2);
+    }
+
+    #[test]
+    fn decode_output_stays_finite_with_valid_shares() {
+        // companion to the poisoned-share test: the checked boundary is
+        // transparent for every legal index.
+        let table = ScaleTable::new(&[7, 127]);
+        let sum = vec![3i32, -14, 0, 7];
+        let idx = vec![0u8, 1, 0, 1];
+        let mut out = vec![0.0f32; 4];
+        multiscale_decode_sum_int(&sum, 2.0, &idx, &table, 2, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn backend_encode_paths_bit_identical_to_scalar() {
+        // the tentpole contract at the kernels layer: every available SIMD
+        // backend produces bit-identical levels / indices to the scalar
+        // reference, across lengths that exercise block seams and tails,
+        // with adversarial inputs (±0.0, denormals, u == p boundaries).
+        check("simd kernels == scalar", 60, |g| {
+            let n = g.size_scaled(1, 1200);
+            let mut v = g.vec_adversarial(n);
+            // sprinkle signed zeros and denormals
+            for k in (0..n).step_by(9) {
+                v[k] = if g.bool() { -0.0 } else { 1e-42 };
+            }
+            let mut u = vec![0.0f32; n];
+            g.rng().fill_uniform_f32(&mut u);
+            let w = crate::tensor::norm2_f32(&v).max(1e-30) * g.f32_in(1.0, 2.0);
+            let s = *g.pick(&[1usize, 7, 127, 2047]);
+            // u == p rounding boundary at a few coords
+            for k in (0..n).step_by(7) {
+                let scaled = v[k].abs() / w * s as f32;
+                u[k] = scaled - scaled.floor();
+            }
+            let table = ScaleTable::new(&[7, 127, 2047]);
+            let mut idx_ref = vec![0u8; n];
+            multiscale_scale_index_t_backend(simd::Backend::Scalar, &v, w, &table, &mut idx_ref);
+
+            let mut z_ref = vec![0.0f32; n];
+            qsgd_encode_backend(simd::Backend::Scalar, &v, w, &u, s, &mut z_ref);
+            let mut zi_ref = vec![0i32; n];
+            qsgd_encode_int_backend(simd::Backend::Scalar, &v, w, &u, s, &mut zi_ref);
+            let mut ms_ref = vec![0i16; n];
+            multiscale_encode_int_backend(simd::Backend::Scalar, &v, w, &u, &idx_ref, &table, &mut ms_ref);
+
+            for bk in simd::available() {
+                let mut idx = vec![0u8; n];
+                multiscale_scale_index_t_backend(bk, &v, w, &table, &mut idx);
+                ensure(idx == idx_ref, &format!("{bk:?} scale index diverged"))?;
+                let mut z = vec![0.0f32; n];
+                qsgd_encode_backend(bk, &v, w, &u, s, &mut z);
+                for i in 0..n {
+                    ensure(
+                        z[i].to_bits() == z_ref[i].to_bits(),
+                        &format!("{bk:?} qsgd f32 level bits diverged at {i}"),
+                    )?;
+                }
+                let mut zi = vec![0i32; n];
+                qsgd_encode_int_backend(bk, &v, w, &u, s, &mut zi);
+                ensure(zi == zi_ref, &format!("{bk:?} qsgd int level diverged"))?;
+                let mut ms = vec![0i16; n];
+                multiscale_encode_int_backend(bk, &v, w, &u, &idx, &table, &mut ms);
+                ensure(ms == ms_ref, &format!("{bk:?} multiscale int level diverged"))?;
+            }
+            Ok(())
         });
     }
 }

@@ -122,7 +122,10 @@ impl ErrorFeedback {
                     &mut lvl[..],
                 );
                 for i in 0..len {
-                    let s_sel = table.select(shared_idx[i] as u32);
+                    // shared_idx crossed the wire: a poisoned share must
+                    // panic here, not divide residuals by the 0.0 padding
+                    // lane (satellite 2 decode-boundary guard).
+                    let s_sel = table.select_checked(shared_idx[i] as u32);
                     e[lo + i] = x[lo + i] - lvl[i] * (wnorm / s_sel);
                 }
             }));
@@ -224,7 +227,7 @@ mod tests {
             let mut lvl = vec![0.0f32; n];
             kernels::multiscale_encode_t(&grads[w], wnorm, &uni[w], &shared, &table, &mut lvl);
             for i in 0..n {
-                let s_sel = table.select(shared[i] as u32);
+                let s_sel = table.select_checked(shared[i] as u32);
                 let want = grads[w][i] - lvl[i] * (wnorm / s_sel);
                 assert_eq!(ef.mem[w][i], want, "worker {w} coord {i}");
             }

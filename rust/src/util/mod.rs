@@ -8,6 +8,7 @@
 pub mod json;
 pub mod quickcheck;
 pub mod rng;
+pub mod simd;
 pub mod threads;
 
 /// Wall-clock stopwatch with lap support — metrics plumbing.

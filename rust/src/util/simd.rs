@@ -1,0 +1,1000 @@
+//! Runtime-dispatched SIMD kernels for the compress hot loops.
+//!
+//! The scalar loops in `compress/kernels.rs` and `compress/bitpack.rs` are
+//! the repo's single-core ceiling (ROADMAP direction 1). This module holds
+//! the vector bodies behind a tiny dispatch layer: AVX2 on x86_64 (runtime
+//! `is_x86_feature_detected!`), NEON on aarch64 (baseline feature), and a
+//! scalar fallback that is *always* compiled and stays the property-pinned
+//! oracle. No new dependencies — everything is `std::arch`.
+//!
+//! ## The prefix contract
+//!
+//! Every kernel here processes a *prefix* of its input — a multiple of the
+//! vector lane width, possibly shortened by buffer-bounds guards — and
+//! returns the number of elements it handled. The caller finishes the tail
+//! with the pinned scalar reference loop. `Backend::Scalar` always returns
+//! 0 (the caller's scalar loop does everything), so forcing the fallback is
+//! just a matter of handing kernels `Backend::Scalar` — which is exactly
+//! what `REPRO_FORCE_SCALAR=1` makes [`active`] do. Tests and benches
+//! instead pass an explicit [`Backend`] from [`available`] so both paths
+//! are exercised in one process.
+//!
+//! ## The bit-exactness contract (DESIGN.md §5, "SIMD dispatch & tail
+//! contract")
+//!
+//! SIMD output must be bit-identical to the scalar reference. That holds
+//! because every float op the quantizer kernels use is exactly defined
+//! per-lane by IEEE 754 and matched op-for-op, in the same order, by the
+//! vector body: `|v|` is a sign-bit mask (scalar `f32::abs` is the same
+//! bit-clear), `/`, `*`, `floor`, `-` and ordered `<`/`<=` compares are all
+//! correctly rounded single operations, and the `1{u < p}` select is a mask
+//! of exact `1.0`s. Rust never contracts `a*b + c` into an FMA, so the
+//! scalar reference has no hidden double-rounding the vector body would
+//! miss. Integer kernels (pack/unpack/add) are exact by construction.
+//!
+//! ## Saturation contract
+//!
+//! The SIMD paths never saturate silently: level→code conversion funnels
+//! through the same loud release-mode range asserts as the scalar path
+//! ([`biased_codes_i32`] accumulates a lane-wise violation mask per block
+//! and panics *before* the caller publishes any packed word).
+
+use std::sync::OnceLock;
+
+/// A vector backend. `Scalar` is always available; the arch variants exist
+/// on every platform (so `match`es stay portable) but their kernels return
+/// 0 — "I processed nothing" — when invoked off their native arch.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Backend {
+    /// Short label for bench/report rows.
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per vector step (1 = scalar).
+    pub fn lanes_f32(self) -> usize {
+        match self {
+            Backend::Scalar => 1,
+            Backend::Avx2 => 8,
+            Backend::Neon => 4,
+        }
+    }
+}
+
+fn detect() -> Backend {
+    // Forced-scalar escape hatch: the CI fallback job and any machine where
+    // the vector path misbehaves can pin the pinned-oracle path at runtime.
+    if std::env::var_os("REPRO_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0") {
+        return Backend::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Backend::Neon;
+    }
+    #[allow(unreachable_code)]
+    Backend::Scalar
+}
+
+/// The process-wide active backend (detected once, `REPRO_FORCE_SCALAR`
+/// wins). Hot-path entries in kernels/bitpack call this per buffer, not per
+/// element.
+pub fn active() -> Backend {
+    static ACTIVE: OnceLock<Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(detect)
+}
+
+/// Every backend runnable on this machine (Scalar first). Tests and benches
+/// iterate this to pin SIMD-vs-scalar equivalence and measure the multiple.
+pub fn available() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            v.push(Backend::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        v.push(Backend::Neon);
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Quantizer kernels (f32 lanes)
+// ---------------------------------------------------------------------------
+
+/// QSGD level kernel over a lane-multiple prefix: `out[i]` gets the signed
+/// f32 level of `v[i]` (the exact op sequence of `kernels::qsgd_level`).
+/// Returns the prefix length processed (0 for `Scalar` / off-arch).
+pub fn qsgd_levels(bk: Backend, v: &[f32], safe_w: f32, u: &[f32], s: f32, out: &mut [f32]) -> usize {
+    debug_assert_eq!(v.len(), u.len());
+    debug_assert!(out.len() >= v.len());
+    match bk {
+        Backend::Scalar => 0,
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: constructing Backend::Avx2 requires a positive
+            // is_x86_feature_detected!("avx2") (see available()/detect()).
+            unsafe {
+                return avx2::qsgd_levels(v, safe_w, u, s, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+        Backend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is a baseline feature of aarch64.
+            unsafe {
+                return neon::qsgd_levels(v, safe_w, u, s, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+    }
+}
+
+/// Multi-scale level kernel: per-lane branchless `ScaleTable::select` chain
+/// (sum of `(idx==j)·sel[j]`, same accumulation order as the scalar loop)
+/// followed by the QSGD level body at the selected scale. `sel` is the
+/// padded table (`0.0` in padding lanes). Returns the prefix processed.
+pub fn multiscale_levels(
+    bk: Backend,
+    v: &[f32],
+    safe_w: f32,
+    u: &[f32],
+    idx: &[u8],
+    sel: &[f32; 8],
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(v.len(), u.len());
+    debug_assert_eq!(v.len(), idx.len());
+    debug_assert!(out.len() >= v.len());
+    match bk {
+        Backend::Scalar => 0,
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: see qsgd_levels.
+            unsafe {
+                return avx2::multiscale_levels(v, safe_w, u, idx, sel, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+        Backend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe {
+                return neon::multiscale_levels(v, safe_w, u, idx, sel, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+    }
+}
+
+/// eq. (10) scale-index kernel: `out[i] = (count of qualifying scales).max(1)
+/// - 1` with the qualifying test `qual[j]·|v| <= thresh` (padding lanes hold
+/// `+inf`, which never qualifies — `inf·0 = NaN` compares false, exactly as
+/// in the scalar loop). Returns the prefix processed.
+pub fn scale_index(bk: Backend, v: &[f32], thresh: f32, qual: &[f32; 8], out: &mut [u8]) -> usize {
+    debug_assert!(out.len() >= v.len());
+    match bk {
+        Backend::Scalar => 0,
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: see qsgd_levels.
+            unsafe {
+                return avx2::scale_index(v, thresh, qual, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+        Backend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe {
+                return neon::scale_index(v, thresh, qual, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-plane kernels (u64 lanes) — AVX2 only this PR; NEON falls back to the
+// scalar staging loops (documented in DESIGN.md).
+// ---------------------------------------------------------------------------
+
+/// Gather-based field extraction: fills `out[k]` with the `bits`-wide code
+/// at bit `start_bit + k*bits` of `words`. Arbitrary (unaligned) offsets and
+/// widths up to 32 bits: each field is read as one unaligned 8-byte load at
+/// `byte_off = bit/8`, shifted right by `bit%8` and masked — valid because
+/// `bit%8 + bits <= 7 + 32 < 64`. The prefix stops early (scalar tail takes
+/// over) when a field's 8-byte window would run past the buffer.
+pub fn unpack_fields(bk: Backend, words: &[u64], start_bit: usize, bits: u32, out: &mut [u64]) -> usize {
+    debug_assert!((2..=32).contains(&bits));
+    match bk {
+        Backend::Scalar | Backend::Neon => 0,
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: see qsgd_levels; in-bounds gather windows are enforced
+            // by the n_safe guard inside.
+            unsafe {
+                return avx2::unpack_fields(words, start_bit, bits, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+    }
+}
+
+/// Aligned-width pack: for `64 % bits == 0` and `per = 64/bits >= 4`, builds
+/// `out[w]` from codes `[w*per, (w+1)*per)` via variable-shift + OR-reduce.
+/// Returns the number of *whole words* built (codes consumed = words·per);
+/// the caller packs the remaining codes with the scalar staging loop.
+pub fn pack_aligned_words(bk: Backend, codes: &[u64], bits: u32, out: &mut [u64]) -> usize {
+    debug_assert!(64 % bits == 0 && 64 / bits >= 4);
+    match bk {
+        Backend::Scalar | Backend::Neon => 0,
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: see qsgd_levels.
+            unsafe {
+                return avx2::pack_aligned_words(codes, bits, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+    }
+}
+
+/// Biased-code materialization for the packed-resident encode: `out[i] =
+/// (levels[i] as i64 + bias) as u64` over a lane-multiple prefix, with a
+/// lane-wise range check accumulated per block — any code outside
+/// `[0, max_code]` panics *before* the caller packs a single word (the SIMD
+/// side of the satellite-1 "no silent saturation" contract).
+pub fn biased_codes_i32(bk: Backend, levels: &[i32], bias: i64, max_code: u64, out: &mut [u64]) -> usize {
+    debug_assert!(out.len() >= levels.len());
+    match bk {
+        Backend::Scalar => 0,
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: see qsgd_levels.
+            unsafe {
+                return avx2::biased_codes_i32(levels, bias, max_code, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+        Backend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe {
+                return neon::biased_codes_i32(levels, bias, max_code, out);
+            }
+            #[allow(unreachable_code)]
+            0
+        }
+    }
+}
+
+/// Vectorized add-with-carry over full resident words (the ring-hop reduce
+/// kernel's core). Processes a lane-multiple prefix of `dst[i] += src[i] +
+/// carry_chain`, returns `(words_processed, carry_out_of_prefix)`.
+///
+/// Sound because under the carry-safety condition of `packed_sum_bits`
+/// (every per-field sum < 2^bits) the carry OUT of a word is independent of
+/// the carry IN: a carry-in can only ripple within the field straddling the
+/// word's low boundary, whose in-word part has headroom, so it never reaches
+/// bit 63. Each lane therefore computes its own carry-out from `dst+src`
+/// alone, and the carry-ins are applied as a lane-shifted +1 afterwards —
+/// breaking the loop-carried dependency the scalar adc chain serializes on.
+pub fn add_words(bk: Backend, dst: &mut [u64], src: &[u64], carry_in: u64) -> (usize, u64) {
+    debug_assert!(src.len() >= dst.len());
+    debug_assert!(carry_in <= 1);
+    match bk {
+        Backend::Scalar | Backend::Neon => (0, carry_in),
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: see qsgd_levels.
+            unsafe {
+                return avx2::add_words(dst, src, carry_in);
+            }
+            #[allow(unreachable_code)]
+            (0, carry_in)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 bodies
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn qsgd_levels(v: &[f32], safe_w: f32, u: &[f32], s: f32, out: &mut [f32]) -> usize {
+        let n = v.len() & !7;
+        let w = _mm256_set1_ps(safe_w);
+        let sv = _mm256_set1_ps(s);
+        let one = _mm256_set1_ps(1.0);
+        let zero = _mm256_setzero_ps();
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut i = 0usize;
+        while i < n {
+            let x = _mm256_loadu_ps(v.as_ptr().add(i));
+            let uu = _mm256_loadu_ps(u.as_ptr().add(i));
+            // exact scalar op order: a = |v|/w; scaled = a*s; l = floor;
+            // p = scaled - l; level = l + 1{u < p}; sign-select.
+            let a = _mm256_div_ps(_mm256_and_ps(x, absmask), w);
+            let scaled = _mm256_mul_ps(a, sv);
+            let l = _mm256_floor_ps(scaled);
+            let p = _mm256_sub_ps(scaled, l);
+            let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(uu, p);
+            let level = _mm256_add_ps(l, _mm256_and_ps(lt, one));
+            let pos = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(x, zero), one);
+            let neg = _mm256_and_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(x, zero), one);
+            let sg = _mm256_sub_ps(pos, neg);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(sg, level));
+            i += 8;
+        }
+        n
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn multiscale_levels(
+        v: &[f32],
+        safe_w: f32,
+        u: &[f32],
+        idx: &[u8],
+        sel: &[f32; 8],
+        out: &mut [f32],
+    ) -> usize {
+        let n = v.len() & !7;
+        let w = _mm256_set1_ps(safe_w);
+        let one = _mm256_set1_ps(1.0);
+        let zero = _mm256_setzero_ps();
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let sel_v: [__m256; 8] = [
+            _mm256_set1_ps(sel[0]),
+            _mm256_set1_ps(sel[1]),
+            _mm256_set1_ps(sel[2]),
+            _mm256_set1_ps(sel[3]),
+            _mm256_set1_ps(sel[4]),
+            _mm256_set1_ps(sel[5]),
+            _mm256_set1_ps(sel[6]),
+            _mm256_set1_ps(sel[7]),
+        ];
+        let mut i = 0usize;
+        while i < n {
+            // widen 8 u8 indices to 8 i32 lanes
+            let id = _mm256_cvtepu8_epi32(_mm_loadl_epi64(idx.as_ptr().add(i) as *const __m128i));
+            // branchless select chain, same j order and accumulation as the
+            // scalar loop: all terms but (at most) one are +0.0.
+            let mut s_eff = _mm256_setzero_ps();
+            for (j, sj) in sel_v.iter().enumerate() {
+                let eq = _mm256_castsi256_ps(_mm256_cmpeq_epi32(id, _mm256_set1_epi32(j as i32)));
+                s_eff = _mm256_add_ps(s_eff, _mm256_and_ps(eq, *sj));
+            }
+            let x = _mm256_loadu_ps(v.as_ptr().add(i));
+            let uu = _mm256_loadu_ps(u.as_ptr().add(i));
+            let a = _mm256_div_ps(_mm256_and_ps(x, absmask), w);
+            let scaled = _mm256_mul_ps(a, s_eff);
+            let l = _mm256_floor_ps(scaled);
+            let p = _mm256_sub_ps(scaled, l);
+            let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(uu, p);
+            let level = _mm256_add_ps(l, _mm256_and_ps(lt, one));
+            let pos = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(x, zero), one);
+            let neg = _mm256_and_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(x, zero), one);
+            let sg = _mm256_sub_ps(pos, neg);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(sg, level));
+            i += 8;
+        }
+        n
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_index(v: &[f32], thresh: f32, qual: &[f32; 8], out: &mut [u8]) -> usize {
+        let n = v.len() & !7;
+        let thr = _mm256_set1_ps(thresh);
+        let one = _mm256_set1_epi32(1);
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let qual_v: [__m256; 8] = [
+            _mm256_set1_ps(qual[0]),
+            _mm256_set1_ps(qual[1]),
+            _mm256_set1_ps(qual[2]),
+            _mm256_set1_ps(qual[3]),
+            _mm256_set1_ps(qual[4]),
+            _mm256_set1_ps(qual[5]),
+            _mm256_set1_ps(qual[6]),
+            _mm256_set1_ps(qual[7]),
+        ];
+        let mut lanes = [0i32; 8];
+        let mut i = 0usize;
+        while i < n {
+            let av = _mm256_and_ps(_mm256_loadu_ps(v.as_ptr().add(i)), absmask);
+            // count += 1 per qualifying scale: subtract the all-ones mask.
+            let mut count = _mm256_setzero_si256();
+            for qj in qual_v.iter() {
+                let le = _mm256_cmp_ps::<_CMP_LE_OQ>(_mm256_mul_ps(*qj, av), thr);
+                count = _mm256_sub_epi32(count, _mm256_castps_si256(le));
+            }
+            let sel = _mm256_sub_epi32(_mm256_max_epi32(count, one), one);
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, sel);
+            for (k, &c) in lanes.iter().enumerate() {
+                *out.get_unchecked_mut(i + k) = c as u8;
+            }
+            i += 8;
+        }
+        n
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_fields(words: &[u64], start_bit: usize, bits: u32, out: &mut [u64]) -> usize {
+        let total_bits = words.len() * 64;
+        // every gathered 8-byte window [bit/8, bit/8 + 8) must stay inside
+        // the buffer; bit <= total_bits - 64 is a (conservative) sufficient
+        // condition since byte_off*8 <= bit.
+        let max_gather_bit = match total_bits.checked_sub(64) {
+            Some(m) => m,
+            None => return 0,
+        };
+        if start_bit > max_gather_bit {
+            return 0;
+        }
+        let n_safe = (max_gather_bit - start_bit) / bits as usize + 1;
+        let n = out.len().min(n_safe) & !3;
+        if n == 0 {
+            return 0;
+        }
+        let base = words.as_ptr() as *const i64;
+        let mask = _mm256_set1_epi64x(((1u64 << bits) - 1) as i64);
+        let step = _mm256_set1_epi64x(4 * bits as i64);
+        let seven = _mm256_set1_epi64x(7);
+        let b = bits as usize;
+        let mut bitpos = _mm256_set_epi64x(
+            (start_bit + 3 * b) as i64,
+            (start_bit + 2 * b) as i64,
+            (start_bit + b) as i64,
+            start_bit as i64,
+        );
+        let mut i = 0usize;
+        while i < n {
+            let byte_off = _mm256_srli_epi64::<3>(bitpos);
+            let sh = _mm256_and_si256(bitpos, seven);
+            let raw = _mm256_i64gather_epi64::<1>(base, byte_off);
+            let val = _mm256_and_si256(_mm256_srlv_epi64(raw, sh), mask);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, val);
+            bitpos = _mm256_add_epi64(bitpos, step);
+            i += 4;
+        }
+        n
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_aligned_words(codes: &[u64], bits: u32, out: &mut [u64]) -> usize {
+        let per = (64 / bits) as usize;
+        let nw = (codes.len() / per).min(out.len());
+        let base_shift =
+            _mm256_set_epi64x(3 * bits as i64, 2 * bits as i64, bits as i64, 0);
+        let step = _mm256_set1_epi64x(4 * bits as i64);
+        for w in 0..nw {
+            let mut acc = _mm256_setzero_si256();
+            let mut sh = base_shift;
+            let mut c = w * per;
+            let end = c + per;
+            while c < end {
+                let cv = _mm256_loadu_si256(codes.as_ptr().add(c) as *const __m256i);
+                acc = _mm256_or_si256(acc, _mm256_sllv_epi64(cv, sh));
+                sh = _mm256_add_epi64(sh, step);
+                c += 4;
+            }
+            // horizontal OR of the 4 lanes
+            let hi = _mm256_extracti128_si256::<1>(acc);
+            let lo = _mm256_castsi256_si128(acc);
+            let x = _mm_or_si128(lo, hi);
+            let y = _mm_or_si128(x, _mm_unpackhi_epi64(x, x));
+            *out.get_unchecked_mut(w) = _mm_cvtsi128_si64(y) as u64;
+        }
+        nw
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn biased_codes_i32(levels: &[i32], bias: i64, max_code: u64, out: &mut [u64]) -> usize {
+        let n = levels.len() & !3;
+        let b = _mm256_set1_epi64x(bias);
+        let zero = _mm256_setzero_si256();
+        let maxv = _mm256_set1_epi64x(max_code as i64);
+        let mut viol = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i < n {
+            let l32 = _mm_loadu_si128(levels.as_ptr().add(i) as *const __m128i);
+            let code = _mm256_add_epi64(_mm256_cvtepi32_epi64(l32), b);
+            viol = _mm256_or_si256(viol, _mm256_cmpgt_epi64(zero, code));
+            viol = _mm256_or_si256(viol, _mm256_cmpgt_epi64(code, maxv));
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, code);
+            i += 4;
+        }
+        // loud in release, before any word is packed from this block
+        assert!(
+            _mm256_movemask_epi8(viol) == 0,
+            "biased code out of range (level overflows its field) — corrupt level buffer"
+        );
+        n
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_words(dst: &mut [u64], src: &[u64], carry_in: u64) -> (usize, u64) {
+        let n = dst.len().min(src.len()) & !3;
+        if n == 0 {
+            return (0, carry_in);
+        }
+        let sign = _mm256_set1_epi64x(i64::MIN);
+        let mut carry = carry_in;
+        let mut i = 0usize;
+        while i < n {
+            let d = _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i);
+            let v = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let s = _mm256_add_epi64(d, v);
+            // per-lane unsigned carry-out of d+v:  s <u v  <=>  signed
+            // compare after flipping the sign bits. -1 where a carry exits.
+            let cmask = _mm256_cmpgt_epi64(_mm256_xor_si256(v, sign), _mm256_xor_si256(s, sign));
+            // carry-in to lane k is lane k-1's carry-out; lane 0 takes the
+            // running chain carry. permute 0x90 -> lanes [0,0,1,2], then
+            // blend the true chain carry into lane 0.
+            let shifted = _mm256_permute4x64_epi64::<0x90>(cmask);
+            let cin = _mm256_set_epi64x(0, 0, 0, if carry != 0 { -1 } else { 0 });
+            let shifted = _mm256_blend_epi32::<0b0000_0011>(shifted, cin);
+            // subtracting the -1 mask adds the carry; cannot overflow a lane
+            // (carry-independence: the straddling field has headroom).
+            let r = _mm256_sub_epi64(s, shifted);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, r);
+            carry = (_mm256_extract_epi64::<3>(cmask) as u64) & 1;
+            i += 4;
+        }
+        (n, carry)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON bodies (aarch64). The f32 quantizer kernels are 4-wide; the bit-plane
+// kernels fall back to the scalar staging loops this PR (the dispatch layer
+// returns 0 for them above).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn qsgd_levels(v: &[f32], safe_w: f32, u: &[f32], s: f32, out: &mut [f32]) -> usize {
+        let n = v.len() & !3;
+        let w = vdupq_n_f32(safe_w);
+        let sv = vdupq_n_f32(s);
+        let one = vdupq_n_f32(1.0);
+        let zero = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i < n {
+            let x = vld1q_f32(v.as_ptr().add(i));
+            let uu = vld1q_f32(u.as_ptr().add(i));
+            let a = vdivq_f32(vabsq_f32(x), w);
+            let scaled = vmulq_f32(a, sv);
+            let l = vrndmq_f32(scaled); // floor (round toward -inf)
+            let p = vsubq_f32(scaled, l);
+            let level = vaddq_f32(l, vbslq_f32(vcltq_f32(uu, p), one, zero));
+            let pos = vbslq_f32(vcgtq_f32(x, zero), one, zero);
+            let neg = vbslq_f32(vcltq_f32(x, zero), one, zero);
+            let sg = vsubq_f32(pos, neg);
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(sg, level));
+            i += 4;
+        }
+        n
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn multiscale_levels(
+        v: &[f32],
+        safe_w: f32,
+        u: &[f32],
+        idx: &[u8],
+        sel: &[f32; 8],
+        out: &mut [f32],
+    ) -> usize {
+        let n = v.len() & !3;
+        let w = vdupq_n_f32(safe_w);
+        let one = vdupq_n_f32(1.0);
+        let zero = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i < n {
+            let id_arr = [
+                idx[i] as u32,
+                idx[i + 1] as u32,
+                idx[i + 2] as u32,
+                idx[i + 3] as u32,
+            ];
+            let id = vld1q_u32(id_arr.as_ptr());
+            let mut s_eff = vdupq_n_f32(0.0);
+            for (j, &sj) in sel.iter().enumerate() {
+                let eq = vceqq_u32(id, vdupq_n_u32(j as u32));
+                s_eff = vaddq_f32(s_eff, vbslq_f32(eq, vdupq_n_f32(sj), zero));
+            }
+            let x = vld1q_f32(v.as_ptr().add(i));
+            let uu = vld1q_f32(u.as_ptr().add(i));
+            let a = vdivq_f32(vabsq_f32(x), w);
+            let scaled = vmulq_f32(a, s_eff);
+            let l = vrndmq_f32(scaled);
+            let p = vsubq_f32(scaled, l);
+            let level = vaddq_f32(l, vbslq_f32(vcltq_f32(uu, p), one, zero));
+            let pos = vbslq_f32(vcgtq_f32(x, zero), one, zero);
+            let neg = vbslq_f32(vcltq_f32(x, zero), one, zero);
+            let sg = vsubq_f32(pos, neg);
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(sg, level));
+            i += 4;
+        }
+        n
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_index(v: &[f32], thresh: f32, qual: &[f32; 8], out: &mut [u8]) -> usize {
+        let n = v.len() & !3;
+        let thr = vdupq_n_f32(thresh);
+        let one = vdupq_n_u32(1);
+        let mut lanes = [0u32; 4];
+        let mut i = 0usize;
+        while i < n {
+            let av = vabsq_f32(vld1q_f32(v.as_ptr().add(i)));
+            let mut count = vdupq_n_u32(0);
+            for &qj in qual.iter() {
+                let le = vcleq_f32(vmulq_f32(vdupq_n_f32(qj), av), thr);
+                count = vsubq_u32(count, le); // mask is all-ones = -1
+            }
+            let sel = vsubq_u32(vmaxq_u32(count, one), one);
+            vst1q_u32(lanes.as_mut_ptr(), sel);
+            for (k, &c) in lanes.iter().enumerate() {
+                *out.get_unchecked_mut(i + k) = c as u8;
+            }
+            i += 4;
+        }
+        n
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn biased_codes_i32(levels: &[i32], bias: i64, max_code: u64, out: &mut [u64]) -> usize {
+        let n = levels.len() & !3;
+        let b = vdupq_n_s64(bias);
+        let maxv = vdupq_n_s64(max_code as i64);
+        let zero = vdupq_n_s64(0);
+        let mut viol = vdupq_n_u64(0);
+        let mut i = 0usize;
+        while i < n {
+            let l32 = vld1q_s32(levels.as_ptr().add(i));
+            let lo = vaddq_s64(vmovl_s32(vget_low_s32(l32)), b);
+            let hi = vaddq_s64(vmovl_s32(vget_high_s32(l32)), b);
+            viol = vorrq_u64(viol, vcgtq_s64(zero, lo));
+            viol = vorrq_u64(viol, vcgtq_s64(lo, maxv));
+            viol = vorrq_u64(viol, vcgtq_s64(zero, hi));
+            viol = vorrq_u64(viol, vcgtq_s64(hi, maxv));
+            vst1q_u64(out.as_mut_ptr().add(i), vreinterpretq_u64_s64(lo));
+            vst1q_u64(out.as_mut_ptr().add(i + 2), vreinterpretq_u64_s64(hi));
+            i += 4;
+        }
+        let any = vgetq_lane_u64::<0>(viol) | vgetq_lane_u64::<1>(viol);
+        assert!(
+            any == 0,
+            "biased code out of range (level overflows its field) — corrupt level buffer"
+        );
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::kernels::qsgd_level;
+    use crate::util::rng::Rng;
+
+    fn adversarial_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| match i % 7 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => 1e-42,  // denormal
+                3 => -1e-42, // negative denormal
+                _ => {
+                    let x = rng.next_f32() * 2.0 - 1.0;
+                    if rng.next_u64() % 5 == 0 {
+                        x * 1e-30
+                    } else {
+                        x
+                    }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn active_is_available() {
+        let bk = active();
+        assert!(available().contains(&bk), "active backend {bk:?} not in available set");
+    }
+
+    #[test]
+    fn backend_labels_and_lanes() {
+        assert_eq!(Backend::Scalar.label(), "scalar");
+        assert_eq!(Backend::Scalar.lanes_f32(), 1);
+        assert!(Backend::Avx2.lanes_f32() > Backend::Neon.lanes_f32());
+    }
+
+    #[test]
+    fn qsgd_levels_prefix_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0x51D0_0001);
+        for bk in available() {
+            for n in [0usize, 1, 7, 8, 9, 64, 257, 1000] {
+                let v = adversarial_f32s(&mut rng, n);
+                let mut u = vec![0.0f32; n];
+                rng.fill_uniform_f32(&mut u);
+                // force u == p boundaries at a few coords: u = frac(|v|/w*s)
+                let wnorm = 2.5f32;
+                let s = 127.0f32;
+                let mut u = u;
+                for k in (0..n).step_by(5) {
+                    let a = v[k].abs() / wnorm;
+                    let scaled = a * s;
+                    u[k] = scaled - scaled.floor(); // exactly p
+                }
+                let mut got = vec![9.0f32; n];
+                let done = qsgd_levels(bk, &v, wnorm, &u, s, &mut got);
+                assert!(done <= n);
+                if bk == Backend::Scalar {
+                    assert_eq!(done, 0);
+                }
+                for i in 0..done {
+                    let want = qsgd_level(v[i], wnorm, u[i], s);
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want.to_bits(),
+                        "{bk:?} lane {i}: {} vs {want}",
+                        got[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multiscale_levels_prefix_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0x51D0_0002);
+        let sel = [7.0f32, 127.0, 2047.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        for bk in available() {
+            for n in [0usize, 8, 63, 64, 500] {
+                let v = adversarial_f32s(&mut rng, n);
+                let mut u = vec![0.0f32; n];
+                rng.fill_uniform_f32(&mut u);
+                // include out-of-range indices: select must yield 0.0 there,
+                // exactly like the scalar padded chain.
+                let idx: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+                let wnorm = 1.75f32;
+                let mut got = vec![9.0f32; n];
+                let done = multiscale_levels(bk, &v, wnorm, &u, &idx, &sel, &mut got);
+                for i in 0..done {
+                    let mut s_eff = 0.0f32;
+                    for (j, &sj) in sel.iter().enumerate() {
+                        s_eff += (idx[i] == j as u8) as u32 as f32 * sj;
+                    }
+                    let want = qsgd_level(v[i], wnorm, u[i], s_eff);
+                    assert_eq!(got[i].to_bits(), want.to_bits(), "{bk:?} lane {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_index_prefix_matches_scalar() {
+        let mut rng = Rng::new(0x51D0_0003);
+        let qual = [
+            7.0f32,
+            127.0,
+            2047.0,
+            f32::INFINITY,
+            f32::INFINITY,
+            f32::INFINITY,
+            f32::INFINITY,
+            f32::INFINITY,
+        ];
+        for bk in available() {
+            for n in [0usize, 8, 129, 640] {
+                let v = adversarial_f32s(&mut rng, n);
+                let thresh = 1.3f32 * 7.0;
+                let mut got = vec![0xEEu8; n];
+                let done = scale_index(bk, &v, thresh, &qual, &mut got);
+                for i in 0..done {
+                    let av = v[i].abs();
+                    let mut count = 0u32;
+                    for &qj in qual.iter() {
+                        count += (qj * av <= thresh) as u32;
+                    }
+                    let want = (count.max(1) - 1) as u8;
+                    assert_eq!(got[i], want, "{bk:?} lane {i} (v={})", v[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_fields_matches_scalar_extraction() {
+        let mut rng = Rng::new(0x51D0_0004);
+        for bk in available() {
+            for bits in [2u32, 3, 5, 8, 11, 13, 16, 28, 32] {
+                for start_bit in [0usize, 1, 7, 13, 63, 64, 100] {
+                    let words: Vec<u64> = (0..32).map(|_| rng.next_u64()).collect();
+                    let total_bits = words.len() * 64;
+                    let cap = (total_bits - start_bit) / bits as usize;
+                    let len = cap.min(100);
+                    let mut out = vec![0u64; len];
+                    let done = unpack_fields(bk, &words, start_bit, bits, &mut out);
+                    assert!(done <= len);
+                    let mask = if bits >= 64 { !0u64 } else { (1u64 << bits) - 1 };
+                    for k in 0..done {
+                        let bit = start_bit + k * bits as usize;
+                        let w = bit / 64;
+                        let off = (bit % 64) as u32;
+                        let mut code = words[w] >> off;
+                        if off + bits > 64 {
+                            code |= words[w + 1] << (64 - off);
+                        }
+                        assert_eq!(out[k], code & mask, "{bk:?} bits={bits} start={start_bit} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_aligned_words_matches_scalar_shift_chain() {
+        let mut rng = Rng::new(0x51D0_0005);
+        for bk in available() {
+            for bits in [2u32, 4, 8, 16] {
+                let per = (64 / bits) as usize;
+                let mask = (1u64 << bits) - 1;
+                let n = per * 9 + 3;
+                let codes: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+                let mut out = vec![0u64; n / per];
+                let nw = pack_aligned_words(bk, &codes, bits, &mut out);
+                assert!(nw <= out.len());
+                for w in 0..nw {
+                    let mut want = 0u64;
+                    for j in 0..per {
+                        want |= codes[w * per + j] << (j as u32 * bits);
+                    }
+                    assert_eq!(out[w], want, "{bk:?} bits={bits} word {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn biased_codes_match_scalar_and_check_range() {
+        let mut rng = Rng::new(0x51D0_0006);
+        for bk in available() {
+            let bias = 127i64;
+            let max_code = 254u64;
+            let n = 103;
+            let levels: Vec<i32> =
+                (0..n).map(|_| (rng.next_u64() % 255) as i32 - 127).collect();
+            let mut out = vec![0u64; n];
+            let done = biased_codes_i32(bk, &levels, bias, max_code, &mut out);
+            for i in 0..done {
+                assert_eq!(out[i], (levels[i] as i64 + bias) as u64, "{bk:?} lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_words_matches_scalar_adc() {
+        let mut rng = Rng::new(0x51D0_0007);
+        for bk in available() {
+            for n in [0usize, 3, 4, 8, 33] {
+                // carry-safe words: headroom in the top bit region so the
+                // carry-independence precondition holds (as packed planes do)
+                let a: Vec<u64> = (0..n).map(|_| rng.next_u64() >> 1).collect();
+                let b: Vec<u64> = (0..n).map(|_| rng.next_u64() >> 1).collect();
+                for carry_in in [0u64, 1] {
+                    let mut dst = a.clone();
+                    let (done, carry_out) = add_words(bk, &mut dst, &b, carry_in);
+                    assert!(done <= n);
+                    // scalar reference over the processed prefix
+                    let mut carry = carry_in;
+                    for i in 0..done {
+                        let (s1, c1) = a[i].overflowing_add(b[i]);
+                        let (s2, c2) = s1.overflowing_add(carry);
+                        assert!(!c2, "test vectors must be carry-safe");
+                        assert_eq!(dst[i], s2, "{bk:?} word {i} (carry_in={carry_in})");
+                        carry = c1 as u64;
+                    }
+                    if done > 0 {
+                        assert_eq!(carry_out, carry, "{bk:?} prefix carry (n={n})");
+                    }
+                    // untouched suffix
+                    for i in done..n {
+                        assert_eq!(dst[i], a[i]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn add_words_carries_across_lane_and_vector_boundaries() {
+        // lanes 0 and 3 overflow on d+s (c1 = 1), feeding +1 into lanes 1
+        // and 4 — the latter crossing the 4-lane vector boundary via the
+        // chain carry. Every lane RECEIVING a carry has headroom, so the
+        // carry-safety precondition holds and the scalar adc is the oracle.
+        for bk in available() {
+            let a = vec![u64::MAX, 5u64, 9, u64::MAX, 20, 30, 40, 50];
+            let b = vec![1u64, 7, 2, 3, 4, 5, 6, 7];
+            for carry_in in [0u64, 1] {
+                let mut dst = a.clone();
+                let (done, carry_out) = add_words(bk, &mut dst, &b, carry_in);
+                let mut carry = carry_in;
+                for i in 0..done {
+                    let (s1, c1) = a[i].overflowing_add(b[i]);
+                    let (s2, c2) = s1.overflowing_add(carry);
+                    assert!(!c2, "test vectors must be carry-safe");
+                    assert_eq!(dst[i], s2, "{bk:?} word {i} (carry_in={carry_in})");
+                    carry = c1 as u64;
+                }
+                if done > 0 {
+                    assert_eq!(carry_out, carry, "{bk:?} (carry_in={carry_in})");
+                }
+            }
+            // and a real ripple: d = MAX, s = 0, carry_in = 1 -> r = 0, but
+            // carry OUT is c1(d+s) = 0 by carry-independence (the packed
+            // planes guarantee this shape can only arise inside a field
+            // with headroom; here we just pin the documented semantics).
+            let mut dst2 = vec![u64::MAX, 5, 5, 5, 5, 5, 5, 5];
+            let src2 = vec![0u64; 8];
+            let (done2, _) = add_words(bk, &mut dst2, &src2, 1);
+            if done2 > 0 {
+                assert_eq!(dst2[0], 0, "{bk:?}: MAX + 0 + carry wraps the lane");
+                assert_eq!(dst2[1], 5, "{bk:?}: carry-out taken from d+s, not the ripple");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_env_is_respected_by_detect() {
+        // active() caches; test detect()'s env handling directly. Restore
+        // the prior value so a forced-scalar CI run stays forced for any
+        // test that races this one.
+        let prior = std::env::var_os("REPRO_FORCE_SCALAR");
+        std::env::set_var("REPRO_FORCE_SCALAR", "1");
+        assert_eq!(super::detect(), Backend::Scalar);
+        std::env::set_var("REPRO_FORCE_SCALAR", "0");
+        let bk = super::detect();
+        assert!(available().contains(&bk));
+        match prior {
+            Some(v) => std::env::set_var("REPRO_FORCE_SCALAR", v),
+            None => std::env::remove_var("REPRO_FORCE_SCALAR"),
+        }
+    }
+}

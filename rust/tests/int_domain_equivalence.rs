@@ -1502,3 +1502,193 @@ fn flight_recorder_default_off_and_armed_runs_bit_identical() {
     assert_eq!(clk_on.retrans_bits, clk_off.retrans_bits);
     assert_eq!(tracer.violation_count(), 0, "armed run must audit clean");
 }
+
+// ---------------------------------------------------------------------------
+// PR 10: runtime SIMD dispatch — backend differential matrix.
+//
+// The unit tests in `util::simd`, `kernels`, and `bitpack` pin each kernel
+// against its scalar oracle in isolation. The tests below pin the *composed*
+// packed stages — encode_int → biased pack → segmented ring add → unpack —
+// stage by stage, across every backend `simd::available()` reports, over a
+// scheme × bits × workers matrix. Every intermediate artifact (integer
+// levels, resident words, reduced words, unpacked codes) must be
+// bit-identical between the vector backend and the pinned scalar fallback.
+// (The forced-scalar CI job reruns this whole file with REPRO_FORCE_SCALAR
+// set, so the production `simd::active()` entries are exercised both ways.)
+// ---------------------------------------------------------------------------
+
+use repro::compress::bitpack;
+use repro::util::simd::{self, Backend};
+
+/// Run the composed QSGD packed stages on one backend; return every
+/// intermediate artifact for cross-backend comparison.
+fn packed_stages_qsgd(
+    bk: Backend,
+    grads: &[Vec<f32>],
+    bits_q: usize,
+    seed: u64,
+) -> (Vec<Vec<i32>>, Vec<Vec<u64>>, Vec<u64>, Vec<u64>) {
+    let m = grads.len();
+    let n = grads[0].len();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let wnorm = max_norm(&refs);
+    let s = kernels::s_for_bits(bits_q);
+    let rbits = bitpack::packed_sum_bits(s, m);
+    let bias = s as i64;
+    let root = Rng::new(seed);
+
+    let mut levels: Vec<Vec<i32>> = Vec::with_capacity(m);
+    let mut packs: Vec<Vec<u64>> = Vec::with_capacity(m);
+    for (w, g) in grads.iter().enumerate() {
+        let mut wrng = root.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; n];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut lv = vec![0i32; n];
+        kernels::qsgd_encode_int_backend(bk, g, wnorm, &uni, s, &mut lv);
+        let mut words = vec![0u64; bitpack::words_for(n, rbits)];
+        bitpack::pack_biased_i32_at_backend(bk, &lv, bias, rbits, &mut words, 0);
+        levels.push(lv);
+        packs.push(words);
+    }
+    // segmented adds (mimicking ring reduce-scatter partition boundaries)
+    // so the masked first/last words and the SIMD middle all get exercised
+    let mut acc = packs[0].clone();
+    let seg = n / m;
+    for src in &packs[1..] {
+        for part in 0..m {
+            let lo = part * seg;
+            let hi = if part + 1 == m { n } else { (part + 1) * seg };
+            bitpack::add_packed_codes_backend(bk, &mut acc, src, rbits, lo, hi);
+        }
+    }
+    let mut codes = vec![0u64; n];
+    bitpack::unpack_codes_at_backend(bk, &acc, rbits, 0, &mut codes);
+    (levels, packs, acc, codes)
+}
+
+#[test]
+fn simd_backend_matrix_qsgd_stages_bit_identical_to_scalar() {
+    let backends = simd::available();
+    for &bits_q in &[2usize, 3, 4, 6, 8] {
+        for &m in &[2usize, 5] {
+            let n = 1023usize;
+            let mut grng = Rng::new(0x51D0 ^ ((bits_q as u64) << 8) ^ m as u64);
+            let grads: Vec<Vec<f32>> = (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    grng.fill_normal_f32(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let seed = 0xAB5EED ^ bits_q as u64;
+            let want = packed_stages_qsgd(Backend::Scalar, &grads, bits_q, seed);
+            for &bk in &backends {
+                let got = packed_stages_qsgd(bk, &grads, bits_q, seed);
+                assert_eq!(got.0, want.0, "{} b{bits_q} m{m}: integer levels", bk.label());
+                assert_eq!(got.1, want.1, "{} b{bits_q} m{m}: packed words", bk.label());
+                assert_eq!(got.2, want.2, "{} b{bits_q} m{m}: reduced words", bk.label());
+                assert_eq!(got.3, want.3, "{} b{bits_q} m{m}: unpacked codes", bk.label());
+            }
+        }
+    }
+}
+
+/// Multi-scale analog: scale-index proposal → min-share → encode_int →
+/// biased pack → segmented add → unpack, per backend.
+fn packed_stages_multiscale(
+    bk: Backend,
+    grads: &[Vec<f32>],
+    scales: &[usize],
+    seed: u64,
+) -> (Vec<u8>, Vec<Vec<i32>>, Vec<u64>, Vec<u64>) {
+    let m = grads.len();
+    let n = grads[0].len();
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let wnorm = max_norm(&refs);
+    let table = kernels::ScaleTable::new(scales);
+    let smax = *scales.iter().max().unwrap();
+    let rbits = bitpack::packed_sum_bits(smax, m);
+    let bias = smax as i64;
+    let root = Rng::new(seed);
+
+    let mut proposals: Vec<Vec<u8>> = Vec::with_capacity(m);
+    for g in grads {
+        let mut prop = vec![0u8; n];
+        kernels::multiscale_scale_index_t_backend(bk, g, wnorm, &table, &mut prop);
+        proposals.push(prop);
+    }
+    let shared = collectives::min_allreduce_u8(&proposals);
+
+    let mut levels: Vec<Vec<i32>> = Vec::with_capacity(m);
+    let mut acc = vec![0u64; bitpack::words_for(n, rbits)];
+    let seg = n / m + 1;
+    for (w, g) in grads.iter().enumerate() {
+        let mut wrng = root.derive(&[w as u64]);
+        let mut uni = vec![0.0f32; n];
+        wrng.fill_uniform_f32(&mut uni);
+        let mut lv = vec![0i32; n];
+        kernels::multiscale_encode_int_backend(bk, g, wnorm, &uni, &shared, &table, &mut lv);
+        let mut words = vec![0u64; bitpack::words_for(n, rbits)];
+        bitpack::pack_biased_i32_at_backend(bk, &lv, bias, rbits, &mut words, 0);
+        for lo in (0..n).step_by(seg) {
+            let hi = (lo + seg).min(n);
+            bitpack::add_packed_codes_backend(bk, &mut acc, &words, rbits, lo, hi);
+        }
+        levels.push(lv);
+    }
+    let mut codes = vec![0u64; n];
+    bitpack::unpack_codes_at_with_backend(bk, &acc, rbits, 0, n, |i, c| codes[i] = c);
+    (shared, levels, acc, codes)
+}
+
+#[test]
+fn simd_backend_matrix_multiscale_stages_bit_identical_to_scalar() {
+    let backends = simd::available();
+    let cases: [&[usize]; 3] = [&[2, 6], &[3, 7, 15], &[2, 4, 8, 12]];
+    for scale_bits in cases {
+        let scales: Vec<usize> = scale_bits.iter().map(|&b| kernels::s_for_bits(b)).collect();
+        for &m in &[2usize, 4] {
+            let n = 997usize; // prime: every tail/boundary shape shows up
+            let mut grng = Rng::new(0x7515 ^ ((scale_bits.len() as u64) << 12) ^ m as u64);
+            let grads: Vec<Vec<f32>> = (0..m)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    grng.fill_normal_f32(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let seed = 0xC0DE ^ m as u64;
+            let want = packed_stages_multiscale(Backend::Scalar, &grads, &scales, seed);
+            for &bk in &backends {
+                let got = packed_stages_multiscale(bk, &grads, &scales, seed);
+                assert_eq!(got.0, want.0, "{} m{m}: shared scale indices", bk.label());
+                assert_eq!(got.1, want.1, "{} m{m}: integer levels", bk.label());
+                assert_eq!(got.2, want.2, "{} m{m}: reduced words", bk.label());
+                assert_eq!(got.3, want.3, "{} m{m}: unpacked codes", bk.label());
+            }
+        }
+    }
+}
+
+/// Satellite 2, end to end through the control plane: a scale-share index
+/// poisoned on the wire must panic at the error-feedback residual boundary
+/// instead of dividing by the table's 0.0 padding lane. The worker task's
+/// message is laundered by the thread pool, so the observable panic is the
+/// pool's re-raise (the direct decode boundary messages are pinned by the
+/// `kernels`/`fused` unit tests).
+#[test]
+#[should_panic(expected = "ThreadPool task panicked")]
+fn poisoned_wire_share_panics_at_the_residual_boundary() {
+    use repro::control::ErrorFeedback;
+    let n = 32usize;
+    let grads = vec![vec![0.5f32; n], vec![-0.25f32; n]];
+    let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let uni = vec![vec![0.5f32; n]; 2];
+    let table = kernels::ScaleTable::new(&[3, 15]);
+    let mut shared = vec![0u8; n];
+    shared[13] = 9; // poisoned: the table only has 2 scales
+    let mut ef = ErrorFeedback::new();
+    let mut corrected = Vec::new();
+    ef.apply(&refs, &mut corrected);
+    ef.absorb_bucket_multiscale(&corrected, &uni, 0, n, 1.0, &table, &shared);
+}
